@@ -1,0 +1,56 @@
+"""Paper Fig. 7: selection recall vs token budget (HATA vs Loki/Quest).
+HATA's recall should degrade most gracefully as the budget shrinks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import harvested_layer, trained_hash
+from repro.core import baselines, topk
+
+
+def run(fracs=(0.025, 0.05, 0.1, 0.2), rbit: int = 64):
+    cfg, model, params, layer, batches = harvested_layer(-1)
+    w, qh, kh = trained_hash(-1, rbit)
+    b, s, h, d = qh.shape
+    h_kv = kh.shape[2]
+    g = h // h_kv
+    from repro.kernels import ops
+    out = []
+    for frac in fracs:
+        budget = max(2, int(frac * s))
+        accs = {"hata": [], "loki": [], "quest": []}
+        for hi in range(h_kv):
+            keys = jnp.asarray(kh[0, :, hi])
+            qs = jnp.asarray(qh[0, s // 2:, hi * g:(hi + 1) * g])
+            true = jax.vmap(
+                lambda qq: baselines.exact_scores(qq, keys))(qs)
+            kc = ops.hash_encode(keys, w[hi])
+            est_h = jax.vmap(lambda qq: baselines.lsh_scores(
+                qq, kc, w[hi], rbit).astype(jnp.float32))(qs)
+            loki = baselines.loki_fit(keys, r=max(4, d // 4))
+            est_l = jax.vmap(lambda qq: baselines.loki_scores(
+                qq, loki, r=max(4, d // 4)))(qs)
+            quest = baselines.quest_fit(keys, block=8)
+            est_q = jax.vmap(lambda qq: baselines.quest_scores(
+                qq, quest, block=8, s=s))(qs)
+            for name, est in (("hata", est_h), ("loki", est_l),
+                              ("quest", est_q)):
+                accs[name].append(float(topk.selection_recall(
+                    est, true, budget).mean()))
+        out.append({"frac": frac,
+                    **{k: float(np.mean(v)) for k, v in accs.items()}})
+    return out
+
+
+def main():
+    for row in run():
+        for m in ("hata", "loki", "quest"):
+            print(f"budget_ablation/frac{row['frac']}/{m},0,"
+                  f"{row[m]:.4f}")
+    return True
+
+
+if __name__ == "__main__":
+    main()

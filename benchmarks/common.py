@@ -1,0 +1,70 @@
+"""Shared benchmark substrate: a tiny LM trained on the induction task
+(so attention develops real retrieval structure), hash-trained weights,
+and harvested q/k — reused by every accuracy benchmark."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import hashing
+from repro.data.hash_dataset import build_triplets_per_head, harvest_qk
+from repro.data.synthetic import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import Model
+from repro.optim.adamw import adamw_init
+
+
+@functools.lru_cache(maxsize=1)
+def tiny_lm(steps: int = 120):
+    cfg = get_reduced("qwen1.5-0.5b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, base_lr=1e-3,
+                                   total_steps=steps),
+                   donate_argnums=(0, 1))
+    opt = adamw_init(params)
+    src = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+    for i in range(steps):
+        params, opt, _ = step(params, opt,
+                              {"tokens": jnp.asarray(src.batch_at(i))})
+    return cfg, model, params
+
+
+@functools.lru_cache(maxsize=4)
+def harvested_layer(layer: int = -1, seq_len: int = 96):
+    cfg, model, params = tiny_lm()
+    layer = layer % cfg.n_layers
+    src = SyntheticLM(cfg.vocab_size, seq_len, 1, seed=7)
+    batches = tuple({"tokens": jnp.asarray(src.batch_at(i))}
+                    for i in range(3))
+    return cfg, model, params, layer, batches
+
+
+def trained_hash(layer: int, rbit: int):
+    cfg, model, params, layer, batches = harvested_layer(layer)
+    hcfg = dataclasses.replace(cfg.hata, rbit=rbit)
+    q, k, s = build_triplets_per_head(model, params, list(batches[:2]),
+                                      layer, hcfg, n_queries=48,
+                                      m_keys=48)
+    w = hashing.train_hash_weights_per_head(
+        jax.random.PRNGKey(0), jnp.asarray(q), jnp.asarray(k),
+        jnp.asarray(s), rbit=rbit, hcfg=hcfg)
+    qh, kh = harvest_qk(model, params, batches[2], layer)
+    return w, np.asarray(qh), np.asarray(kh)
+
+
+def timer(fn, *args, reps: int = 5) -> float:
+    fn(*args)                                  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # us

@@ -1,0 +1,89 @@
+"""Paper Fig. 4/5 analogue: decode-step cost across methods, sequence
+lengths and batch sizes.
+
+Two views:
+  * HBM byte model (first principles, v5e constants): on the
+    memory-bound decode roofline, speedup == byte ratio — this is the
+    at-scale prediction.
+  * CPU wall-clock of one attention layer's decode (xla path): sanity
+    check that the implemented ops realize the predicted ordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer
+from repro.configs.base import HataConfig
+from repro.core import baselines, kvcache
+from repro.core.hash_attention import hata_decode
+from repro.kernels import ops
+from repro.launch.analytic import HBM_BW
+
+
+def byte_model(seqs=(32768, 131072, 262144), budget_frac=0.0156,
+               d=128, rbit=128):
+    rows = []
+    for s in seqs:
+        budget = max(512, int(budget_frac * s))
+        row = {"seq": s}
+        for m in ("dense", "exact-topk", "loki", "quest", "hata",
+                  "lsh"):
+            by = baselines.decode_bytes_per_kv_head(
+                m, s, d, budget=budget, rbit=rbit)
+            row[m] = by
+            row[m + "_us@v5e"] = by / HBM_BW * 1e6
+        row["speedup_vs_dense"] = row["dense"] / row["hata"]
+        rows.append(row)
+    return rows
+
+
+def wallclock_layer(s=4096, b=4, h=8, h_kv=2, d=64, rbit=64,
+                    budget=128):
+    """One layer's decode on CPU: dense vs HATA (xla ops path)."""
+    rng = np.random.default_rng(0)
+    hcfg = HataConfig(rbit=rbit, budget_min=budget, budget_max=budget,
+                      budget_frac=budget / s)
+    cache = kvcache.init_kv_cache(b, s, h_kv, d, rbit=rbit,
+                                  dtype=jnp.float32)
+    cache = dataclasses.replace(
+        cache,
+        k=jnp.asarray(rng.standard_normal(cache.k.shape), jnp.float32),
+        v=jnp.asarray(rng.standard_normal(cache.v.shape), jnp.float32),
+        codes=jnp.asarray(rng.integers(0, 2**32, cache.codes.shape,
+                                       dtype=np.uint32)))
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k1 = jnp.asarray(rng.standard_normal((b, 1, h_kv, d)), jnp.float32)
+    v1 = jnp.asarray(rng.standard_normal((b, 1, h_kv, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((h_kv, d, rbit)),
+                    jnp.float32)
+    pos = jnp.int32(s - 2)
+
+    dense = jax.jit(lambda qq: ops.decode_attention(
+        qq, cache.k, cache.v, jnp.int32(s - 1)))
+    hata = jax.jit(lambda qq: hata_decode(
+        qq, k1, v1, w, cache, hcfg=hcfg, pos=pos).out)
+    t_dense = timer(dense, q)
+    t_hata = timer(hata, q)
+    return {"dense_us": t_dense, "hata_us": t_hata,
+            "speedup": t_dense / t_hata}
+
+
+def main():
+    for row in byte_model():
+        print(f"decode_bytes/seq{row['seq']}/dense,0,{row['dense']:.0f}")
+        print(f"decode_bytes/seq{row['seq']}/hata,0,{row['hata']:.0f}")
+        print(f"decode_bytes/seq{row['seq']}/speedup,0,"
+              f"{row['speedup_vs_dense']:.2f}")
+    wc = wallclock_layer()
+    print(f"decode_wallclock/dense,{wc['dense_us']:.0f},1.0")
+    print(f"decode_wallclock/hata,{wc['hata_us']:.0f},"
+          f"{wc['speedup']:.2f}")
+    return wc
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""§Roofline deliverable: turn the dry-run JSONs into the per-(arch x
+shape x mesh) roofline table — three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS useful-compute ratio, and per-device
+memory. Writes experiments/roofline.md and prints CSV."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config, get_shape
+from repro.launch.analytic import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   model_bytes, model_flops,
+                                   roofline_terms)
+
+
+def load_records(dirname: str = "experiments/dryrun") -> List[Dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        rec["file"] = os.path.basename(fn)
+        out.append(rec)
+    return out
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return {"arch": rec.get("arch"), "shape": rec.get("shape"),
+                "mesh": rec.get("mesh"), "ok": False,
+                "error": rec.get("error", "?")[:120]}
+    cfg = get_config(rec["arch"])
+    shape = get_shape(rec["shape"])
+    chips = rec["chips"]
+    hc = rec["hlo_cost"]
+    terms = roofline_terms(hc["flops"], hc["bytes"],
+                           hc["collective_bytes"])
+    mf = model_flops(cfg, shape)
+    mb = model_bytes(cfg, shape, hata=rec.get("hata", True))
+    analytic = roofline_terms(mf["model_flops"] / chips, mb / chips,
+                              hc["collective_bytes"])
+    mem = rec.get("memory", {})
+    hbm_gib = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0)) / 2 ** 30
+    useful = (mf["model_flops"] / chips) / max(hc["flops"], 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "hata": rec.get("hata", True), "ok": True,
+        "chips": chips,
+        "hlo_flops_dev": hc["flops"], "hlo_bytes_dev": hc["bytes"],
+        "coll_bytes_dev": hc["collective_bytes"],
+        "collectives": hc.get("collectives", {}),
+        "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "bottleneck": terms["bottleneck"],
+        "bound_s": terms["bound_s"],
+        "analytic_bound_s": analytic["bound_s"],
+        "analytic_bottleneck": analytic["bottleneck"],
+        "useful_flops_ratio": useful,
+        "roofline_frac": analytic["bound_s"] / max(terms["bound_s"],
+                                                   1e-12),
+        "hbm_gib_dev": hbm_gib,
+        "fits_16g": hbm_gib <= 16.0,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | hata | compute_s | memory_s | "
+           "coll_s | bottleneck | useful | HBM GiB/dev | fits 16G |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| - | FAILED: {r['error']} | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {'on' if r['hata'] else 'off'} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['hbm_gib_dev']:.1f} "
+            f"| {'Y' if r['fits_16g'] else 'N'} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main(dirname: str = "experiments/dryrun",
+         out_md: str = "experiments/roofline.md"):
+    recs = load_records(dirname)
+    rows = [analyze_record(r) for r in recs]
+    rows = [r for r in rows if r]
+    if out_md:
+        os.makedirs(os.path.dirname(out_md), exist_ok=True)
+        with open(out_md, "w") as f:
+            f.write("# Roofline table (from multi-pod dry-run)\n\n"
+                    "Terms are per-device seconds on v5e constants "
+                    f"({PEAK_FLOPS/1e12:.0f} TFLOP/s, "
+                    f"{HBM_BW/1e9:.0f} GB/s HBM, "
+                    f"{ICI_BW/1e9:.0f} GB/s ICI). 'useful' = analytic "
+                    "MODEL_FLOPS / parsed HLO FLOPs per device.\n\n")
+            f.write(to_markdown(rows))
+    n_fail = sum(1 for r in rows if not r.get("ok"))
+    for r in rows:
+        if r.get("ok"):
+            print(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+                  f"{'' if r['hata'] else '_dense'},0,"
+                  f"{r['bound_s']:.3e}")
+    print(f"roofline/cells,{len(rows)},{n_fail} failed")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

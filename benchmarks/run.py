@@ -1,0 +1,50 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator — one module per paper artifact:
+
+  recall_accuracy    Tables 1/2 (selection-recall proxy)
+  decode_efficiency  Figs. 4/5 (HBM byte model + CPU wall-clock)
+  budget_ablation    Fig. 7
+  hashbits_ablation  Fig. 8
+  opt_ablation       Fig. 9
+  offload_model      Table 3
+  distributed_topk   beyond-paper SP selection quality
+  roofline           §Roofline (reads experiments/dryrun/*.json)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (budget_ablation, decode_efficiency,
+                            distributed_topk, hashbits_ablation,
+                            offload_model, opt_ablation,
+                            recall_accuracy, roofline)
+    suites = [
+        ("recall_accuracy", recall_accuracy.main),
+        ("decode_efficiency", decode_efficiency.main),
+        ("budget_ablation", budget_ablation.main),
+        ("hashbits_ablation", hashbits_ablation.main),
+        ("opt_ablation", opt_ablation.main),
+        ("offload_model", offload_model.main),
+        ("distributed_topk", distributed_topk.main),
+        ("roofline", roofline.main),
+    ]
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()[-2000:]}")
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests through the
+continuous-batching engine (deliverable b, serving flavor).
+
+Each request prefills (filling KV + hash-code caches), then all active
+slots decode together with HATA top-k attention. Prints per-request
+TTFT/latency and engine throughput.
+
+Run:  PYTHONPATH=src python examples/serve_longcontext.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen1.5-0.5b", "--requests", "8",
+          "--max-batch", "4", "--max-len", "192", "--prompt-len", "64",
+          "--new-tokens", "24"])

@@ -1,0 +1,13 @@
+from repro.configs.base import (AudioConfig, HataConfig, MLAConfig,
+                                ModelConfig, MoEConfig, SHAPES, SSMConfig,
+                                ShapeConfig, VLMConfig, reduced)
+from repro.configs.registry import (ALL_ARCHS, ASSIGNED_ARCHS, PAPER_ARCHS,
+                                    cells, get_config, get_reduced, get_shape,
+                                    shapes_for)
+
+__all__ = [
+    "AudioConfig", "HataConfig", "MLAConfig", "ModelConfig", "MoEConfig",
+    "SSMConfig", "ShapeConfig", "VLMConfig", "SHAPES", "reduced",
+    "ALL_ARCHS", "ASSIGNED_ARCHS", "PAPER_ARCHS", "cells", "get_config",
+    "get_reduced", "get_shape", "shapes_for",
+]

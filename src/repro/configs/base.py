@@ -1,0 +1,330 @@
+"""Configuration dataclasses for the repro framework.
+
+Every architecture in ``repro/configs/<arch>.py`` instantiates a
+:class:`ModelConfig`. Configs are frozen (hashable) so they can be closed
+over by jitted functions and used as static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# HATA (the paper's technique)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HataConfig:
+    """Hash-Aware Top-k Attention settings (paper §3, Table 5)."""
+    enabled: bool = True
+    rbit: int = 128                 # hash bits per vector (paper default)
+    budget_frac: float = 0.0156     # top-k as fraction of context (1.56%)
+    budget_min: int = 512           # floor (paper: 512 @ LongBench)
+    budget_max: int = 8192
+    dense_layers: int = 2           # first-N layers stay dense (paper §5.1)
+    # learning-to-hash hyper-parameters (paper Table 11)
+    sigma: float = 0.1
+    epsilon: float = 0.01
+    lam: float = 1.0
+    eta: float = 2.0
+    # training-data construction (paper App. B.1)
+    pos_frac: float = 0.10          # top-10% of qk pairs are positives
+    pos_label_max: float = 20.0     # linearly decayed labels in [1, 20]
+    neg_label: float = -1.0
+
+    def budget(self, context_len: int) -> int:
+        k = int(context_len * self.budget_frac)
+        k = max(self.budget_min, min(k, self.budget_max))
+        return min(k, context_len)
+
+
+# ---------------------------------------------------------------------------
+# Sub-family configs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int                  # routed experts
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0     # leading layers that keep a dense FFN
+    d_ff_dense: int = 0             # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    # 'ep' = expert-parallel all-to-all (shard_map); 'tp' = intra-expert
+    # tensor parallel with sorted block-gather grouped GEMM.
+    parallelism: str = "ep"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0            # 0 = direct q projection (V2-Lite)
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD mixer."""
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    """Cross-attention VLM wrapper (Llama-3.2-Vision style).
+
+    The modality frontend is a STUB per the assignment: ``input_specs``
+    provides precomputed patch embeddings of shape (B, n_image_tokens,
+    vision_dim); the model owns only the projection into d_model and the
+    gated cross-attention layers.
+    """
+    cross_every: int = 5            # every 5th layer is a cross-attn layer
+    n_image_tokens: int = 1601      # one 560x560 tile -> 1601 patches
+    vision_dim: int = 1280
+
+
+@dataclass(frozen=True)
+class AudioConfig:
+    """MusicGen-style decoder over EnCodec tokens.
+
+    Frontend stub: ``input_specs`` provides precomputed frame embeddings
+    (the sum of the 4 codebook embeddings); the model owns the backbone and
+    the 4 parallel codebook heads.
+    """
+    n_codebooks: int = 4
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                    # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 500000.0
+    partial_rotary: float = 1.0     # fraction of head_dim that is rotated
+    sliding_window: Optional[int] = None
+    norm_eps: float = 1e-5
+    max_seq_len: int = 131072
+    dtype: str = "bfloat16"
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    vlm: Optional[VLMConfig] = None
+    audio: Optional[AudioConfig] = None
+    hata: HataConfig = field(default_factory=HataConfig)
+    meta_tokens: int = 0            # Hymba learnable prefix tokens
+    remat: str = "dots"             # none | dots | full  (activation ckpt)
+    scan_layers: bool = True
+
+    # ---- derived ---------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1) if self.n_heads else 0
+
+    def padded_vocab(self, multiple: int = 2048) -> int:
+        """Vocab padded so embeddings shard over any mesh axis <= multiple."""
+        return int(math.ceil(self.vocab_size / multiple) * multiple)
+
+    @property
+    def hash_input_dim(self) -> int:
+        """Dimensionality of the vectors fed to HashEncode.
+
+        GQA/MHA: the per-head head_dim. MLA (beyond-paper extension): the
+        compressed latent [c_kv ; k_rope]."""
+        if self.mla is not None:
+            return self.mla.kv_lora_rank + self.mla.qk_rope_dim
+        return self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used by roofline MODEL_FLOPS=6ND)."""
+        D, L, V = self.d_model, self.n_layers, self.vocab_size
+        n_emb = self.audio.n_codebooks if self.audio is not None else 1
+        total = n_emb * V * D  # embeddings (+ per-codebook heads)
+        if not self.tie_embeddings:
+            total += n_emb * V * D
+        if self.vlm is not None:
+            total += self.vlm.vision_dim * D
+        n_cross = self.n_cross_layers()
+        n_dense_ffn = self.moe.first_dense_layers if self.moe else 0
+        n_self = L - n_cross - n_dense_ffn
+        for is_cross in [False] * n_self + [True] * n_cross:
+            total += self.layer_param_count(is_cross)
+        for _ in range(n_dense_ffn):
+            total += self.layer_param_count(False, dense_ffn=True)
+        total += D  # final norm
+        return total
+
+    def n_cross_layers(self) -> int:
+        if self.vlm is None:
+            return 0
+        return self.n_layers // self.vlm.cross_every
+
+    def layer_param_count(self, is_cross: bool = False,
+                          dense_ffn: bool = False) -> int:
+        D = self.d_model
+        total = 2 * D  # two norms
+        # --- mixer ---
+        if self.family == "ssm":
+            total += self._ssm_params()
+            return total
+        if self.family == "hybrid":
+            total += self._ssm_params()
+        total += self._attn_params()
+        if is_cross:
+            total += self._attn_params() + 2  # extra cross-attn + gates
+        # --- ffn ---
+        if self.moe is not None and not dense_ffn:
+            e = self.moe
+            expert = 3 * D * e.d_ff_expert
+            total += (e.n_experts + e.n_shared_experts) * expert
+            total += D * e.n_experts  # router
+        elif self.moe is not None and dense_ffn:
+            total += 3 * D * (self.moe.d_ff_dense or self.d_ff)
+        else:
+            total += 3 * D * self.d_ff
+        return total
+
+    def _attn_params(self) -> int:
+        D = self.d_model
+        if self.mla is not None:
+            m = self.mla
+            qdim = self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+            total = D * qdim                                    # W_q
+            total += D * (m.kv_lora_rank + m.qk_rope_dim)       # W_dkv, W_kr
+            total += m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+            total += self.n_heads * m.v_head_dim * D            # W_o
+            return total
+        hd = self.head_dim
+        return (D * self.n_heads * hd + 2 * D * self.n_kv_heads * hd
+                + self.n_heads * hd * D)
+
+    def _ssm_params(self) -> int:
+        s = self.ssm
+        D = self.d_model
+        di = s.d_inner(D)
+        nh = s.n_heads(D)
+        conv_dim = di + 2 * s.n_groups * s.d_state
+        total = D * (2 * di + 2 * s.n_groups * s.d_state + nh)  # in_proj
+        total += conv_dim * s.d_conv                            # conv
+        total += 2 * nh + nh                                    # A, D, dt_bias
+        total += di * D                                         # out_proj
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed top-k active)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        D = self.d_model
+        inactive_per_layer = (e.n_experts - e.top_k) * 3 * D * e.d_ff_expert
+        n_moe_layers = self.n_layers - e.first_dense_layers
+        return self.param_count() - n_moe_layers * inactive_per_layer
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per-arch shape set)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+LM_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+SHAPES = {s.name: s for s in LM_SHAPES}
+
+
+def reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 64,
+            seq_len: int = 128, vocab: int = 256) -> ModelConfig:
+    """Shrink a config to a smoke-test size preserving the family structure."""
+    kw: dict = dict(
+        name=cfg.name + "-reduced",
+        n_layers=max(n_layers, 2),
+        d_model=d_model,
+        vocab_size=vocab,
+        max_seq_len=seq_len,
+        d_ff=d_model * 3,
+        remat="none",
+    )
+    if cfg.n_heads:
+        n_heads = 4 if cfg.n_heads % 4 == 0 or cfg.n_heads >= 4 else cfg.n_heads
+        ratio = max(1, cfg.n_heads // max(cfg.n_kv_heads, 1))
+        kw["n_heads"] = n_heads
+        kw["n_kv_heads"] = max(1, n_heads // ratio)
+        kw["head_dim"] = d_model // n_heads
+    else:
+        kw["n_heads"] = 0
+        kw["n_kv_heads"] = 0
+        kw["head_dim"] = 0
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(2, cfg.moe.top_k),
+            d_ff_expert=d_model * 2, d_ff_dense=d_model * 3,
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1))
+    if cfg.mla is not None:
+        hd = d_model // kw["n_heads"]
+        kw["mla"] = MLAConfig(kv_lora_rank=32, qk_nope_dim=hd, qk_rope_dim=8,
+                              v_head_dim=hd)
+        kw["head_dim"] = hd
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=16,
+                                        chunk=32)
+    if cfg.vlm is not None:
+        kw["vlm"] = dataclasses.replace(cfg.vlm, cross_every=2,
+                                        n_image_tokens=16, vision_dim=32)
+        kw["n_layers"] = 4
+    if cfg.audio is not None:
+        kw["audio"] = cfg.audio
+    if cfg.meta_tokens:
+        kw["meta_tokens"] = 8
+    kw["hata"] = dataclasses.replace(
+        cfg.hata, rbit=64, budget_min=16, budget_max=64, dense_layers=1)
+    kw["sliding_window"] = min(cfg.sliding_window, seq_len) if cfg.sliding_window else None
+    kw["qkv_bias"] = cfg.qkv_bias
+    kw["partial_rotary"] = cfg.partial_rotary
+    kw["family"] = cfg.family
+    return ModelConfig(**kw)

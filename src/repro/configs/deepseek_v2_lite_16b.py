@@ -1,0 +1,30 @@
+"""DeepSeek-V2-Lite 16B — MLA (kv_lora=512) + MoE 64 routed top-6 + 2 shared.
+[arXiv:2405.04434]
+
+Assignment-line note: the line says both "MoE 64e top-6" and "160 routed";
+160 routed belongs to full DeepSeek-V2 (236B). We implement the hf-verified
+V2-Lite: 64 routed + 2 shared, top-6, first layer dense (d_ff=10944).
+
+HATA+MLA is a beyond-paper extension (the paper lists MLA as future work):
+hash codes are computed over the compressed latent [c_kv ; k_rope].
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,   # MLA: one shared latent cache; q heads = 16
+    d_ff=1408,       # assignment lists the expert d_ff here
+    vocab_size=102400,
+    head_dim=128,    # qk_nope head dim
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=0, qk_nope_dim=128,
+                  qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=64, top_k=6, d_ff_expert=1408,
+                  n_shared_experts=2, first_dense_layers=1,
+                  d_ff_dense=10944, parallelism="ep"),
+    rope_theta=10000.0,
+    max_seq_len=163840,
+)

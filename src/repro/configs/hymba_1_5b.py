@@ -1,0 +1,19 @@
+"""Hymba-1.5B — hybrid parallel attention+Mamba heads, meta tokens.
+[arXiv:2411.13676]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64, n_groups=1),
+    meta_tokens=128,
+    rope_theta=10000.0,
+    max_seq_len=8192 * 64,
+)

@@ -1,0 +1,16 @@
+"""Llama-2-7B-32K-Instruct — the paper's MHA evaluation model (Table 4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b-32k",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab_size=32000,
+    head_dim=128,
+    rope_theta=10000.0,
+    max_seq_len=32768,
+)

@@ -1,0 +1,16 @@
+"""Llama-3.1-8B-Instruct — the paper's GQA evaluation model (Table 4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.1-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500000.0,
+    max_seq_len=131072,
+)

@@ -1,0 +1,23 @@
+"""Llama-3.2-Vision 90B — dense GQA backbone + gated cross-attn image layers.
+[hf:meta-llama/Llama-3.2-11B-Vision scaled per assignment]
+
+Modality frontend is a STUB: ``input_specs`` supplies precomputed patch
+embeddings (B, n_image_tokens, vision_dim); the model owns the projection
+and the cross-attention layers (every 5th layer).
+"""
+from repro.configs.base import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    head_dim=128,
+    vlm=VLMConfig(cross_every=5, n_image_tokens=1601, vision_dim=1280),
+    rope_theta=500000.0,
+    max_seq_len=131072,
+)

@@ -1,0 +1,24 @@
+"""Mamba2-130M — attention-free SSD (state-space duality). [arXiv:2405.21060]
+
+HATA is INAPPLICABLE here (no qk scores / KV cache to hash) — see
+DESIGN.md §Arch-applicability. The arch is implemented without it.
+"""
+import dataclasses
+
+from repro.configs.base import HataConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    head_dim=0,
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1),
+    hata=HataConfig(enabled=False),
+    max_seq_len=1048576,
+)

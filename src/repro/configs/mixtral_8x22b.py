@@ -1,0 +1,24 @@
+"""Mixtral-8x22B — MoE 8 experts top-2, GQA, SWA per assignment.
+[arXiv:2401.04088]
+
+8 experts do not divide the 16-way model axis, so MoE parallelism is
+intra-expert TP (sorted block-gather grouped GEMM, d_ff sharded).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    head_dim=128,
+    sliding_window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16384,
+                  parallelism="tp"),
+    rope_theta=1000000.0,
+    max_seq_len=65536,
+)

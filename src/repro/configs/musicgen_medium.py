@@ -1,0 +1,23 @@
+"""MusicGen-medium — decoder-only over EnCodec tokens (4 codebooks).
+[arXiv:2306.05284]
+
+Frontend stub: ``input_specs`` provides precomputed frame embeddings
+(sum of codebook embeddings); the backbone predicts 4 parallel codebook
+heads of vocab 2048 each.
+"""
+from repro.configs.base import AudioConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    head_dim=64,
+    audio=AudioConfig(n_codebooks=4),
+    rope_theta=10000.0,
+    max_seq_len=524288 + 8,
+)

@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (LM_SHAPES, SHAPES, ModelConfig, ShapeConfig,
+                                reduced)
+
+# arch-id -> module name. The 10 assigned architectures + the paper's own
+# two evaluation models.
+_MODULES = {
+    "llama3-405b": "llama3_405b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "granite-8b": "granite_8b",
+    "hymba-1.5b": "hymba_1_5b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "musicgen-medium": "musicgen_medium",
+    "mamba2-130m": "mamba2_130m",
+    "llama2-7b-32k": "llama2_7b_32k",
+    "llama3.1-8b": "llama3_1_8b",
+}
+
+ASSIGNED_ARCHS: List[str] = list(_MODULES)[:10]
+PAPER_ARCHS: List[str] = list(_MODULES)[10:]
+ALL_ARCHS: List[str] = list(_MODULES)
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ALL_ARCHS}")
+    if arch not in _cache:
+        mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+        _cache[arch] = mod.CONFIG
+    return _cache[arch]
+
+
+def get_reduced(arch: str, **kw) -> ModelConfig:
+    return reduced(get_config(arch), **kw)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def shapes_for(arch: str) -> List[ShapeConfig]:
+    """The assigned shape set for an arch (all LM shapes here)."""
+    return list(LM_SHAPES)
+
+
+def cells() -> List[tuple]:
+    """All (arch, shape) dry-run cells — 10 archs x 4 shapes = 40."""
+    return [(a, s.name) for a in ASSIGNED_ARCHS for s in shapes_for(a)]

@@ -1,0 +1,187 @@
+"""Baseline top-k attention selectors the paper compares against (§5.1,
+Table 5). Each baseline answers the same question as HATA's Hamming
+scorer — "which cache rows should this decode step attend to?" — so they
+share one interface: estimator scores (or a selection mask) per kv head,
+evaluated in benchmarks/recall_accuracy.py and priced by the HBM byte
+model in benchmarks/decode_efficiency.py.
+
+Per-kv-head shapes: q (G, d) the query heads sharing the kv head,
+keys (S, d) the cache. All scorers return (S,) "bigger = keep".
+
+  exact_scores      exact top-k attention (the upper bound, Table 5 row 2)
+  loki_*            low-rank PCA channels (Singhania et al.)
+  quest_*           block min/max upper bounds (Tang et al.)
+  lsh_scores        random-hyperplane SimHash (MagicPIG's L·K sampling is
+                    modeled by its byte cost; selection quality at equal
+                    bits is what Fig. 1/8 compare)
+  streaming_mask    StreamingLLM sinks+recent (selection is position-only)
+  h2o_select        heavy-hitter cumulative attention mass
+  snapkv_select     observation-window pooled attention (prefill-time)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Exact top-k (score oracle)
+# ---------------------------------------------------------------------------
+def exact_scores(q: jax.Array, keys: jax.Array) -> jax.Array:
+    """Sum of exact qk scores over the group — what HATA's aggregated
+    Hamming score estimates ordinally."""
+    return jnp.sum(q.astype(jnp.float32) @ keys.astype(jnp.float32).T,
+                   axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Loki (low-rank PCA channels)
+# ---------------------------------------------------------------------------
+class LokiState(NamedTuple):
+    components: jax.Array    # (d, d) PCA basis, decreasing variance
+    keys_proj: jax.Array     # (S, r) cached projected keys
+
+
+def loki_fit(keys: jax.Array, r: int = 32) -> LokiState:
+    """Offline PCA of key vectors (Loki uses calibration-set PCA)."""
+    kf = keys.astype(jnp.float32)
+    mu = kf.mean(0)
+    cov = (kf - mu).T @ (kf - mu) / kf.shape[0]
+    _, vecs = jnp.linalg.eigh(cov)          # ascending
+    comps = vecs[:, ::-1]                   # (d, d) descending variance
+    return LokiState(components=comps, keys_proj=kf @ comps[:, :r])
+
+
+def loki_scores(q: jax.Array, state: LokiState, r: int = 32) -> jax.Array:
+    """Approximate group-aggregated scores from the first r channels."""
+    qp = q.astype(jnp.float32) @ state.components[:, :r]   # (G, r)
+    return jnp.sum(qp @ state.keys_proj[:, :r].T, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Quest (block-level min/max upper bound)
+# ---------------------------------------------------------------------------
+class QuestState(NamedTuple):
+    kmin: jax.Array          # (n_blocks, d)
+    kmax: jax.Array          # (n_blocks, d)
+
+
+def quest_fit(keys: jax.Array, block: int = 32) -> QuestState:
+    s, d = keys.shape
+    nb = s // block
+    kb = keys[: nb * block].reshape(nb, block, d).astype(jnp.float32)
+    return QuestState(kmin=kb.min(1), kmax=kb.max(1))
+
+
+def quest_scores(q: jax.Array, state: QuestState, block: int = 32,
+                 s: int = 0) -> jax.Array:
+    """Per-token scores = the containing block's upper bound (so block
+    selection == token top-k at block granularity). q: (G, d)."""
+    qf = q.astype(jnp.float32)
+    ub = jnp.maximum(qf[:, None, :] * state.kmin[None],
+                     qf[:, None, :] * state.kmax[None])    # (G, nb, d)
+    block_scores = jnp.sum(ub, axis=(0, 2))                # (nb,)
+    tok = jnp.repeat(block_scores, block)
+    if s and tok.shape[0] < s:   # ragged tail: always keep (recent tokens)
+        pad = jnp.full((s - tok.shape[0],), jnp.inf, tok.dtype)
+        tok = jnp.concatenate([tok, pad])
+    return tok
+
+
+# ---------------------------------------------------------------------------
+# LSH (MagicPIG-style random hyperplanes)
+# ---------------------------------------------------------------------------
+def lsh_scores(q: jax.Array, key_codes: jax.Array, w_lsh: jax.Array,
+               rbit: int) -> jax.Array:
+    """Hash match scores with *random* (untrained) projections — same
+    scoring path as HATA; the delta to HATA isolates learning-to-hash."""
+    from repro.kernels import ops, ref
+    qc = ops.hash_encode(q, w_lsh)
+    x = jax.lax.population_count(
+        jnp.bitwise_xor(qc[:, None, :], key_codes[None, :, :]))
+    ham = jnp.sum(x.astype(jnp.int32), axis=(0, 2))
+    return q.shape[0] * rbit - ham
+
+
+# ---------------------------------------------------------------------------
+# StreamingLLM (sinks + recency; selection independent of content)
+# ---------------------------------------------------------------------------
+def streaming_mask(s: int, n_valid, budget: int,
+                   sinks: int = 4) -> jax.Array:
+    pos = jnp.arange(s)
+    recent = budget - sinks
+    return (pos < sinks) | ((pos >= n_valid - recent) & (pos < n_valid))
+
+
+# ---------------------------------------------------------------------------
+# H2O (heavy hitters by cumulative attention mass)
+# ---------------------------------------------------------------------------
+def h2o_select(cum_attn: jax.Array, n_valid, budget: int,
+               recent_frac: float = 0.5) -> jax.Array:
+    """cum_attn: (S,) accumulated attention prob mass per position.
+    Budget split half heavy-hitters / half recent (paper Table 5)."""
+    s = cum_attn.shape[0]
+    pos = jnp.arange(s)
+    n_recent = int(budget * recent_frac)
+    recent = (pos >= n_valid - n_recent) & (pos < n_valid)
+    hh_scores = jnp.where(recent | (pos >= n_valid), -jnp.inf, cum_attn)
+    _, hh_idx = jax.lax.top_k(hh_scores, budget - n_recent)
+    mask = jnp.zeros(s, jnp.bool_).at[hh_idx].set(True)
+    return mask | recent
+
+
+# ---------------------------------------------------------------------------
+# SnapKV (observation-window pooled attention, prefill-time compression)
+# ---------------------------------------------------------------------------
+def snapkv_select(q_window: jax.Array, keys: jax.Array, budget: int,
+                  kernel: int = 7) -> jax.Array:
+    """q_window: (w, d) last-w prefill queries (w=16 in Table 5);
+    keys: (S, d). Returns a (S,) keep mask of size<=budget+w."""
+    s, d = keys.shape
+    w = q_window.shape[0]
+    logits = (q_window.astype(jnp.float32) @ keys.astype(jnp.float32).T
+              ) * (d ** -0.5)
+    qpos = s - w + jnp.arange(w)
+    causal = jnp.arange(s)[None, :] <= qpos[:, None]
+    probs = jax.nn.softmax(jnp.where(causal, logits, -jnp.inf), axis=-1)
+    votes = probs.sum(0)                              # (S,)
+    # 1D average pooling (SnapKV's clustering smoothing)
+    pad = kernel // 2
+    pooled = jnp.convolve(votes, jnp.ones(kernel) / kernel, mode="same")
+    pooled = pooled.at[-w:].set(jnp.inf)              # window always kept
+    _, idx = jax.lax.top_k(pooled, min(budget, s))
+    return jnp.zeros(s, jnp.bool_).at[idx].set(True)
+
+
+# ---------------------------------------------------------------------------
+# Per-step HBM byte model (the efficiency comparison of Fig. 4/5)
+# ---------------------------------------------------------------------------
+def decode_bytes_per_kv_head(method: str, s: int, d: int, *, budget: int,
+                             rbit: int = 128, loki_r: int = 32,
+                             quest_block: int = 32, kv_bytes: int = 2,
+                             lsh_bits: int = 1500) -> int:
+    """HBM bytes one decode step must move per kv head (score + attend).
+
+    This is the quantity HATA's design minimizes; on the memory-bound
+    decode roofline, speedup == byte ratio. Dense moves the full K and V;
+    estimators move their score operands plus the selected K/V rows.
+    """
+    kv_row = 2 * d * kv_bytes                     # one K row + one V row
+    if method == "dense":
+        return s * kv_row
+    if method == "exact-topk":
+        return s * d * kv_bytes + budget * kv_row  # all K + top-k K/V
+    if method == "loki":
+        return s * loki_r * kv_bytes + budget * kv_row
+    if method == "quest":
+        blocks = s // quest_block
+        return blocks * 2 * d * kv_bytes + budget * kv_row
+    if method == "hata":
+        return s * rbit // 8 + budget * kv_row
+    if method == "lsh":
+        return s * lsh_bits // 8 + budget * kv_row
+    if method in ("streaming", "h2o", "snapkv"):
+        return budget * kv_row                    # selection is metadata
+    raise ValueError(method)

@@ -1,0 +1,152 @@
+"""HATA top-k attention (paper §3.2, Algorithms 1-3) — single-device
+semantics. The sequence-sharded SPMD decode lives in
+``repro/distributed/decode.py`` and must agree with this module exactly
+(tested in tests/test_distributed.py).
+
+Prefill (Alg. 1): full flash attention + fill KV cache + hash-encode and
+cache the key codes.
+
+Decode (Alg. 3): hash-encode q and the new k; update caches; Hamming
+match scores against the whole code cache (GQA: summed over the q heads
+sharing each kv head); top-k; gather; sparse flash attention.
+
+Static-shape policy: ``k`` (the token budget) must be static under jit.
+We take ``k = hcfg.budget(max_len)`` and make selection exact for short
+caches by (a) masking invalid rows' scores to -1 — below the score floor
+of 0 ≤ valid match scores — and (b) masking gathered rows with score < 0
+out of the softmax. While cache_len <= k this reproduces *dense* decode
+bit-for-bit (every valid row selected), which is also what the paper's
+budget_min floor does.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HataConfig
+from repro.core.kvcache import LayerKVCache, append_kv
+from repro.kernels import ops
+
+
+class HataDecodeOut(NamedTuple):
+    out: jax.Array                    # (B, H, d)
+    cache: LayerKVCache
+    idx: jax.Array                    # (B, H_kv, k) selected rows
+    scores: jax.Array                 # (B, H_kv, S) match scores
+
+
+def hata_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                 w_h: jax.Array, cache: LayerKVCache, *,
+                 hcfg: HataConfig, pos: jax.Array,
+                 window: Optional[int] = None,
+                 ) -> Tuple[jax.Array, LayerKVCache]:
+    """Alg. 1. q: (B, S, H, d), k/v: (B, S, H_kv, d), w_h: (H_kv, d, rbit).
+
+    Encoding cost is O(S·d·rbit) vs attention's O(S²·d): <1% of prefill
+    (paper §3.2) — measured in benchmarks/opt_ablation.py.
+    """
+    codes = None
+    if cache.codes is not None:
+        codes = ops.hash_encode_heads(k, w_h)       # (B, S, H_kv, W)
+    cache = append_kv(cache, k, v, codes, pos)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              q_offset=0)
+    return out, cache
+
+
+def _aggregate_q_codes(q: jax.Array, w_h: jax.Array,
+                       n_kv_heads: int) -> jax.Array:
+    """Encode q per-head with its kv-group's hash weights.
+
+    q: (B, H, d), w_h: (H_kv, d, rbit) -> (B, H_kv, G, W) uint32.
+    """
+    b, h, d = q.shape
+    g = h // n_kv_heads
+    qg = q.reshape(b, n_kv_heads, g, d)
+    # heads share their group's W_H so q codes and k codes are comparable
+    fn = lambda x, w: ops.hash_encode(x, w)          # (B, G, d),(d,r)->(B,G,W)
+    return jax.vmap(fn, in_axes=(1, 0), out_axes=1)(qg, w_h)
+
+
+def hata_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                w_h: jax.Array, cache: LayerKVCache, *,
+                hcfg: HataConfig, pos: jax.Array,
+                window: Optional[int] = None,
+                fused_gather: bool = False) -> HataDecodeOut:
+    """Alg. 3. q: (B, H, d), k_new/v_new: (B, 1, H_kv, d),
+    w_h: (H_kv, d, rbit), pos: scalar int32 (cache fill before this token).
+    """
+    b, h, d = q.shape
+    h_kv = k_new.shape[2]
+    s_max = cache.max_len
+    rbit = w_h.shape[-1]
+
+    # --- Encode & cache update (Alg. 3 lines 3-9) ---
+    k_codes = ops.hash_encode_heads(k_new, w_h)      # (B, 1, H_kv, W)
+    cache = append_kv(cache, k_new, v_new, k_codes, pos)
+    q_codes = _aggregate_q_codes(q, w_h, h_kv)       # (B, H_kv, G, W)
+
+    # --- Hamming scores over the full code cache (lines 10-11) ---
+    scores = ops.hamming_scores(q_codes, cache.codes, rbit=rbit)
+    n_valid = pos + 1
+    positions = jnp.arange(s_max)
+    valid = positions[None, None, :] < n_valid       # (1, 1, S)
+    if window is not None:
+        valid = valid & (positions[None, None, :] > n_valid - 1 - window)
+    scores = jnp.where(valid, scores, -1)
+
+    # --- Top-k select + gather + sparse attention (lines 13-17) ---
+    budget = hcfg.budget(s_max)
+    if window is not None:
+        budget = min(budget, window)
+    budget = min(budget, s_max)
+    top_scores, idx = jax.lax.top_k(scores, budget)  # (B, H_kv, k)
+    sel_valid = top_scores >= 0
+
+    out = _masked_gather_attention(q, cache, idx, sel_valid,
+                                   fused=fused_gather)
+    return HataDecodeOut(out=out, cache=cache, idx=idx, scores=scores)
+
+
+def _masked_gather_attention(q: jax.Array, cache: LayerKVCache,
+                             idx: jax.Array, sel_valid: jax.Array, *,
+                             fused: bool) -> jax.Array:
+    """Sparse attention over gathered rows with a validity mask."""
+    b, h, d = q.shape
+    h_kv = cache.k.shape[2]
+    g = h // h_kv
+    if fused and ops.get_impl() == "pallas":
+        # Fused path: invalid selections are clamped to row 0 and their
+        # probability mass removed by re-running the reference mask; on
+        # real TPU the index list is exactly the valid prefix because
+        # scores < 0 sort last. We keep the clamp + correction exact:
+        idx_c = jnp.where(sel_valid, idx, 0)
+        out = ops.gather_decode_attention(q, cache.k, cache.v, idx_c,
+                                          fused=True)
+        # correction only needed when any invalid present; cheap branch:
+        any_invalid = jnp.any(~sel_valid)
+        out_exact = _xla_masked(q, cache, idx, sel_valid)
+        return jnp.where(any_invalid, out_exact, out)
+    return _xla_masked(q, cache, idx, sel_valid)
+
+
+def _xla_masked(q: jax.Array, cache: LayerKVCache, idx: jax.Array,
+                sel_valid: jax.Array) -> jax.Array:
+    b, h, d = q.shape
+    h_kv = cache.k.shape[2]
+    g = h // h_kv
+    kg = jnp.take_along_axis(jnp.moveaxis(cache.k, 2, 1), idx[..., None],
+                             axis=2)                 # (B, H_kv, k, d)
+    vg = jnp.take_along_axis(jnp.moveaxis(cache.v, 2, 1), idx[..., None],
+                             axis=2)
+    qf = q.reshape(b, h_kv, g, d).astype(jnp.float32) * (d ** -0.5)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qf, kg.astype(jnp.float32))
+    logits = jnp.where(sel_valid[:, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, vg.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+# The MLA variant (beyond-paper: hash over the compressed latent stream)
+# lives with the MLA projection math in models/attention.py.

@@ -1,0 +1,140 @@
+"""Learning-to-hash for top-k attention (paper §3.1, Eq. 3-9, App. B).
+
+Trains per-(layer, kv-head) hash weights ``W_H ∈ R^{d×rbit}`` so that
+``sign(x W_H)`` preserves the *relative order* of qk scores — the paper's
+central reframing: selection needs ordinal comparison, not score
+regression.
+
+Loss (Eq. 9), with ``h(x) = 2·sigmoid(σ·xW_H) − 1`` relaxing the sign:
+
+    ε · Σ_j Σ_i s_ji ‖h(q_j) − h(k_ji)‖²      (similarity preservation)
+  + η · Σ_j ‖Σ_i h(k_ji)‖²                    (bit balance, relaxed Eq. 5)
+  + λ · ‖W_HᵀW_H − I_r‖_F                     (bit uncorrelation, Eq. 6)
+
+Labels s_ji come from :mod:`repro.data.hash_dataset` (App. B.1): top-10%
+qk pairs get linearly decayed positives in [1, 20], the rest −1.
+Optimizer: SGD, lr 0.1, momentum 0.9, weight decay 1e-6 (Table 11).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HataConfig
+from repro.kernels import ops
+from repro.optim.sgd import SGDState, sgd_init, sgd_update
+
+
+def relaxed_hash(x: jax.Array, w_h: jax.Array, sigma: float) -> jax.Array:
+    """Differentiable surrogate of sign(xW_H): 2·sigmoid(σ·xW_H) − 1."""
+    return 2.0 * jax.nn.sigmoid(sigma * (x @ w_h)) - 1.0
+
+
+def hash_loss(w_h: jax.Array, q: jax.Array, k: jax.Array, s: jax.Array,
+              hcfg: HataConfig) -> jax.Array:
+    """Eq. 9 on a batch of grouped triplets.
+
+    w_h: (d, rbit);  q: (B, d) queries;  k: (B, M, d) the M keys paired
+    with each query;  s: (B, M) similarity labels.
+    """
+    rbit = w_h.shape[1]
+    hq = relaxed_hash(q.astype(jnp.float32), w_h, hcfg.sigma)   # (B, r)
+    hk = relaxed_hash(k.astype(jnp.float32), w_h, hcfg.sigma)   # (B, M, r)
+    # similarity preservation
+    d2 = jnp.sum((hq[:, None, :] - hk) ** 2, axis=-1)           # (B, M)
+    sim_term = jnp.sum(s * d2)
+    # bit balance over each query's key set
+    bal_term = jnp.sum(jnp.sum(hk, axis=1) ** 2)
+    # bit uncorrelation
+    gram = w_h.T @ w_h - jnp.eye(rbit, dtype=w_h.dtype)
+    unc_term = jnp.linalg.norm(gram)
+    n = q.shape[0] * k.shape[1]
+    return (hcfg.epsilon * sim_term + hcfg.eta * bal_term) / n \
+        + hcfg.lam * unc_term
+
+
+class HashTrainState(NamedTuple):
+    w_h: jax.Array
+    opt: SGDState
+    step: jax.Array
+
+
+def hash_train_init(key: jax.Array, d: int, rbit: int) -> HashTrainState:
+    w = jax.random.normal(key, (d, rbit), jnp.float32) / jnp.sqrt(d)
+    return HashTrainState(w_h=w, opt=sgd_init(w), step=jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("hcfg", "lr", "momentum",
+                                              "weight_decay"))
+def hash_train_step(state: HashTrainState, q: jax.Array, k: jax.Array,
+                    s: jax.Array, *, hcfg: HataConfig, lr: float = 0.1,
+                    momentum: float = 0.9, weight_decay: float = 1e-6,
+                    ) -> Tuple[HashTrainState, jax.Array]:
+    loss, grad = jax.value_and_grad(hash_loss)(state.w_h, q, k, s, hcfg)
+    w, opt = sgd_update(state.w_h, grad, state.opt, lr=lr,
+                        momentum=momentum, weight_decay=weight_decay)
+    return HashTrainState(w, opt, state.step + 1), loss
+
+
+def train_hash_weights(key: jax.Array, q: jax.Array, k: jax.Array,
+                       s: jax.Array, *, rbit: int, hcfg: HataConfig,
+                       epochs: int = 15, iters: int = 20,
+                       batch: int = 256, lr: float = 0.1) -> jax.Array:
+    """Train one head's hash weights on grouped triplets (App. B.2 loop).
+
+    q: (N, d), k: (N, M, d), s: (N, M). Paper: 15 epochs x 20 iterations
+    per layer. Returns trained W_H (d, rbit) float32.
+    """
+    n, d = q.shape
+    state = hash_train_init(key, d, rbit)
+    steps = epochs * iters
+    batch = min(batch, n)
+
+    def body(carry, i):
+        state, key = carry
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (batch,), 0, n)
+        state, loss = hash_train_step(state, q[idx], k[idx], s[idx],
+                                      hcfg=hcfg, lr=lr)
+        return (state, key), loss
+
+    (state, _), losses = jax.lax.scan(body, (state, key), jnp.arange(steps))
+    return state.w_h
+
+
+def train_hash_weights_per_head(key: jax.Array, q: jax.Array, k: jax.Array,
+                                s: jax.Array, *, rbit: int,
+                                hcfg: HataConfig, **kw) -> jax.Array:
+    """vmapped multi-head training. q: (H, N, d), k: (H, N, M, d),
+    s: (H, N, M) -> (H, d, rbit)."""
+    keys = jax.random.split(key, q.shape[0])
+    fn = functools.partial(train_hash_weights, rbit=rbit, hcfg=hcfg, **kw)
+    return jax.vmap(fn)(keys, q, k, s)
+
+
+# ---------------------------------------------------------------------------
+# Quality metrics + LSH baseline
+# ---------------------------------------------------------------------------
+def random_projection_lsh(key: jax.Array, d: int, rbit: int) -> jax.Array:
+    """SimHash/MagicPIG-style random hyperplanes — the untrained baseline
+    the paper beats (needs ~1500 bits where HATA needs 128)."""
+    return jax.random.normal(key, (d, rbit), jnp.float32)
+
+
+def hash_topk_recall(q: jax.Array, keys: jax.Array, w_h: jax.Array,
+                     budget: int, *, rbit: int) -> jax.Array:
+    """Recall of hash-selected top-k vs exact qk top-k.
+
+    q: (Nq, d) held-out queries, keys: (S, d). Returns (Nq,) recall.
+    """
+    true_scores = q.astype(jnp.float32) @ keys.astype(jnp.float32).T
+    qc = ops.hash_encode(q, w_h)                      # (Nq, W)
+    kc = ops.hash_encode(keys, w_h)                   # (S, W)
+    x = jax.lax.population_count(
+        jnp.bitwise_xor(qc[:, None, :], kc[None, :, :]))
+    est = rbit - jnp.sum(x.astype(jnp.int32), axis=-1)
+    from repro.core.topk import selection_recall
+    return selection_recall(est.astype(jnp.float32), true_scores, budget)

@@ -1,0 +1,128 @@
+"""KV + hash-code cache structures (paper Alg. 1/3 state).
+
+Fixed-capacity ring-free caches: arrays are allocated at ``max_len`` and
+a scalar ``pos`` tracks fill. All append ops are ``dynamic_update_slice``
+so the structures are jit/pjit friendly; sharding specs for the S axis
+come from ``repro/distributed/sharding.py``.
+
+Three cache families:
+  * :class:`LayerKVCache`   — GQA/MHA: K/V per kv head + packed key codes.
+  * :class:`MLACache`       — DeepSeek MLA: compressed latent c_kv + rope
+                              key + one shared code stream (the
+                              beyond-paper HATA+MLA extension).
+  * :class:`SSMState`       — Mamba2: conv window + SSD recurrent state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import register_dataclass
+
+
+@register_dataclass
+@dataclasses.dataclass
+class LayerKVCache:
+    k: jax.Array                      # (B, S_max, H_kv, d)
+    v: jax.Array                      # (B, S_max, H_kv, d)
+    codes: Optional[jax.Array]        # (B, S_max, H_kv, rbit//32) uint32
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[1]
+
+
+@register_dataclass
+@dataclasses.dataclass
+class MLACache:
+    ckv: jax.Array                    # (B, S_max, r)
+    krope: jax.Array                  # (B, S_max, rope_dim)
+    codes: Optional[jax.Array]        # (B, S_max, rbit//32) uint32
+
+    @property
+    def max_len(self) -> int:
+        return self.ckv.shape[1]
+
+
+@register_dataclass
+@dataclasses.dataclass
+class SSMState:
+    conv: jax.Array                   # (B, d_conv - 1, conv_dim)
+    ssm: jax.Array                    # (B, n_heads, head_dim, d_state)
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  *, rbit: int = 0, dtype=jnp.bfloat16) -> LayerKVCache:
+    codes = None
+    if rbit:
+        codes = jnp.zeros((batch, max_len, n_kv_heads, rbit // 32),
+                          jnp.uint32)
+    # k and v must be distinct buffers (donation aliases per leaf)
+    return LayerKVCache(
+        k=jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        codes=codes)
+
+
+def init_mla_cache(batch: int, max_len: int, kv_lora_rank: int,
+                   rope_dim: int, *, rbit: int = 0,
+                   dtype=jnp.bfloat16) -> MLACache:
+    codes = None
+    if rbit:
+        codes = jnp.zeros((batch, max_len, rbit // 32), jnp.uint32)
+    return MLACache(
+        ckv=jnp.zeros((batch, max_len, kv_lora_rank), dtype),
+        krope=jnp.zeros((batch, max_len, rope_dim), dtype),
+        codes=codes)
+
+
+def init_ssm_state(batch: int, conv_dim: int, d_conv: int, n_heads: int,
+                   head_dim: int, d_state: int, *,
+                   dtype=jnp.float32) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, n_heads, head_dim, d_state), dtype))
+
+
+def _upd(buf: jax.Array, val: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write ``val`` at sequence offset ``pos`` (axis 1).
+
+    ``pos`` may be a scalar (aligned batch) or per-row (B,) — the
+    continuous-batching engine decodes slots at different depths.
+    With a sequence-parallel decode strategy installed, scalar writes
+    run inside shard_map (masked local row writes) — GSPMD's own
+    lowering of a DUS on a sharded dim is a whole-buffer ownership
+    select.
+    """
+    if jnp.ndim(pos) == 1:
+        # per-slot row write: vmap the DUS over the batch dim
+        def one(b_row, v_row, p):
+            idx = (p,) + (0,) * (b_row.ndim - 1)
+            return jax.lax.dynamic_update_slice(
+                b_row, v_row.astype(b_row.dtype), idx)
+        return jax.vmap(one)(buf, val, pos)
+    from repro.distributed.strategy import get_decode_strategy
+    strat = get_decode_strategy()
+    if strat is not None and hasattr(strat, "append_leaf"):
+        return strat.append_leaf(buf, val, (), pos)
+    idx = (0, pos) + (0,) * (buf.ndim - 2)
+    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+
+
+def append_kv(cache: LayerKVCache, k: jax.Array, v: jax.Array,
+              codes: Optional[jax.Array], pos: jax.Array) -> LayerKVCache:
+    """Append S_new tokens at offset pos. k/v: (B, S_new, H_kv, d)."""
+    return LayerKVCache(
+        k=_upd(cache.k, k, pos),
+        v=_upd(cache.v, v, pos),
+        codes=None if cache.codes is None else _upd(cache.codes, codes, pos))
+
+
+def append_mla(cache: MLACache, ckv: jax.Array, krope: jax.Array,
+               codes: Optional[jax.Array], pos: jax.Array) -> MLACache:
+    return MLACache(
+        ckv=_upd(cache.ckv, ckv, pos),
+        krope=_upd(cache.krope, krope, pos),
+        codes=None if cache.codes is None else _upd(cache.codes, codes, pos))

@@ -1,0 +1,5 @@
+from repro.data.hash_dataset import build_triplets, harvest_qk
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import SyntheticLM
+
+__all__ = ["SyntheticLM", "DataPipeline", "build_triplets", "harvest_qk"]

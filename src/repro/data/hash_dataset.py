@@ -1,0 +1,147 @@
+"""Hash-training data construction (paper App. B.1).
+
+From a prefill run of a real model we harvest per-head (Q, K); for each
+sampled query q_m (m uniform in [n/2, n)) the causal keys k_1..k_m are
+scored, the top-10% become positives with linearly decayed labels in
+[1, 20] (best rank -> 20), the rest get label -1. Triplets are grouped
+as (q, M keys, M labels) batches for the Eq. 9 trainer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HataConfig, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import blocks as blocks_mod
+from repro.models.layers import rms_norm
+from repro.models.transformer import Model
+
+
+# ---------------------------------------------------------------------------
+# Harvest q/k from a model layer (prefill-time capture)
+# ---------------------------------------------------------------------------
+def harvest_qk(model: Model, params, batch: Dict, layer: int,
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (q (B, S, H, dh), k (B, S, H_kv, dh)) of one layer.
+
+    For MLA (beyond-paper), returns the *latent-space* pair:
+    q (B, S, H, r+rope) absorbed queries, k (B, S, 1, r+rope) latents —
+    exactly the vectors HashEncode sees at inference.
+    """
+    cfg = model.cfg
+    x = model.embed(params, batch["tokens"])
+    img = batch.get("image_embeds")
+    if img is not None:
+        img = img.astype(x.dtype) @ params["img_proj"]
+
+    def layer_params(i):
+        if i < model.n_pre:
+            return params["pre"][i], "main"
+        j = i - model.n_pre
+        if cfg.family == "vlm":
+            ce = cfg.vlm.cross_every
+            g, r = divmod(j, ce)
+            if r == ce - 1:
+                return jax.tree.map(lambda t: t[g],
+                                    params["cross_stack"]), "cross"
+            return jax.tree.map(lambda t: t[g][r],
+                                params["stack"]), "main"
+        return jax.tree.map(lambda t: t[j], params["stack"]), "main"
+
+    for i in range(layer):
+        bp, kind = layer_params(i)
+        kind_name = "cross" if kind == "cross" else model.kind
+        x, _ = blocks_mod.block_train(cfg, bp, None, x, kind_name,
+                                      img=img)
+    bp, kind = layer_params(layer)
+    assert kind == "main", "harvest target must be a self-attention layer"
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    positions = jnp.arange(h.shape[1])
+    if cfg.mla is not None:
+        q_nope, q_rope, ckv, krope = attn_mod._mla_qkv(
+            cfg, bp["attn"], h, positions)
+        b, s = h.shape[0], h.shape[1]
+        q_lat = jax.vmap(lambda qn, qr: attn_mod._mla_latent_q(
+            cfg, bp["attn"], qn, qr), in_axes=1, out_axes=1)(
+            q_nope, q_rope)                         # (B, S, H, r+rd)
+        k_lat = jnp.concatenate([ckv, krope], -1)[:, :, None, :]
+        return np.asarray(q_lat, np.float32), np.asarray(k_lat, np.float32)
+    q, k, _ = attn_mod._project_qkv(cfg, bp["attn"], h, positions)
+    return np.asarray(q, np.float32), np.asarray(k, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Triplet construction (App. B.1 steps 2-5)
+# ---------------------------------------------------------------------------
+def build_triplets(q: np.ndarray, k: np.ndarray, hcfg: HataConfig, *,
+                   n_queries: int = 64, m_keys: int = 64,
+                   seed: int = 0) -> Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]:
+    """One kv-head group's triplets.
+
+    q: (B, S, G, d) the query heads sharing this kv head;
+    k: (B, S, d) this head's keys.
+    Returns (qs (N, d), ks (N, M, d), labels (N, M)), N = B*G*n_queries.
+    """
+    rng = np.random.default_rng(seed)
+    b, s, g, d = q.shape
+    qs, ks, ls = [], [], []
+    for bi in range(b):
+        for gi in range(g):
+            for _ in range(n_queries):
+                m = int(rng.integers(s // 2, s))
+                qv = q[bi, m, gi]                       # (d,)
+                keys = k[bi, : m + 1]                   # (m+1, d)
+                scores = keys @ qv
+                order = np.argsort(-scores)
+                npos = max(1, int(np.ceil(hcfg.pos_frac * (m + 1))))
+                labels = np.full(m + 1, hcfg.neg_label, np.float32)
+                ranks = np.arange(npos, dtype=np.float32)
+                # linear decay: best rank -> pos_label_max, last -> 1
+                decay = (hcfg.pos_label_max
+                         - ranks * (hcfg.pos_label_max - 1.0)
+                         / max(npos - 1, 1))
+                labels[order[:npos]] = decay
+                # subsample a fixed-size key set: keep positives first
+                pos_take = min(npos, m_keys // 4)
+                pos_idx = order[:pos_take]
+                neg_pool = order[npos:]
+                if len(neg_pool) == 0:
+                    neg_pool = order
+                neg_idx = rng.choice(neg_pool, m_keys - pos_take,
+                                     replace=len(neg_pool) < m_keys)
+                sel = np.concatenate([pos_idx, neg_idx])
+                qs.append(qv)
+                ks.append(keys[sel])
+                ls.append(labels[sel])
+    return (np.stack(qs).astype(np.float32),
+            np.stack(ks).astype(np.float32),
+            np.stack(ls).astype(np.float32))
+
+
+def build_triplets_per_head(model: Model, params, batches, layer: int,
+                            hcfg: HataConfig, **kw):
+    """All kv heads of one layer, multiple sequences (B.1 'dozens of
+    sequences'). Returns (H_kv, N, d), (H_kv, N, M, d), (H_kv, N, M)."""
+    cfg = model.cfg
+    per_head: Dict[int, list] = {}
+    for batch in batches:
+        q, k = harvest_qk(model, params, batch, layer)
+        b, s, h, d = q.shape
+        h_kv = k.shape[2]
+        g = h // h_kv
+        qg = q.reshape(b, s, h_kv, g, d)
+        for hi in range(h_kv):
+            per_head.setdefault(hi, []).append(
+                build_triplets(qg[:, :, hi], k[:, :, hi], hcfg, **kw))
+    out_q, out_k, out_l = [], [], []
+    for hi in sorted(per_head):
+        qs = np.concatenate([t[0] for t in per_head[hi]])
+        ks = np.concatenate([t[1] for t in per_head[hi]])
+        ls = np.concatenate([t[2] for t in per_head[hi]])
+        out_q.append(qs), out_k.append(ks), out_l.append(ls)
+    return (np.stack(out_q), np.stack(out_k), np.stack(out_l))

@@ -1,0 +1,7 @@
+from repro.distributed import (collectives, decode, fault_tolerance,
+                               pipeline, sharding)
+from repro.distributed.strategy import (get_decode_strategy,
+                                        set_decode_strategy)
+
+__all__ = ["collectives", "decode", "fault_tolerance", "pipeline",
+           "sharding", "get_decode_strategy", "set_decode_strategy"]

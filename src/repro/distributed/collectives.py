@@ -1,0 +1,80 @@
+"""SPMD collective building blocks (used inside shard_map).
+
+``distributed_topk``  — two-stage exact top-k over a sequence-sharded
+score axis: local top-k, all-gather the (value, global-index) candidate
+pairs (k·P·8 bytes instead of S·4), global top-k on every shard. Exact
+whenever k <= S_local (each shard's winners are within its local top-k);
+for k > S_local the local stage takes the whole shard and the gather
+degenerates to a (sorted) full gather — see EXPERIMENTS.md §Perf for the
+byte accounting of both regimes.
+
+``merge_partial_softmax`` — flash-style (m, l, o) merge across shards:
+pmax(m), rescale, psum. The only cross-shard traffic of the
+sequence-parallel decode attention is these statistics: (2+dv)·G·4 bytes
+per (batch, kv-head), independent of S and k.
+
+``hierarchical_psum`` — reduce-scatter in-pod then cross-pod all-reduce
+for the multi-pod gradient sync (DCI hops carry 1/16th of the bytes).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def distributed_topk(local_scores: jax.Array, k: int, axis_name,
+                     s_local: int) -> Tuple[jax.Array, jax.Array]:
+    """local_scores: (..., S_local). Returns (values, global indices),
+    both (..., k), identical on every shard along ``axis_name``.
+
+    ``axis_name`` may be a tuple of mesh axes; the reduction is then
+    HIERARCHICAL — candidates reduce over the innermost axis first,
+    cutting gather traffic from P_total·min(k, S_local) pairs to
+    roughly Σ_axis P_axis·k pairs while staying exact (every element of
+    the global top-k survives each stage's local top-k by the same
+    subset argument as the flat two-stage). §Perf iteration H2.
+    """
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    k_local = min(k, s_local)
+    lv, li = jax.lax.top_k(local_scores, k_local)
+    offset = _flat_index(axes) * s_local
+    gi = li + offset
+    for ax in reversed(axes):
+        av = jax.lax.all_gather(lv, ax, axis=-2, tiled=False)
+        ai = jax.lax.all_gather(gi, ax, axis=-2, tiled=False)
+        av = av.reshape(*av.shape[:-2], -1)
+        ai = ai.reshape(*ai.shape[:-2], -1)
+        kk = min(k, av.shape[-1])
+        lv, sel = jax.lax.top_k(av, kk)
+        gi = jnp.take_along_axis(ai, sel, axis=-1)
+    return lv, gi
+
+
+def _flat_index(axes) -> jax.Array:
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def merge_partial_softmax(m: jax.Array, l: jax.Array, o: jax.Array,
+                          axis_name: str) -> jax.Array:
+    """m/l: (...,), o: (..., dv) per-shard flash stats -> merged output.
+
+    Shards with nothing to contribute must pass m = -inf-like (-1e30),
+    l = 0, o = 0.
+    """
+    m_g = jax.lax.pmax(m, axis_name)
+    alpha = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(alpha * l, axis_name)
+    o_g = jax.lax.psum(alpha[..., None] * o, axis_name)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def hierarchical_psum(x: jax.Array, pod_axis: str, inner_axis: str,
+                      ) -> jax.Array:
+    """psum factored as inner-pod reduce then cross-pod reduce: XLA lowers
+    each stage onto its own link class (ICI in-pod, DCI across)."""
+    return jax.lax.psum(jax.lax.psum(x, inner_axis), pod_axis)

@@ -1,0 +1,386 @@
+"""Sequence-parallel (SP) HATA decode — the paper's Alg. 3 made SPMD.
+
+At production shapes the KV+code caches are sequence-sharded over the
+``model`` axis (and over *everything* for the 500k single-sequence
+cell); replicating them is impossible (405B @ 32k x 128 = 2.2 TB). This
+module runs the score -> select -> attend pipeline under shard_map with
+three selectable modes (the §Perf hillclimb ladder):
+
+``naive``      GSPMD semantics: global jnp ops — XLA all-gathers the
+               full score vector and the gathered rows. Baseline.
+``two_stage``  exact: local Hamming scores -> two-stage distributed
+               top-k (only (value, index) candidate pairs cross the
+               ICI) -> each shard attends over the winners it *owns*
+               (clamped local gather + ownership mask) -> flash-stat
+               (m, l, o) psum merge. Bit-exact vs single-device HATA
+               (same scores -> same lax.top_k tie-breaks).
+``local_split``  beyond-paper approximation: every shard takes its local
+               top-(k/P) and attends, merge as above. Zero index
+               traffic, only the O(G·d) stat psum; selection differs
+               from exact top-k only when >k/P winners collide on one
+               shard (recall measured in benchmarks/distributed_topk).
+
+The dense path (first-N dense layers / HATA off) is the same machinery
+minus selection: local partial attention + stat merge — i.e. classic
+sequence-parallel flash decode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.core.kvcache import LayerKVCache, MLACache
+from repro.distributed.collectives import (distributed_topk,
+                                           merge_partial_softmax)
+from repro.kernels import ops
+
+
+def _flat_axis_index(axes: Sequence[str]) -> jax.Array:
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _partial_stats(q: jax.Array, k: jax.Array, v: jax.Array,
+                   mask: jax.Array, scale: float):
+    """q: (B, Hkv, G, d), k/v: (B, R, Hkv, d|dv) — native cache layout,
+    never transposed (a moveaxis here materializes a transposed copy of
+    the whole local cache every layer). mask: (B, Hkv, R).
+    Returns flash stats m/l: (B, Hkv, G), o: (B, Hkv, G, dv).
+
+    bf16 caches stay bf16 (f32 MXU accumulation via
+    preferred_element_type) — an .astype(f32) here makes XLA hoist an
+    f32 copy of the whole layer-stacked cache out of the decode scan
+    (measured: +2.8 GiB temp on qwen decode_32k; EXPERIMENTS.md §Perf).
+    """
+    logits = jnp.einsum("bhgd,brhd->bhgr", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, :, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)
+    m_safe = jnp.maximum(m, -1e30)
+    p = jnp.exp(logits - m_safe[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgr,brhd->bhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m_safe, l, o
+
+
+class SPDecode:
+    """Strategy object installed via repro.distributed.strategy."""
+
+    def __init__(self, mesh: Mesh, *, seq_axes: Tuple[str, ...] = ("model",),
+                 batch_axes: Optional[Tuple[str, ...]] = None,
+                 mode: str = "two_stage"):
+        assert mode in ("naive", "two_stage", "local_split"), mode
+        self.mesh = mesh
+        self.seq_axes = tuple(seq_axes)
+        self.batch_axes = tuple(batch_axes or ())
+        self.mode = mode
+        self.n_seq_shards = int(math.prod(
+            mesh.shape[a] for a in self.seq_axes))
+
+    # ------------------------------------------------------------------
+    def append_leaf(self, leaf: jax.Array, new: jax.Array, lead,
+                    pos) -> jax.Array:
+        """In-place row append into a sequence-sharded stacked cache.
+
+        leaf: (*lead_dims, B, S_max, ...), new: (B, S_new, ...).
+        GSPMD lowers a dynamic-update-slice on a sharded dim as
+        local-update + whole-buffer ownership select (measured: full
+        cache r/w per layer per decode step — EXPERIMENTS.md §Perf).
+        Inside shard_map every shard instead writes exactly one row:
+        owners write the new value, non-owners rewrite the row already
+        there. O(row) traffic, fully in place.
+        """
+        nlead = len(lead)
+        b_ax = self.batch_axes or None
+        tail = leaf.ndim - nlead - 2
+        leaf_spec = P(*([None] * nlead + [b_ax, self.seq_axes]
+                        + [None] * tail))
+        s_new = new.shape[1]
+        s_max = leaf.shape[nlead + 1]
+        if 1 < s_new < s_max:
+            # partial multi-row write (chunked prefill): rows may
+            # straddle shard boundaries — let GSPMD lower the DUS
+            idx = tuple(lead) + (0, pos) + (0,) * tail
+            return jax.lax.dynamic_update_slice(
+                leaf, new.reshape((1,) * nlead + new.shape
+                                  ).astype(leaf.dtype), idx)
+        lead_arr = (jnp.stack([jnp.asarray(l, jnp.int32) for l in lead])
+                    if nlead else jnp.zeros((0,), jnp.int32))
+        if s_new == s_max:
+            # full overwrite (prefill at pos 0): shard-aligned write
+            new_spec = P(*([b_ax, self.seq_axes] + [None] * tail))
+
+            def write_full(lf, nw, la):
+                idx = tuple(la[i] for i in range(nlead)) \
+                    + (0,) * (lf.ndim - nlead)
+                nw = nw.reshape((1,) * nlead + nw.shape).astype(lf.dtype)
+                return jax.lax.dynamic_update_slice(lf, nw, idx)
+
+            return shard_map(write_full, mesh=self.mesh,
+                             in_specs=(leaf_spec, new_spec, P(None)),
+                             out_specs=leaf_spec,
+                             check_rep=False)(leaf, new, lead_arr)
+
+        new_spec = P(*([b_ax, None] + [None] * tail))
+
+        def write_rows(lf, nw, la, p_):
+            s_local = lf.shape[nlead + 1]
+            offset = _flat_axis_index(self.seq_axes) * s_local
+            lpos = p_ - offset
+            own = (lpos >= 0) & (lpos <= s_local - s_new)
+            lclamped = jnp.clip(lpos, 0, s_local - s_new)
+            idx = tuple(la[i] for i in range(nlead)) \
+                + (0, lclamped) + (0,) * tail
+            cur = jax.lax.dynamic_slice(
+                lf, idx, (1,) * nlead + (nw.shape[0], s_new)
+                + nw.shape[2:])
+            nw = nw.reshape((1,) * nlead + nw.shape).astype(lf.dtype)
+            val = jnp.where(own, nw, cur)
+            return jax.lax.dynamic_update_slice(lf, val, idx)
+
+        return shard_map(write_rows, mesh=self.mesh,
+                         in_specs=(leaf_spec, new_spec, P(None), P()),
+                         out_specs=leaf_spec, check_rep=False)(
+            leaf, new, lead_arr, jnp.asarray(pos, jnp.int32))
+
+    # ------------------------------------------------------------------
+    def gqa(self, cfg: ModelConfig, q: jax.Array, w_h, cache: LayerKVCache,
+            n_valid: jax.Array, use_hata) -> jax.Array:
+        """q: (B, H, d) global; cache arrays (B, S, Hkv, d) sequence-
+        sharded. Returns (B, H, d) attention output (pre-Wo)."""
+        if self.mode == "naive":
+            return None                      # caller keeps GSPMD path
+        b_ax = self.batch_axes or None
+        kv_spec = P(b_ax, self.seq_axes, None, None)
+        hata_possible = (cache.codes is not None and cfg.hata.enabled
+                         and w_h is not None)
+        if hata_possible and not (isinstance(use_hata, bool)
+                                  and not use_hata):
+            static = use_hata if isinstance(use_hata, bool) else None
+            fn = shard_map(
+                functools.partial(self._gqa_local, cfg, static),
+                mesh=self.mesh,
+                in_specs=(P(b_ax, None, None), P(None, None, None),
+                          kv_spec, kv_spec, kv_spec, P(), P()),
+                out_specs=P(b_ax, None, None),
+                check_rep=False)
+            return fn(q, w_h, cache.k, cache.v, cache.codes,
+                      jnp.asarray(n_valid, jnp.int32),
+                      jnp.asarray(use_hata, jnp.bool_))
+        fn = shard_map(
+            functools.partial(self._gqa_local_dense, cfg),
+            mesh=self.mesh,
+            in_specs=(P(b_ax, None, None), kv_spec, kv_spec, P()),
+            out_specs=P(b_ax, None, None),
+            check_rep=False)
+        return fn(q, cache.k, cache.v, jnp.asarray(n_valid, jnp.int32))
+
+    def _gqa_local_dense(self, cfg: ModelConfig, q, k_cache, v_cache,
+                         n_valid):
+        """Sequence-parallel dense flash decode (no selection)."""
+        b, h, d = q.shape
+        h_kv = k_cache.shape[2]
+        s_local = k_cache.shape[1]
+        offset = _flat_axis_index(self.seq_axes) * s_local
+        abs_pos = offset + jnp.arange(s_local)
+        valid = abs_pos[None, None, :] < n_valid
+        if cfg.sliding_window is not None:
+            valid = valid & (abs_pos[None, None, :]
+                             > n_valid - 1 - cfg.sliding_window)
+        qg = q.reshape(b, h_kv, h // h_kv, d)
+        m, l, o = _partial_stats(
+            qg, k_cache, v_cache,
+            jnp.broadcast_to(valid, (b, h_kv, s_local)), d ** -0.5)
+        out = merge_partial_softmax(m, l, o, self.seq_axes)
+        return out.reshape(b, h, d).astype(q.dtype)
+
+    def _gqa_local(self, cfg: ModelConfig, static_flag, q, w_h, k_cache,
+                   v_cache, codes, n_valid, use_hata):
+        b, h, d = q.shape
+        h_kv = k_cache.shape[2]
+        g = h // h_kv
+        s_local = k_cache.shape[1]
+        shard = _flat_axis_index(self.seq_axes)
+        offset = shard * s_local
+        abs_pos = offset + jnp.arange(s_local)
+        valid = abs_pos[None, None, :] < n_valid          # (1,1,S_l)
+        if cfg.sliding_window is not None:
+            valid = valid & (abs_pos[None, None, :]
+                             > n_valid - 1 - cfg.sliding_window)
+        qg = q.reshape(b, h_kv, g, d)
+        scale = d ** -0.5
+
+        def gather_rows(leaf, idx):
+            """leaf (B,S,Hkv,d) + per-head rows idx (B,Hkv,R)
+            -> (B,R,Hkv,d) without transposing the cache."""
+            ridx = jnp.moveaxis(idx, 1, 2)[..., None]     # (B,R,Hkv,1)
+            return jnp.take_along_axis(leaf, ridx, axis=1)
+
+        def dense():
+            mask = jnp.broadcast_to(valid, (b, h_kv, s_local))
+            return _partial_stats(qg, k_cache, v_cache, mask, scale)
+
+        def hata():
+            rbit = cfg.hata.rbit
+            q_codes = jax.vmap(lambda xx, ww: ops.hash_encode(xx, ww),
+                               in_axes=(1, 0), out_axes=1)(qg, w_h)
+            scores = ops.hamming_scores(q_codes, codes, rbit=rbit)
+            scores = jnp.where(valid, scores, -1)
+            budget = cfg.hata.budget(s_local * self.n_seq_shards)
+            if cfg.sliding_window is not None:
+                budget = min(budget, cfg.sliding_window)
+            if self.mode == "local_split":
+                k_loc = min(max(budget // self.n_seq_shards, 1), s_local)
+                top_s, idx_l = jax.lax.top_k(scores, k_loc)
+                return _partial_stats(qg, gather_rows(k_cache, idx_l),
+                                      gather_rows(v_cache, idx_l),
+                                      top_s >= 0, scale)
+            # two-stage exact
+            gv, gi = distributed_topk(scores, min(budget,
+                                                  s_local
+                                                  * self.n_seq_shards),
+                                      self.seq_axes, s_local)
+            li = gi - offset
+            owned = (li >= 0) & (li < s_local) & (gv >= 0)
+            li_c = jnp.clip(li, 0, s_local - 1)
+            return _partial_stats(qg, gather_rows(k_cache, li_c),
+                                  gather_rows(v_cache, li_c), owned,
+                                  scale)
+
+        if static_flag is None:
+            m, l, o = jax.lax.cond(use_hata, hata, dense)
+        else:
+            m, l, o = hata() if static_flag else dense()
+        out = merge_partial_softmax(m, l, o, self.seq_axes)
+        return out.reshape(b, h, d).astype(q.dtype)
+
+    # ------------------------------------------------------------------
+    def mla(self, cfg: ModelConfig, p, w_h, q_lat: jax.Array,
+            cache: MLACache, n_valid: jax.Array, use_hata) -> jax.Array:
+        """q_lat: (B, H, r+rope) absorbed queries; returns (B, H, v_dim)
+        in f32 (caller applies Wo)."""
+        if self.mode == "naive":
+            return None
+        b_ax = self.batch_axes or None
+        seq_spec = P(b_ax, self.seq_axes, None)
+        m = cfg.mla
+        h = cfg.n_heads
+        wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        hata_possible = (cache.codes is not None and cfg.hata.enabled
+                         and w_h is not None)
+        if hata_possible and not (isinstance(use_hata, bool)
+                                  and not use_hata):
+            static = use_hata if isinstance(use_hata, bool) else None
+            fn = shard_map(
+                functools.partial(self._mla_local, cfg, static),
+                mesh=self.mesh,
+                in_specs=(P(b_ax, None, None), P(None, None, None),
+                          P(None, None, None), seq_spec, seq_spec,
+                          seq_spec, P(), P()),
+                out_specs=P(b_ax, None, None),
+                check_rep=False)
+            return fn(q_lat, wuv, w_h, cache.ckv, cache.krope,
+                      cache.codes, jnp.asarray(n_valid, jnp.int32),
+                      jnp.asarray(use_hata, jnp.bool_))
+        fn = shard_map(
+            functools.partial(self._mla_local_dense, cfg),
+            mesh=self.mesh,
+            in_specs=(P(b_ax, None, None), P(None, None, None),
+                      seq_spec, seq_spec, P()),
+            out_specs=P(b_ax, None, None),
+            check_rep=False)
+        return fn(q_lat, wuv, cache.ckv, cache.krope,
+                  jnp.asarray(n_valid, jnp.int32))
+
+    def _mla_logits(self, cfg: ModelConfig, q_lat, ckv_rows, krope_rows):
+        """Split-latent logits: q·[c;k_r] = q_c·c + q_r·k_r — avoids
+        materializing a concatenated copy of the latent cache."""
+        r = cfg.mla.kv_lora_rank
+        scale = (cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim) ** -0.5
+        q_c = q_lat[..., :r].astype(ckv_rows.dtype)
+        q_r = q_lat[..., r:].astype(krope_rows.dtype)
+        logits = (jnp.einsum("bhr,bsr->bhs", q_c, ckv_rows,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bhr,bsr->bhs", q_r, krope_rows,
+                               preferred_element_type=jnp.float32))
+        return logits * scale
+
+    @staticmethod
+    def _mla_stats(logits, mask, ckv_rows):
+        """Flash stats from precomputed logits. logits: (B, H, R) f32,
+        mask: (B, R), ckv_rows: (B, R, r)."""
+        logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+        m = jnp.maximum(jnp.max(logits, axis=-1), -1e30)
+        p = jnp.exp(logits - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhs,bsr->bhr", p.astype(ckv_rows.dtype),
+                       ckv_rows, preferred_element_type=jnp.float32)
+        return m, l, o
+
+    def _mla_local_dense(self, cfg: ModelConfig, q_lat, wuv, ckv, krope,
+                         n_valid):
+        s_local = ckv.shape[1]
+        offset = _flat_axis_index(self.seq_axes) * s_local
+        valid = (offset + jnp.arange(s_local))[None] < n_valid
+        logits = self._mla_logits(cfg, q_lat, ckv, krope)
+        mm, ll, oo = self._mla_stats(logits, valid, ckv)
+        o_lat = merge_partial_softmax(mm, ll, oo, self.seq_axes)
+        return jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+
+    def _mla_local(self, cfg: ModelConfig, static_flag, q_lat, wuv, w_h,
+                   ckv, krope, codes, n_valid, use_hata):
+        b, h, _ = q_lat.shape
+        s_local = ckv.shape[1]
+        shard = _flat_axis_index(self.seq_axes)
+        offset = shard * s_local
+        abs_pos = offset + jnp.arange(s_local)
+        valid = abs_pos[None] < n_valid                    # (1, S_l)
+
+        def dense():
+            logits = self._mla_logits(cfg, q_lat, ckv, krope)
+            return self._mla_stats(
+                logits, jnp.broadcast_to(valid, (b, s_local)), ckv)
+
+        def hata():
+            rbit = cfg.hata.rbit
+            q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
+            x_ = jax.lax.population_count(jnp.bitwise_xor(
+                q_codes[:, :, None, :], codes[:, None, :, :]))
+            scores = (h * rbit
+                      - jnp.sum(x_.astype(jnp.int32), axis=(1, 3)))
+            scores = jnp.where(valid, scores, -1)          # (B, S_l)
+            s_total = s_local * self.n_seq_shards
+            budget = min(cfg.hata.budget(s_total), s_total)
+            if self.mode == "local_split":
+                k_loc = min(max(budget // self.n_seq_shards, 1), s_local)
+                top_s, idx_l = jax.lax.top_k(scores, k_loc)
+                mask = top_s >= 0
+            else:
+                gv, gi = distributed_topk(scores, budget, self.seq_axes,
+                                          s_local)
+                li = gi - offset
+                mask = (li >= 0) & (li < s_local) & (gv >= 0)
+                idx_l = jnp.clip(li, 0, s_local - 1)
+            sel_c = jnp.take_along_axis(ckv, idx_l[..., None], 1)
+            sel_r = jnp.take_along_axis(krope, idx_l[..., None], 1)
+            logits = self._mla_logits(cfg, q_lat, sel_c, sel_r)
+            return self._mla_stats(logits, mask, sel_c)
+
+        if static_flag is None:
+            mm, ll, oo = jax.lax.cond(use_hata, hata, dense)
+        else:
+            mm, ll, oo = hata() if static_flag else dense()
+        o_lat = merge_partial_softmax(mm, ll, oo, self.seq_axes)
+        o = jnp.einsum("bhr,rhd->bhd", o_lat,
+                       wuv.astype(jnp.float32))            # (B,H,dv)
+        return o

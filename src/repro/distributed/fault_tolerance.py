@@ -1,0 +1,105 @@
+"""Fault tolerance: step watchdog, heartbeats, restart supervision.
+
+On a 1000+-node fleet three failure classes dominate:
+  * hard failures (process/host death)   -> heartbeat files + supervisor
+    restart from the latest atomic checkpoint (elastic to a new mesh);
+  * stragglers (slow HBM, thermal, ECC)  -> per-step latency watchdog
+    flags outliers for drain/replace;
+  * hangs (collective deadlock)          -> watchdog timeout escalates
+    to a restart.
+
+The heartbeat directory abstracts the coordination plane: every process
+writes ``host_<i>.json`` each step; anyone can audit liveness. On this
+single-process container the same code paths are exercised by the test
+suite with simulated peers/crashes (tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class StepWatchdog:
+    """Tracks step latencies; flags stragglers and hangs."""
+
+    def __init__(self, *, window: int = 50, straggler_factor: float = 2.0,
+                 hang_timeout_s: float = 300.0):
+        self.window = window
+        self.factor = straggler_factor
+        self.hang_timeout_s = hang_timeout_s
+        self.durations: List[float] = []
+        self._t0: Optional[float] = None
+        self.flagged: List[Dict] = []
+
+    def step_start(self):
+        self._t0 = time.monotonic()
+
+    def step_end(self, step: int) -> Optional[Dict]:
+        dt = time.monotonic() - self._t0
+        report = None
+        hist = self.durations[-self.window:]
+        if len(hist) >= 10:
+            med = float(np.median(hist))
+            if dt > self.factor * med:
+                report = {"step": step, "duration": dt, "median": med,
+                          "kind": "straggler"}
+                self.flagged.append(report)
+        self.durations.append(dt)
+        return report
+
+    def check_hang(self) -> bool:
+        return (self._t0 is not None
+                and time.monotonic() - self._t0 > self.hang_timeout_s)
+
+
+class Heartbeat:
+    """File-based liveness: one JSON per process, refreshed each step."""
+
+    def __init__(self, directory: str, host_id: int, *,
+                 stale_after_s: float = 60.0):
+        self.dir = directory
+        self.host_id = host_id
+        self.stale_after_s = stale_after_s
+        os.makedirs(directory, exist_ok=True)
+
+    def beat(self, step: int):
+        path = os.path.join(self.dir, f"host_{self.host_id}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "time": time.time()}, f)
+        os.replace(tmp, path)
+
+    def dead_peers(self) -> List[int]:
+        now = time.time()
+        dead = []
+        for name in os.listdir(self.dir):
+            if not name.startswith("host_"):
+                continue
+            with open(os.path.join(self.dir, name)) as f:
+                hb = json.load(f)
+            if now - hb["time"] > self.stale_after_s:
+                dead.append(int(name.split("_")[1].split(".")[0]))
+        return sorted(dead)
+
+
+def run_with_restarts(make_state: Callable, run: Callable, *,
+                      max_restarts: int = 3) -> Dict:
+    """Supervisor loop: (re)build state and run; on failure, rebuild from
+    the latest checkpoint and continue. ``run(state) -> state`` raises to
+    signal failure; returns final state dict with restart count."""
+    restarts = 0
+    state = make_state()
+    while True:
+        try:
+            state = run(state)
+            state["restarts"] = restarts
+            return state
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            state = make_state()

@@ -1,0 +1,73 @@
+"""SPMD pipeline parallelism (GPipe schedule) over a mesh axis.
+
+The layer stack is split into ``n_stages`` contiguous groups; stage s
+holds layers [s·L/P, (s+1)·L/P). Stacked layer params are sharded on
+their leading L axis over the stage axis (usually ``pod``), so each
+stage stores only its slice. Microbatches stream through: at step t,
+stage s processes microbatch (t - s) and ``ppermute``s its activations
+to stage s+1 — the standard shard_map pipeline pattern. The bubble is
+(P-1)/(M+P-1); gradients flow through the same schedule reversed
+(autodiff of ppermute is ppermute).
+
+Used by launch/train.py when ``--pipeline pod`` is set; the multi-pod
+dry-run exercises it as an alternative to pure hierarchical-DP over the
+pod axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def spmd_pipeline(stage_fn: Callable, mesh: Mesh, axis: str, *,
+                  n_micro: int, data_axes=()):
+    """Build a pipelined apply: (stage_params_local, xs) -> ys.
+
+    stage_fn(params_slice, x_mb) -> y_mb applies one stage's layers.
+    xs: (n_micro, mb, ...) microbatched inputs (replicated over the
+    stage axis; sharded over ``data_axes`` on the mb dim).
+    Layer-stacked params must be sharded over ``axis`` on dim 0.
+    """
+    n_stages = mesh.shape[axis]
+
+    def pipelined(params_local, xs):
+        stage = jax.lax.axis_index(axis)
+        steps = n_micro + n_stages - 1
+        mb_shape = xs.shape[1:]
+
+        def step(carry, t):
+            buf, ys = carry
+            # stage 0 pulls the next microbatch; others take the buffer
+            idx = jnp.clip(t, 0, n_micro - 1)
+            x_in = jnp.where(stage == 0, xs[idx], buf)
+            y = stage_fn(params_local, x_in)
+            # pass activations downstream (ring; last->0 is ignored)
+            buf_next = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages)
+                          for i in range(n_stages)])
+            out_t = t - (n_stages - 1)
+            write = (out_t >= 0) & (stage == n_stages - 1)
+            ys = jnp.where(write,
+                           ys.at[jnp.clip(out_t, 0, n_micro - 1)].set(y),
+                           ys)
+            return (buf_next, ys), None
+
+        buf0 = jnp.zeros(mb_shape, xs.dtype)
+        ys0 = jnp.zeros_like(xs)
+        (_, ys), _ = jax.lax.scan(step, (buf0, ys0), jnp.arange(steps))
+        # every stage returns ys; only the last stage's is real —
+        # broadcast it back with a psum of the masked buffer
+        ys = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, ys, jnp.zeros_like(ys)),
+            axis)
+        return ys
+
+    in_specs = (P(axis), P(None, data_axes or None))
+    out_specs = P(None, data_axes or None)
+    return shard_map(pipelined, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)

@@ -1,0 +1,244 @@
+"""Sharding policy engine: (config, mesh) -> PartitionSpecs for params,
+optimizer state, batches and caches (DESIGN.md §4).
+
+Train params: 2D "FSDP x TP" — the TP-natural dim over ``model``
+(attention heads / d_ff / vocab / experts), the other dim over the DP
+axes (ZeRO-3: XLA inserts per-layer all-gathers). Dims that don't divide
+fall back to replication on that axis — the policy never fails, it
+degrades and reports (``explain()``).
+
+Decode caches: **sequence-sharded** over ``model`` (B over DP when it
+divides; the 500k single-sequence cell shards S over every axis). This
+is what makes 32k x 128 caches for the 405B fit: see EXPERIMENTS.md
+§Dry-run bytes-per-device.
+
+MoE experts: E over ``model`` when divisible (EP; XLA all-to-all),
+otherwise intra-expert TP over d_ff (Mixtral 8e on a 16-way axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+class ShardingPolicy:
+    """Resolves per-leaf PartitionSpecs by parameter path patterns."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp = dp_axes(mesh)
+        self.notes: List[str] = []
+
+    # ------------------------------------------------------------------
+    def _spec2d(self, shape, in_axis, out_axis, n_lead: int) -> P:
+        """Shard a (..., d_in, d_out) leaf: d_in over ``in_axis``,
+        d_out over ``out_axis`` — dropping any axis that doesn't divide."""
+        din, dout = shape[-2], shape[-1]
+        ia = in_axis if _fits(din, self.mesh, in_axis) else None
+        oa = out_axis if _fits(dout, self.mesh, out_axis) else None
+        return P(*([None] * n_lead + [ia, oa]))
+
+    def _repl(self, shape) -> P:
+        return P(*([None] * len(shape)))
+
+    # ------------------------------------------------------------------
+    def param_spec(self, path: str, leaf) -> P:
+        cfg, mesh, dp = self.cfg, self.mesh, self.dp
+        shape = leaf.shape
+        parts = [s.strip(".'[]\"") for s in path.split("/")]
+        path = "/".join(parts)
+        name = parts[-1]
+        n_lead = 0
+        if any("stack" in s for s in parts):
+            n_lead = 1
+            if cfg.family == "vlm" and "cross" not in path:
+                n_lead = 2                      # (G, per_group, ...)
+        if len(shape) <= n_lead:                # scalars / gates
+            return self._repl(shape)
+
+        # --- embeddings / heads ---
+        if "embed" in name:
+            # (Vp, D) [audio: (nb, V, D)] — vocab over model, D over dp.
+            # NOTE (§Perf iteration T1): D-over-model variants trip an
+            # XLA SPMD gather-partitioning bug; with the post-embedding
+            # activation constraint installed the partitioner lowers
+            # this layout to masked lookup + small psum (no table
+            # all-gather), so it is both correct and cheap.
+            lead = len(shape) - 2
+            va = "model" if _fits(shape[-2], mesh, "model") else None
+            da = dp if _fits(shape[-1], mesh, dp) else None
+            return P(*([None] * lead + [va, da]))
+        if "lm_head" in name:
+            lead = len(shape) - 2
+            da = dp if _fits(shape[-2], mesh, dp) else None
+            va = "model" if _fits(shape[-1], mesh, "model") else None
+            return P(*([None] * lead + [da, va]))
+        if name in ("meta", "img_proj"):
+            return self._spec2d(shape, None, dp, len(shape) - 2)
+
+        # --- hash weights: small, replicated (loaded once per decode) ---
+        if "hash" in path:
+            return self._repl(shape)
+
+        # --- MoE experts: (E, d, f) ---
+        if "moe" in parts:
+            if name == "router":
+                return self._spec2d(shape, dp, None, n_lead)
+            if name in ("wi", "wu", "wd") and "shared" not in path:
+                e = cfg.moe
+                if e.parallelism == "ep" and _fits(e.n_experts, mesh,
+                                                   "model"):
+                    return P(*([None] * n_lead + ["model", None, dp
+                                if _fits(shape[-1], mesh, dp) else None]))
+                # intra-expert TP: shard d_ff over model
+                ff_axis = -1 if name in ("wi", "wu") else -2
+                sp = [None] * (n_lead + 1) + [None, None]
+                sp[ff_axis] = ("model" if _fits(shape[ff_axis], mesh,
+                                                "model") else None)
+                other = -2 if ff_axis == -1 else -1
+                sp[other] = dp if _fits(shape[other], mesh, dp) else None
+                return P(*sp)
+
+        # --- attention projections ---
+        if name in ("wq", "wuk", "wuv"):
+            return self._spec2d(shape, dp, "model", n_lead)
+        if name in ("wk", "wv"):
+            # kv heads usually < model axis -> falls back to dp-only
+            return self._spec2d(shape, dp, "model", n_lead)
+        if name == "wo":
+            return self._spec2d(shape, "model", dp, n_lead)
+        if name in ("wdkv", "wkr"):
+            return self._spec2d(shape, dp, None, n_lead)
+        if name in ("bq", "bk", "bv"):
+            a = "model" if _fits(shape[-1], mesh, "model") else None
+            return P(*([None] * (len(shape) - 1) + [a]))
+
+        # --- dense FFN ---
+        if name in ("wi", "wu"):
+            return self._spec2d(shape, dp, "model", n_lead)
+        if name == "wd":
+            return self._spec2d(shape, "model", dp, n_lead)
+
+        # --- SSM ---
+        if name == "in_proj":
+            return self._spec2d(shape, dp, "model", n_lead)
+        if name == "out_proj":
+            return self._spec2d(shape, "model", dp, n_lead)
+        if name in ("conv_w", "conv_b"):
+            a = "model" if _fits(shape[-1], mesh, "model") else None
+            return P(*([None] * (len(shape) - 1) + [a]))
+
+        # norms, gates, scalars, dt_bias, a_log, d_skip ...
+        return self._repl(shape)
+
+    # ------------------------------------------------------------------
+    def param_specs(self, params) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        specs = []
+        for path, leaf in flat:
+            p = "/".join(str(k) for k in path)
+            specs.append(self.param_spec(p, leaf))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def opt_specs(self, param_specs) -> Any:
+        """AdamWState specs: m/v mirror the params; step replicated."""
+        from repro.optim.adamw import AdamWState
+        return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+    # ------------------------------------------------------------------
+    def batch_spec(self, kind: str) -> Dict[str, P]:
+        dp = self.dp
+        tok = P(dp) if kind != "audio" else P(dp, None, None)
+        return {"tokens": (P(dp, None, None)
+                           if self.cfg.family == "audio" else P(dp, None)),
+                "image_embeds": P(dp, None, None)}
+
+    def cache_spec(self, path: str, leaf, batch: int) -> P:
+        """Decode caches: B over dp (if divisible), S over model.
+        Works for both stacked (L, B, S, ...) and list (B, S, ...)
+        layouts — lead dims are inferred from the leaf rank."""
+        mesh, dp = self.mesh, self.dp
+        shape = leaf.shape
+        name = path.split("/")[-1].lstrip(".")
+        if "cross" in path:
+            # VLM cross-attention KV: (B, T_img, Hkv, hd) (+ lead dims)
+            n_lead = max(0, len(shape) - 4)
+            b_ax = dp if _fits(batch, mesh, dp) else None
+            return P(*([None] * n_lead + [b_ax]
+                       + [None] * (len(shape) - n_lead - 1)))
+        base_rank = {"k": 4, "v": 4, "ckv": 3, "krope": 3, "conv": 3,
+                     "ssm": 4}.get(name)
+        if name == "codes":
+            base_rank = 3 if self.cfg.mla is not None else 4
+        if base_rank is None:
+            base_rank = len(shape)
+        n_lead = max(0, len(shape) - base_rank)
+        body = shape[n_lead:]
+        b_ax: Optional[Any] = dp if _fits(batch, mesh, dp) else None
+        if name == "conv":
+            return P(*([None] * n_lead + [b_ax] +
+                       [None] * (len(body) - 1)))
+        if name == "ssm":
+            # (B, nh, hd, N): heads over model when divisible
+            nh_ax = ("model" if len(body) >= 2
+                     and _fits(body[1], mesh, "model") else None)
+            sp = [None] * n_lead + [b_ax, nh_ax] + \
+                [None] * (len(body) - 2)
+            return P(*sp)
+        # KV/code caches: (B, S, ...) — S over model; if B unsharded and
+        # S divides by the whole mesh, spread S over everything.
+        if len(body) >= 2:
+            s_ax: Any = "model"
+            if b_ax is None and _fits(body[1], mesh,
+                                      dp + ("model",)):
+                s_ax = dp + ("model",)
+            if not _fits(body[1], mesh, s_ax):
+                s_ax = None
+            return P(*([None] * n_lead + [b_ax, s_ax] +
+                       [None] * (len(body) - 2)))
+        return P(*([None] * len(shape)))
+
+    def cache_specs(self, caches, batch: int) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+        specs = []
+        for path, leaf in flat:
+            p = "/".join(str(k) for k in path)
+            specs.append(self.cache_spec(p, leaf, batch))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    # ------------------------------------------------------------------
+    def named(self, spec_tree) -> Any:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def explain(self, params) -> str:
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        lines = []
+        for path, leaf in flat:
+            p = "/".join(str(k) for k in path)
+            lines.append(f"{p:70s} {str(leaf.shape):24s} "
+                         f"{self.param_spec(p, leaf)}")
+        return "\n".join(lines)

@@ -1,0 +1,37 @@
+"""Decode-attention strategy hook.
+
+The model's decode path (models/attention.py) calls the local HATA
+math unless a strategy is installed; launchers install the
+sequence-parallel SPMD strategy from :mod:`repro.distributed.decode`.
+Read at *trace* time — jitted steps must be (re)traced after a change.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+_STRATEGY: Optional[Callable] = None
+_ACT_CONSTRAINT: Optional[Callable] = None
+
+
+def set_decode_strategy(fn: Optional[Callable]) -> None:
+    global _STRATEGY
+    _STRATEGY = fn
+
+
+def get_decode_strategy() -> Optional[Callable]:
+    return _STRATEGY
+
+
+def set_activation_constraint(fn: Optional[Callable]) -> None:
+    """fn(x) -> x with a sharding constraint applied. Installed by
+    launchers so the (B, S, D) stream after the embedding lookup lands
+    in the canonical layout (batch over DP, D replicated over model) —
+    otherwise sharding propagation from a D-sharded embedding table can
+    flip GSPMD into all-gathering every weight over the data axis
+    (§Perf iteration T1)."""
+    global _ACT_CONSTRAINT
+    _ACT_CONSTRAINT = fn
+
+
+def get_activation_constraint() -> Optional[Callable]:
+    return _ACT_CONSTRAINT

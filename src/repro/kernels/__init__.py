@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for HATA's compute hot-spots (paper §4).
+
+<name>.py   pl.pallas_call + BlockSpec kernels (validated interpret=True)
+ops.py      batched jit wrappers with pallas/xla dispatch
+ref.py      pure-jnp oracles (ground truth + dry-run execution path)
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode, flash_decode_gathered
+from repro.kernels.hamming_score import hamming_score
+from repro.kernels.hash_encode import hash_encode
+
+__all__ = ["ops", "ref", "flash_attention", "flash_decode",
+           "flash_decode_gathered", "hamming_score", "hash_encode"]

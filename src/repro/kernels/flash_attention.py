@@ -1,0 +1,126 @@
+"""Causal flash attention Pallas kernel (prefill path).
+
+Single-head kernel, online-softmax over kv blocks (Dao et al.), grid
+(q_blocks, kv_blocks) with the kv dimension innermost and running
+(m, l, acc) statistics held in VMEM scratch. Causally-dead kv blocks are
+skipped with ``pl.when`` so the causal prefill does ~half the work.
+
+Batch/heads are mapped by ``ops.flash_attention`` via vmap (on real TPU
+the G query heads of a GQA group would be folded into the q-block
+sublanes; single-head keeps the kernel readable and the grid identical).
+
+VMEM at defaults (block_q=block_k=512, d=128, f32): q/k/v tiles 768 KiB,
+acc 256 KiB, stats 4 KiB — well inside the ~16 MiB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, n_kv_blocks: int,
+                  q_offset: int):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Absolute positions of this tile.
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    def _body():
+        q = q_ref[...].astype(jnp.float32) * scale
+        k = k_ref[...].astype(jnp.float32)
+        logits = jax.lax.dot_general(                     # (block_q, block_k)
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        mask = jnp.ones_like(logits, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]                               # (block_q, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new)
+        # Dead rows (everything masked so far) contribute exp(NEG_INF-m)=0.
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # Skip tiles strictly above the diagonal band.
+        first_q = qi * block_q + q_offset
+        last_q = first_q + block_q - 1
+        live = ki * block_k <= last_q
+        if window is not None:
+            live = jnp.logical_and(
+                live, (ki + 1) * block_k - 1 > first_q - window)
+        pl.when(live)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = True) -> jax.Array:
+    """Single-head flash attention. q: (Sq, d), k: (Sk, d), v: (Sk, dv)
+    -> (Sq, dv). dv may differ from d (MLA materialized form)."""
+    sq, d = q.shape
+    sk = k.shape[0]
+    dv = v.shape[-1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    n_q = pl.cdiv(sq, block_q)
+    n_k = pl.cdiv(sk, block_k)
+    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=d ** -0.5, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, n_kv_blocks=n_k,
+            q_offset=q_offset),
+        grid=(n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, dv), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dv), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

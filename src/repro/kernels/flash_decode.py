@@ -1,0 +1,182 @@
+"""Flash decode kernels: one query token against a KV cache.
+
+Two variants implement the paper's "fuse gather with FlashAttention"
+(§4, third optimization) on TPU:
+
+``flash_decode``
+    Dense/compacted decode: the G query heads of one GQA group attend
+    over (S, d) K/V with an optional validity mask length. Used (a) for
+    dense decode and (b) as stage 2 of the *gather_dense* HATA path,
+    where an XLA row-gather first compacts the top-k rows — that gather
+    is a single fused HBM pass, which GSPMD also partitions best.
+
+``flash_decode_gathered``
+    The fused-gather variant: top-k row indices are scalar-prefetched
+    into SMEM and drive the BlockSpec index_map, so the kernel DMAs
+    exactly the selected KV rows HBM->VMEM (the TPU paged-attention
+    pattern with page_size = 1 row). No compacted copy is materialized.
+    Trade-off (see DESIGN.md §3): row-granular DMA descriptors issue at
+    (1, d) granularity — bytes win is identical to gather_dense, but the
+    DMA issue rate can bind at small d; `rows_per_block` batches the
+    grid so multiple row DMAs are in flight.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Dense / compacted decode
+# ---------------------------------------------------------------------------
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, block_k: int, n_blocks: int):
+    ki = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid_len = len_ref[0]
+
+    @pl.when(ki * block_k < valid_len)
+    def _body():
+        q = q_ref[...].astype(jnp.float32) * scale        # (G, d)
+        k = k_ref[...].astype(jnp.float32)                # (block_k, d)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, block_k)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        logits = jnp.where(kpos < valid_len, logits, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 valid_len: Optional[jax.Array] = None, *,
+                 block_k: int = 1024, interpret: bool = True) -> jax.Array:
+    """q: (G, d), k/v: (S, d), valid_len: scalar int32 (default S)."""
+    g, d = q.shape
+    s = k.shape[0]
+    if valid_len is None:
+        valid_len = jnp.int32(s)
+    valid_len = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    block_k = min(block_k, s)
+    n_blocks = pl.cdiv(s, block_k)
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((g, d), lambda i, len_ref: (0, 0)),
+            pl.BlockSpec((block_k, d), lambda i, len_ref: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, len_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, d), lambda i, len_ref: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=d ** -0.5, block_k=block_k,
+                          n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, d), q.dtype),
+        interpret=interpret,
+    )(valid_len, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Fused-gather decode (scalar-prefetched top-k indices)
+# ---------------------------------------------------------------------------
+def _gather_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, rows: int, n_blocks: int):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale            # (G, d)
+    k = k_ref[...].astype(jnp.float32)                    # (rows, d)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (G, rows)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+    v = v_ref[...].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(bi == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_gathered(q: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, idx: jax.Array, *,
+                          interpret: bool = True) -> jax.Array:
+    """Fused gather+decode. q: (G, d), caches: (S, d), idx: (k,) int32.
+
+    Each grid step DMAs one selected KV row pair (page_size=1 paged
+    attention); the index_map reads the scalar-prefetched idx from SMEM.
+    Exact w.r.t. ``ref.gather_decode_attention_ref`` for duplicate-free
+    idx (top-k indices are unique by construction).
+    """
+    g, d = q.shape
+    n_sel = idx.shape[0]
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_sel,),
+        in_specs=[
+            pl.BlockSpec((g, d), lambda i, idx_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((g, d), lambda i, idx_ref: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, scale=d ** -0.5, rows=1,
+                          n_blocks=n_sel),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, d), q.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), q, k_cache, v_cache)

@@ -1,0 +1,264 @@
+"""Batched, jit-friendly wrappers over the Pallas kernels.
+
+Every op has two execution paths selected by :func:`set_impl` /
+:func:`get_impl`:
+
+``pallas``  — the TPU kernels (interpret=True on CPU). Used by kernel
+              tests and by real-TPU deployments.
+``xla``     — pure-jnp implementations that compute the *same math*
+              (chunked flash-style attention, einsum hash encode). Used
+              for the 512-device dry-runs — Pallas interpret would inline
+              the grid loop into the HLO and distort cost analysis — and
+              everywhere gradients are needed.
+
+The xla attention is the numerical oracle family from ``ref.py`` made
+batched + memory-safe (chunked online softmax, never materializing an
+(S, S) score matrix).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+from repro.kernels import hamming_score as _hs
+from repro.kernels import hash_encode as _he
+from repro.kernels import ref
+
+WORD_BITS = ref.WORD_BITS
+
+_IMPL = "xla" if jax.default_backend() == "cpu" else "pallas"
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def get_impl() -> str:
+    return _IMPL
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("pallas", "xla"), impl
+    _IMPL = impl
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    prev = get_impl()
+    set_impl(impl)
+    try:
+        yield
+    finally:
+        set_impl(prev)
+
+
+# ---------------------------------------------------------------------------
+# HashEncode
+# ---------------------------------------------------------------------------
+def hash_encode(x: jax.Array, w_h: jax.Array) -> jax.Array:
+    """x: (..., s, d), w_h: (d, rbit) -> (..., s, rbit//32) uint32."""
+    if get_impl() == "xla":
+        return ref.hash_encode_ref(x, w_h)
+    fn = functools.partial(_he.hash_encode, interpret=_INTERPRET)
+    for _ in range(x.ndim - 2):
+        fn = jax.vmap(fn, in_axes=(0, None))
+    return fn(x, w_h)
+
+
+def hash_encode_heads(x: jax.Array, w_h: jax.Array) -> jax.Array:
+    """Per-head weights. x: (B, S, H, d), w_h: (H, d, rbit)
+    -> (B, S, H, rbit//32)."""
+    if get_impl() == "xla":
+        proj = jnp.einsum("bshd,hdr->bshr", x.astype(jnp.float32),
+                          w_h.astype(jnp.float32))
+        return ref.bitpack_ref((proj >= 0).astype(jnp.uint32))
+    fn = functools.partial(_he.hash_encode, interpret=_INTERPRET)
+    fn = jax.vmap(fn, in_axes=(2, 0), out_axes=2)   # heads
+    fn = jax.vmap(fn, in_axes=(0, None))            # batch
+    return fn(x, w_h)
+
+
+# ---------------------------------------------------------------------------
+# Hamming score
+# ---------------------------------------------------------------------------
+def hamming_scores(q_codes: jax.Array, k_codes: jax.Array, *,
+                   rbit: int) -> jax.Array:
+    """q_codes: (B, H_kv, G, W), k_codes: (B, S, H_kv, W) -> (B, H_kv, S)."""
+    if get_impl() == "xla":
+        return ref.hamming_score_batched_ref(q_codes, k_codes, rbit)
+    fn = functools.partial(_hs.hamming_score, rbit=rbit,
+                           interpret=_INTERPRET)
+    fn = jax.vmap(fn, in_axes=(0, 1), out_axes=0)   # kv heads
+    fn = jax.vmap(fn, in_axes=(0, 0))               # batch
+    return fn(q_codes, k_codes)
+
+
+# ---------------------------------------------------------------------------
+# Attention (prefill / training)
+# ---------------------------------------------------------------------------
+def _xla_flash_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, window: Optional[int], q_offset: int,
+                   chunk_q: int = 1024, chunk_k: int = 1024) -> jax.Array:
+    """Chunked online-softmax GQA attention, O(chunk_q*chunk_k) memory.
+
+    q: (B, Sq, H, d), k/v: (B, Sk, H_kv, d) -> (B, Sq, H, d).
+    Differentiable (plain lax.scan); the dry-run path.
+    """
+    b, sq, h, d = q.shape
+    sk, h_kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // h_kv
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, sk)
+    sk_valid = sk
+    pad_q = (-sq) % cq
+    pad_k = (-sk) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        sk += pad_k
+    nq, nk = sq // cq, sk // ck
+
+    qf = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, nq, cq, h_kv, g, d)
+    qf = jnp.moveaxis(qf, 1, 0)                     # (nq, b, cq, h_kv, g, d)
+    kf = jnp.moveaxis(k.reshape(b, nk, ck, h_kv, d), 1, 0)
+    vf = jnp.moveaxis(v.reshape(b, nk, ck, h_kv, dv), 1, 0)
+
+    def q_chunk(qi, qc):
+        qpos = qi * cq + jnp.arange(cq) + q_offset
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            ki, kc, vc = xs
+            kpos = ki * ck + jnp.arange(ck)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qc,
+                                kc.astype(jnp.float32))
+            mask = jnp.broadcast_to((kpos < sk_valid)[None, :],
+                                    (cq, ck))
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            logits = jnp.where(mask[None, None, None], logits, _fa.NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, -1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, -1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h_kv, g, cq), _fa.NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h_kv, g, cq), jnp.float32)
+        acc0 = jnp.zeros((b, h_kv, g, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0), (jnp.arange(nk), kf, vf))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (b, h_kv, g, cq, dv)
+        return jnp.moveaxis(out, 3, 1)                 # (b, cq, h_kv, g, dv)
+
+    outs = jax.lax.map(lambda args: q_chunk(*args), (jnp.arange(nq), qf))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dv)
+    if pad_q:
+        out = out[:, :sq - pad_q]
+    return out.astype(q.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0) -> jax.Array:
+    """Batched GQA attention. q: (B, Sq, H, d), k/v: (B, Sk, H_kv, d)."""
+    if get_impl() == "xla":
+        return _xla_flash_gqa(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+    b, sq, h, d = q.shape
+    h_kv = k.shape[2]
+    g = h // h_kv
+    fn = functools.partial(_fa.flash_attention, causal=causal,
+                           window=window, q_offset=q_offset,
+                           interpret=_INTERPRET)
+    # map q head -> kv head, vmap over (B, H).
+    qh = jnp.moveaxis(q, 2, 0)                       # (H, B, Sq, d)
+    kh = jnp.moveaxis(k, 2, 0)                       # (H_kv, B, Sk, d)
+    kh = jnp.repeat(kh, g, axis=0)
+    vh = jnp.repeat(jnp.moveaxis(v, 2, 0), g, axis=0)
+    out = jax.vmap(jax.vmap(fn))(qh, kh, vh)         # (H, B, Sq, d)
+    return jnp.moveaxis(out, 0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """One-token dense decode. q: (B, H, d), k/v: (B, S, H_kv, d)."""
+    b, h, d = q.shape
+    s, h_kv = k.shape[1], k.shape[2]
+    g = h // h_kv
+    if get_impl() == "xla":
+        qg = q.reshape(b, h_kv, g, d)
+        logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(k.dtype), k,
+                            preferred_element_type=jnp.float32) \
+            * (d ** -0.5)
+        if valid_len is not None:
+            pos = jnp.arange(s)
+            vl = jnp.asarray(valid_len).reshape(-1, 1, 1, 1)
+            logits = jnp.where(pos[None, None, None] < vl, logits,
+                               _fa.NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, h, d).astype(q.dtype)
+    vl = (jnp.full((b,), s, jnp.int32) if valid_len is None
+          else jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,)))
+    fn = functools.partial(_fd.flash_decode, interpret=_INTERPRET)
+    qg = q.reshape(b, h_kv, g, d)
+    kh = jnp.moveaxis(k, 2, 1)                       # (B, H_kv, S, d)
+    vh = jnp.moveaxis(v, 2, 1)
+    out = jax.vmap(jax.vmap(fn, in_axes=(0, 0, 0, None)),
+                   in_axes=(0, 0, 0, 0))(qg, kh, vh, vl)
+    return out.reshape(b, h, d)
+
+
+def gather_decode_attention(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, idx: jax.Array, *,
+                            fused: bool = False) -> jax.Array:
+    """HATA sparse decode: attend over selected rows only.
+
+    q: (B, H, d), caches: (B, S, H_kv, d), idx: (B, H_kv, k) int32.
+    ``fused=True`` uses the scalar-prefetch fused-gather kernel (pallas
+    impl only); otherwise gather-then-flash-decode ("gather_dense").
+    """
+    b, h, d = q.shape
+    h_kv = k_cache.shape[2]
+    g = h // h_kv
+    if fused and get_impl() == "pallas":
+        fn = functools.partial(_fd.flash_decode_gathered,
+                               interpret=_INTERPRET)
+        qg = q.reshape(b, h_kv, g, d)
+        kh = jnp.moveaxis(k_cache, 2, 1)
+        vh = jnp.moveaxis(v_cache, 2, 1)
+        out = jax.vmap(jax.vmap(fn))(qg, kh, vh, idx)
+        return out.reshape(b, h, d)
+    # gather_dense: one fused XLA gather to a (k, d) compacted buffer.
+    kg = jnp.take_along_axis(jnp.moveaxis(k_cache, 2, 1),
+                             idx[..., None], axis=2)  # (B, H_kv, k, d)
+    vg = jnp.take_along_axis(jnp.moveaxis(v_cache, 2, 1),
+                             idx[..., None], axis=2)
+    if get_impl() == "xla":
+        qf = q.reshape(b, h_kv, g, d).astype(jnp.float32) * (d ** -0.5)
+        logits = jnp.einsum("bhgd,bhkd->bhgk", qf, kg.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgk,bhkd->bhgd", probs, vg.astype(jnp.float32))
+        return out.reshape(b, h, d).astype(q.dtype)
+    fn = functools.partial(_fd.flash_decode, interpret=_INTERPRET)
+    qg = q.reshape(b, h_kv, g, d)
+    out = jax.vmap(jax.vmap(fn, in_axes=(0, 0, 0, None)),
+                   in_axes=(0, 0, 0, None))(qg, kg, vg, None)
+    return out.reshape(b, h, d)

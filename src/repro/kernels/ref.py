@@ -1,0 +1,211 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the numerical ground truth: each Pallas kernel is validated
+against its oracle with ``assert_allclose`` across shape/dtype sweeps
+(tests/test_kernels.py). They are also the ``xla`` execution path used by
+the 512-device dry-runs (Pallas interpret mode would inline the grid loop
+into the HLO and distort the cost analysis).
+
+Score convention
+----------------
+The paper (Alg. 3) computes Hamming distances and selects top-k; we store
+*matching bits* ``score = rbit - popcount(xor)`` so that top-k is always
+"largest score", matching the qk-score convention of the baselines.
+GQA aggregation (paper §3.2) sums match scores over the query heads that
+share a kv head.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Number of hash bits packed per cache word.
+WORD_BITS = 32
+
+
+# ---------------------------------------------------------------------------
+# Bit packing
+# ---------------------------------------------------------------------------
+def bitpack_ref(bits: jax.Array) -> jax.Array:
+    """Pack a trailing axis of {0,1} bits into uint32 words.
+
+    bits: (..., rbit) any int/bool dtype with values in {0, 1}.
+    returns (..., rbit // 32) uint32, word w = sum_j bits[32w+j] << j.
+    """
+    rbit = bits.shape[-1]
+    assert rbit % WORD_BITS == 0, f"rbit={rbit} must be a multiple of 32"
+    w = rbit // WORD_BITS
+    b = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], w, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def bitunpack_ref(words: jax.Array, rbit: int) -> jax.Array:
+    """Inverse of :func:`bitpack_ref` -> (..., rbit) int32 in {0,1}."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], rbit).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# HashEncode (paper Alg. 2): sign(x @ W_H) -> bitpack
+# ---------------------------------------------------------------------------
+def hash_encode_ref(x: jax.Array, w_h: jax.Array) -> jax.Array:
+    """x: (..., d), w_h: (d, rbit)  ->  (..., rbit//32) uint32.
+
+    sign(0) is treated as +1 (bit set) so the encoding is deterministic.
+    The projection is computed in f32 regardless of input dtype: sign is
+    all that survives, but near-zero projections must not flip bits
+    between the kernel and the oracle.
+    """
+    proj = jnp.einsum("...d,dr->...r", x.astype(jnp.float32),
+                      w_h.astype(jnp.float32))
+    return bitpack_ref((proj >= 0).astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Hamming score (paper Alg. 3 lines 10-11, + GQA aggregation)
+# ---------------------------------------------------------------------------
+def hamming_score_ref(q_codes: jax.Array, k_codes: jax.Array,
+                      rbit: int) -> jax.Array:
+    """Aggregated match scores of one kv-head's code cache.
+
+    q_codes: (G, W) uint32 -- the G query heads sharing this kv head.
+    k_codes: (S, W) uint32 -- the cached key codes.
+    returns: (S,) int32, score[s] = sum_g (rbit - popcount(q_g ^ k_s)).
+    Higher = more similar. Bounded by [0, G*rbit].
+    """
+    x = jnp.bitwise_xor(q_codes[:, None, :], k_codes[None, :, :])
+    ham = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    g = q_codes.shape[0]
+    return g * rbit - jnp.sum(ham, axis=0)
+
+
+def hamming_score_batched_ref(q_codes: jax.Array, k_codes: jax.Array,
+                              rbit: int) -> jax.Array:
+    """Batched/multi-head oracle.
+
+    q_codes: (B, H_kv, G, W), k_codes: (B, S, H_kv, W)
+    returns scores (B, H_kv, S) int32.
+    """
+    x = jnp.bitwise_xor(q_codes[:, :, :, None, :],
+                        jnp.moveaxis(k_codes, 1, 2)[:, :, None, :, :])
+    ham = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    g = q_codes.shape[2]
+    return g * rbit - jnp.sum(ham, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Attention oracles
+# ---------------------------------------------------------------------------
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: Optional[float] = None,
+                  q_offset: int = 0,
+                  bias: Optional[jax.Array] = None) -> jax.Array:
+    """Plain softmax attention for one head group.
+
+    q: (Sq, d), k: (Sk, d), v: (Sk, dv). q_offset: absolute position of
+    q[0] for causal masking (decode: q_offset = cache_len - Sq ... etc).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if bias is not None:
+        logits = logits + bias
+    if causal:
+        sq, sk = q.shape[0], k.shape[0]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return (probs @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, q_offset: int = 0,
+            window: Optional[int] = None) -> jax.Array:
+    """Multi-head GQA attention oracle.
+
+    q: (B, Sq, H, d), k/v: (B, Sk, H_kv, d). Returns (B, Sq, H, d).
+    ``window``: optional sliding-window size (Mixtral SWA).
+    """
+    b, sq, h, d = q.shape
+    h_kv = k.shape[2]
+    g = h // h_kv
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    qf = qf.reshape(b, sq, h_kv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    sk = k.shape[1]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = kpos <= qpos if causal else jnp.ones((sq, sk), bool)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: Optional[jax.Array] = None) -> jax.Array:
+    """Single-token decode oracle for one kv head.
+
+    q: (G, d), k/v: (S, d), mask: optional (S,) bool (True = attend).
+    Returns (G, d).
+    """
+    d = q.shape[-1]
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * (d ** -0.5)
+    if mask is not None:
+        logits = jnp.where(mask[None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return (probs @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def gather_decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                                v_cache: jax.Array,
+                                idx: jax.Array) -> jax.Array:
+    """Gather-then-attend oracle (HATA decode, one kv head).
+
+    q: (G, d), k_cache/v_cache: (S, d), idx: (k,) int32 row indices.
+    Equivalent to the fused-gather flash decode kernel.
+    """
+    return decode_attention_ref(q, k_cache[idx], v_cache[idx])
+
+
+# ---------------------------------------------------------------------------
+# Partial-softmax (flash) statistics — used by the distributed SP decode
+# merge and by the flash kernels' scratch math.
+# ---------------------------------------------------------------------------
+def softmax_stats_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      mask: Optional[jax.Array] = None,
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard flash statistics (m, l, o~) for exact cross-shard merge.
+
+    q: (G, d), k/v: (S, d). Returns m: (G,), l: (G,), o: (G, dv) where
+    o = sum_s exp(logit - m) v_s  (unnormalized).
+    """
+    d = q.shape[-1]
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * (d ** -0.5)
+    if mask is not None:
+        logits = jnp.where(mask[None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)
+    # A fully-masked shard contributes nothing; keep exp() finite.
+    m_safe = jnp.where(jnp.isfinite(m), m, -1e30)
+    p = jnp.exp(logits - m_safe[:, None])
+    l = jnp.sum(p, axis=-1)
+    o = p @ v.astype(jnp.float32)
+    return m_safe, l, o
+
+
+def merge_softmax_stats_ref(stats: Tuple[jax.Array, ...]) -> jax.Array:
+    """Merge per-shard (m, l, o) stacked on a leading axis -> (G, dv)."""
+    m, l, o = stats  # (P, G), (P, G), (P, G, dv)
+    m_g = jnp.max(m, axis=0)                       # (G,)
+    alpha = jnp.exp(m - m_g[None])                 # (P, G)
+    l_g = jnp.sum(alpha * l, axis=0)
+    o_g = jnp.sum(alpha[..., None] * o, axis=0)
+    return o_g / jnp.maximum(l_g, 1e-30)[:, None]

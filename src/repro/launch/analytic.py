@@ -1,0 +1,132 @@
+"""Analytic FLOP/byte models per (arch x shape) cell.
+
+The §Roofline table reports BOTH the while-aware HLO parse (pessimistic:
+includes CPU-backend legalization residue the TPU wouldn't execute) and
+these first-principles numbers (optimistic: perfect fusion). The truth
+on hardware lies between; the ratio MODEL_FLOPS / HLO_FLOPS is the
+"useful compute" fraction the brief asks for.
+
+MODEL_FLOPS: 6·N·D (train, active params for MoE), 2·N·D (prefill)
+plus exact attention terms; decode adds the HATA scoring/gather bytes
+(the paper's mechanism) to MODEL_BYTES.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def _attn_flops_per_layer(cfg: ModelConfig, s: int, causal: bool) -> float:
+    """qk + pv flops for one full-attention layer, one sequence."""
+    if cfg.attention_free:
+        return 0.0
+    factor = 0.5 if causal else 1.0
+    if cfg.mla is not None:
+        m = cfg.mla
+        d_qk = m.qk_nope_dim + m.qk_rope_dim
+        return 2.0 * s * s * factor * cfg.n_heads * (d_qk
+                                                     + m.v_head_dim)
+    return 2.0 * s * s * factor * cfg.n_heads * 2 * cfg.head_dim
+
+
+def _ssm_flops_per_layer(cfg: ModelConfig, s: int) -> float:
+    if cfg.ssm is None:
+        return 0.0
+    ss = cfg.ssm
+    di = ss.d_inner(cfg.d_model)
+    nh = ss.n_heads(cfg.d_model)
+    q = ss.chunk
+    # intra-chunk dual form + state path per chunk
+    per_chunk = (2 * q * q * nh * ss.d_state        # C Bᵀ
+                 + 2 * q * q * di                   # M @ u
+                 + 2 * 2 * q * di * ss.d_state)     # state in/out
+    return (s / q) * per_chunk
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, float]:
+    """Per-STEP global flops (all chips), plus MODEL_FLOPS = 6ND."""
+    b, s = shape.global_batch, shape.seq_len
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = b * s
+        dense = 6.0 * n_active * tokens
+        attn = 3.0 * b * cfg.n_layers * _attn_flops_per_layer(
+            cfg, s, True)
+        ssm = 3.0 * b * cfg.n_layers * _ssm_flops_per_layer(cfg, s)
+        return {"model_flops": dense + attn + ssm, "six_nd": dense}
+    if shape.kind == "prefill":
+        tokens = b * s
+        dense = 2.0 * n_active * tokens
+        attn = b * cfg.n_layers * _attn_flops_per_layer(cfg, s, True)
+        ssm = b * cfg.n_layers * _ssm_flops_per_layer(cfg, s)
+        return {"model_flops": dense + attn + ssm, "six_nd": dense}
+    # decode: one token per sequence
+    dense = 2.0 * n_active * b
+    budget = min(cfg.hata.budget(s), s) if cfg.hata.enabled else s
+    if cfg.attention_free:
+        attn = b * cfg.n_layers * (4.0 * cfg.ssm.d_inner(cfg.d_model)
+                                   * cfg.ssm.d_state)
+    else:
+        rows_dense = s * cfg.hata.dense_layers
+        rows_hata = budget * (cfg.n_layers - cfg.hata.dense_layers)
+        d_qk = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+                if cfg.mla else 2 * cfg.head_dim)
+        attn = 2.0 * b * cfg.n_heads * d_qk * (rows_dense + rows_hata)
+    return {"model_flops": dense + attn, "six_nd": dense}
+
+
+def model_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                hata: bool = True) -> float:
+    """Per-step global HBM bytes (dominant streams only)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = 2  # bf16
+    p_bytes = cfg.param_count() * dt
+    if shape.kind == "train":
+        # fwd+bwd param reads + grad writes + optimizer state touch
+        return 3 * p_bytes + 2 * cfg.param_count() * 4 * 2
+    if shape.kind == "prefill":
+        kv_write = (b * s * cfg.n_layers
+                    * _kv_row_bytes(cfg))
+        return p_bytes + kv_write
+    # decode
+    if cfg.attention_free:
+        di = cfg.ssm.d_inner(cfg.d_model)
+        state = cfg.n_layers * b * (cfg.ssm.n_heads(cfg.d_model)
+                                    * cfg.ssm.head_dim * cfg.ssm.d_state
+                                    * 4) * 2
+        return p_bytes + state
+    row = _kv_row_bytes(cfg)
+    budget = min(cfg.hata.budget(s), s)
+    nl, ndl = cfg.n_layers, cfg.hata.dense_layers
+    if not (hata and cfg.hata.enabled):
+        return p_bytes + nl * b * s * row
+    codes = s * (cfg.hata.rbit // 8) * (cfg.n_kv_heads
+                                        if cfg.mla is None else 1)
+    per_hata_layer = b * (codes + budget * row)
+    per_dense_layer = b * s * row
+    return p_bytes + ndl * per_dense_layer + (nl - ndl) * per_hata_layer
+
+
+def _kv_row_bytes(cfg: ModelConfig) -> int:
+    dt = 2
+    if cfg.mla is not None:
+        return (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * dt
+    return 2 * cfg.n_kv_heads * cfg.head_dim * dt
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   coll_dev: float) -> Dict[str, float]:
+    """Per-device roofline terms in seconds + the dominant bottleneck."""
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_n = coll_dev / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "bottleneck": dom[1],
+            "bound_s": max(t_c, t_m, t_n)}

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract the roofline terms (deliverables e & g).
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. resolves the sharding policy (params / optimizer / batch / caches),
+  3. jits the right step (train / prefill / decode) against
+     ShapeDtypeStruct inputs — zero real allocation,
+  4. ``.lower().compile()`` — any sharding mismatch, unsupported
+     collective or partitioning failure dies HERE, which is the point,
+  5. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (XLA's numbers), and the while-aware HLO cost
+     model (launch/hlo_cost.py) for FLOPs / HBM bytes / per-kind
+     collective bytes,
+  6. writes one JSON per cell under --out (benchmarks/roofline.py turns
+     these into the §Roofline table).
+
+Decode cells install the sequence-parallel SPDecode strategy
+(--decode-mode two_stage|local_split|naive — the §Perf ladder) and lower
+the steady-state HATA path statically; --dense-baseline lowers the same
+cell with HATA off for the dense-vs-HATA comparison (Fig. 4/5 analogue).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ASSIGNED_ARCHS, ALL_ARCHS, get_config,
+                           get_shape, shapes_for)
+from repro.distributed import strategy as dist_strategy
+from repro.distributed.decode import SPDecode
+from repro.distributed.sharding import ShardingPolicy, dp_axes
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (cache_specs_abstract, input_specs,
+                                make_decode_step, make_prefill_step,
+                                make_train_step, pick_micro_batches)
+from repro.models import Model
+from repro.optim.adamw import adamw_init
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    if mem is None:
+        return {}
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    return {k: float(getattr(mem, k, 0) or 0) for k in keys}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               decode_mode: str = "two_stage", hata: bool = True,
+               dtype_override: Optional[str] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the raw cost record."""
+    import dataclasses
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    if not hata:
+        cfg = dataclasses.replace(
+            cfg, hata=dataclasses.replace(cfg.hata, enabled=False))
+    if dtype_override:
+        cfg = dataclasses.replace(cfg, dtype=dtype_override)
+    shape = get_shape(shape_name)
+    model = Model(cfg)
+    policy = ShardingPolicy(cfg, mesh)
+    dp = dp_axes(mesh)
+    dp_size = int(jnp.prod(jnp.array([mesh.shape[a] for a in dp])))
+
+    params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = policy.param_specs(params_abs)
+    pshard = policy.named(pspecs)
+    batch_abs = input_specs(cfg, shape)
+    b = shape.global_batch
+    b_shardable = b % dp_size == 0
+    bspec = {k: NamedSharding(mesh, P(dp if b_shardable else None,
+                                      *([None] * (len(v.shape) - 1))))
+             for k, v in batch_abs.items()}
+
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(jnp.prod(jnp.array(list(mesh.shape.values())))),
+        "kind": shape.kind, "hata": hata, "decode_mode": None,
+    }
+    # pin post-embedding activations to (batch over DP, D replicated)
+    # for TRAIN/PREFILL: sharding propagation from the vocab-sharded
+    # embedding otherwise degrades into large gathers (§Perf T1).
+    # NOT for decode: with B tokens the optimum is partial-sum
+    # projections + tiny activation psums; the pinned layout flips
+    # GSPMD into ~params/TP-shards of weight all-gathers per step
+    # (measured +100x collective on 405B decode — §Perf T1b, refuted).
+    act_b = dp if b_shardable else None
+
+    def _act_constraint(x):
+        spec = P(act_b, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    dist_strategy.set_activation_constraint(
+        _act_constraint if shape.kind != "decode" else None)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            oshard = policy.named(policy.opt_specs(pspecs))
+            n_micro = pick_micro_batches(cfg, b, dp_size,
+                                         seq_len=shape.seq_len)
+            record["n_micro"] = n_micro
+            step = make_train_step(model, n_micro=n_micro)
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, bspec),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            caches_abs = cache_specs_abstract(model, shape)
+            cshard = policy.named(policy.cache_specs(caches_abs, b))
+            step = make_prefill_step(model)
+            logits_sh = NamedSharding(
+                mesh, P(dp if b_shardable else None, None))
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, bspec, cshard),
+                             out_shardings=(logits_sh, cshard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, batch_abs, caches_abs)
+        else:  # decode
+            record["decode_mode"] = decode_mode
+            seq_axes = ("model",) if b_shardable else dp + ("model",)
+            sp = SPDecode(mesh, seq_axes=seq_axes,
+                          batch_axes=dp if b_shardable else (),
+                          mode=decode_mode)
+            dist_strategy.set_decode_strategy(
+                sp if decode_mode != "naive" else None)
+            caches_abs = cache_specs_abstract(model, shape,
+                                              layout="list")
+            cshard = policy.named(policy.cache_specs(caches_abs, b))
+            step = make_decode_step(model)
+            tok_sh = {k: NamedSharding(
+                mesh, P(dp if b_shardable else None,
+                        *([None] * (len(v.shape) - 1))))
+                for k, v in batch_abs.items()}
+            logits_sh = NamedSharding(
+                mesh, P(dp if b_shardable else None, None))
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, tok_sh["tokens"], cshard, None),
+                out_shardings=(None, cshard),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, batch_abs["tokens"],
+                                   caches_abs, pos_abs)
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+        record["memory"] = _mem_dict(compiled.memory_analysis())
+        ca = compiled.cost_analysis() or {}
+        record["xla_cost_analysis"] = {
+            "flops": float(ca.get("flops", 0) or 0),
+            "bytes_accessed": float(ca.get("bytes accessed", 0) or 0)}
+        cost = hlo_cost.analyze(compiled.as_text())
+        record["hlo_cost"] = cost.as_dict()
+        record["ok"] = True
+    except Exception as e:  # recorded, cell marked failed
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        dist_strategy.set_decode_strategy(None)
+        dist_strategy.set_activation_constraint(None)
+    record["total_s"] = round(time.time() - t0, 2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="assigned",
+                    help="'assigned', 'all', or comma list")
+    ap.add_argument("--shape", default="all", help="'all' or comma list")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--decode-mode", default="two_stage",
+                    choices=["two_stage", "local_split", "naive"])
+    ap.add_argument("--dense-baseline", action="store_true",
+                    help="also lower decode cells with HATA disabled")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.arch == "assigned":
+        archs = ASSIGNED_ARCHS
+    elif args.arch == "all":
+        archs = ALL_ARCHS
+    else:
+        archs = args.arch.split(",")
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        multi = mesh_kind == "multi"
+        for arch in archs:
+            shape_names = ([s.name for s in shapes_for(arch)]
+                           if args.shape == "all"
+                           else args.shape.split(","))
+            for shape_name in shape_names:
+                variants = [(True, args.decode_mode)]
+                if args.dense_baseline and \
+                        get_shape(shape_name).kind == "decode":
+                    variants.append((False, args.decode_mode))
+                for hata, mode in variants:
+                    tag = "" if hata else "_dense"
+                    fn = os.path.join(
+                        args.out,
+                        f"{mesh_kind}_{arch}_{shape_name}{tag}.json")
+                    if args.skip_existing and os.path.exists(fn):
+                        with open(fn) as f:
+                            if json.load(f).get("ok"):
+                                print(f"[skip] {fn}")
+                                continue
+                    rec = lower_cell(arch, shape_name, multi_pod=multi,
+                                     decode_mode=mode, hata=hata)
+                    with open(fn, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    status = "OK " if rec["ok"] else "FAIL"
+                    n_fail += 0 if rec["ok"] else 1
+                    mem = rec.get("memory", {})
+                    hc = rec.get("hlo_cost", {})
+                    print(f"[{status}] {mesh_kind:6s} {arch:22s} "
+                          f"{shape_name:12s}{tag:7s} "
+                          f"compile={rec.get('compile_s', '-'):>7}s "
+                          f"args/dev={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"temp/dev={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"flops/dev={hc.get('flops', 0):.3e} "
+                          f"coll/dev={hc.get('collective_bytes', 0):.3e}",
+                          flush=True)
+                    if not rec["ok"]:
+                        print(rec["error"], flush=True)
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,389 @@
+"""While-aware HLO cost model (the §Roofline engine).
+
+``compiled.cost_analysis()`` visits while bodies ONCE, so every scanned
+layer stack (126 layers at llama3-405b) is undercounted by the trip
+count (verified empirically; see EXPERIMENTS.md §Dry-run). This module
+re-derives FLOPs / HBM bytes / collective bytes from the post-
+optimization HLO text with loop trip counts applied.
+
+Rules (per-device — the HLO module is the per-partition program):
+  * dot: 2 · |result| · K, K = product of lhs contracting dims;
+  * other compute ops: |result| element-ops (VPU noise next to MXU);
+  * HBM bytes per top-level instruction: operands + result, EXCEPT
+      - dynamic-update-slice: 2 x |update| (XLA aliases the buffer —
+        only the updated region moves; this is the KV-cache append),
+      - dynamic-slice / gather: result only (row gather from a cache
+        reads the rows, not the cache),
+      - fusion: the fusion op's own operands + result (internals live
+        in registers/VMEM; their flops still count);
+  * collectives: result bytes for all-gather / all-reduce / all-to-all /
+    collective-permute; operand bytes for reduce-scatter ("-start"
+    variants normalized); bucketed by kind;
+  * while: (body + cond) x trip count — the trip count is the compare
+    constant in the loop-condition computation (XLA's lax.scan
+    pattern); call recurses; conditional takes the max-cost branch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3b11fnuz": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# tuple shapes of >5 elements carry /*index=N*/ comments (which contain
+# '='), so the tuple alternative must only exclude nested parens
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[^\]]*\]"
+    r"(?:\{[^}]*\})?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+               "all-to-all", "collective-permute")
+_SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "all-gather-done", "all-reduce-done",
+             "collective-permute-done", "copy-done", "copy-start",
+             # plain copies: donation aliasing / CPU copy-insertion
+             # artifacts — elided on TPU for the patterns we emit
+             "copy")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+    def as_dict(self) -> Dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collectives": dict(self.coll),
+                "collective_bytes": self.coll_bytes}
+
+
+def parse_hlo(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode = m.groups()
+        after = line[m.end():]
+        depth, i = 1, 0
+        while i < len(after) and depth:
+            if after[i] == "(":
+                depth += 1
+            elif after[i] == ")":
+                depth -= 1
+            i += 1
+        oper_str, attrs = after[:i - 1], after[i:]
+        operands = re.findall(r"%([\w\.\-]+)", oper_str)
+        comps[cur].append(Instr(name, shape, opcode, operands, attrs,
+                                line))
+    return comps
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+        self._shapes: Dict[Tuple[str, str], str] = {}
+        for cname, instrs in self.comps.items():
+            for ins in instrs:
+                self._shapes[(cname, ins.name)] = ins.shape
+
+    def _oshape(self, comp: str, ref: str) -> str:
+        return self._shapes.get((comp, ref), "")
+
+    @staticmethod
+    def _called(ins: Instr) -> List[str]:
+        out = []
+        for key in ("calls=", "body=", "condition=", "to_apply=",
+                    "true_computation=", "false_computation="):
+            for m in re.finditer(re.escape(key) + r"%?([\w\.\-]+)",
+                                 ins.attrs):
+                out.append(m.group(1))
+        m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+        if m:
+            out.extend(re.findall(r"%?([\w\.\-]+)", m.group(1)))
+        return out
+
+    def _trip(self, cond_name: str) -> int:
+        """Max compare constant in the condition comp (+ its callees)."""
+        best = 1
+        names = [cond_name]
+        for ins in self.comps.get(cond_name, []):
+            names.extend(self._called(ins))
+        for n in names:
+            for ins in self.comps.get(n, []):
+                for m in re.finditer(r"constant\((\d+)\)", ins.line):
+                    best = max(best, int(m.group(1)))
+        return best
+
+    # ------------------------------------------------------------------
+    def instr_cost(self, comp: str, ins: Instr) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        if op in _SKIP_OPS:
+            return c
+        res_bytes = shape_bytes(ins.shape)
+        oper_bytes = sum(shape_bytes(self._oshape(comp, o))
+                         for o in ins.operands)
+
+        if op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+            cm = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+            trip = self._trip(cm.group(1)) if cm else 1
+            if bm:
+                c += self.comp_cost(bm.group(1)).scaled(trip)
+            return c
+        if op == "conditional":
+            branches = [b for b in self._called(ins)]
+            if branches:
+                costs = [self.comp_cost(b) for b in branches]
+                c += max(costs, key=lambda x: x.flops + x.bytes)
+            return c
+        if op == "call":
+            for callee in self._called(ins):
+                c += self.comp_cost(callee)
+            return c
+        if op == "fusion":
+            # CPU-backend bf16 legalization (FloatNormalization) wraps
+            # while-carried bf16 buffers in f32 convert round-trips and
+            # runs the row DUS on the f32 copy — none of which exists on
+            # TPU (native bf16). Normalize: a fusion whose only
+            # non-trivial ops are converts is free; one whose only real
+            # op is a small dynamic-update-slice costs 2x the update.
+            kind = self._fusion_kind(ins)
+            if kind == "convert-only":
+                return c
+            if kind == "inplace-update":
+                upd = self._fusion_update_bytes(ins)
+                c.bytes += 2.0 * upd
+                return c
+            for callee in self._called(ins):
+                inner = self.comp_cost(callee)
+                c += Cost(inner.flops, 0.0, dict(inner.coll))
+            c.bytes += res_bytes + self._fusion_operand_bytes(comp, ins)
+            return c
+
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLL_KINDS:
+            vol = oper_bytes if base == "reduce-scatter" else res_bytes
+            c.coll[base] = c.coll.get(base, 0.0) + vol
+            c.bytes += res_bytes + oper_bytes
+            return c
+
+        # ---- compute + memory ----
+        if op == "dot":
+            lhs_shape = self._oshape(comp, ins.operands[0])
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+            k = 1
+            if m and lhs_shape:
+                dm = _SHAPE_RE.search(lhs_shape)
+                if dm and dm.group(2):
+                    ldims = [int(d) for d in dm.group(2).split(",")]
+                    for ci in m.group(1).split(","):
+                        if ci:
+                            k *= ldims[int(ci)]
+            c.flops += 2.0 * shape_elems(ins.shape) * k
+            c.bytes += res_bytes + oper_bytes
+        elif op == "convert":
+            pass    # fused (or nonexistent: CPU bf16 legalization) on TPU
+        elif op == "slice":
+            # a (static) slice reads only its region — the unrolled
+            # decode slices per-layer weights out of (L, ...) stacks
+            c.bytes += res_bytes
+        elif op == "dynamic-update-slice":
+            upd = (shape_bytes(self._oshape(comp, ins.operands[1]))
+                   if len(ins.operands) > 1 else res_bytes)
+            c.bytes += 2.0 * upd
+        elif op == "dynamic-slice":
+            c.bytes += res_bytes        # assume fused into its consumer
+        elif op == "gather":
+            c.bytes += 2.0 * res_bytes  # write + consumer read
+        elif op == "scatter":
+            upd = (shape_bytes(self._oshape(comp, ins.operands[2]))
+                   if len(ins.operands) > 2 else res_bytes)
+            c.bytes += 2.0 * upd
+            c.flops += shape_elems(ins.shape)
+        else:
+            c.flops += float(shape_elems(ins.shape))
+            c.bytes += res_bytes + oper_bytes
+        return c
+
+    _TRIVIAL = {"parameter", "constant", "convert", "copy", "bitcast",
+                "tuple", "get-tuple-element", "reshape", "transpose",
+                "broadcast", "iota"}
+    _UPDATE_EXTRA = {"dynamic-update-slice", "dynamic-slice", "select",
+                     "select-n", "compare", "clamp", "add", "subtract",
+                     "multiply", "and", "or", "minimum", "maximum",
+                     "pad", "slice", "concatenate"}
+
+    def _fusion_kind(self, ins: Instr) -> str:
+        """Classify a fusion: 'convert-only' (free on TPU),
+        'inplace-update' (row DUS + index math, possibly wrapped in
+        CPU-legalization converts — costs only the update region), or
+        'compute'."""
+        res = max(shape_elems(ins.shape), 1)
+        for callee in self._called(ins):
+            has_dus = False
+            for inner in self.comps.get(callee, []):
+                iop = inner.opcode
+                if iop in self._TRIVIAL:
+                    continue
+                if iop == "dynamic-update-slice":
+                    has_dus = True
+                    continue
+                if iop in self._UPDATE_EXTRA:
+                    # index math / row-sized masking, not bulk work
+                    if shape_elems(inner.shape) <= max(res // 8, 4096):
+                        continue
+                    return "compute"
+                return "compute"
+            return "inplace-update" if has_dus else "convert-only"
+        return "compute"
+
+    def _fusion_operand_bytes(self, comp: str, ins: Instr) -> float:
+        """Operand traffic of a fusion, slice-aware: a parameter whose
+        only inner uses are slice/dynamic-slice/gather ops contributes
+        the sliced bytes, not the full (e.g. layer-stacked) array."""
+        total = 0.0
+        callees = self._called(ins)
+        if not callees:
+            return sum(shape_bytes(self._oshape(comp, o))
+                       for o in ins.operands)
+        callee = callees[0]
+        instrs = self.comps.get(callee, [])
+        param_names = {}
+        for inner in instrs:
+            if inner.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", inner.line)
+                if m:
+                    param_names[inner.name] = int(m.group(1))
+        uses: Dict[str, List[Instr]] = {n: [] for n in param_names}
+        for inner in instrs:
+            for o in inner.operands:
+                if o in uses:
+                    uses[o].append(inner)
+        for pname, pidx in param_names.items():
+            if pidx >= len(ins.operands):
+                continue
+            full = shape_bytes(self._oshape(comp, ins.operands[pidx]))
+            ulist = uses[pname]
+            if ulist and all(u.opcode in ("slice", "dynamic-slice",
+                                          "gather", "convert")
+                             for u in ulist):
+                eff = sum(shape_bytes(u.shape) for u in ulist
+                          if u.opcode != "convert")
+                eff += sum(0.0 for u in ulist)
+                if any(u.opcode == "convert" for u in ulist) and not \
+                        any(u.opcode != "convert" for u in ulist):
+                    eff = full
+                total += min(full, eff) if eff else full
+            else:
+                total += full
+        # operands beyond named params (rare) count fully
+        for extra in ins.operands[len(param_names):]:
+            total += shape_bytes(self._oshape(comp, extra))
+        return total
+
+    def _fusion_update_bytes(self, ins: Instr) -> float:
+        total = 0.0
+        for callee in self._called(ins):
+            for inner in self.comps.get(callee, []):
+                if inner.opcode == "dynamic-update-slice" \
+                        and len(inner.operands) > 1:
+                    total += shape_bytes(
+                        self._oshape(callee, inner.operands[1]))
+        return total
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()      # cycle guard
+        total = Cost()
+        for ins in self.comps.get(name, []):
+            total += self.instr_cost(name, ins)
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        called = set()
+        for instrs in self.comps.values():
+            for ins in instrs:
+                called.update(self._called(ins))
+        total = Cost()
+        for name in self.comps:
+            if name not in called:
+                total += self.comp_cost(name)
+        return total
+
+
+def analyze(text: str) -> Cost:
+    return HloCostModel(text).entry_cost()

@@ -1,0 +1,30 @@
+"""Production mesh definitions.
+
+Functions, not module-level constants: importing this module never
+touches jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before its
+first jax import; everyone else sees the real device count).
+
+Topology: TPU v5e-class pods. Single pod = 16x16 = 256 chips,
+axes ("data", "model"); multi-pod adds a leading "pod" axis (2 pods =
+512 chips) carrying hierarchical data parallelism (reduce-scatter over
+ICI in-pod, cross-pod all-reduce over DCI) and optionally pipeline
+stages (distributed/pipeline.py).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/small runs (Auto axis types)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))

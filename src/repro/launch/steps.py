@@ -1,0 +1,138 @@
+"""Step builders shared by the dry-run, trainer and server.
+
+``input_specs`` (the brief's contract): ShapeDtypeStruct stand-ins for
+every model input of a (config, shape) cell — weak-type-correct,
+shardable, zero allocation.
+
+``make_train_step`` builds the jit-able (params, opt, batch) -> (params,
+opt, metrics) function with microbatched gradient accumulation (the
+knob that bounds activation memory at the 405B train shape) and AdamW.
+
+``make_prefill_step`` / ``make_decode_step`` build the serving steps
+(paper Alg. 1 / Alg. 3); decode expects the SPDecode strategy installed
+when caches are sequence-sharded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Model
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import linear_warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for one cell (no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            toks = jax.ShapeDtypeStruct((b, s, cfg.audio.n_codebooks), i32)
+        else:
+            toks = jax.ShapeDtypeStruct((b, s), i32)
+        out = {"tokens": toks}
+        if cfg.family == "vlm":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm.n_image_tokens, cfg.vlm.vision_dim),
+                jnp.bfloat16)
+        return out
+    # decode: one new token against a seq_len cache
+    if cfg.family == "audio":
+        return {"tokens": jax.ShapeDtypeStruct((b, cfg.audio.n_codebooks),
+                                               i32)}
+    return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def cache_specs_abstract(model: Model, shape: ShapeConfig,
+                         layout: str = "stacked"):
+    """Abstract decode caches for one cell (eval_shape, no allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len,
+                                  layout=layout))
+
+
+# ---------------------------------------------------------------------------
+# training step
+# ---------------------------------------------------------------------------
+def pick_micro_batches(cfg: ModelConfig, batch: int, dp: int,
+                       seq_len: int = 4096,
+                       tokens_per_device: int = 16384) -> int:
+    """Microbatch count: bound LIVE tokens per device per microbatch
+    (~16k) so activation memory is flat in global batch. §Perf note:
+    the original heuristic keyed on d_model and left every model under
+    4096 wide unmicrobatched — hymba's train_4k sat at 2.1 TiB/device
+    of scan-saved SSD intermediates (EXPERIMENTS.md §Perf, iteration
+    H1). Always returns a divisor of the batch with micro_batch >= dp.
+    """
+    target_mb = max(dp, (tokens_per_device * dp) // max(seq_len, 1))
+    target_mb = min(batch, target_mb)
+    n = max(1, batch // target_mb)
+    while batch % n:
+        n -= 1
+    return n
+
+
+def make_train_step(model: Model, *, n_micro: int = 1,
+                    base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000):
+    cfg = model.cfg
+
+    def mb_grads(params, mb):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, mb)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return loss, grads
+
+    def train_step(params, opt: AdamWState, batch):
+        if n_micro == 1:
+            loss, grads = mb_grads(params, batch)
+        else:
+            def re(x):
+                return x.reshape(n_micro, x.shape[0] // n_micro,
+                                 *x.shape[1:])
+            mbs = jax.tree.map(re, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                loss, grads = mb_grads(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), _ = jax.lax.scan(
+                acc, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+            loss = l_sum / n_micro
+        lr = linear_warmup_cosine(opt.step, base_lr=base_lr,
+                                  warmup=warmup, total_steps=total_steps)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, {"loss": loss, "lr": lr}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch, caches):
+        return model.prefill(params, batch, caches, jnp.int32(0))
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, caches, pos):
+        return model.decode_step(params, tokens, caches, pos)
+    return decode_step

@@ -1,0 +1,133 @@
+"""Training driver: data pipeline -> jit'd train step -> checkpoints,
+with the fault-tolerance contract wired in (watchdog, heartbeat,
+auto-resume, deterministic data skip).
+
+On this CPU container it trains reduced configs end-to-end (see
+examples/train_lm.py); on a pod the same driver runs the full configs —
+only the mesh and --arch change. ``--mesh`` accepts e.g. "4x2" (data x
+model); omit for single-device.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.checkpoint.checkpointer import config_fingerprint
+from repro.configs import get_config, get_reduced
+from repro.data import DataPipeline, SyntheticLM
+from repro.distributed.fault_tolerance import Heartbeat, StepWatchdog
+from repro.distributed.sharding import ShardingPolicy, dp_axes
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_train_step, pick_micro_batches
+from repro.models import Model
+from repro.optim.adamw import adamw_init
+
+
+def build(args):
+    cfg = (get_reduced(args.arch) if args.reduced
+           else get_config(args.arch))
+    if args.seq:
+        cfg = dataclasses.replace(cfg, max_seq_len=args.seq)
+    model = Model(cfg)
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh(shape, ("data", "model")[:len(shape)]
+                         if len(shape) == 2 else ("data",))
+    return cfg, model, mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.1-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--n-micro", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg, model, mesh = build(args)
+    nb = cfg.audio.n_codebooks if cfg.family == "audio" else 0
+    source = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
+                         seed=args.seed, n_codebooks=nb)
+    n_micro = args.n_micro or 1
+    step_fn = make_train_step(model, n_micro=n_micro, base_lr=args.lr,
+                              total_steps=args.steps)
+
+    ckpt = None
+    start_step = 0
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    opt = adamw_init(params)
+    if args.ckpt_dir:
+        ckpt = Checkpointer(args.ckpt_dir,
+                            fingerprint=config_fingerprint(cfg))
+        latest = ckpt.latest()
+        if latest is not None:
+            state = ckpt.restore(latest, {"params": params, "opt": opt})
+            params, opt = state["params"], state["opt"]
+            start_step = latest
+            print(f"[train] resumed from step {latest}")
+
+    if mesh is not None:
+        policy = ShardingPolicy(cfg, mesh)
+        pshard = policy.named(policy.param_specs(params))
+        params = jax.device_put(params, pshard)
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    pipe = DataPipeline(source, start_step=start_step)
+    watchdog = StepWatchdog()
+    hb = Heartbeat(os.path.join(args.ckpt_dir or ".", "heartbeats"),
+                   jax.process_index()) if args.ckpt_dir else None
+
+    losses = []
+    t_start = time.time()
+    for step, tokens in pipe:
+        if step >= args.steps:
+            break
+        batch = {"tokens": jnp.asarray(tokens)}
+        watchdog.step_start()
+        params, opt, metrics = jitted(params, opt, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        flag = watchdog.step_end(step)
+        if flag:
+            print(f"[watchdog] {flag}")
+        if hb:
+            hb.beat(step)
+        if step % args.log_every == 0:
+            tput = (args.batch * args.seq * (step - start_step + 1)
+                    / max(time.time() - t_start, 1e-9))
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} tok/s {tput:.0f}",
+                  flush=True)
+        if ckpt and step and step % args.ckpt_every == 0:
+            ckpt.save(step, {"params": params, "opt": opt})
+    pipe.stop()
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt": opt},
+                  blocking=True)
+    print(f"[train] done; first loss {losses[0]:.4f} "
+          f"last loss {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: one :class:`~repro.models.transformer.Model` serves all
+12 configs (10 assigned architectures + the paper's two eval models)."""
+from repro.models.transformer import Model
+
+__all__ = ["Model"]

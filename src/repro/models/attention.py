@@ -1,0 +1,477 @@
+"""Attention mixers: GQA/MHA (+HATA), MLA (+beyond-paper HATA-over-latent),
+and gated cross-attention (VLM).
+
+Every mixer exposes four pure functions closed over the static config:
+  init(cfg, key)                         -> layer params
+  forward_train(cfg, p, w_h, x, pos0)    -> y           (full attention)
+  prefill(cfg, p, w_h, x, cache, pos)    -> (y, cache)  (Alg. 1)
+  decode(cfg, p, w_h, x, cache, pos, use_hata) -> (y, cache)  (Alg. 3)
+
+``use_hata`` is a *traced* bool so the first-N dense layers (paper §5.1)
+stay inside one scanned layer structure; ``lax.cond`` picks the scoring
+path. Cache/code updates happen outside the cond so both branches share
+cache structure.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.hash_attention import _xla_masked
+from repro.core.kvcache import LayerKVCache, MLACache, append_kv, append_mla
+from repro.distributed.strategy import get_decode_strategy
+from repro.kernels import ops
+from repro.models.layers import apply_rope, init_linear
+
+
+# ===========================================================================
+# GQA / MHA
+# ===========================================================================
+def gqa_init(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    dtype = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": init_linear(ks[0], d, cfg.n_heads * hd, dtype),
+         "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, dtype),
+         "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, dtype),
+         "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def gqa_hash_init(cfg: ModelConfig, key) -> Optional[jax.Array]:
+    if not cfg.hata.enabled:
+        return None
+    w = jax.random.normal(key, (cfg.n_kv_heads, cfg.head_dim,
+                                cfg.hata.rbit), jnp.float32)
+    return w / jnp.sqrt(cfg.head_dim)
+
+
+def _project_qkv(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary)
+    return q, k, v
+
+
+def gqa_forward_train(cfg: ModelConfig, p, w_h, x: jax.Array,
+                      pos0: int = 0) -> jax.Array:
+    b, s, _ = x.shape
+    positions = jnp.arange(s) + pos0
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = ops.flash_attention(q, k, v, causal=True,
+                              window=cfg.sliding_window)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def gqa_prefill_parts(cfg: ModelConfig, p, w_h, x: jax.Array,
+                      pos: jax.Array):
+    """Projections + key codes for prefill (Alg. 1 lines 2-3)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s) + pos
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    codes = None
+    if w_h is not None and cfg.hata.enabled:
+        codes = ops.hash_encode_heads(k, w_h)
+    return q, k, v, codes
+
+
+def gqa_prefill(cfg: ModelConfig, p, w_h, x: jax.Array,
+                cache: LayerKVCache, pos: jax.Array,
+                ) -> Tuple[jax.Array, LayerKVCache]:
+    b, s, _ = x.shape
+    q, k, v, codes = gqa_prefill_parts(cfg, p, w_h, x, pos)
+    if cache.codes is None:
+        codes = None
+    cache = append_kv(cache, k, v, codes, pos)
+    out = ops.flash_attention(q, k, v, causal=True,
+                              window=cfg.sliding_window)
+    return out.reshape(b, s, -1) @ p["wo"], cache
+
+
+def _dense_decode(cfg: ModelConfig, q, cache: LayerKVCache, n_valid):
+    """Full-cache decode with length (and SWA window) masking.
+    n_valid: scalar or (B,)."""
+    if cfg.sliding_window is None:
+        return ops.decode_attention(q, cache.k, cache.v, n_valid)
+    b, h, d = q.shape
+    h_kv = cache.k.shape[2]
+    s = cache.max_len
+    pos = jnp.arange(s)
+    nv = jnp.reshape(n_valid, (-1, 1))                  # (1|B, 1)
+    valid = (pos[None] < nv) & (pos[None] > nv - 1 - cfg.sliding_window)
+    valid = jnp.broadcast_to(valid, (b, s))
+    qg = q.reshape(b, h_kv, h // h_kv, d)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(cache.k.dtype),
+                        cache.k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(cache.v.dtype),
+                     cache.v, preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def _hata_score_select(cfg: ModelConfig, q, w_h, cache: LayerKVCache,
+                       n_valid):
+    """Alg. 3 lines 6,10-15: encode q, Hamming scores, top-k + gather."""
+    b, h, d = q.shape
+    h_kv = cache.k.shape[2]
+    g = h // h_kv
+    rbit = cfg.hata.rbit
+    qg = q.reshape(b, h_kv, g, d)
+    q_codes = jax.vmap(lambda xx, ww: ops.hash_encode(xx, ww),
+                       in_axes=(1, 0), out_axes=1)(qg, w_h)
+    scores = ops.hamming_scores(q_codes, cache.codes, rbit=rbit)
+    s = cache.max_len
+    pos = jnp.arange(s)
+    nv = jnp.reshape(n_valid, (-1, 1, 1))               # (1|B, 1, 1)
+    valid = pos[None, None, :] < nv
+    if cfg.sliding_window is not None:
+        valid = valid & (pos[None, None, :] > nv - 1
+                         - cfg.sliding_window)
+    scores = jnp.where(valid, scores, -1)
+    budget = cfg.hata.budget(s)
+    if cfg.sliding_window is not None:
+        budget = min(budget, cfg.sliding_window)
+    budget = min(budget, s)
+    top_scores, idx = jax.lax.top_k(scores, budget)
+    return _xla_masked(q, cache, idx, top_scores >= 0)
+
+
+def _project_qkv_perrow(cfg: ModelConfig, p, x: jax.Array,
+                        pos: jax.Array):
+    """Decode projections with per-row positions. x: (B, 1, D),
+    pos: (B,) — continuous-batching slots sit at different depths."""
+    b = x.shape[0]
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, cfg.n_heads, hd)
+    k = k.reshape(b, 1, cfg.n_kv_heads, hd)
+    v = v.reshape(b, 1, cfg.n_kv_heads, hd)
+    rope = jax.vmap(lambda xx, pp: apply_rope(
+        xx, pp[None], cfg.rope_theta, cfg.partial_rotary))
+    return rope(q, pos), rope(k, pos), v
+
+
+def gqa_decode_project(cfg: ModelConfig, p, w_h, x: jax.Array,
+                       pos: jax.Array):
+    """Alg. 3 lines 3-9 minus the cache write: project + encode.
+    x: (B, 1, D) -> (q1 (B,H,d), k_new (B,1,Hkv,d), v_new, codes|None).
+    pos: scalar or (B,) per-slot positions."""
+    if jnp.ndim(pos) == 1:
+        q, k, v = _project_qkv_perrow(cfg, p, x, pos)
+    else:
+        q, k, v = _project_qkv(cfg, p, x, pos[None])
+    codes = None
+    if w_h is not None and cfg.hata.enabled:
+        codes = ops.hash_encode_heads(k, w_h)
+    return q[:, 0], k, v, codes
+
+
+def gqa_decode_attend(cfg: ModelConfig, p, w_h, q1: jax.Array,
+                      cache: LayerKVCache, pos: jax.Array,
+                      use_hata) -> jax.Array:
+    """Alg. 3 lines 10-17 over a (possibly sequence-sharded) cache view.
+    Returns the block output (B, 1, D) (Wo applied)."""
+    b = q1.shape[0]
+    n_valid = pos + 1
+    hata_on = cache.codes is not None and cfg.hata.enabled
+    strat = get_decode_strategy()
+    out = None
+    if strat is not None:
+        out = strat.gqa(cfg, q1, w_h, cache, n_valid,
+                        use_hata if hata_on else False)
+    if out is None:
+        if not hata_on:
+            out = _dense_decode(cfg, q1, cache, n_valid)
+        elif isinstance(use_hata, bool):
+            # static layer split (segmented scan): only one branch is
+            # lowered — the dry-run sees steady-state HATA cost
+            out = (_hata_score_select(cfg, q1, w_h, cache, n_valid)
+                   if use_hata else _dense_decode(cfg, q1, cache,
+                                                  n_valid))
+        else:
+            out = jax.lax.cond(
+                use_hata,
+                lambda: _hata_score_select(cfg, q1, w_h, cache, n_valid),
+                lambda: _dense_decode(cfg, q1, cache, n_valid))
+    return out.reshape(b, 1, -1) @ p["wo"]
+
+
+def gqa_decode(cfg: ModelConfig, p, w_h, x: jax.Array,
+               cache: LayerKVCache, pos: jax.Array, use_hata,
+               ) -> Tuple[jax.Array, LayerKVCache]:
+    """x: (B, 1, D) one new token; pos: scalar cache fill."""
+    q1, k, v, codes = gqa_decode_project(cfg, p, w_h, x, pos)
+    if cache.codes is None:
+        codes = None
+    cache = append_kv(cache, k, v, codes, pos)
+    return gqa_decode_attend(cfg, p, w_h, q1, cache, pos,
+                             use_hata), cache
+
+
+# ===========================================================================
+# MLA (DeepSeek-V2) — HATA over the compressed latent (beyond-paper)
+# ===========================================================================
+def mla_init(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    dtype = jnp.dtype(cfg.dtype)
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_linear(ks[0], d, h * (m.qk_nope_dim + m.qk_rope_dim),
+                          dtype),
+        "wdkv": init_linear(ks[1], d, m.kv_lora_rank, dtype),
+        "wkr": init_linear(ks[2], d, m.qk_rope_dim, dtype),
+        # up-projections from the latent
+        "wuk": init_linear(ks[3], m.kv_lora_rank, h * m.qk_nope_dim,
+                           dtype),
+        "wuv": init_linear(ks[4], m.kv_lora_rank, h * m.v_head_dim,
+                           dtype),
+        "wo": init_linear(ks[5], h * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_hash_init(cfg: ModelConfig, key) -> Optional[jax.Array]:
+    if not cfg.hata.enabled:
+        return None
+    m = cfg.mla
+    dim = m.kv_lora_rank + m.qk_rope_dim
+    # one shared latent stream per layer -> one weight (leading axis 1
+    # keeps the (H_kv, d, rbit) convention)
+    w = jax.random.normal(key, (1, dim, cfg.hata.rbit), jnp.float32)
+    return w / jnp.sqrt(dim)
+
+
+def _mla_qkv(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array):
+    """Returns per-head q (nope+rope) and the latent streams."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = (x @ p["wq"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = x @ p["wdkv"]                              # (B, S, r)
+    krope = apply_rope((x @ p["wkr"])[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]   # (B, S, rd)
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_forward_train(cfg: ModelConfig, p, w_h, x: jax.Array,
+                      pos0: int = 0) -> jax.Array:
+    """Materialized form: per-head K = [W_uk c ; k_rope], V = W_uv c."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    positions = jnp.arange(s) + pos0
+    q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
+    k_nope = (ckv @ p["wuk"]).reshape(b, s, h, m.qk_nope_dim)
+    v = (ckv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  (b, s, h, m.qk_rope_dim))], axis=-1)
+    # MLA scales by sqrt(qk_nope + rope) total dim
+    out = ops.flash_attention(q, k, v, causal=True)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def mla_prefill_parts(cfg: ModelConfig, p, w_h, x: jax.Array,
+                      pos: jax.Array):
+    """-> (q, k, v materialized per head; ckv, krope, codes latents)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    positions = jnp.arange(s) + pos
+    q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
+    codes = None
+    if w_h is not None and cfg.hata.enabled:
+        latent = jnp.concatenate([ckv, krope], axis=-1)  # (B, S, r+rd)
+        codes = ops.hash_encode(latent, w_h[0])
+    h = cfg.n_heads
+    k_nope = (ckv @ p["wuk"]).reshape(b, s, h, m.qk_nope_dim)
+    v = (ckv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  (b, s, h, m.qk_rope_dim))], axis=-1)
+    return q, k, v, ckv, krope, codes
+
+
+def mla_prefill(cfg: ModelConfig, p, w_h, x: jax.Array, cache: MLACache,
+                pos: jax.Array) -> Tuple[jax.Array, MLACache]:
+    b, s, _ = x.shape
+    q, k, v, ckv, krope, codes = mla_prefill_parts(cfg, p, w_h, x, pos)
+    if cache.codes is None:
+        codes = None
+    cache = append_mla(cache, ckv, krope, codes, pos)
+    out = ops.flash_attention(q, k, v, causal=True)
+    return out.reshape(b, s, -1) @ p["wo"], cache
+
+
+def _mla_latent_q(cfg: ModelConfig, p, q_nope: jax.Array,
+                  q_rope: jax.Array) -> jax.Array:
+    """Absorb W_uk: map q into latent space. -> (B, H, r + rope_dim)."""
+    m = cfg.mla
+    b, h = q_nope.shape[0], cfg.n_heads
+    wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    return jnp.concatenate(
+        [q_lat, q_rope.astype(jnp.float32)], axis=-1)
+
+
+def _mla_attend(cfg: ModelConfig, p, q_lat: jax.Array, ckv_rows,
+                krope_rows, mask) -> jax.Array:
+    """Attention in latent space over (B, k, r) rows. q_lat: (B,H,r+rd).
+
+    Cache operands stay in their storage dtype with f32 MXU
+    accumulation (an .astype(f32) on the cache would make XLA hoist an
+    f32 copy of the whole latent cache out of the decode layer scan).
+    """
+    m = cfg.mla
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    kv = jnp.concatenate([ckv_rows, krope_rows], axis=-1)  # (B,k,r+rd)
+    logits = jnp.einsum("bhr,bkr->bhk", q_lat.astype(kv.dtype), kv,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", probs.astype(ckv_rows.dtype),
+                       ckv_rows,
+                       preferred_element_type=jnp.float32)  # (B,H,r)
+    h = cfg.n_heads
+    wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+    return o
+
+
+def mla_decode_project(cfg: ModelConfig, p, w_h, x: jax.Array,
+                       pos: jax.Array):
+    """-> (q_lat (B,H,r+rd) f32, ckv (B,1,r), krope (B,1,rd),
+    codes (B,1,W)|None). pos: scalar or (B,) per-slot."""
+    if jnp.ndim(pos) == 1:
+        qn, qr, cv, kr = jax.vmap(
+            lambda xr, pp: _mla_qkv(cfg, p, xr[None], pp[None]))(x, pos)
+        q_nope, q_rope = qn[:, 0], qr[:, 0]
+        ckv, krope = cv[:, 0], kr[:, 0]
+    else:
+        q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, pos[None])
+    codes = None
+    if w_h is not None and cfg.hata.enabled:
+        latent = jnp.concatenate([ckv, krope], axis=-1)
+        codes = ops.hash_encode(latent, w_h[0])
+    q_lat = _mla_latent_q(cfg, p, q_nope[:, 0], q_rope[:, 0])
+    return q_lat, ckv, krope, codes
+
+
+def mla_decode_attend(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
+                      cache: MLACache, pos: jax.Array,
+                      use_hata, x_dtype) -> jax.Array:
+    b = q_lat.shape[0]
+    n_valid = pos + 1
+    s = cache.max_len
+    seq = jnp.arange(s)
+    nv = jnp.reshape(n_valid, (-1, 1))                  # (1|B, 1)
+
+    def dense_path():
+        mask = jnp.broadcast_to(seq[None] < nv, (b, s))
+        return _mla_attend(cfg, p, q_lat, cache.ckv, cache.krope, mask)
+
+    def hata_path():
+        # scores over the single shared latent stream; G = all H heads.
+        rbit = cfg.hata.rbit
+        q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
+        x_ = jax.lax.population_count(jnp.bitwise_xor(
+            q_codes[:, :, None, :], cache.codes[:, None, :, :]))
+        scores = (cfg.n_heads * rbit
+                  - jnp.sum(x_.astype(jnp.int32), axis=(1, 3)))  # (B, S)
+        scores = jnp.where(seq[None] < nv, scores, -1)
+        budget = min(cfg.hata.budget(s), s)
+        top_scores, idx = jax.lax.top_k(scores, budget)   # (B, k)
+        ckv_rows = jnp.take_along_axis(cache.ckv, idx[..., None], axis=1)
+        kr_rows = jnp.take_along_axis(cache.krope, idx[..., None], axis=1)
+        return _mla_attend(cfg, p, q_lat, ckv_rows, kr_rows,
+                           top_scores >= 0)
+
+    hata_on = cache.codes is not None and cfg.hata.enabled
+    strat = get_decode_strategy()
+    o = None
+    if strat is not None:
+        o = strat.mla(cfg, p, w_h, q_lat, cache, n_valid,
+                      use_hata if hata_on else False)
+    if o is None:
+        if not hata_on:
+            o = dense_path()
+        elif isinstance(use_hata, bool):
+            o = hata_path() if use_hata else dense_path()
+        else:
+            o = jax.lax.cond(use_hata, hata_path, dense_path)
+    return o.reshape(b, 1, -1).astype(x_dtype) @ p["wo"]
+
+
+def mla_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache: MLACache,
+               pos: jax.Array, use_hata) -> Tuple[jax.Array, MLACache]:
+    q_lat, ckv, krope, codes = mla_decode_project(cfg, p, w_h, x, pos)
+    if cache.codes is None:
+        codes = None
+    cache = append_mla(cache, ckv, krope, codes, pos)
+    out = mla_decode_attend(cfg, p, w_h, q_lat, cache, pos, use_hata,
+                            x.dtype)
+    return out, cache
+
+
+# ===========================================================================
+# Gated cross-attention (Llama-3.2-Vision style; frontend stubbed)
+# ===========================================================================
+def cross_init(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    dtype = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": init_linear(ks[0], d, cfg.n_heads * hd, dtype),
+            "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, dtype),
+            "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, dtype),
+            "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype),
+            "gate_attn": jnp.zeros((), dtype),
+            "gate_ffn": jnp.zeros((), dtype)}
+
+
+def cross_kv(cfg: ModelConfig, p, img: jax.Array):
+    """img: (B, T_img, D) already projected to d_model."""
+    b, t, _ = img.shape
+    hd = cfg.head_dim
+    k = (img @ p["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+    v = (img @ p["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def cross_attend(cfg: ModelConfig, p, x: jax.Array, k: jax.Array,
+                 v: jax.Array) -> jax.Array:
+    """Gated cross-attention. x: (B, S, D); k/v: (B, T_img, H_kv, hd).
+    The image token set is small (~1.6k) and fixed, so this stays dense
+    (no HATA) — see DESIGN.md §Arch-applicability."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    out = ops.flash_attention(q, k, v, causal=False)
+    out = out.reshape(b, s, -1) @ p["wo"]
+    return jnp.tanh(p["gate_attn"]) * out

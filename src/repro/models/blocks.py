@@ -1,0 +1,404 @@
+"""Per-family transformer blocks with train / prefill / decode paths.
+
+A "block" is one residual layer. Kinds:
+  dense   — (MLA-aware) attention + SwiGLU FFN      [llama*, qwen, stablelm,
+             granite, musicgen backbone, vlm self layers]
+  moe     — attention + MoE FFN                     [mixtral, deepseek]
+  ssm     — Mamba2 SSD mixer only                   [mamba2]
+  hybrid  — parallel attention + SSD heads + FFN    [hymba]
+  cross   — gated cross-attention + FFN             [vlm cross layers]
+
+All paths are pure functions of (cfg, params, state) so layer stacks can
+be lax.scan'ed with stacked params/caches; heterogeneity inside a stack
+is expressed by *traced* per-layer flags (use_hata), never by structure.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.kvcache import (LayerKVCache, MLACache, SSMState,
+                                init_kv_cache, init_mla_cache,
+                                init_ssm_state)
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import ffn, init_ffn, rms_norm
+
+
+def _is_mla(cfg: ModelConfig) -> bool:
+    return cfg.mla is not None
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def block_init(cfg: ModelConfig, key, kind: str, *,
+               dense_ffn: bool = False) -> Dict:
+    """dense_ffn=True forces a dense FFN in a 'moe' kind (DeepSeek's
+    first layer)."""
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict = {"ln1": jnp.ones((d,), dtype)}
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(cfg, ks[0])
+        return p
+    p["ln2"] = jnp.ones((d,), dtype)
+    if kind == "cross":
+        p["attn"] = attn.cross_init(cfg, ks[0])
+        p["ffn"] = init_ffn(ks[1], d, cfg.d_ff, dtype)
+        return p
+    p["attn"] = (attn.mla_init(cfg, ks[0]) if _is_mla(cfg)
+                 else attn.gqa_init(cfg, ks[0]))
+    if kind == "hybrid":
+        p["ssm"] = ssm_mod.ssm_init(cfg, ks[1])
+        p["beta_attn"] = jnp.ones((d,), dtype)
+        p["beta_ssm"] = jnp.ones((d,), dtype)
+        p["ffn"] = init_ffn(ks[2], d, cfg.d_ff, dtype)
+    elif kind == "moe" and not dense_ffn:
+        p["moe"] = moe_mod.moe_init(cfg, ks[1])
+    else:
+        d_ff = cfg.d_ff
+        if kind == "moe" and dense_ffn:
+            d_ff = cfg.moe.d_ff_dense or cfg.d_ff
+        p["ffn"] = init_ffn(ks[1], d, d_ff, dtype)
+    return p
+
+
+def hash_init(cfg: ModelConfig, key) -> Optional[jax.Array]:
+    """Per-layer hash weights (H_kv, d_hash, rbit)."""
+    if not cfg.hata.enabled or cfg.attention_free:
+        return None
+    if _is_mla(cfg):
+        return attn.mla_hash_init(cfg, key)
+    return attn.gqa_hash_init(cfg, key)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int,
+                     max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    rbit = cfg.hata.rbit if (cfg.hata.enabled and kind != "ssm") else 0
+    if kind == "ssm":
+        di, nh, conv_dim = ssm_mod.ssm_dims(cfg)
+        return init_ssm_state(batch, conv_dim, cfg.ssm.d_conv, nh,
+                              cfg.ssm.head_dim, cfg.ssm.d_state)
+    if _is_mla(cfg):
+        return init_mla_cache(batch, max_len, cfg.mla.kv_lora_rank,
+                              cfg.mla.qk_rope_dim, rbit=rbit, dtype=dtype)
+    kv = init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+                       rbit=rbit, dtype=dtype)
+    if kind == "hybrid":
+        di, nh, conv_dim = ssm_mod.ssm_dims(cfg)
+        return (kv, init_ssm_state(batch, conv_dim, cfg.ssm.d_conv, nh,
+                                   cfg.ssm.head_dim, cfg.ssm.d_state))
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# mixer dispatch helpers
+# ---------------------------------------------------------------------------
+def _attn_train(cfg, p, w_h, x, pos0=0):
+    if _is_mla(cfg):
+        return attn.mla_forward_train(cfg, p, w_h, x, pos0)
+    return attn.gqa_forward_train(cfg, p, w_h, x, pos0)
+
+
+def _attn_prefill(cfg, p, w_h, x, cache, pos):
+    if _is_mla(cfg):
+        return attn.mla_prefill(cfg, p, w_h, x, cache, pos)
+    return attn.gqa_prefill(cfg, p, w_h, x, cache, pos)
+
+
+def _attn_decode(cfg, p, w_h, x, cache, pos, use_hata):
+    if _is_mla(cfg):
+        return attn.mla_decode(cfg, p, w_h, x, cache, pos, use_hata)
+    return attn.gqa_decode(cfg, p, w_h, x, cache, pos, use_hata)
+
+
+# ---------------------------------------------------------------------------
+# train (full sequence, no cache)
+# ---------------------------------------------------------------------------
+def block_train(cfg: ModelConfig, p, w_h, x: jax.Array, kind: str, *,
+                img: Optional[jax.Array] = None, pos0: int = 0,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    aux = jnp.float32(0)
+    if kind == "ssm":
+        return x + ssm_mod.ssm_forward(
+            cfg, p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps)), aux
+    if kind == "cross":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        k, v = attn.cross_kv(cfg, p["attn"], img)
+        x = x + attn.cross_attend(cfg, p["attn"], h, k, v)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + jnp.tanh(p["attn"]["gate_ffn"]) * ffn(p["ffn"], h), aux
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "hybrid":
+        a = _attn_train(cfg, p["attn"], w_h, h, pos0)
+        s = ssm_mod.ssm_forward(cfg, p["ssm"], h)
+        mix = 0.5 * (p["beta_attn"] * rms_norm(a, jnp.ones_like(
+            p["beta_attn"]), cfg.norm_eps) + p["beta_ssm"] * rms_norm(
+            s, jnp.ones_like(p["beta_ssm"]), cfg.norm_eps))
+        x = x + mix
+    else:
+        x = x + _attn_train(cfg, p["attn"], w_h, h, pos0)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_mod.moe_ffn(cfg, p["moe"], h)
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], h)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# prefill (full sequence, fills caches; Alg. 1)
+# ---------------------------------------------------------------------------
+def block_prefill(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
+                  kind: str, pos, *, img: Optional[jax.Array] = None):
+    if kind == "ssm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, state = ssm_mod.ssm_forward(cfg, p["ssm"], h,
+                                       return_state=True)
+        return x + y, state
+    if kind == "cross":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        k, v = attn.cross_kv(cfg, p["attn"], img)
+        x = x + attn.cross_attend(cfg, p["attn"], h, k, v)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + jnp.tanh(p["attn"]["gate_ffn"]) * ffn(p["ffn"], h)
+        return x, (k, v)                      # static cross KV cache
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "hybrid":
+        kv, sstate = cache
+        a, kv = _attn_prefill(cfg, p["attn"], w_h, h, kv, pos)
+        s, sstate = ssm_mod.ssm_forward(cfg, p["ssm"], h,
+                                        return_state=True)
+        mix = 0.5 * (p["beta_attn"] * rms_norm(a, jnp.ones_like(
+            p["beta_attn"]), cfg.norm_eps) + p["beta_ssm"] * rms_norm(
+            s, jnp.ones_like(p["beta_ssm"]), cfg.norm_eps))
+        x = x + mix
+        cache = (kv, sstate)
+    else:
+        a, cache = _attn_prefill(cfg, p["attn"], w_h, h, cache, pos)
+        x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_mod.moe_ffn(cfg, p["moe"], h)
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], h)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# stacked-cache decode (carry-based; in-place appends)
+# ---------------------------------------------------------------------------
+def _stack_append(stack_leaf: jax.Array, new: jax.Array, lead,
+                  pos) -> jax.Array:
+    """Write ``new`` (B, S_new, ...) into a layer-stacked cache leaf
+    (*lead, B, S_max, ...) at sequence offset ``pos``.
+
+    When a sequence-parallel strategy is installed the write happens
+    inside shard_map (masked local row writes, O(row) traffic — GSPMD's
+    own DUS lowering on a sharded dim does a whole-buffer ownership
+    select; EXPERIMENTS.md §Perf). Locally it's a plain in-place DUS.
+    """
+    from repro.distributed.strategy import get_decode_strategy
+    strat = get_decode_strategy()
+    if strat is not None and hasattr(strat, "append_leaf"):
+        return strat.append_leaf(stack_leaf, new, tuple(lead), pos)
+    lead = tuple(lead)
+    new = new.astype(stack_leaf.dtype)
+    new = new.reshape((1,) * len(lead) + new.shape)
+    idx = lead + (0, pos) + (0,) * (stack_leaf.ndim - len(lead) - 2)
+    return jax.lax.dynamic_update_slice(stack_leaf, new, idx)
+
+
+def _layer_view(stack, lead):
+    """Slice one layer's cache out of the stacked pytree."""
+    def one(t):
+        for i in tuple(lead):
+            t = jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False)
+        return t
+    return jax.tree.map(one, stack)
+
+
+def block_decode_stacked(cfg: ModelConfig, p, w_h, x: jax.Array,
+                         kv_stack, lead, kind: str, pos, use_hata, *,
+                         sstate: Optional[SSMState] = None,
+                         cross_kv: Optional[Tuple] = None):
+    """One decode block over layer-stacked KV caches.
+
+    ``kv_stack`` holds every layer's KV+code cache with leading index
+    dims; ``lead`` (tuple of traced/static ints) addresses this block's
+    slot. KV stacks are CARRIED (appends stay in place); SSM states are
+    passed per-layer (``sstate``, scan xs->ys — they are fully
+    rewritten every step, so ys threading is exactly one state r/w).
+    Returns (x, kv_stack, new_sstate).
+    """
+    if kind == "cross":
+        y, _ = block_decode(cfg, p, w_h, x, None, kind, pos, use_hata,
+                            cross_kv=cross_kv)
+        return y, kv_stack, None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        y, new_state = ssm_mod.ssm_decode(cfg, p["ssm"], h, sstate)
+        return x + y, kv_stack, new_state
+
+    if _is_mla(cfg):
+        q_lat, ckv, krope, codes = attn.mla_decode_project(
+            cfg, p["attn"], w_h, h, pos)
+        if kv_stack.codes is None:
+            codes = None
+        kv_stack = MLACache(
+            ckv=_stack_append(kv_stack.ckv, ckv, lead, pos),
+            krope=_stack_append(kv_stack.krope, krope, lead, pos),
+            codes=None if codes is None else _stack_append(
+                kv_stack.codes, codes, lead, pos))
+        view = _layer_view(kv_stack, lead)
+        a = attn.mla_decode_attend(cfg, p["attn"], w_h, q_lat, view,
+                                   pos, use_hata, x.dtype)
+    else:
+        q1, k1, v1, codes = attn.gqa_decode_project(cfg, p["attn"],
+                                                    w_h, h, pos)
+        if kv_stack.codes is None:
+            codes = None
+        kv_stack = LayerKVCache(
+            k=_stack_append(kv_stack.k, k1, lead, pos),
+            v=_stack_append(kv_stack.v, v1, lead, pos),
+            codes=None if codes is None else _stack_append(
+                kv_stack.codes, codes, lead, pos))
+        view = _layer_view(kv_stack, lead)
+        a = attn.gqa_decode_attend(cfg, p["attn"], w_h, q1, view, pos,
+                                   use_hata)
+
+    new_state = None
+    if kind == "hybrid":
+        s, new_state = ssm_mod.ssm_decode(cfg, p["ssm"], h, sstate)
+        mix = 0.5 * (p["beta_attn"] * rms_norm(a, jnp.ones_like(
+            p["beta_attn"]), cfg.norm_eps) + p["beta_ssm"] * rms_norm(
+            s, jnp.ones_like(p["beta_ssm"]), cfg.norm_eps))
+        x = x + mix
+    else:
+        x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_mod.moe_ffn(cfg, p["moe"], h, group_size=x.shape[0])
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], h)
+    return x, kv_stack, new_state
+
+
+# ---------------------------------------------------------------------------
+# stacked-cache prefill (carry-based)
+# ---------------------------------------------------------------------------
+def block_prefill_stacked(cfg: ModelConfig, p, w_h, x: jax.Array,
+                          kv_stack, lead, kind: str, pos, *,
+                          img: Optional[jax.Array] = None):
+    """Prefill analogue of block_decode_stacked: the freshly computed
+    K/V/code rows are written straight into the stacked cache (one
+    in-place slice write per layer); attention runs on the fresh
+    projections, never re-reading the cache. SSM final states are
+    returned per layer (scan ys); cross layers return their (static)
+    image KV. Returns (x, kv_stack, aux) where aux is the SSM state or
+    the cross KV."""
+    if kind == "cross":
+        y, ckv = block_prefill(cfg, p, w_h, x, None, kind, pos, img=img)
+        return y, kv_stack, ckv
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        y, state = ssm_mod.ssm_forward(cfg, p["ssm"], h,
+                                       return_state=True)
+        return x + y, kv_stack, state
+
+    from repro.kernels import ops as kops
+
+    if _is_mla(cfg):
+        q, k, v, ckv, krope, codes = attn.mla_prefill_parts(
+            cfg, p["attn"], w_h, h, pos)
+        if kv_stack.codes is None:
+            codes = None
+        kv_stack = MLACache(
+            ckv=_stack_append(kv_stack.ckv, ckv, lead, pos),
+            krope=_stack_append(kv_stack.krope, krope, lead, pos),
+            codes=None if codes is None else _stack_append(
+                kv_stack.codes, codes, lead, pos))
+        out = kops.flash_attention(q, k, v, causal=True)
+        a = out.reshape(*x.shape[:2], -1) @ p["attn"]["wo"]
+    else:
+        q, k, v, codes = attn.gqa_prefill_parts(cfg, p["attn"], w_h, h,
+                                                pos)
+        if kv_stack.codes is None:
+            codes = None
+        kv_stack = LayerKVCache(
+            k=_stack_append(kv_stack.k, k, lead, pos),
+            v=_stack_append(kv_stack.v, v, lead, pos),
+            codes=None if codes is None else _stack_append(
+                kv_stack.codes, codes, lead, pos))
+        out = kops.flash_attention(q, k, v, causal=True,
+                                   window=cfg.sliding_window)
+        a = out.reshape(*x.shape[:2], -1) @ p["attn"]["wo"]
+
+    state = None
+    if kind == "hybrid":
+        s, state = ssm_mod.ssm_forward(cfg, p["ssm"], h,
+                                       return_state=True)
+        mix = 0.5 * (p["beta_attn"] * rms_norm(a, jnp.ones_like(
+            p["beta_attn"]), cfg.norm_eps) + p["beta_ssm"] * rms_norm(
+            s, jnp.ones_like(p["beta_ssm"]), cfg.norm_eps))
+        x = x + mix
+    else:
+        x = x + a
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_mod.moe_ffn(cfg, p["moe"], h2)
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], h2)
+    return x, kv_stack, state
+
+
+# ---------------------------------------------------------------------------
+# decode (one token; Alg. 3)
+# ---------------------------------------------------------------------------
+def block_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
+                 kind: str, pos, use_hata, *,
+                 cross_kv: Optional[Tuple] = None):
+    if kind == "ssm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, state = ssm_mod.ssm_decode(cfg, p["ssm"], h, cache)
+        return x + y, state
+    if kind == "cross":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        k, v = cross_kv
+        x = x + attn.cross_attend(cfg, p["attn"], h, k, v)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + jnp.tanh(p["attn"]["gate_ffn"]) * ffn(p["ffn"], h)
+        return x, cache
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "hybrid":
+        kv, sstate = cache
+        a, kv = _attn_decode(cfg, p["attn"], w_h, h, kv, pos, use_hata)
+        s, sstate = ssm_mod.ssm_decode(cfg, p["ssm"], h, sstate)
+        mix = 0.5 * (p["beta_attn"] * rms_norm(a, jnp.ones_like(
+            p["beta_attn"]), cfg.norm_eps) + p["beta_ssm"] * rms_norm(
+            s, jnp.ones_like(p["beta_ssm"]), cfg.norm_eps))
+        x = x + mix
+        cache = (kv, sstate)
+    else:
+        a, cache = _attn_decode(cfg, p["attn"], w_h, h, cache, pos,
+                                use_hata)
+        x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_mod.moe_ffn(cfg, p["moe"], h, group_size=x.shape[0])
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], h)
+    return x, cache

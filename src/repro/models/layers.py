@@ -1,0 +1,117 @@
+"""Shared building blocks: norms, RoPE, SwiGLU, embeddings, chunked CE."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, *,
+                scale: Optional[float] = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (partial-rotary capable)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float,
+               partial: float = 1.0) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * partial)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               partial: float = 1.0) -> jax.Array:
+    """x: (..., S, H, d) — the sequence axis must be third-from-last.
+    positions: (S,) absolute positions. Shared/rope-only streams (MLA
+    k_rope) pass a singleton head axis."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta, partial)
+    rot = inv.shape[0] * 2
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]  # (S, r/2)
+    bshape = [1] * x.ndim
+    bshape[-3] = positions.shape[0]
+    bshape[-1] = rot // 2
+    cos = jnp.cos(ang).reshape(bshape)
+    sin = jnp.sin(ang).reshape(bshape)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(*x.shape[:-1], rot)
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+def init_ffn(key, d_model: int, d_ff: int, dtype) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": init_linear(k1, d_model, d_ff, dtype),
+            "wu": init_linear(k2, d_model, d_ff, dtype),
+            "wd": init_linear(k3, d_ff, d_model, dtype)}
+
+
+def ffn(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["wi"]) * (x @ p["wu"])
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes full (B, S, V) logits)
+# ---------------------------------------------------------------------------
+def chunked_ce_loss(x: jax.Array, w_head: jax.Array, labels: jax.Array,
+                    mask: Optional[jax.Array] = None, chunk: int = 512,
+                    n_vocab: Optional[int] = None) -> jax.Array:
+    """x: (B, S, D) final hidden, w_head: (D, Vp), labels: (B, S) int32.
+
+    Scans over S chunks so peak logits memory is (B, chunk, Vp) — the
+    405B train shape has Vp=128k where full logits would be GiBs/device.
+    ``n_vocab``: real vocab size; columns >= n_vocab (shard padding) are
+    excluded from the softmax.
+    """
+    b, s, d = x.shape
+    vp = w_head.shape[1]
+    chunk = min(chunk, s)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        s += pad
+    n = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.astype(jnp.float32).reshape(b, n, chunk), 1, 0)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        xi, li, mi = xs
+        logits = (xi @ w_head).astype(jnp.float32)           # (B, c, Vp)
+        if n_vocab is not None and n_vocab < vp:
+            dead = jnp.arange(vp) >= n_vocab
+            logits = jnp.where(dead[None, None], -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold) * mi
+        return (tot + nll.sum(), cnt + mi.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                 (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,202 @@
+"""Mamba-2 SSD (state-space duality) mixer — used by mamba2-130m and the
+SSM half of Hymba's hybrid blocks.
+
+Chunked SSD (Dao & Gu 2024): within chunks of length Q the recurrence is
+computed as a masked (Q, Q) matmul (the "attention-like" dual form, MXU
+friendly); across chunks a sequential lax.scan carries the (hd, N) state.
+Per-step decode is the O(1) recurrence — the attention-free analogue of
+the paper's cache problem: state is constant-size, so HATA is
+inapplicable (DESIGN.md §Arch-applicability) and decode is already
+memory-minimal.
+
+Notation: l_t = Δ_t·A_h; cum = inclusive cumsum(l); for j<=i
+  y_i  = Σ_j exp(cum_i - cum_j)·(C_i·B_j)·Δ_j·x_j  (intra)
+       + exp(cum_i)·C_i·S_in                        (inter)
+  S_out = exp(cum_Q)·S_in + Σ_j exp(cum_Q - cum_j)·Δ_j·x_j ⊗ B_j
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core.kvcache import SSMState
+from repro.models.layers import init_linear, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return di, nh, conv_dim
+
+
+def ssm_init(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    di, nh, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * s.n_groups * s.d_state + nh   # z, x, B, C, dt
+    dt = jnp.exp(jax.random.uniform(ks[1], (nh,), jnp.float32)
+                 * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+                 + jnp.log(s.dt_min))
+    return {
+        "in_proj": init_linear(ks[0], d, in_dim, dtype),
+        "conv_w": (jax.random.normal(ks[2], (s.d_conv, conv_dim),
+                                     jnp.float32) / s.d_conv).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),       # inv softplus
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": init_linear(ks[3], di, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    di, nh, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xs, bm, cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+    return z, xs, bm, cm, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None]
+              for i in range(k))
+    return out + b[None, None]
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+                cm: jax.Array, s0: jax.Array, chunk: int,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B, S, nh, hd), dt: (B, S, nh) post-softplus, a: (nh,) negative,
+    bm/cm: (B, S, nh, N) (groups pre-broadcast), s0: (B, nh, hd, N).
+    Returns y: (B, S, nh, hd), s_final.
+    """
+    b, s, nh, hd = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # zero-pad: Δt=0 rows neither emit nor alter the state
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+    nc = s // q
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, q, *t.shape[2:]), 1, 0)
+
+    xc, dtc, bc, cc = map(to_chunks, (x, dt, bm, cm))
+
+    def chunk_step(carry, xs):
+        s_in = carry                                   # (B, nh, hd, N)
+        xq, dtq, bq, cq = xs                           # (B, q, nh, ...)
+        l = dtq * a[None, None]                        # (B, q, nh)
+        cum = jnp.cumsum(l, axis=1)
+        total = cum[:, -1]                             # (B, nh)
+        u = xq * dtq[..., None]                        # Δx (B,q,nh,hd)
+        # intra-chunk masked dual form
+        cb = jnp.einsum("bihn,bjhn->bhij", cq, bq)     # (B,nh,q,q)
+        diff = cum[:, :, None] - cum[:, None, :]       # (B, i, j, nh)
+        diff = jnp.moveaxis(diff, 3, 1)                # (B, nh, i, j)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        m = jnp.where(tri[None, None], jnp.exp(diff) * cb, 0.0)
+        y_intra = jnp.einsum("bhij,bjhd->bihd", m, u)
+        # inter-chunk from incoming state
+        y_inter = jnp.einsum("bihn,bhdn->bihd", cq, s_in) \
+            * jnp.exp(cum)[..., None]
+        # state update
+        decay_out = jnp.exp(total[:, None] - cum)      # (B, q, nh)
+        st = jnp.einsum("bjhd,bjhn,bjh->bhdn", u, bq, decay_out)
+        s_out = jnp.exp(total)[..., None, None] * s_in + st
+        return s_out, y_intra + y_inter
+
+    s_fin, yc = jax.lax.scan(chunk_step, s0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, s, nh, hd)
+    if pad:
+        y = y[:, :s - pad]
+    return y, s_fin
+
+
+def ssm_forward(cfg: ModelConfig, p, x: jax.Array,
+                state: SSMState = None, *, return_state: bool = False):
+    """Full-sequence SSM mixer (train / prefill).
+
+    x: (B, S, D) -> y: (B, S, D) (+ final SSMState for prefill)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di, nh, conv_dim = ssm_dims(cfg)
+    hd = s_cfg.head_dim
+    z, xs, bm, cm, dt = _split_proj(cfg, x @ p["in_proj"])
+    conv_in = jnp.concatenate([xs, bm, cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, bm, cm = jnp.split(conv_out, [di, di + s_cfg.n_groups
+                                      * s_cfg.d_state], axis=-1)
+    a = -jnp.exp(p["a_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(b, s, nh, hd).astype(jnp.float32)
+    rep = nh // s_cfg.n_groups
+    bmh = jnp.repeat(bm.reshape(b, s, s_cfg.n_groups, s_cfg.d_state),
+                     rep, axis=2).astype(jnp.float32)
+    cmh = jnp.repeat(cm.reshape(b, s, s_cfg.n_groups, s_cfg.d_state),
+                     rep, axis=2).astype(jnp.float32)
+    s0 = jnp.zeros((b, nh, hd, s_cfg.d_state), jnp.float32)
+    y, s_fin = ssd_chunked(xh, dt, a, bmh, cmh, s0, s_cfg.chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_w"],
+                 cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    # conv state: last (d_conv - 1) *pre-activation* conv inputs
+    tail = conv_in[:, -(s_cfg.d_conv - 1):, :]
+    return out, SSMState(conv=tail, ssm=s_fin)
+
+
+def ssm_decode(cfg: ModelConfig, p, x: jax.Array, state: SSMState,
+               ) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrent step. x: (B, 1, D)."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    di, nh, conv_dim = ssm_dims(cfg)
+    hd = s_cfg.head_dim
+    z, xs, bm, cm, dt = _split_proj(cfg, x[:, 0] @ p["in_proj"])
+    conv_in = jnp.concatenate([xs, bm, cm], axis=-1)   # (B, conv_dim)
+    window = jnp.concatenate([state.conv, conv_in[:, None]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xs, bm, cm = jnp.split(conv_out, [di, di + s_cfg.n_groups
+                                      * s_cfg.d_state], axis=-1)
+    a = -jnp.exp(p["a_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    xh = xs.reshape(b, nh, hd).astype(jnp.float32)
+    rep = nh // s_cfg.n_groups
+    bmh = jnp.repeat(bm.reshape(b, s_cfg.n_groups, s_cfg.d_state), rep,
+                     axis=1).astype(jnp.float32)
+    cmh = jnp.repeat(cm.reshape(b, s_cfg.n_groups, s_cfg.d_state), rep,
+                     axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None])                      # (B, nh)
+    s_new = state.ssm * decay[..., None, None] + jnp.einsum(
+        "bhd,bhn,bh->bhdn", xh, bmh, dt)
+    y = jnp.einsum("bhdn,bhn->bhd", s_new, cmh) \
+        + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, di)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_w"],
+                 cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, SSMState(conv=window[:, 1:], ssm=s_new)

@@ -1,0 +1,560 @@
+"""Model assembly: embeddings -> scanned residual blocks -> LM head(s).
+
+One :class:`Model` serves all 12 configs. Layer stacks are lax.scan'ed
+over stacked params (compact HLO at 126 layers); heterogeneous layers
+are handled structurally:
+
+  * deepseek-v2: ``first_dense_layers`` unrolled before the scanned MoE
+    stack (different FFN param shape),
+  * vlm: scan over groups of (cross_every-1 self + 1 cross) layers,
+  * hata dense-layers (paper §5.1): traced per-layer ``use_hata`` flags
+    inside one homogeneous scan,
+  * hymba meta tokens: learnable embeddings prepended to the stream
+    (prefill caches them like ordinary tokens; they act as learned
+    sinks, per the Hymba paper).
+
+Steps:
+  loss(params, batch)                      training objective
+  prefill(params, batch, caches)           Alg. 1 (+ modality frontends)
+  decode_step(params, tok, caches, pos)    Alg. 3
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.layers import chunked_ce_loss, init_linear, rms_norm
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class Model:
+    """Stateless model: all methods are pure functions of params."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kind = {"dense": "dense", "moe": "moe", "ssm": "ssm",
+                     "hybrid": "hybrid", "vlm": "dense",
+                     "audio": "dense"}[cfg.family]
+        self.n_pre = (cfg.moe.first_dense_layers
+                      if cfg.moe is not None else 0)
+        if cfg.family == "vlm":
+            self.per_group = cfg.vlm.cross_every - 1
+            self.n_groups = cfg.n_layers // cfg.vlm.cross_every
+            self.n_stack = 0
+        else:
+            self.per_group = self.n_groups = 0
+            self.n_stack = cfg.n_layers - self.n_pre
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        vp = cfg.padded_vocab()
+        keys = jax.random.split(key, cfg.n_layers + 8)
+        p: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            nb = cfg.audio.n_codebooks
+            p["embed"] = (jax.random.normal(
+                keys[0], (nb, cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02).astype(dtype)
+            p["lm_head"] = jnp.stack([
+                init_linear(k, cfg.d_model, cfg.vocab_size, dtype)
+                for k in jax.random.split(keys[1], nb)])
+        else:
+            p["embed"] = (jax.random.normal(
+                keys[0], (vp, cfg.d_model), jnp.float32) * 0.02
+                ).astype(dtype)
+            if not cfg.tie_embeddings:
+                p["lm_head"] = init_linear(keys[1], cfg.d_model, vp,
+                                           dtype)
+        if cfg.meta_tokens:
+            p["meta"] = (jax.random.normal(
+                keys[2], (cfg.meta_tokens, cfg.d_model), jnp.float32)
+                * 0.02).astype(dtype)
+        if cfg.vlm is not None:
+            p["img_proj"] = init_linear(keys[3], cfg.vlm.vision_dim,
+                                        cfg.d_model, dtype)
+        p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+
+        lk = keys[8:]
+        li = 0
+        if self.n_pre:
+            p["pre"] = [blocks.block_init(cfg, lk[li + i], self.kind,
+                                          dense_ffn=True)
+                        for i in range(self.n_pre)]
+            p["hash_pre"] = [blocks.hash_init(cfg, lk[li + i])
+                             for i in range(self.n_pre)]
+            li += self.n_pre
+        if cfg.family == "vlm":
+            selfs, crosses, hself = [], [], []
+            for g in range(self.n_groups):
+                gk = jax.random.split(lk[li + g], self.per_group + 1)
+                selfs.append(_stack([blocks.block_init(cfg, gk[i], "dense")
+                                     for i in range(self.per_group)]))
+                hself.append(_stack([blocks.hash_init(cfg, gk[i])
+                                     for i in range(self.per_group)]))
+                crosses.append(blocks.block_init(cfg, gk[-1], "cross"))
+            p["stack"] = _stack(selfs)            # (G, per_group, ...)
+            p["hash_stack"] = _stack(hself)
+            p["cross_stack"] = _stack(crosses)    # (G, ...)
+        elif self.n_stack:
+            p["stack"] = _stack([blocks.block_init(cfg, lk[li + i],
+                                                   self.kind)
+                                 for i in range(self.n_stack)])
+            hw = [blocks.hash_init(cfg, lk[li + i])
+                  for i in range(self.n_stack)]
+            p["hash_stack"] = None if hw[0] is None else _stack(hw)
+        return p
+
+    # ------------------------------------------------------------------
+    # embedding / head helpers
+    # ------------------------------------------------------------------
+    def embed(self, params, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            # tokens: (B, S, n_codebooks)
+            xs = [jnp.take(params["embed"][i], tokens[..., i], axis=0)
+                  for i in range(cfg.audio.n_codebooks)]
+            x = sum(xs)
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)
+        from repro.distributed.strategy import get_activation_constraint
+        ac = get_activation_constraint()
+        if ac is not None:
+            x = ac(x)
+        if cfg.meta_tokens:
+            b = x.shape[0]
+            meta = jnp.broadcast_to(params["meta"][None],
+                                    (b,) + params["meta"].shape)
+            x = jnp.concatenate([meta, x.astype(meta.dtype)], axis=1)
+        return x
+
+    def head_weight(self, params) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def _use_hata_flags(self) -> jax.Array:
+        cfg = self.cfg
+        return jnp.arange(cfg.n_layers) >= cfg.hata.dense_layers
+
+    def _split_stack(self, stack):
+        """-> (kv_stack | None, ssm_states | None) per family."""
+        if self.kind == "ssm":
+            return None, stack
+        if self.kind == "hybrid":
+            return stack
+        return stack, None
+
+    def _join_stack(self, kv, states):
+        if self.kind == "ssm":
+            return states
+        if self.kind == "hybrid":
+            return (kv, states)
+        return kv
+
+    # ------------------------------------------------------------------
+    # training forward
+    # ------------------------------------------------------------------
+    def _backbone_train(self, params, x: jax.Array,
+                        img: Optional[jax.Array]) -> Tuple[jax.Array,
+                                                           jax.Array]:
+        cfg = self.cfg
+        aux_total = jnp.float32(0)
+        for bp in params.get("pre", []):
+            x, aux = blocks.block_train(cfg, bp, None, x, self.kind)
+            aux_total += aux
+
+        if cfg.family == "vlm":
+            imgp = img.astype(x.dtype) @ params["img_proj"]
+
+            def group(x, xs):
+                gp, cp = xs
+                for i in range(self.per_group):
+                    bp = jax.tree.map(lambda t: t[i], gp)
+                    x, _ = blocks.block_train(cfg, bp, None, x, "dense")
+                x, _ = blocks.block_train(cfg, cp, None, x, "cross",
+                                          img=imgp)
+                return x, jnp.float32(0)
+
+            body = group
+            if cfg.remat != "none":
+                body = jax.checkpoint(group,
+                                      policy=self._remat_policy())
+            x, auxs = jax.lax.scan(body, x,
+                                   (params["stack"],
+                                    params["cross_stack"]))
+            return x, aux_total + auxs.sum()
+
+        def body_fn(x, bp):
+            x, aux = blocks.block_train(cfg, bp, None, x, self.kind)
+            return x, aux
+
+        body = body_fn
+        if cfg.remat != "none":
+            body = jax.checkpoint(body_fn, policy=self._remat_policy())
+        x, auxs = jax.lax.scan(body, x, params["stack"])
+        return x, aux_total + auxs.sum()
+
+    def _remat_policy(self):
+        if self.cfg.remat == "dots":
+            return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint_policies.nothing_saveable
+
+    def loss(self, params, batch: Dict[str, jax.Array]) -> Tuple[
+            jax.Array, Dict[str, jax.Array]]:
+        """batch: tokens (B, S) [audio: (B, S, nb)], optional
+        image_embeds (B, T, vision_dim). Next-token CE."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self.embed(params, tokens)
+        x, aux = self._backbone_train(params, x,
+                                      batch.get("image_embeds"))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.meta_tokens:
+            x = x[:, cfg.meta_tokens:]
+        if cfg.family == "audio":
+            w = params["lm_head"]                    # (nb, D, V)
+            ce = jnp.float32(0)
+            for i in range(cfg.audio.n_codebooks):
+                ce += chunked_ce_loss(x[:, :-1], w[i], tokens[:, 1:, i])
+            ce = ce / cfg.audio.n_codebooks
+        else:
+            ce = chunked_ce_loss(x[:, :-1], self.head_weight(params),
+                                 tokens[:, 1:],
+                                 n_vocab=cfg.vocab_size)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, *,
+                    layout: str = "stacked"):
+        """``stacked``: one (L, ...) array per cache field — used by the
+        scanned prefill. ``list``: one buffer per layer — used by the
+        unrolled decode (per-buffer donation keeps row appends in place;
+        a scan-carried stack makes XLA copy the whole cache per step —
+        EXPERIMENTS.md §Perf)."""
+        cfg = self.cfg
+        if cfg.meta_tokens:
+            # pad so the sequence axis stays divisible by any mesh
+            # sharding (<= 512 shards) after the meta-token extension
+            max_len = -(-(max_len + cfg.meta_tokens) // 512) * 512 \
+                if max_len + cfg.meta_tokens > 512 \
+                else max_len + cfg.meta_tokens
+        caches: Dict[str, Any] = {}
+        if self.n_pre:
+            caches["pre"] = [blocks.init_block_cache(cfg, self.kind,
+                                                     batch, max_len)
+                             for _ in range(self.n_pre)]
+        if cfg.family == "vlm":
+            per = [[blocks.init_block_cache(cfg, "dense", batch, max_len)
+                    for _ in range(self.per_group)]
+                   for _ in range(self.n_groups)]
+            ck = jnp.zeros((batch, cfg.vlm.n_image_tokens,
+                            cfg.n_kv_heads, cfg.head_dim),
+                           jnp.dtype(cfg.dtype))
+            if layout == "list":
+                caches["stack"] = per
+                caches["cross"] = [(ck, ck) for _ in
+                                   range(self.n_groups)]
+            else:
+                caches["stack"] = _stack([_stack(g) for g in per])
+                caches["cross"] = (jnp.broadcast_to(
+                    ck[None], (self.n_groups,) + ck.shape),) * 2
+        elif self.n_stack:
+            per = [blocks.init_block_cache(cfg, self.kind, batch,
+                                           max_len)
+                   for _ in range(self.n_stack)]
+            caches["stack"] = per if layout == "list" else _stack(per)
+        return caches
+
+    def caches_to_list(self, caches):
+        """Convert a stacked cache tree to list layout (one-time static
+        slices; used when a prefill feeds an unrolled decode loop)."""
+        if isinstance(caches.get("stack"), list):
+            return caches
+        out = dict(caches)
+        if self.cfg.family == "vlm":
+            out["stack"] = [
+                [jax.tree.map(lambda t: t[g][i], caches["stack"])
+                 for i in range(self.per_group)]
+                for g in range(self.n_groups)]
+        elif self.n_stack:
+            out["stack"] = [jax.tree.map(lambda t: t[i], caches["stack"])
+                            for i in range(self.n_stack)]
+        return out
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jax.Array], caches,
+                pos) -> Tuple[jax.Array, Any]:
+        """Returns (last-position logits (B, V[, nb]), caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self.embed(params, tokens)
+        if self.n_pre:
+            new_pre = []
+            for i, (bp, c) in enumerate(zip(params["pre"],
+                                            caches["pre"])):
+                x, c = blocks.block_prefill(cfg, bp,
+                                            params["hash_pre"][i], x, c,
+                                            self.kind, pos)
+                new_pre.append(c)
+            caches = dict(caches, pre=new_pre)
+
+        if isinstance(caches.get("stack"), list):
+            return self._prefill_unrolled(params, batch, x, caches, pos)
+
+        if cfg.family == "vlm":
+            imgp = batch["image_embeds"].astype(x.dtype) \
+                @ params["img_proj"]
+
+            def group(carry, xs):
+                x, cstack = carry
+                g, gp, hw, cp = xs
+                for i in range(self.per_group):
+                    bp = jax.tree.map(lambda t: t[i], gp)
+                    whi = jax.tree.map(lambda t: t[i], hw)
+                    x, cstack, _ = blocks.block_prefill_stacked(
+                        cfg, bp, whi, x, cstack, (g, i), "dense", pos)
+                x, _, ckv = blocks.block_prefill_stacked(
+                    cfg, cp, None, x, cstack, (g,), "cross", pos,
+                    img=imgp)
+                return (x, cstack), ckv
+
+            (x, new_stack), cross_kvs = jax.lax.scan(
+                group, (x, caches["stack"]),
+                (jnp.arange(self.n_groups), params["stack"],
+                 params["hash_stack"], params["cross_stack"]))
+            caches = dict(caches, stack=new_stack, cross=cross_kvs)
+        elif self.n_stack:
+            kv0, _ = self._split_stack(caches["stack"])
+
+            def body(carry, xs):
+                x, kvs = carry
+                i, bp, w_h = xs
+                x, kvs, state = blocks.block_prefill_stacked(
+                    cfg, bp, w_h, x, kvs, (i,), self.kind, pos)
+                return (x, kvs), state
+
+            (x, kv_new), states = jax.lax.scan(
+                body, (x, kv0),
+                (jnp.arange(self.n_stack), params["stack"],
+                 params["hash_stack"]))
+            caches = dict(caches,
+                          stack=self._join_stack(kv_new, states))
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head_last(params, x[:, -1])
+        return logits, caches
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def decode_step(self, params, tokens: jax.Array, caches, pos
+                    ) -> Tuple[jax.Array, Any]:
+        """tokens: (B,) [audio: (B, nb)] the last generated token;
+        pos: scalar count of tokens already in the cache (incl. meta)."""
+        cfg = self.cfg
+        x = self.embed_decode(params, tokens)
+        if self.n_pre:
+            new_pre = []
+            for i, (bp, c) in enumerate(zip(params["pre"],
+                                            caches["pre"])):
+                w_h = params["hash_pre"][i]
+                x, c = blocks.block_decode(cfg, bp, w_h, x, c, self.kind,
+                                           pos,
+                                           bool(i >= cfg.hata.dense_layers))
+                new_pre.append(c)
+            caches = dict(caches, pre=new_pre)
+
+        if isinstance(caches.get("stack"), list):
+            return self._decode_unrolled(params, x, caches, pos)
+
+        if cfg.family == "vlm":
+            flags = self._use_hata_flags()
+            gflags = flags.reshape(self.n_groups, cfg.vlm.cross_every)
+
+            def group(carry, xs):
+                x, cstack = carry
+                g, gp, hw, cp, ckv, fl = xs
+                for i in range(self.per_group):
+                    bp = jax.tree.map(lambda t: t[i], gp)
+                    whi = jax.tree.map(lambda t: t[i], hw)
+                    x, cstack, _ = blocks.block_decode_stacked(
+                        cfg, bp, whi, x, cstack, (g, i), "dense", pos,
+                        fl[i])
+                x, _ = blocks.block_decode(cfg, cp, None, x, None,
+                                           "cross", pos, False,
+                                           cross_kv=ckv)
+                return (x, cstack), None
+
+            (x, new_stack), _ = jax.lax.scan(
+                group, (x, caches["stack"]),
+                (jnp.arange(self.n_groups), params["stack"],
+                 params["hash_stack"], params["cross_stack"],
+                 caches["cross"], gflags))
+            caches = dict(caches, stack=new_stack)
+        elif self.n_stack:
+            # Static HATA/dense split over a carried KV stack: the
+            # first (dense_layers - n_pre) layers scan with
+            # use_hata=False, the rest with True — only the executed
+            # branch is lowered (paper §5.1's outlier-layer rule with
+            # zero dead code). KV caches are CARRIED (in-place appends);
+            # SSM states stream through xs->ys (fully rewritten each
+            # step anyway). See EXPERIMENTS.md §Perf iterations 1-2.
+            hata_on = cfg.hata.enabled and not cfg.attention_free
+            nd = (min(max(cfg.hata.dense_layers - self.n_pre, 0),
+                      self.n_stack) if hata_on else self.n_stack)
+            kv0, states0 = self._split_stack(caches["stack"])
+
+            def seg(x, kvstack, lo, hi, flag):
+                if lo == hi:
+                    return x, kvstack, None
+                sl = lambda t: jax.tree.map(lambda a: a[lo:hi], t)
+                xs = (jnp.arange(lo, hi), sl(params["stack"]),
+                      sl(params["hash_stack"]),
+                      sl(states0) if states0 is not None else None)
+
+                def body(carry, xs_):
+                    x, kvs = carry
+                    i, bp, w_h, st = xs_
+                    x, kvs, nst = blocks.block_decode_stacked(
+                        cfg, bp, w_h, x, kvs, (i,), self.kind, pos,
+                        flag, sstate=st)
+                    return (x, kvs), nst
+
+                (x, kvstack), new_states = jax.lax.scan(
+                    body, (x, kvstack), xs)
+                return x, kvstack, new_states
+
+            if not hata_on or nd == self.n_stack:
+                x, kv_new, st_new = seg(x, kv0, 0, self.n_stack, False)
+            else:
+                x, kv_new, st_a = seg(x, kv0, 0, nd, False)
+                x, kv_new, st_b = seg(x, kv_new, nd, self.n_stack, True)
+                st_new = (None if st_a is None else jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], 0), st_a, st_b))
+            caches = dict(caches,
+                          stack=self._join_stack(kv_new, st_new))
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head_last(params, x[:, 0])
+        return logits, caches
+
+    def _prefill_unrolled(self, params, batch, x, caches, pos):
+        """Unrolled prefill over list-layout caches (serving path)."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            imgp = batch["image_embeds"].astype(x.dtype) \
+                @ params["img_proj"]
+            new_groups, new_cross = [], []
+            for g in range(self.n_groups):
+                gcs = []
+                for i in range(self.per_group):
+                    bp = jax.tree.map(lambda t: t[g][i], params["stack"])
+                    whi = jax.tree.map(lambda t: t[g][i],
+                                       params["hash_stack"])
+                    x, c = blocks.block_prefill(
+                        cfg, bp, whi, x, caches["stack"][g][i], "dense",
+                        pos)
+                    gcs.append(c)
+                cp = jax.tree.map(lambda t: t[g], params["cross_stack"])
+                x, ckv = blocks.block_prefill(cfg, cp, None, x, None,
+                                              "cross", pos, img=imgp)
+                new_groups.append(gcs)
+                new_cross.append(ckv)
+            caches = dict(caches, stack=new_groups, cross=new_cross)
+        else:
+            new_list = []
+            for j, c in enumerate(caches["stack"]):
+                bp = jax.tree.map(lambda t: t[j], params["stack"])
+                w_h = jax.tree.map(lambda t: t[j], params["hash_stack"])
+                x, c = blocks.block_prefill(cfg, bp, w_h, x, c,
+                                            self.kind, pos)
+                new_list.append(c)
+            caches = dict(caches, stack=new_list)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head_last(params, x[:, -1])
+        return logits, caches
+
+    def _decode_unrolled(self, params, x, caches, pos):
+        """Unrolled decode over list-layout caches: every layer's cache
+        is its own (donated) buffer, so row appends stay in place with
+        no scan-carry copies — the serving/dry-run decode path
+        (EXPERIMENTS.md §Perf iteration 2)."""
+        cfg = self.cfg
+        hata_on = cfg.hata.enabled and not cfg.attention_free
+        if cfg.family == "vlm":
+            new_groups = []
+            for g in range(self.n_groups):
+                group_caches = []
+                for i in range(self.per_group):
+                    li = g * cfg.vlm.cross_every + i
+                    bp = jax.tree.map(lambda t: t[g][i], params["stack"])
+                    whi = jax.tree.map(lambda t: t[g][i],
+                                       params["hash_stack"])
+                    flag = hata_on and li >= cfg.hata.dense_layers
+                    x, c = blocks.block_decode(
+                        cfg, bp, whi, x, caches["stack"][g][i], "dense",
+                        pos, flag)
+                    group_caches.append(c)
+                cp = jax.tree.map(lambda t: t[g], params["cross_stack"])
+                ckv = (caches["cross"][g]
+                       if isinstance(caches["cross"], list) else
+                       jax.tree.map(lambda t: t[g], caches["cross"]))
+                x, _ = blocks.block_decode(cfg, cp, None, x, None,
+                                           "cross", pos, False,
+                                           cross_kv=ckv)
+                new_groups.append(group_caches)
+            caches = dict(caches, stack=new_groups)
+        else:
+            new_list = []
+            for j, c in enumerate(caches["stack"]):
+                li = self.n_pre + j
+                bp = jax.tree.map(lambda t: t[j], params["stack"])
+                w_h = jax.tree.map(lambda t: t[j], params["hash_stack"])
+                flag = hata_on and li >= cfg.hata.dense_layers
+                x, c = blocks.block_decode(cfg, bp, w_h, x, c,
+                                           self.kind, pos, flag)
+                new_list.append(c)
+            caches = dict(caches, stack=new_list)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head_last(params, x[:, 0])
+        return logits, caches
+
+    def embed_decode(self, params, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = sum(jnp.take(params["embed"][i], tokens[:, i], axis=0)
+                    for i in range(cfg.audio.n_codebooks))[:, None, :]
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]
+        from repro.distributed.strategy import get_activation_constraint
+        ac = get_activation_constraint()
+        if ac is not None:
+            x = ac(x)
+        return x
+
+    def _head_last(self, params, x_last: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return jnp.einsum("bd,ndv->bnv",
+                              x_last.astype(jnp.float32),
+                              params["lm_head"].astype(jnp.float32))
+        logits = x_last.astype(jnp.float32) @ self.head_weight(
+            params).astype(jnp.float32)
+        return logits[..., :cfg.vocab_size]

@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+from repro.optim.sgd import SGDState, sgd_init, sgd_update
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "SGDState",
+           "sgd_init", "sgd_update", "cosine_schedule",
+           "linear_warmup_cosine"]

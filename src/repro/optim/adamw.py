@@ -1,0 +1,58 @@
+"""AdamW for model training.
+
+State dtype is configurable: full-f32 (m, v) by default, or bf16 m +
+f32 v ("mem_efficient") to cut optimizer bytes 25% — the knob the 405B
+train-shape memory analysis exercises (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: jax.Array       # pytree
+    v: jax.Array       # pytree
+
+
+def adamw_init(params, *, m_dtype=jnp.float32) -> AdamWState:
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, m_dtype), params),
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> Tuple[jax.Array, AdamWState]:
+    """Returns (new_params, new_state). ``lr`` may be a scalar array."""
+    step = state.step + 1
+    if grad_clip:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        p_new = p.astype(jnp.float32) - lr * (update + weight_decay
+                                              * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    leaves, treedef = jax.tree.flatten(
+        out, is_leaf=lambda t: isinstance(t, tuple))
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in leaves])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in leaves])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in leaves])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

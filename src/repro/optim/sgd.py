@@ -1,0 +1,32 @@
+"""SGD with momentum + decoupled weight decay — the hash trainer's
+optimizer (paper Table 11: lr 0.1, momentum 0.9, wd 1e-6)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: jax.Array
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(params, grads, state: SGDState, *, lr: float,
+               momentum: float = 0.9, weight_decay: float = 0.0,
+               ) -> Tuple[jax.Array, SGDState]:
+    def upd(p, g, m):
+        g = g + weight_decay * p
+        m_new = momentum * m + g
+        return p - lr * m_new, m_new
+
+    out = jax.tree.map(upd, params, grads, state.momentum)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, SGDState(momentum=new_m)

@@ -1,0 +1,144 @@
+"""Continuous-batching serving engine with HATA decode.
+
+Slot model (static shapes, jit-friendly — the TPU serving pattern):
+  * one batched KV+code cache of ``max_batch`` slots x ``max_len`` rows
+    (list layout: per-layer buffers, in-place row appends);
+  * admission: a new request is prefilled with B=1 (computing its own
+    KV + hash codes, Alg. 1), then its cache rows are *inserted* into a
+    free slot (one DUS per layer on dim 0);
+  * decode: ONE jit'd step advances every active slot together with
+    per-slot positions (slots sit at different depths — per-row RoPE,
+    per-row validity masks, per-row cache appends);
+  * inactive slots decode garbage into their own rows (masked out of
+    results, overwritten at next admission) — the standard price of
+    static shapes.
+
+The engine is model-agnostic: any family with a decode path works
+(GQA/MLA/hybrid; HATA on or off per config).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+from repro.serving.request import Request
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_len: int = 256, sample: str = "greedy",
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sample = sample
+        self.key = jax.random.PRNGKey(seed)
+        cfg = model.cfg
+        self.meta = cfg.meta_tokens
+        self.caches = model.init_caches(max_batch, max_len,
+                                        layout="list")
+        self.pos = np.zeros(max_batch, np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: Deque[Request] = deque()
+        self.last_tok = np.zeros(
+            (max_batch, cfg.audio.n_codebooks) if cfg.family == "audio"
+            else (max_batch,), np.int32)
+        self.stats = {"decode_steps": 0, "prefills": 0,
+                      "tokens_out": 0}
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: model.decode_step(p, t, c, pos))
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c, jnp.int32(0)))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _insert_impl(self, caches, single, slot):
+        """Copy a B=1 cache tree into slot ``slot`` of the engine cache."""
+        def ins(dst, src):
+            idx = (slot,) + (0,) * (dst.ndim - 1)
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), idx)
+        return jax.tree.map(ins, caches, single)
+
+    def _admit(self):
+        while self.queue and None in self.slots:
+            req = self.queue.popleft()
+            slot = self.slots.index(None)
+            req.slot = slot
+            single = self.model.init_caches(1, self.max_len,
+                                            layout="list")
+            batch = {"tokens": jnp.asarray(req.prompt[None])}
+            logits, single = self._prefill(self.params, batch, single)
+            self.caches = self._insert(self.caches, single,
+                                       jnp.int32(slot))
+            tok = self._pick(logits)[0]
+            req.output.append(self._to_py(tok))
+            req.t_first_token = time.monotonic()
+            self.last_tok[slot] = np.asarray(tok)
+            self.pos[slot] = req.prompt_len + self.meta
+            self.slots[slot] = req
+            self.stats["prefills"] += 1
+            self.stats["tokens_out"] += 1
+
+    def _pick(self, logits):
+        if self.sample == "greedy":
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits, axis=-1
+                                      ).astype(jnp.int32)
+
+    @staticmethod
+    def _to_py(tok):
+        a = np.asarray(tok)
+        return int(a) if a.ndim == 0 else a.tolist()
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Admit + one decode wave. Returns requests finished this step."""
+        self._admit()
+        active = [s is not None for s in self.slots]
+        if not any(active):
+            return []
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.last_tok), self.caches,
+            jnp.asarray(self.pos))
+        toks = self._pick(logits)
+        self.stats["decode_steps"] += 1
+        finished = []
+        toks_np = np.asarray(toks)
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            if self.pos[slot] >= self.max_len + self.meta - 1:
+                req.t_done = time.monotonic()     # out of cache
+            req.output.append(self._to_py(toks_np[slot]))
+            self.last_tok[slot] = toks_np[slot]
+            self.stats["tokens_out"] += 1
+            if req.done:
+                if req.t_done is None:
+                    req.t_done = time.monotonic()
+                finished.append(req)
+                self.slots[slot] = None
+        return finished
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Submit all, run to completion, return in completion order."""
+        for r in requests:
+            self.submit(r)
+        done: List[Request] = []
+        while len(done) < len(requests):
+            done.extend(self.step())
+        return done

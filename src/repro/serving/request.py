@@ -1,0 +1,38 @@
+"""Request lifecycle for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import List, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                  # (S,) or (S, n_codebooks) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # lifecycle
+    output: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    t_submit: float = dataclasses.field(default_factory=time.monotonic)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        if self.t_done is not None:
+            return True
+        if len(self.output) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and self.output
+                and self.output[-1] == self.eos_id)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])

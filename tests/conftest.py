@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a fresh process with N host devices.
+
+    Device count is locked at first jax init, so multi-device tests must
+    run out-of-process (pytest's main process keeps 1 device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True,
+                         timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{res.stdout}\n"
+            f"STDERR:\n{res.stderr[-4000:]}")
+    return res.stdout

@@ -1,0 +1,63 @@
+"""Fault tolerance: watchdog, heartbeats, restart supervision."""
+import time
+
+import pytest
+
+from repro.distributed.fault_tolerance import (Heartbeat, StepWatchdog,
+                                               run_with_restarts)
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(window=20, straggler_factor=2.0)
+    for i in range(15):
+        wd.step_start()
+        wd.durations.append(0.01)      # simulate fast steps
+    wd.step_start()
+    time.sleep(0.05)
+    report = wd.step_end(15)
+    assert report is not None and report["kind"] == "straggler"
+
+
+def test_watchdog_quiet_on_uniform_steps():
+    wd = StepWatchdog(window=20)
+    # inject uniform durations directly — wall-clock jitter under a
+    # loaded CI box must not flake this test
+    wd.durations = [0.1] * 14
+    wd._t0 = __import__("time").monotonic() - 0.1
+    r = wd.step_end(14)
+    assert r is None and wd.flagged == []
+
+
+def test_heartbeat_detects_dead_peer(tmp_path):
+    hb0 = Heartbeat(str(tmp_path), 0, stale_after_s=0.2)
+    hb1 = Heartbeat(str(tmp_path), 1, stale_after_s=0.2)
+    hb0.beat(1)
+    hb1.beat(1)
+    assert hb0.dead_peers() == []
+    time.sleep(0.3)
+    hb0.beat(2)                        # host 0 alive, host 1 silent
+    assert hb0.dead_peers() == [1]
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0}
+
+    def make_state():
+        return {"ckpt": calls["n"]}
+
+    def run(state):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("node failure")
+        state["done"] = True
+        return state
+
+    out = run_with_restarts(make_state, run, max_restarts=5)
+    assert out["done"] and out["restarts"] == 2
+
+
+def test_run_with_restarts_gives_up():
+    def run(state):
+        raise RuntimeError("persistent failure")
+    with pytest.raises(RuntimeError):
+        run_with_restarts(dict, run, max_restarts=2)

@@ -1,0 +1,199 @@
+"""HATA core behaviour: selection exactness, hash training, baselines,
+top-k properties (deliverable c)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.configs.base import HataConfig
+from repro.core import baselines, hashing, kvcache, topk
+from repro.core.hash_attention import hata_decode, hata_prefill
+from repro.kernels import ops
+
+RNG = np.random.default_rng(1)
+HCFG = HataConfig(rbit=64, budget_min=8, budget_max=32, budget_frac=0.1)
+
+
+def _mk_cache_and_weights(B=2, H=4, Hkv=2, d=32, S=64, prefill=40):
+    cache = kvcache.init_kv_cache(B, S, Hkv, d, rbit=HCFG.rbit,
+                                  dtype=jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((Hkv, d, HCFG.rbit)),
+                    jnp.float32) / np.sqrt(d)
+    k = jnp.asarray(RNG.standard_normal((B, prefill, Hkv, d)),
+                    jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, prefill, Hkv, d)),
+                    jnp.float32)
+    q = jnp.asarray(RNG.standard_normal((B, prefill, H, d)), jnp.float32)
+    _, cache = hata_prefill(q, k, v, w, cache, hcfg=HCFG,
+                            pos=jnp.int32(0))
+    return cache, w
+
+
+def test_hata_decode_equals_dense_when_budget_covers_cache():
+    cache, w = _mk_cache_and_weights()
+    hcfg = dataclasses.replace(HCFG, budget_min=64, budget_max=64,
+                               budget_frac=1.0)
+    B, H, d = 2, 4, 32
+    q = jnp.asarray(RNG.standard_normal((B, H, d)), jnp.float32)
+    k1 = jnp.asarray(RNG.standard_normal((B, 1, 2, d)), jnp.float32)
+    v1 = jnp.asarray(RNG.standard_normal((B, 1, 2, d)), jnp.float32)
+    res = hata_decode(q, k1, v1, w, cache, hcfg=hcfg, pos=jnp.int32(40))
+    want = ops.decode_attention(q, res.cache.k, res.cache.v,
+                                jnp.int32(41))
+    assert_allclose(np.asarray(res.out), np.asarray(want), atol=1e-5)
+
+
+def test_hata_decode_never_selects_invalid_rows():
+    cache, w = _mk_cache_and_weights(prefill=20)
+    B, H, d = 2, 4, 32
+    q = jnp.asarray(RNG.standard_normal((B, H, d)), jnp.float32)
+    k1 = jnp.asarray(RNG.standard_normal((B, 1, 2, d)), jnp.float32)
+    v1 = jnp.asarray(RNG.standard_normal((B, 1, 2, d)), jnp.float32)
+    res = hata_decode(q, k1, v1, w, cache, hcfg=HCFG, pos=jnp.int32(20))
+    sel_scores = np.take_along_axis(np.asarray(res.scores),
+                                    np.asarray(res.idx), axis=-1)
+    valid = np.asarray(res.idx) <= 20
+    assert (sel_scores[valid] >= 0).all()
+    # every invalid position carries score -1
+    assert (np.asarray(res.scores)[:, :, 21:] == -1).all()
+
+
+def test_budget_clamping():
+    h = HataConfig(rbit=64, budget_frac=0.0156, budget_min=512,
+                   budget_max=8192)
+    assert h.budget(32768) == 512
+    assert h.budget(524288) == int(0.0156 * 524288)
+    assert h.budget(1 << 20) == 8192
+    assert h.budget(100) == 100
+
+
+# ---------------------------------------------------------------------------
+# learning-to-hash
+# ---------------------------------------------------------------------------
+def _structured_qk(n=256, m=16, d=24):
+    key = jax.random.PRNGKey(0)
+    kq, kk = jax.random.split(key)
+    q = jax.random.normal(kq, (n, d))
+    k = q[:, None, :] * 0.6 + jax.random.normal(kk, (n, m, d)) * 0.6
+    scores = jnp.einsum("nd,nmd->nm", q, k)
+    order = jnp.argsort(-scores, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    npos = max(1, m // 10)
+    labels = jnp.where(ranks < npos, 20.0, -1.0)
+    return q, k, labels
+
+
+def test_hash_training_reduces_loss():
+    q, k, labels = _structured_qk()
+    st0 = hashing.hash_train_init(jax.random.PRNGKey(1), q.shape[1], 64)
+    l0 = hashing.hash_loss(st0.w_h, q, k, labels, HCFG)
+    w = hashing.train_hash_weights(jax.random.PRNGKey(1), q, k, labels,
+                                   rbit=64, hcfg=HCFG, epochs=10,
+                                   iters=20)
+    l1 = hashing.hash_loss(w, q, k, labels, HCFG)
+    assert float(l1) < float(l0)
+
+
+def test_trained_hash_beats_random_on_training_distribution():
+    q, k, labels = _structured_qk(n=512)
+    w = hashing.train_hash_weights(jax.random.PRNGKey(2), q, k, labels,
+                                   rbit=64, hcfg=HCFG, epochs=15,
+                                   iters=20)
+    # recall evaluated on held-out queries from the same distribution
+    qh, kh, _ = _structured_qk(n=64)
+    keys = kh.reshape(-1, kh.shape[-1])[:256]
+    rec = hashing.hash_topk_recall(qh, keys, w, 16, rbit=64).mean()
+    w_lsh = hashing.random_projection_lsh(jax.random.PRNGKey(3),
+                                          q.shape[1], 64)
+    rec_lsh = hashing.hash_topk_recall(qh, keys, w_lsh, 16,
+                                       rbit=64).mean()
+    assert float(rec) > float(rec_lsh) - 0.02  # at least on par
+    assert float(rec) > 0.2
+
+
+# ---------------------------------------------------------------------------
+# top-k utilities
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 16))
+def test_two_stage_topk_matches_global(n_shards, k):
+    s = n_shards * 16
+    k = min(k, 16)
+    scores = jnp.asarray(RNG.permutation(s).astype(np.float32))
+    got = topk.two_stage_topk_ref(scores, k, n_shards)
+    _, want = jax.lax.top_k(scores, k)
+    assert set(np.asarray(got).tolist()) == set(np.asarray(want).tolist())
+
+
+def test_selection_recall_bounds():
+    est = jnp.asarray(RNG.standard_normal((4, 32)), jnp.float32)
+    true = jnp.asarray(RNG.standard_normal((4, 32)), jnp.float32)
+    r = topk.selection_recall(est, true, 8)
+    assert ((np.asarray(r) >= 0) & (np.asarray(r) <= 1)).all()
+    r_self = topk.selection_recall(true, true, 8)
+    assert (np.asarray(r_self) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+def test_loki_high_rank_recovers_exact_ranking():
+    keys = jnp.asarray(RNG.standard_normal((64, 16)), jnp.float32)
+    q = jnp.asarray(RNG.standard_normal((2, 16)), jnp.float32)
+    state = baselines.loki_fit(keys, r=16)
+    est = baselines.loki_scores(q, state, r=16)   # full rank == exact
+    want = baselines.exact_scores(q, keys)
+    rec = topk.selection_recall(est[None], want[None], 8)
+    assert float(rec[0]) == 1.0
+
+
+def test_quest_scores_upper_bound_block_max():
+    keys = jnp.asarray(RNG.standard_normal((64, 8)), jnp.float32)
+    q = jnp.asarray(RNG.standard_normal((1, 8)), jnp.float32)
+    state = baselines.quest_fit(keys, block=8)
+    tok = baselines.quest_scores(q, state, block=8, s=64)
+    exact = keys @ q[0]
+    blocks_ub = np.asarray(tok).reshape(8, 8)[:, 0]
+    blocks_max = np.asarray(exact).reshape(8, 8).max(1)
+    assert (blocks_ub + 1e-5 >= blocks_max).all()
+
+
+def test_streaming_mask_budget():
+    m = baselines.streaming_mask(64, jnp.int32(50), 16, sinks=4)
+    m = np.asarray(m)
+    assert m[:4].all()               # sinks kept
+    assert m[38:50].all()            # recent kept
+    assert m.sum() == 16
+
+
+def test_h2o_select_respects_budget_and_recency():
+    cum = jnp.asarray(RNG.random(64).astype(np.float32))
+    mask = baselines.h2o_select(cum, jnp.int32(50), 16)
+    m = np.asarray(mask)
+    assert m[42:50].all()            # recent half
+    assert m.sum() <= 16 + 8
+
+
+def test_snapkv_keeps_window_and_budget():
+    keys = jnp.asarray(RNG.standard_normal((64, 8)), jnp.float32)
+    qwin = jnp.asarray(RNG.standard_normal((8, 8)), jnp.float32)
+    mask = baselines.snapkv_select(qwin, keys, 16)
+    m = np.asarray(mask)
+    assert m[-8:].all()
+    assert m.sum() <= 16
+
+
+def test_decode_byte_model_orders_methods():
+    kw = dict(s=32768, d=128, budget=512)
+    dense = baselines.decode_bytes_per_kv_head("dense", **kw)
+    hata = baselines.decode_bytes_per_kv_head("hata", **kw)
+    loki = baselines.decode_bytes_per_kv_head("loki", **kw)
+    exact = baselines.decode_bytes_per_kv_head("exact-topk", **kw)
+    lsh = baselines.decode_bytes_per_kv_head("lsh", **kw)
+    assert hata < loki < exact < dense
+    assert hata < lsh                # 128 trained bits vs 1500 random
+    assert dense / hata > 15         # the paper's bandwidth win

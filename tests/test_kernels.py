@@ -1,0 +1,183 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
+property tests (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode, flash_decode_gathered
+from repro.kernels.hamming_score import hamming_score
+from repro.kernels.hash_encode import hash_encode
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# HashEncode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,d,rbit,block_s", [
+    (64, 32, 32, 64), (300, 128, 128, 128), (17, 64, 64, 512),
+    (1024, 128, 256, 256), (8, 16, 32, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hash_encode_matches_ref(s, d, rbit, block_s, dtype):
+    x = jnp.asarray(RNG.standard_normal((s, d)), dtype)
+    w = jnp.asarray(RNG.standard_normal((d, rbit)), jnp.float32)
+    got = hash_encode(x, w, block_s=block_s)
+    want = ref.hash_encode_ref(x, w)
+    assert got.dtype == jnp.uint32 and got.shape == (s, rbit // 32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8))
+def test_bitpack_roundtrip(s, words):
+    rbit = words * 32
+    bits = RNG.integers(0, 2, (s, rbit)).astype(np.uint32)
+    packed = ref.bitpack_ref(jnp.asarray(bits))
+    unpacked = ref.bitunpack_ref(packed, rbit)
+    np.testing.assert_array_equal(np.asarray(unpacked), bits)
+
+
+# ---------------------------------------------------------------------------
+# Hamming score
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("g,s,words,block_s", [
+    (1, 128, 1, 64), (4, 1000, 4, 256), (16, 64, 2, 2048),
+])
+def test_hamming_matches_ref(g, s, words, block_s):
+    q = jnp.asarray(RNG.integers(0, 2**32, (g, words), dtype=np.uint32))
+    k = jnp.asarray(RNG.integers(0, 2**32, (s, words), dtype=np.uint32))
+    rbit = words * 32
+    got = hamming_score(q, k, rbit=rbit, block_s=block_s)
+    want = ref.hamming_score_ref(q, k, rbit)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 64), st.integers(1, 4))
+def test_hamming_bounds_and_self_similarity(g, s, words):
+    rbit = words * 32
+    q = jnp.asarray(RNG.integers(0, 2**32, (g, words), dtype=np.uint32))
+    k = jnp.asarray(RNG.integers(0, 2**32, (s, words), dtype=np.uint32))
+    sc = ref.hamming_score_ref(q, k, rbit)
+    assert (np.asarray(sc) >= 0).all() and (np.asarray(sc)
+                                            <= g * rbit).all()
+    # a key equal to a query gets >= rbit matches from that query alone
+    k2 = jnp.concatenate([k, q[:1]], axis=0)
+    sc2 = ref.hamming_score_ref(q, k2, rbit)
+    assert int(sc2[-1]) >= rbit
+
+
+def test_hamming_symmetry():
+    w = 4
+    a = jnp.asarray(RNG.integers(0, 2**32, (1, w), dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**32, (1, w), dtype=np.uint32))
+    s_ab = ref.hamming_score_ref(a, b, 128)
+    s_ba = ref.hamming_score_ref(b, a, 128)
+    assert int(s_ab[0]) == int(s_ba[0])
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (prefill)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sq,sk,d,bq,bk,causal,window", [
+    (128, 128, 64, 64, 64, True, None),
+    (256, 256, 32, 128, 64, True, 96),
+    (64, 128, 64, 64, 64, False, None),
+    (96, 96, 128, 32, 32, True, None),
+])
+def test_flash_attention_matches_ref(sq, sk, d, bq, bk, causal, window):
+    q = jnp.asarray(RNG.standard_normal((sq, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((sk, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((sk, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=sk - sq, block_q=bq, block_k=bk)
+    if window is None:
+        want = ref.attention_ref(q, k, v, causal=causal,
+                                 q_offset=sk - sq)
+        assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    else:
+        want = ref.mha_ref(q[None, :, None], k[None, :, None],
+                           v[None, :, None], causal=causal,
+                           q_offset=sk - sq, window=window)[0, :, 0]
+        assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.standard_normal((128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((128, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v)
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# Flash decode (+ fused gather)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("g,s,d,valid,block_k", [
+    (1, 256, 64, 256, 64), (4, 256, 64, 100, 128), (8, 512, 128, 511, 256),
+])
+def test_flash_decode_matches_ref(g, s, d, valid, block_k):
+    q = jnp.asarray(RNG.standard_normal((g, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    got = flash_decode(q, k, v, jnp.int32(valid), block_k=block_k)
+    want = ref.decode_attention_ref(q, k[:valid], v[:valid])
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("g,s,d,n_sel", [(2, 128, 32, 16), (4, 256, 64, 64)])
+def test_fused_gather_decode_matches_ref(g, s, d, n_sel):
+    q = jnp.asarray(RNG.standard_normal((g, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    idx = jnp.asarray(RNG.choice(s, n_sel, replace=False).astype(np.int32))
+    got = flash_decode_gathered(q, k, v, idx)
+    want = ref.gather_decode_attention_ref(q, k, v, idx)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Partial-softmax merge (the SP decode invariant)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5))
+def test_softmax_merge_associative(n_shards, g):
+    d = 16
+    s = n_shards * 8
+    q = jnp.asarray(RNG.standard_normal((g, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    full = ref.decode_attention_ref(q, k, v)
+    stats = [ref.softmax_stats_ref(q, k[i * 8:(i + 1) * 8],
+                                   v[i * 8:(i + 1) * 8])
+             for i in range(n_shards)]
+    m = jnp.stack([s_[0] for s_ in stats])
+    l = jnp.stack([s_[1] for s_ in stats])
+    o = jnp.stack([s_[2] for s_ in stats])
+    merged = ref.merge_softmax_stats_ref((m, l, o))
+    assert_allclose(np.asarray(merged), np.asarray(full, np.float32),
+                    atol=1e-5)
+
+
+def test_softmax_merge_handles_empty_shard():
+    g, d = 2, 8
+    q = jnp.asarray(RNG.standard_normal((g, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((8, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((8, d)), jnp.float32)
+    full = ref.decode_attention_ref(q, k, v)
+    m1, l1, o1 = ref.softmax_stats_ref(q, k, v)
+    # an all-masked shard
+    m0, l0, o0 = ref.softmax_stats_ref(q, k, v,
+                                       mask=jnp.zeros(8, bool))
+    merged = ref.merge_softmax_stats_ref(
+        (jnp.stack([m0, m1]), jnp.stack([l0, l1]), jnp.stack([o0, o1])))
+    assert_allclose(np.asarray(merged), np.asarray(full, np.float32),
+                    atol=1e-5)

@@ -1,0 +1,129 @@
+"""MoE dispatch and Mamba2 SSD internals vs naive references."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.configs import get_reduced
+from repro.configs.base import SSMConfig
+from repro.models import moe as moe_mod
+from repro.models.ssm import ssd_chunked
+
+RNG = np.random.default_rng(0)
+
+
+def _naive_moe(cfg, p, x):
+    """Every token through its top-k experts, no capacity limits."""
+    e = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf @ p["router"]
+    weights, experts, _ = moe_mod._router(e, logits)
+    out = np.zeros_like(np.asarray(xf), dtype=np.float32)
+    for t in range(xf.shape[0]):
+        for j in range(e.top_k):
+            ei = int(experts[t, j])
+            h = (jax.nn.silu(xf[t] @ p["wi"][ei])
+                 * (xf[t] @ p["wu"][ei])) @ p["wd"][ei]
+            out[t] += float(weights[t, j]) * 0 + np.asarray(
+                h, np.float32) * float(weights[t, j])
+    out = jnp.asarray(out.reshape(b, s, d))
+    if e.n_shared_experts:
+        from repro.models.layers import ffn
+        out = out + ffn(p["shared"], x)
+    return out
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "deepseek-v2-lite-16b"])
+def test_moe_dropless_matches_naive(arch):
+    cfg = get_reduced(arch, d_model=32)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.n_experts)
+        / cfg.moe.top_k))
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.moe_init(cfg, key)
+    x = jnp.asarray(RNG.standard_normal((2, 8, 32)), jnp.float32)
+    got, aux = moe_mod.moe_ffn(cfg, p, x, group_size=16)
+    want = _naive_moe(cfg, p, x)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens_when_tight():
+    cfg = get_reduced("mixtral-8x22b", d_model=32)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=0.25))      # deliberately tiny
+    p = moe_mod.moe_init(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(RNG.standard_normal((2, 16, 32)), jnp.float32)
+    got, _ = moe_mod.moe_ffn(cfg, p, x, group_size=32)
+    want = _naive_moe(cfg, p, x)
+    # some tokens dropped -> outputs differ
+    assert float(jnp.abs(got - want).max()) > 1e-3
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    B, S, nh, hd, N, chunk = 2, 48, 3, 8, 16, 16
+    x = jnp.asarray(RNG.standard_normal((B, S, nh, hd)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, nh)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    bm = jnp.asarray(RNG.standard_normal((B, S, nh, N)), jnp.float32)
+    cm = jnp.asarray(RNG.standard_normal((B, S, nh, N)), jnp.float32)
+    s0 = jnp.zeros((B, nh, hd, N))
+    y, sf = ssd_chunked(x, dt, a, bm, cm, s0, chunk)
+    s = np.zeros((B, nh, hd, N))
+    ys = []
+    for t in range(S):
+        decay = np.exp(np.asarray(dt[:, t]) * np.asarray(a)[None])
+        s = s * decay[..., None, None] + np.einsum(
+            "bhd,bhn,bh->bhdn", np.asarray(x[:, t]),
+            np.asarray(bm[:, t]), np.asarray(dt[:, t]))
+        ys.append(np.einsum("bhdn,bhn->bhd", s, np.asarray(cm[:, t])))
+    assert_allclose(np.asarray(y), np.stack(ys, 1), atol=1e-4)
+    assert_allclose(np.asarray(sf), s, atol=1e-4)
+
+
+def test_ssd_nondivisible_length_padding():
+    B, S, nh, hd, N = 1, 37, 2, 8, 8           # 37 % 16 != 0
+    x = jnp.asarray(RNG.standard_normal((B, S, nh, hd)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, nh)), jnp.float32)
+    a = -jnp.ones((nh,))
+    bm = jnp.asarray(RNG.standard_normal((B, S, nh, N)), jnp.float32)
+    cm = jnp.asarray(RNG.standard_normal((B, S, nh, N)), jnp.float32)
+    s0 = jnp.zeros((B, nh, hd, N))
+    y16, _ = ssd_chunked(x, dt, a, bm, cm, s0, 16)
+    y37, _ = ssd_chunked(x, dt, a, bm, cm, s0, 37)   # single chunk
+    assert y16.shape == (B, S, nh, hd)
+    assert_allclose(np.asarray(y16), np.asarray(y37), atol=1e-4)
+
+
+def test_ssm_decode_matches_forward():
+    """Per-token recurrent decode == chunked forward on the same seq."""
+    from repro.models.ssm import ssm_decode, ssm_forward, ssm_init
+    cfg = get_reduced("mamba2-130m")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    from repro.models import Model
+    p = ssm_init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    x = jnp.asarray(RNG.standard_normal((B, S, cfg.d_model)),
+                    jnp.float32) * 0.5
+    y_full, state = ssm_forward(cfg, p, x, return_state=True)
+    # replay token by token
+    from repro.core.kvcache import SSMState
+    from repro.models.ssm import ssm_dims
+    di, nh, conv_dim = ssm_dims(cfg)
+    st = SSMState(conv=jnp.zeros((B, cfg.ssm.d_conv - 1, conv_dim)),
+                  ssm=jnp.zeros((B, nh, cfg.ssm.head_dim,
+                                 cfg.ssm.d_state)))
+    outs = []
+    for t in range(S):
+        y, st = ssm_decode(cfg, p, x[:, t:t + 1], st)
+        outs.append(y[:, 0])
+    y_step = jnp.stack(outs, 1)
+    assert_allclose(np.asarray(y_step), np.asarray(y_full), atol=2e-4)
+    assert_allclose(np.asarray(st.ssm), np.asarray(state.ssm),
+                    atol=2e-4)

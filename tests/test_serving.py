@@ -1,0 +1,80 @@
+"""Serving engine: continuous batching must equal offline decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+
+
+def _setup(arch="qwen1.5-0.5b"):
+    cfg = get_reduced(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)
+            / cfg.moe.top_k))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _offline(model, params, prompt, n_new, max_len=64):
+    caches = model.init_caches(1, max_len, layout="list")
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, caches,
+        jnp.int32(0))
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt) + model.cfg.meta_tokens
+    for _ in range(n_new - 1):
+        logits, caches = model.decode_step(
+            params, jnp.asarray([out[-1]], jnp.int32), caches,
+            jnp.int32(pos))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "hymba-1.5b"])
+def test_continuous_batching_matches_offline(arch):
+    cfg, model, params = _setup(arch)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(6, 16)).astype(np.int32)
+               for _ in range(5)]
+    eng = ServingEngine(model, params, max_batch=2, max_len=64)
+    done = eng.run([Request(prompt=p, max_new_tokens=6)
+                    for p in prompts])
+    assert len(done) == 5
+    for r in done:
+        assert r.output == _offline(model, params, r.prompt, 6), r.id
+
+
+def test_engine_more_requests_than_slots_queues():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(1)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8,
+                                        dtype=np.int32),
+                    max_new_tokens=4) for _ in range(7)]
+    eng = ServingEngine(model, params, max_batch=2, max_len=32)
+    done = eng.run(reqs)
+    assert len(done) == 7
+    assert eng.stats["prefills"] == 7
+    assert all(len(r.output) == 4 for r in done)
+
+
+def test_engine_latency_bookkeeping():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(2)
+    req = Request(prompt=rng.integers(0, cfg.vocab_size, 8,
+                                      dtype=np.int32),
+                  max_new_tokens=3)
+    eng = ServingEngine(model, params, max_batch=1, max_len=32)
+    done = eng.run([req])
+    r = done[0]
+    assert r.t_first_token is not None and r.t_done is not None
+    assert r.t_done >= r.t_first_token >= r.t_submit

@@ -1,0 +1,137 @@
+"""End-to-end behaviour: train a tiny LM, hash-train on its real q/k,
+and verify the paper's claims in miniature — selection recall beats
+random LSH, rbit/budget ablation trends (Fig. 7/8), HATA decode tracks
+dense decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import HataConfig
+from repro.core import hashing
+from repro.data.hash_dataset import build_triplets_per_head, harvest_qk
+from repro.data.synthetic import SyntheticLM
+from repro.launch.train import main as train_main
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def trained_tiny_lm():
+    """Train a tiny llama-family LM on the induction task so its
+    attention heads develop real retrieval structure."""
+    cfg = get_reduced("qwen1.5-0.5b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.launch.steps import make_train_step
+    from repro.optim.adamw import adamw_init
+    step = jax.jit(make_train_step(model, base_lr=1e-3,
+                                   total_steps=150),
+                   donate_argnums=(0, 1))
+    opt = adamw_init(params)
+    src = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+    losses = []
+    for i in range(150):
+        batch = {"tokens": jnp.asarray(src.batch_at(i))}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    return cfg, model, params, losses
+
+
+def test_training_reduces_loss(trained_tiny_lm):
+    _, _, _, losses = trained_tiny_lm
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.5
+
+
+def test_hash_recall_beats_lsh_on_real_qk(trained_tiny_lm):
+    """Paper Fig. 1/8 in miniature: trained hashing beats random
+    projections at equal bits on a real model's q/k geometry."""
+    cfg, model, params, _ = trained_tiny_lm
+    hcfg = dataclasses.replace(cfg.hata, rbit=64)
+    src = SyntheticLM(cfg.vocab_size, 96, 1, seed=7)
+    batches = [{"tokens": jnp.asarray(src.batch_at(i))}
+               for i in range(3)]
+    layer = cfg.n_layers - 1
+    q, k, s = build_triplets_per_head(model, params, batches[:2], layer,
+                                      hcfg, n_queries=48, m_keys=48)
+    w = hashing.train_hash_weights_per_head(
+        jax.random.PRNGKey(0), jnp.asarray(q), jnp.asarray(k),
+        jnp.asarray(s), rbit=64, hcfg=hcfg)
+    qh, kh = harvest_qk(model, params, batches[2], layer)
+    h_kv = kh.shape[2]
+    g = qh.shape[2] // h_kv
+    budget = 10
+    recs, recs_lsh = [], []
+    w_lsh = hashing.random_projection_lsh(jax.random.PRNGKey(9),
+                                          qh.shape[-1], 64)
+    for hi in range(h_kv):
+        qs = jnp.asarray(qh[0, 48:, hi * g])
+        ks = jnp.asarray(kh[0, :, hi])
+        recs.append(float(hashing.hash_topk_recall(
+            qs, ks, w[hi], budget, rbit=64).mean()))
+        recs_lsh.append(float(hashing.hash_topk_recall(
+            qs, ks, w_lsh, budget, rbit=64).mean()))
+    assert np.mean(recs) > np.mean(recs_lsh), (recs, recs_lsh)
+
+
+def test_rbit_monotone_trend(trained_tiny_lm):
+    """Fig. 8: recall improves with hash bits (32 -> 128)."""
+    cfg, model, params, _ = trained_tiny_lm
+    src = SyntheticLM(cfg.vocab_size, 96, 1, seed=11)
+    batches = [{"tokens": jnp.asarray(src.batch_at(i))}
+               for i in range(2)]
+    layer = cfg.n_layers - 1
+    recalls = {}
+    for rbit in (32, 128):
+        hcfg = dataclasses.replace(cfg.hata, rbit=rbit)
+        q, k, s = build_triplets_per_head(
+            model, params, batches[:1], layer, hcfg, n_queries=48,
+            m_keys=48)
+        w = hashing.train_hash_weights_per_head(
+            jax.random.PRNGKey(0), jnp.asarray(q), jnp.asarray(k),
+            jnp.asarray(s), rbit=rbit, hcfg=hcfg)
+        qh, kh = harvest_qk(model, params, batches[1], layer)
+        qs = jnp.asarray(qh[0, 48:, 0])
+        ks = jnp.asarray(kh[0, :, 0])
+        recalls[rbit] = float(hashing.hash_topk_recall(
+            qs, ks, w[0], 10, rbit=rbit).mean())
+    assert recalls[128] >= recalls[32] - 0.05, recalls
+
+
+def test_hata_decode_tracks_dense_at_moderate_budget(trained_tiny_lm):
+    """Next-token agreement between HATA decode and dense decode on the
+    trained model at a 25% token budget."""
+    cfg, model, params, _ = trained_tiny_lm
+    src = SyntheticLM(cfg.vocab_size, 48, 4, seed=13)
+    toks = jnp.asarray(src.batch_at(0))
+    dense_tok = hata_tok = None
+    for enabled in (False, True):
+        cfg2 = dataclasses.replace(
+            cfg, hata=dataclasses.replace(
+                cfg.hata, enabled=enabled, budget_frac=0.25,
+                budget_min=16, budget_max=64, rbit=64))
+        m2 = Model(cfg2)
+        caches = m2.init_caches(4, 64)
+        logits, caches = m2.prefill(
+            params, {"tokens": toks}, caches, jnp.int32(0))
+        nxt, _ = m2.decode_step(params,
+                                jnp.argmax(logits, -1).astype(jnp.int32),
+                                caches, jnp.int32(48))
+        if not enabled:
+            dense_tok = np.asarray(jnp.argmax(nxt, -1))
+        else:
+            hata_tok = np.asarray(jnp.argmax(nxt, -1))
+    # untrained random hash weights + 25% budget: most tokens agree
+    assert (dense_tok == hata_tok).mean() >= 0.5
+
+
+def test_train_driver_end_to_end(tmp_path):
+    losses = train_main(["--arch", "llama3.1-8b", "--reduced",
+                         "--steps", "60", "--batch", "4", "--seq", "48",
+                         "--lr", "2e-3", "--log-every", "100",
+                         "--ckpt-dir", str(tmp_path)])
+    assert len(losses) == 60
+    assert np.mean(losses[-10:]) < np.mean(losses[:10])
