@@ -1,22 +1,36 @@
 """HATA top-k attention (paper §3.2, Algorithms 1-3) — single-device
 semantics. The sequence-sharded SPMD decode lives in
 ``repro/distributed/decode.py`` and must agree with this module exactly
-(tested in tests/test_distributed.py).
+(tested in tests/test_distributed.py); the per-row building blocks here
+(:func:`aggregate_q_codes`, :func:`clamped_budget`,
+:func:`mask_scores`) are shared with it.
 
 Prefill (Alg. 1): full flash attention + fill KV cache + hash-encode and
 cache the key codes.
 
 Decode (Alg. 3): hash-encode q and the new k; update caches; Hamming
 match scores against the whole code cache (GQA: summed over the q heads
-sharing each kv head); top-k; gather; sparse flash attention.
+sharing each kv head); top-k; fused gather + sparse flash attention.
+The whole score -> select -> gather pipeline is batched over (B, H_kv):
+two Pallas dispatches per decode wave (batched Hamming kernel, batched
+fused-gather kernel), no per-head vmap.
 
 Static-shape policy: ``k`` (the token budget) must be static under jit.
 We take ``k = hcfg.budget(max_len)`` and make selection exact for short
 caches by (a) masking invalid rows' scores to -1 — below the score floor
-of 0 ≤ valid match scores — and (b) masking gathered rows with score < 0
-out of the softmax. While cache_len <= k this reproduces *dense* decode
-bit-for-bit (every valid row selected), which is also what the paper's
-budget_min floor does.
+of 0 ≤ valid match scores — and (b) masking selections with score < 0
+out of the softmax *inside the fused kernel* (they contribute zero
+probability mass — the paged DMA still lands, the logit is -inf). While
+cache_len <= k this reproduces *dense* decode bit-for-bit (every valid
+row selected), which is also what the paper's budget_min floor does.
+The fused path needs no clamp-and-recompute correction: the kernel's
+masking is the exact semantics, verified bit-exact against the XLA
+reference in tests/test_decode_parity.py.
+
+Batching across request depths: every entry point accepts ``pos`` as a
+scalar (aligned batch) or a (B,) vector (continuous-batching slots at
+different depths — the serving engine's decode wave). Per-row validity
+masks fall out of broadcasting; the budget stays static.
 """
 from __future__ import annotations
 
@@ -27,7 +41,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import HataConfig
 from repro.core.kvcache import LayerKVCache, append_kv
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 
 class HataDecodeOut(NamedTuple):
@@ -56,8 +70,8 @@ def hata_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
     return out, cache
 
 
-def _aggregate_q_codes(q: jax.Array, w_h: jax.Array,
-                       n_kv_heads: int) -> jax.Array:
+def aggregate_q_codes(q: jax.Array, w_h: jax.Array,
+                      n_kv_heads: int) -> jax.Array:
     """Encode q per-head with its kv-group's hash weights.
 
     q: (B, H, d), w_h: (H_kv, d, rbit) -> (B, H_kv, G, W) uint32.
@@ -70,15 +84,91 @@ def _aggregate_q_codes(q: jax.Array, w_h: jax.Array,
     return jax.vmap(fn, in_axes=(1, 0), out_axes=1)(qg, w_h)
 
 
-def hata_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
-                w_h: jax.Array, cache: LayerKVCache, *,
-                hcfg: HataConfig, pos: jax.Array,
-                window: Optional[int] = None,
-                fused_gather: bool = False) -> HataDecodeOut:
-    """Alg. 3. q: (B, H, d), k_new/v_new: (B, 1, H_kv, d),
-    w_h: (H_kv, d, rbit), pos: scalar int32 (cache fill before this token).
+def clamped_budget(hcfg: HataConfig, s_max: int,
+                   window: Optional[int] = None) -> int:
+    """Static top-k budget for a cache of capacity ``s_max``.
+
+    A sliding window caps the number of attendable rows, and the budget
+    can never exceed the cache itself. Shared by the single-device,
+    model-stack and sequence-parallel decode paths so their selection
+    shapes agree.
     """
-    b, h, d = q.shape
+    budget = hcfg.budget(s_max)
+    if window is not None:
+        budget = min(budget, window)
+    return min(budget, s_max)
+
+
+def mask_scores(scores: jax.Array, n_valid: jax.Array, *,
+                window: Optional[int] = None,
+                positions: Optional[jax.Array] = None) -> jax.Array:
+    """Mask match scores outside the valid (and windowed) range to -1.
+
+    scores: (B, H_kv, S); n_valid: scalar or (B,) valid row count
+    (slots at different depths get per-row masks); positions: optional
+    (S,) absolute row positions (sequence-sharded callers pass their
+    shard offsets; default arange(S)). -1 sits below the score floor of
+    0 for valid rows, so top-k + ``score >= 0`` recovers exactness.
+    """
+    s = scores.shape[-1]
+    if positions is None:
+        positions = jnp.arange(s)
+    nv = jnp.reshape(jnp.asarray(n_valid), (-1, 1, 1))   # (1|B, 1, 1)
+    valid = positions[None, None, :] < nv
+    if window is not None:
+        valid = valid & (positions[None, None, :] > nv - 1 - window)
+    return jnp.where(valid, scores, -1)
+
+
+def hata_score_select(q: jax.Array, w_h: jax.Array, codes: jax.Array, *,
+                      rbit: int, budget: int, n_valid: jax.Array,
+                      window: Optional[int] = None,
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Alg. 3 lines 6, 10-15: encode q, batched Hamming scores, top-k.
+
+    q: (B, H, d), w_h: (H_kv, d, rbit), codes: (B, S, H_kv, W).
+    Returns (top_scores (B, H_kv, k), idx (B, H_kv, k),
+    scores (B, H_kv, S)). ``budget`` must be static (see
+    :func:`clamped_budget`); ``n_valid`` may be scalar or (B,).
+    """
+    h_kv = codes.shape[2]
+    q_codes = aggregate_q_codes(q, w_h, h_kv)        # (B, H_kv, G, W)
+    scores = ops.hamming_scores(q_codes, codes, rbit=rbit)
+    scores = mask_scores(scores, n_valid, window=window)
+    top_scores, idx = jax.lax.top_k(scores, budget)  # (B, H_kv, k)
+    return top_scores, idx, scores
+
+
+def hata_attend(q: jax.Array, cache: LayerKVCache, idx: jax.Array,
+                sel_valid: jax.Array, *, fused: bool = True) -> jax.Array:
+    """Sparse attention over selected rows with a validity mask.
+
+    Fused path (pallas impl): the batched gather kernel masks invalid
+    selections inside the kernel — no clamping, no side computation of
+    the exact answer. The xla impl evaluates the same math as
+    ``ref.masked_gather_decode_ref`` (the kernel's differential oracle).
+    """
+    return ops.gather_decode_attention(q, cache.k, cache.v, idx,
+                                       sel_valid=sel_valid, fused=fused)
+
+
+def hata_decode_batched(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                        w_h: jax.Array, cache: LayerKVCache, *,
+                        hcfg: HataConfig, pos: jax.Array,
+                        window: Optional[int] = None,
+                        fused_gather: bool = True) -> HataDecodeOut:
+    """Alg. 3, batched over requests at arbitrary depths.
+
+    q: (B, H, d), k_new/v_new: (B, 1, H_kv, d), w_h: (H_kv, d, rbit),
+    pos: scalar int32 *or* (B,) int32 per-row cache fill before this
+    token (continuous-batching slots sit at different depths).
+
+    One decode wave = encode + cache append, then the batched
+    score -> select -> gather pipeline: a (B, H_kv, S-blocks) Hamming
+    dispatch and a (B, H_kv, k) fused-gather dispatch. This is the
+    entry point the serving engine's decode step and the naive-mode
+    distributed decode both bottom out in.
+    """
     h_kv = k_new.shape[2]
     s_max = cache.max_len
     rbit = w_h.shape[-1]
@@ -86,67 +176,39 @@ def hata_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
     # --- Encode & cache update (Alg. 3 lines 3-9) ---
     k_codes = ops.hash_encode_heads(k_new, w_h)      # (B, 1, H_kv, W)
     cache = append_kv(cache, k_new, v_new, k_codes, pos)
-    q_codes = _aggregate_q_codes(q, w_h, h_kv)       # (B, H_kv, G, W)
 
-    # --- Hamming scores over the full code cache (lines 10-11) ---
-    scores = ops.hamming_scores(q_codes, cache.codes, rbit=rbit)
-    n_valid = pos + 1
-    positions = jnp.arange(s_max)
-    valid = positions[None, None, :] < n_valid       # (1, 1, S)
-    if window is not None:
-        valid = valid & (positions[None, None, :] > n_valid - 1 - window)
-    scores = jnp.where(valid, scores, -1)
+    # --- Score + select (lines 10-15), per-row validity ---
+    n_valid = jnp.asarray(pos) + 1                   # scalar or (B,)
+    budget = clamped_budget(hcfg, s_max, window)
+    top_scores, idx, scores = hata_score_select(
+        q, w_h, cache.codes, rbit=rbit, budget=budget, n_valid=n_valid,
+        window=window)
 
-    # --- Top-k select + gather + sparse attention (lines 13-17) ---
-    budget = hcfg.budget(s_max)
-    if window is not None:
-        budget = min(budget, window)
-    budget = min(budget, s_max)
-    top_scores, idx = jax.lax.top_k(scores, budget)  # (B, H_kv, k)
-    sel_valid = top_scores >= 0
-
-    out = _masked_gather_attention(q, cache, idx, sel_valid,
-                                   fused=fused_gather)
+    # --- Fused gather + sparse attention (lines 16-17) ---
+    out = hata_attend(q, cache, idx, top_scores >= 0, fused=fused_gather)
     return HataDecodeOut(out=out, cache=cache, idx=idx, scores=scores)
 
 
-def _masked_gather_attention(q: jax.Array, cache: LayerKVCache,
-                             idx: jax.Array, sel_valid: jax.Array, *,
-                             fused: bool) -> jax.Array:
-    """Sparse attention over gathered rows with a validity mask."""
-    b, h, d = q.shape
-    h_kv = cache.k.shape[2]
-    g = h // h_kv
-    if fused and ops.get_impl() == "pallas":
-        # Fused path: invalid selections are clamped to row 0 and their
-        # probability mass removed by re-running the reference mask; on
-        # real TPU the index list is exactly the valid prefix because
-        # scores < 0 sort last. We keep the clamp + correction exact:
-        idx_c = jnp.where(sel_valid, idx, 0)
-        out = ops.gather_decode_attention(q, cache.k, cache.v, idx_c,
-                                          fused=True)
-        # correction only needed when any invalid present; cheap branch:
-        any_invalid = jnp.any(~sel_valid)
-        out_exact = _xla_masked(q, cache, idx, sel_valid)
-        return jnp.where(any_invalid, out_exact, out)
-    return _xla_masked(q, cache, idx, sel_valid)
+def hata_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                w_h: jax.Array, cache: LayerKVCache, *,
+                hcfg: HataConfig, pos: jax.Array,
+                window: Optional[int] = None,
+                fused_gather: bool = False) -> HataDecodeOut:
+    """Alg. 3 with a single aligned depth — thin wrapper over
+    :func:`hata_decode_batched` with scalar ``pos`` (cache fill before
+    this token). Kept as the reference-shaped entry point the
+    differential tests loop per-row against the batched path.
+    """
+    return hata_decode_batched(q, k_new, v_new, w_h, cache, hcfg=hcfg,
+                               pos=jnp.asarray(pos, jnp.int32),
+                               window=window, fused_gather=fused_gather)
 
 
 def _xla_masked(q: jax.Array, cache: LayerKVCache, idx: jax.Array,
                 sel_valid: jax.Array) -> jax.Array:
-    b, h, d = q.shape
-    h_kv = cache.k.shape[2]
-    g = h // h_kv
-    kg = jnp.take_along_axis(jnp.moveaxis(cache.k, 2, 1), idx[..., None],
-                             axis=2)                 # (B, H_kv, k, d)
-    vg = jnp.take_along_axis(jnp.moveaxis(cache.v, 2, 1), idx[..., None],
-                             axis=2)
-    qf = q.reshape(b, h_kv, g, d).astype(jnp.float32) * (d ** -0.5)
-    logits = jnp.einsum("bhgd,bhkd->bhgk", qf, kg.astype(jnp.float32))
-    logits = jnp.where(sel_valid[:, :, None, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgk,bhkd->bhgd", probs, vg.astype(jnp.float32))
-    return out.reshape(b, h, d).astype(q.dtype)
+    """Back-compat alias for the XLA oracle (see kernels/ref.py)."""
+    return ref.masked_gather_decode_ref(q, cache.k, cache.v, idx,
+                                        sel_valid)
 
 # The MLA variant (beyond-paper: hash over the compressed latent stream)
 # lives with the MLA projection math in models/attention.py.

@@ -6,8 +6,12 @@ cell); replicating them is impossible (405B @ 32k x 128 = 2.2 TB). This
 module runs the score -> select -> attend pipeline under shard_map with
 three selectable modes (the §Perf hillclimb ladder):
 
-``naive``      GSPMD semantics: global jnp ops — XLA all-gathers the
-               full score vector and the gathered rows. Baseline.
+``naive``      GSPMD semantics: the strategy steps aside (returns None)
+               and the caller runs the global batched pipeline —
+               ``core.hash_attention.hata_score_select`` +
+               ``hata_attend``, i.e. the same score -> select -> gather
+               path as ``hata_decode_batched`` — and XLA all-gathers
+               the full score vector and the gathered rows. Baseline.
 ``two_stage``  exact: local Hamming scores -> two-stage distributed
                top-k (only (value, index) candidate pairs cross the
                ICI) -> each shard attends over the winners it *owns*
@@ -36,6 +40,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
+from repro.core import hash_attention as ha
 from repro.core.kvcache import LayerKVCache, MLACache
 from repro.distributed.collectives import (distributed_topk,
                                            merge_partial_softmax)
@@ -231,14 +236,18 @@ class SPDecode:
             return _partial_stats(qg, k_cache, v_cache, mask, scale)
 
         def hata():
-            rbit = cfg.hata.rbit
-            q_codes = jax.vmap(lambda xx, ww: ops.hash_encode(xx, ww),
-                               in_axes=(1, 0), out_axes=1)(qg, w_h)
-            scores = ops.hamming_scores(q_codes, codes, rbit=rbit)
-            scores = jnp.where(valid, scores, -1)
-            budget = cfg.hata.budget(s_local * self.n_seq_shards)
-            if cfg.sliding_window is not None:
-                budget = min(budget, cfg.sliding_window)
+            # local shard of the same batched score pipeline as
+            # hata_decode_batched: shared q aggregation, batched Hamming
+            # kernel, shared validity/window masking at shard offsets.
+            q_codes = ha.aggregate_q_codes(q, w_h, h_kv)
+            scores = ops.hamming_scores(q_codes, codes,
+                                        rbit=cfg.hata.rbit)
+            scores = ha.mask_scores(scores, n_valid,
+                                    window=cfg.sliding_window,
+                                    positions=abs_pos)
+            budget = ha.clamped_budget(cfg.hata,
+                                       s_local * self.n_seq_shards,
+                                       cfg.sliding_window)
             if self.mode == "local_split":
                 k_loc = min(max(budget // self.n_seq_shards, 1), s_local)
                 top_s, idx_l = jax.lax.top_k(scores, k_loc)
@@ -246,10 +255,8 @@ class SPDecode:
                                       gather_rows(v_cache, idx_l),
                                       top_s >= 0, scale)
             # two-stage exact
-            gv, gi = distributed_topk(scores, min(budget,
-                                                  s_local
-                                                  * self.n_seq_shards),
-                                      self.seq_axes, s_local)
+            gv, gi = distributed_topk(scores, budget, self.seq_axes,
+                                      s_local)
             li = gi - offset
             owned = (li >= 0) & (li < s_local) & (gv >= 0)
             li_c = jnp.clip(li, 0, s_local - 1)

@@ -6,9 +6,13 @@ ref.py      pure-jnp oracles (ground truth + dry-run execution path)
 """
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_decode import flash_decode, flash_decode_gathered
-from repro.kernels.hamming_score import hamming_score
+from repro.kernels.flash_decode import (flash_decode,
+                                        flash_decode_gathered,
+                                        flash_decode_gathered_batched)
+from repro.kernels.hamming_score import (hamming_score,
+                                         hamming_score_batched)
 from repro.kernels.hash_encode import hash_encode
 
 __all__ = ["ops", "ref", "flash_attention", "flash_decode",
-           "flash_decode_gathered", "hamming_score", "hash_encode"]
+           "flash_decode_gathered", "flash_decode_gathered_batched",
+           "hamming_score", "hamming_score_batched", "hash_encode"]

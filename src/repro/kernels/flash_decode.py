@@ -19,6 +19,14 @@ Two variants implement the paper's "fuse gather with FlashAttention"
     (1, d) granularity — bytes win is identical to gather_dense, but the
     DMA issue rate can bind at small d; `rows_per_block` batches the
     grid so multiple row DMAs are in flight.
+
+``flash_decode_gathered_batched``
+    The production decode path: the same fused gather, batched over
+    (B, H_kv) in a single grid so one dispatch serves the whole decode
+    wave, reading the KV cache in its native (B, S, H_kv, d) layout.
+    Applies the selection-validity mask inside the kernel, which is what
+    lets the caller drop the exact-recompute correction branch the
+    per-head variant needed (see core/hash_attention.py).
 """
 from __future__ import annotations
 
@@ -180,3 +188,123 @@ def flash_decode_gathered(q: jax.Array, k_cache: jax.Array,
         out_shape=jax.ShapeDtypeStruct((g, d), q.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Batched fused-gather decode: score -> select -> gather in one pipeline
+# ---------------------------------------------------------------------------
+def _gather_batched_kernel(idx_ref, nvalid_ref, q_ref, k_ref, v_ref,
+                           o_ref, kbuf, vbuf, sems, *, scale: float,
+                           block_k: int, n_sel: int):
+    from jax.experimental.pallas import tpu as pltpu
+    bi = pl.program_id(0)
+    hi = pl.program_id(1)
+    n_valid = nvalid_ref[bi, hi]
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, d)
+    g, d = q.shape
+    m = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((g, 1), jnp.float32)
+    acc = jnp.zeros((g, d), jnp.float32)
+    for base in range(0, n_sel, block_k):
+        rows = min(block_k, n_sel - base)
+
+        def row_dma(j, which, buf):
+            row = idx_ref[bi, hi, base + j]
+            src = (k_ref if which == 0 else v_ref)
+            return pltpu.make_async_copy(
+                src.at[bi, pl.ds(row, 1), hi],            # (1, d) row
+                buf.at[pl.ds(j, 1)], sems.at[which, j])
+
+        # issue every row-pair DMA of the chunk, then drain: the copies
+        # overlap each other (and, on hardware, the previous chunk's
+        # compute) instead of serializing row by row.
+        for j in range(rows):
+            row_dma(j, 0, kbuf).start()
+            row_dma(j, 1, vbuf).start()
+        for j in range(rows):
+            row_dma(j, 0, kbuf).wait()
+            row_dma(j, 1, vbuf).wait()
+
+        k = kbuf[:rows].astype(jnp.float32)               # (rows, d)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, rows)
+        # sel_valid applied *inside* the kernel: invalid selections'
+        # logits go to -inf before the softmax. p is zeroed explicitly
+        # so an all-invalid chunk can't inject exp(-inf - -inf) mass
+        # while m is still at its -inf init.
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        vmask = kpos < n_valid
+        logits = jnp.where(vmask, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, -1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(vmask, jnp.exp(logits - m_new), 0.0)
+        l = l * alpha + jnp.sum(p, -1, keepdims=True)
+        v = vbuf[:rows].astype(jnp.float32)
+        acc = acc * alpha + jnp.dot(p, v,
+                                    preferred_element_type=jnp.float32)
+        m = m_new
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_gathered_batched(q: jax.Array, k_cache: jax.Array,
+                                  v_cache: jax.Array, idx: jax.Array,
+                                  n_valid: Optional[jax.Array] = None, *,
+                                  block_k: int = 128,
+                                  interpret: bool = True) -> jax.Array:
+    """Batched fused gather+decode attention — one dispatch, no vmap.
+
+    q: (B, H_kv, G, d), k_cache/v_cache: (B, S, H_kv, d) *native* cache
+    layout, idx: (B, H_kv, k) int32 selected rows, n_valid: optional
+    (B, H_kv) int32 count of valid selections — entries past it are
+    masked out of the softmax (idx must sort invalid entries last,
+    which lax.top_k guarantees under the match-score convention).
+    Returns (B, H_kv, G, d).
+
+    The TPU paged-attention pattern with page_size = 1 row: the caches
+    stay in ANY/HBM memory space (never auto-tiled into VMEM), the
+    top-k indices are scalar-prefetched into SMEM, and each (B, H_kv)
+    grid step manually DMAs its selected rows HBM->VMEM in
+    ``block_k``-row chunks — all of a chunk's row-pair copies in flight
+    at once — then runs the chunk through an online softmax. No
+    transposed cache copy, no compacted intermediate; the only HBM
+    traffic is the k selected rows. Invalid rows' DMAs still land (idx
+    stays in-range) but their logits are masked to -inf inside the
+    kernel, so the output is bit-identical to running over only the
+    valid prefix (same chunk alignment).
+    """
+    b, h_kv, g, d = q.shape
+    n_sel = idx.shape[-1]
+    assert idx.shape == (b, h_kv, n_sel), (idx.shape, q.shape)
+    if n_valid is None:
+        n_valid = jnp.full((b, h_kv), n_sel, jnp.int32)
+    assert n_valid.shape == (b, h_kv), (n_valid.shape, q.shape)
+    block_k = min(block_k, n_sel)
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, hi, idx_ref, nv_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, idx_ref, nv_ref:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), k_cache.dtype),
+            pltpu.VMEM((block_k, d), v_cache.dtype),
+            pltpu.SemaphoreType.DMA((2, block_k)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_batched_kernel, scale=d ** -0.5,
+                          block_k=block_k, n_sel=n_sel),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h_kv, g, d), q.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), n_valid.astype(jnp.int32), q, k_cache,
+      v_cache)

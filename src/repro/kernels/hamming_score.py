@@ -33,6 +33,14 @@ def _hamming_kernel(q_ref, k_ref, out_ref, *, g_rbit: int):
     out_ref[...] = (g_rbit - ham)[None, :]
 
 
+def _hamming_batched_kernel(q_ref, k_ref, out_ref, *, g_rbit: int):
+    q = q_ref[0, 0]                     # (G, W) uint32
+    k = k_ref[0, :, 0, :]               # (block_s, W) uint32
+    x = jnp.bitwise_xor(q[:, None, :], k[None, :, :])   # (G, block_s, W)
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    out_ref[0, 0] = g_rbit - jnp.sum(pc, axis=(0, 2))
+
+
 @functools.partial(jax.jit, static_argnames=("rbit", "block_s", "interpret"))
 def hamming_score(q_codes: jax.Array, k_codes: jax.Array, *, rbit: int,
                   block_s: int = 2048, interpret: bool = True) -> jax.Array:
@@ -60,3 +68,38 @@ def hamming_score(q_codes: jax.Array, k_codes: jax.Array, *, rbit: int,
         interpret=interpret,
     )(q_codes, k_codes)
     return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("rbit", "block_s", "interpret"))
+def hamming_score_batched(q_codes: jax.Array, k_codes: jax.Array, *,
+                          rbit: int, block_s: int = 2048,
+                          interpret: bool = True) -> jax.Array:
+    """Batched aggregated hash match scores — one dispatch, no vmap.
+
+    q_codes: (B, H_kv, G, W) uint32, k_codes: (B, S, H_kv, W) uint32
+    -> (B, H_kv, S) int32.
+
+    The grid is (B, H_kv, S-blocks) and the code cache streams in its
+    *native* (B, S, H_kv, W) layout — the per-head vmap of
+    :func:`hamming_score` forced XLA to materialize a transposed
+    (B, H_kv, S, W) copy of the whole code cache before dispatch, which
+    doubled the 16-byte/token stream this kernel exists to minimize.
+    """
+    b, h_kv, g, w = q_codes.shape
+    b2, s, h_kv2, w2 = k_codes.shape
+    assert (b, h_kv, w) == (b2, h_kv2, w2), (q_codes.shape, k_codes.shape)
+    block_s = min(block_s, s)
+    n_blocks = pl.cdiv(s, block_s)
+    return pl.pallas_call(
+        functools.partial(_hamming_batched_kernel, g_rbit=g * rbit),
+        grid=(b, h_kv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, w), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, w),
+                         lambda bi, hi, si: (bi, si, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_s),
+                               lambda bi, hi, si: (bi, hi, si)),
+        out_shape=jax.ShapeDtypeStruct((b, h_kv, s), jnp.int32),
+        interpret=interpret,
+    )(q_codes, k_codes)

@@ -76,8 +76,9 @@ def hash_encode_heads(x: jax.Array, w_h: jax.Array) -> jax.Array:
         proj = jnp.einsum("bshd,hdr->bshr", x.astype(jnp.float32),
                           w_h.astype(jnp.float32))
         return ref.bitpack_ref((proj >= 0).astype(jnp.uint32))
+    # inner vmap sees the batch-stripped (S, H, d): heads are axis 1
     fn = functools.partial(_he.hash_encode, interpret=_INTERPRET)
-    fn = jax.vmap(fn, in_axes=(2, 0), out_axes=2)   # heads
+    fn = jax.vmap(fn, in_axes=(1, 0), out_axes=1)   # heads
     fn = jax.vmap(fn, in_axes=(0, None))            # batch
     return fn(x, w_h)
 
@@ -87,7 +88,25 @@ def hash_encode_heads(x: jax.Array, w_h: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 def hamming_scores(q_codes: jax.Array, k_codes: jax.Array, *,
                    rbit: int) -> jax.Array:
-    """q_codes: (B, H_kv, G, W), k_codes: (B, S, H_kv, W) -> (B, H_kv, S)."""
+    """q_codes: (B, H_kv, G, W), k_codes: (B, S, H_kv, W) -> (B, H_kv, S).
+
+    Pallas impl: one batched dispatch with a (B, H_kv, S-blocks) grid
+    streaming the code cache in its native layout.
+    """
+    if get_impl() == "xla":
+        return ref.hamming_score_batched_ref(q_codes, k_codes, rbit)
+    return _hs.hamming_score_batched(q_codes, k_codes, rbit=rbit,
+                                     interpret=_INTERPRET)
+
+
+def hamming_scores_vmapped(q_codes: jax.Array, k_codes: jax.Array, *,
+                           rbit: int) -> jax.Array:
+    """Legacy per-(B, H_kv) vmap dispatch of the single-head kernel.
+
+    Kept as the baseline for benchmarks/decode_efficiency.py and the
+    differential tests; the vmap forces a transposed copy of the code
+    cache, which is exactly what ``hamming_scores`` now avoids.
+    """
     if get_impl() == "xla":
         return ref.hamming_score_batched_ref(q_codes, k_codes, rbit)
     fn = functools.partial(_hs.hamming_score, rbit=rbit,
@@ -228,37 +247,70 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def gather_decode_attention(q: jax.Array, k_cache: jax.Array,
                             v_cache: jax.Array, idx: jax.Array, *,
+                            sel_valid: Optional[jax.Array] = None,
                             fused: bool = False) -> jax.Array:
     """HATA sparse decode: attend over selected rows only.
 
-    q: (B, H, d), caches: (B, S, H_kv, d), idx: (B, H_kv, k) int32.
-    ``fused=True`` uses the scalar-prefetch fused-gather kernel (pallas
-    impl only); otherwise gather-then-flash-decode ("gather_dense").
+    q: (B, H, d), caches: (B, S, H_kv, d), idx: (B, H_kv, k) int32,
+    sel_valid: optional (B, H_kv, k) bool — invalid selections are
+    masked out of the softmax (HATA short-cache exactness).
+    ``fused=True`` uses the batched scalar-prefetch fused-gather kernel
+    (pallas impl only); otherwise gather-then-flash-decode
+    ("gather_dense").
+
+    On the pallas impl (both paths) ``sel_valid`` must be a *prefix*
+    mask (invalid entries sorted last), which lax.top_k guarantees
+    under the match-score convention: invalid rows carry score -1,
+    below the floor of 0 for valid rows. The xla impl accepts any mask.
     """
     b, h, d = q.shape
     h_kv = k_cache.shape[2]
     g = h // h_kv
     if fused and get_impl() == "pallas":
-        fn = functools.partial(_fd.flash_decode_gathered,
-                               interpret=_INTERPRET)
         qg = q.reshape(b, h_kv, g, d)
-        kh = jnp.moveaxis(k_cache, 2, 1)
-        vh = jnp.moveaxis(v_cache, 2, 1)
-        out = jax.vmap(jax.vmap(fn))(qg, kh, vh, idx)
+        nv = (None if sel_valid is None
+              else jnp.sum(sel_valid.astype(jnp.int32), axis=-1))
+        out = _fd.flash_decode_gathered_batched(qg, k_cache, v_cache,
+                                                idx, nv,
+                                                interpret=_INTERPRET)
         return out.reshape(b, h, d)
+    if get_impl() == "xla":
+        return ref.masked_gather_decode_ref(q, k_cache, v_cache, idx,
+                                            sel_valid)
     # gather_dense: one fused XLA gather to a (k, d) compacted buffer.
     kg = jnp.take_along_axis(jnp.moveaxis(k_cache, 2, 1),
                              idx[..., None], axis=2)  # (B, H_kv, k, d)
     vg = jnp.take_along_axis(jnp.moveaxis(v_cache, 2, 1),
                              idx[..., None], axis=2)
-    if get_impl() == "xla":
-        qf = q.reshape(b, h_kv, g, d).astype(jnp.float32) * (d ** -0.5)
-        logits = jnp.einsum("bhgd,bhkd->bhgk", qf, kg.astype(jnp.float32))
-        probs = jax.nn.softmax(logits, axis=-1)
-        out = jnp.einsum("bhgk,bhkd->bhgd", probs, vg.astype(jnp.float32))
-        return out.reshape(b, h, d).astype(q.dtype)
     fn = functools.partial(_fd.flash_decode, interpret=_INTERPRET)
     qg = q.reshape(b, h_kv, g, d)
-    out = jax.vmap(jax.vmap(fn, in_axes=(0, 0, 0, None)),
-                   in_axes=(0, 0, 0, None))(qg, kg, vg, None)
+    if sel_valid is None:
+        out = jax.vmap(jax.vmap(fn, in_axes=(0, 0, 0, None)),
+                       in_axes=(0, 0, 0, None))(qg, kg, vg, None)
+    else:
+        n_valid = jnp.sum(sel_valid.astype(jnp.int32), axis=-1)
+        out = jax.vmap(jax.vmap(fn))(qg, kg, vg, n_valid)
+    return out.reshape(b, h, d)
+
+
+def gather_decode_attention_vmapped(q: jax.Array, k_cache: jax.Array,
+                                    v_cache: jax.Array,
+                                    idx: jax.Array) -> jax.Array:
+    """Legacy per-(B, H_kv) vmap dispatch of the fused-gather kernel.
+
+    No validity masking (callers had to clamp idx and recompute an
+    exact correction on the side — the seed's double-compute). Kept as
+    the benchmark baseline for the batched pipeline.
+    """
+    b, h, d = q.shape
+    h_kv = k_cache.shape[2]
+    g = h // h_kv
+    if get_impl() != "pallas":
+        return ref.masked_gather_decode_ref(q, k_cache, v_cache, idx)
+    fn = functools.partial(_fd.flash_decode_gathered,
+                           interpret=_INTERPRET)
+    qg = q.reshape(b, h_kv, g, d)
+    kh = jnp.moveaxis(k_cache, 2, 1)
+    vh = jnp.moveaxis(v_cache, 2, 1)
+    out = jax.vmap(jax.vmap(fn))(qg, kh, vh, idx)
     return out.reshape(b, h, d)

@@ -176,6 +176,34 @@ def gather_decode_attention_ref(q: jax.Array, k_cache: jax.Array,
     return decode_attention_ref(q, k_cache[idx], v_cache[idx])
 
 
+def masked_gather_decode_ref(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, idx: jax.Array,
+                             sel_valid: Optional[jax.Array] = None,
+                             ) -> jax.Array:
+    """Batched masked gather-attention oracle (HATA decode, all heads).
+
+    q: (B, H, d), k_cache/v_cache: (B, S, H_kv, d) native cache layout,
+    idx: (B, H_kv, k) int32 selected rows, sel_valid: optional
+    (B, H_kv, k) bool (True = attend). The ground truth for the batched
+    fused gather kernel: invalid selections' logits go to -inf before
+    the softmax. Returns (B, H, d).
+    """
+    b, h, d = q.shape
+    h_kv = k_cache.shape[2]
+    g = h // h_kv
+    kg = jnp.take_along_axis(jnp.moveaxis(k_cache, 2, 1), idx[..., None],
+                             axis=2)                  # (B, H_kv, k, d)
+    vg = jnp.take_along_axis(jnp.moveaxis(v_cache, 2, 1), idx[..., None],
+                             axis=2)
+    qf = q.reshape(b, h_kv, g, d).astype(jnp.float32) * (d ** -0.5)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qf, kg.astype(jnp.float32))
+    if sel_valid is not None:
+        logits = jnp.where(sel_valid[:, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, vg.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Partial-softmax (flash) statistics — used by the distributed SP decode
 # merge and by the flash kernels' scratch math.

@@ -164,6 +164,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         record["compile_s"] = round(time.time() - t1, 2)
         record["memory"] = _mem_dict(compiled.memory_analysis())
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):    # jax<0.5: one dict per device
+            ca = ca[0] if ca else {}
         record["xla_cost_analysis"] = {
             "flops": float(ca.get("flops", 0) or 0),
             "bytes_accessed": float(ca.get("bytes accessed", 0) or 0)}

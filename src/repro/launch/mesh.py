@@ -14,17 +14,29 @@ stages (distributed/pipeline.py).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:                   # older jax: every axis is Auto
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    """Arbitrary mesh for tests/small runs (Auto axis types)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
+    """Arbitrary mesh for tests/small runs (Auto axis types).
+
+    Version-compat shim: jax.make_mesh grew the ``axis_types`` kwarg in
+    0.5; on older jax the default (Auto everywhere) is already what we
+    want. Every mesh in the repo — including test subprocess snippets —
+    goes through here so the suite runs on both.
+    """
+    shape, axes = tuple(shape), tuple(axes)
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.hash_attention import _xla_masked
+from repro.core import hash_attention as ha
 from repro.core.kvcache import LayerKVCache, MLACache, append_kv, append_mla
 from repro.distributed.strategy import get_decode_strategy
 from repro.kernels import ops
@@ -129,29 +129,16 @@ def _dense_decode(cfg: ModelConfig, q, cache: LayerKVCache, n_valid):
 
 def _hata_score_select(cfg: ModelConfig, q, w_h, cache: LayerKVCache,
                        n_valid):
-    """Alg. 3 lines 6,10-15: encode q, Hamming scores, top-k + gather."""
-    b, h, d = q.shape
-    h_kv = cache.k.shape[2]
-    g = h // h_kv
-    rbit = cfg.hata.rbit
-    qg = q.reshape(b, h_kv, g, d)
-    q_codes = jax.vmap(lambda xx, ww: ops.hash_encode(xx, ww),
-                       in_axes=(1, 0), out_axes=1)(qg, w_h)
-    scores = ops.hamming_scores(q_codes, cache.codes, rbit=rbit)
-    s = cache.max_len
-    pos = jnp.arange(s)
-    nv = jnp.reshape(n_valid, (-1, 1, 1))               # (1|B, 1, 1)
-    valid = pos[None, None, :] < nv
-    if cfg.sliding_window is not None:
-        valid = valid & (pos[None, None, :] > nv - 1
-                         - cfg.sliding_window)
-    scores = jnp.where(valid, scores, -1)
-    budget = cfg.hata.budget(s)
-    if cfg.sliding_window is not None:
-        budget = min(budget, cfg.sliding_window)
-    budget = min(budget, s)
-    top_scores, idx = jax.lax.top_k(scores, budget)
-    return _xla_masked(q, cache, idx, top_scores >= 0)
+    """Alg. 3 lines 6,10-17 via the shared batched pipeline: encode q,
+    batched Hamming scores, top-k, fused masked gather. ``n_valid`` may
+    be scalar or (B,) — the serving engine's decode wave advances slots
+    sitting at different depths in one call."""
+    budget = ha.clamped_budget(cfg.hata, cache.max_len,
+                               cfg.sliding_window)
+    top_scores, idx, _ = ha.hata_score_select(
+        q, w_h, cache.codes, rbit=cfg.hata.rbit, budget=budget,
+        n_valid=n_valid, window=cfg.sliding_window)
+    return ha.hata_attend(q, cache, idx, top_scores >= 0)
 
 
 def _project_qkv_perrow(cfg: ModelConfig, p, x: jax.Array,

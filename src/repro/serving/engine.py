@@ -8,7 +8,12 @@ Slot model (static shapes, jit-friendly — the TPU serving pattern):
     free slot (one DUS per layer on dim 0);
   * decode: ONE jit'd step advances every active slot together with
     per-slot positions (slots sit at different depths — per-row RoPE,
-    per-row validity masks, per-row cache appends);
+    per-row validity masks, per-row cache appends). The HATA layers of
+    that step bottom out in the batched score->select->gather pipeline
+    of ``core.hash_attention.hata_decode_batched``: the (B,) position
+    vector flows into per-row score masks, and the whole wave is served
+    by one batched Hamming dispatch plus one batched fused-gather
+    dispatch per layer — no per-slot or per-head kernel launches;
   * inactive slots decode garbage into their own rows (masked out of
     results, overwritten at next admission) — the standard price of
     static shapes.
@@ -53,6 +58,9 @@ class ServingEngine:
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_out": 0}
 
+        # pos is the per-slot (B,) depth vector, not one shared scalar:
+        # decode_step threads it through to hata_decode_batched's
+        # per-row validity masks so ragged slots stay exact.
         self._decode = jax.jit(
             lambda p, t, c, pos: model.decode_step(p, t, c, pos))
         self._prefill = jax.jit(

@@ -84,8 +84,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import Checkpointer
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 ck = Checkpointer({str(tmp_path)!r})
 like = {{"params": {{"w": jnp.zeros((8, 8)), "b": jnp.zeros(8)}},
         "step": jnp.int32(0)}}

@@ -1,0 +1,249 @@
+"""Differential harness for the batched fused decode pipeline.
+
+Three-way parity, seeded, across GQA group sizes, ragged per-row
+depths and window set/unset:
+
+    hata_decode_batched (one dispatch, per-row pos vector)
+        ≡ looped hata_decode (B=1 slices, scalar pos)   [bit-exact]
+        ≡ dense decode attention when cache_len <= k    [numerical]
+
+plus the fused Pallas kernel (interpret mode) against the XLA
+reference, including the bit-exactness of its *in-kernel* validity
+masking, and property tests for the selection semantics the pipeline
+rests on (top-k tie-breaking on integer hash scores, recall == 1.0
+=> identical attention).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose, assert_array_equal
+
+from hypothesis_compat import given, settings, st
+from repro.configs.base import HataConfig
+from repro.core import kvcache, topk
+from repro.core.hash_attention import (clamped_budget, hata_decode,
+                                       hata_decode_batched)
+from repro.kernels import ops, ref
+from repro.kernels.flash_decode import flash_decode_gathered_batched
+from repro.kernels.hamming_score import hamming_score_batched
+
+RNG = np.random.default_rng(7)
+HCFG = HataConfig(rbit=64, budget_min=16, budget_max=32,
+                  budget_frac=0.5)
+
+
+def _setup(b, h_kv, g, d=32, s=64, seed=0):
+    """Random filled cache with *consistent* key codes + a decode step."""
+    rng = np.random.default_rng(seed)
+    h = h_kv * g
+    cache = kvcache.init_kv_cache(b, s, h_kv, d, rbit=HCFG.rbit,
+                                  dtype=jnp.float32)
+    w = jnp.asarray(rng.standard_normal((h_kv, d, HCFG.rbit)),
+                    jnp.float32) / np.sqrt(d)
+    cache = dataclasses.replace(
+        cache,
+        k=jnp.asarray(rng.standard_normal(cache.k.shape), jnp.float32),
+        v=jnp.asarray(rng.standard_normal(cache.v.shape), jnp.float32))
+    cache = dataclasses.replace(
+        cache, codes=ops.hash_encode_heads(cache.k, w))
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k1 = jnp.asarray(rng.standard_normal((b, 1, h_kv, d)), jnp.float32)
+    v1 = jnp.asarray(rng.standard_normal((b, 1, h_kv, d)), jnp.float32)
+    # ragged per-row depths, incl. one row at the cache edge
+    pos = rng.integers(s // 4, s - 1, b)
+    pos[-1] = s - 1
+    return cache, w, q, k1, v1, jnp.asarray(pos, jnp.int32)
+
+
+def _loop_rows(cache, w, q, k1, v1, pos, hcfg, window, fused):
+    outs, idxs = [], []
+    for i in range(q.shape[0]):
+        ci = kvcache.LayerKVCache(k=cache.k[i:i + 1], v=cache.v[i:i + 1],
+                                  codes=cache.codes[i:i + 1])
+        ri = hata_decode(q[i:i + 1], k1[i:i + 1], v1[i:i + 1], w, ci,
+                         hcfg=hcfg, pos=jnp.int32(int(pos[i])),
+                         window=window, fused_gather=fused)
+        outs.append(np.asarray(ri.out)[0])
+        idxs.append(np.asarray(ri.idx)[0])
+    return np.stack(outs), np.stack(idxs)
+
+
+# ---------------------------------------------------------------------------
+# batched == looped, bit-exact, both impls
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("g", [1, 4, 8])
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("impl,fused", [("xla", False), ("pallas", True)])
+def test_batched_equals_looped(g, window, impl, fused):
+    cache, w, q, k1, v1, pos = _setup(b=3, h_kv=2, g=g, seed=g)
+    with ops.use_impl(impl):
+        res = hata_decode_batched(q, k1, v1, w, cache, hcfg=HCFG,
+                                  pos=pos, window=window,
+                                  fused_gather=fused)
+        out_l, idx_l = _loop_rows(cache, w, q, k1, v1, pos, HCFG,
+                                  window, fused)
+    assert_array_equal(np.asarray(res.idx), idx_l)
+    assert_array_equal(np.asarray(res.out), out_l)
+
+
+# ---------------------------------------------------------------------------
+# batched == dense when the budget covers the cache
+# ---------------------------------------------------------------------------
+def _dense_ref(q, cache, n_valid, window):
+    """Dense masked decode reference (per-row validity + SWA window)."""
+    b, h, d = q.shape
+    h_kv = cache.k.shape[2]
+    s = cache.max_len
+    pos = np.arange(s)
+    nv = np.asarray(n_valid).reshape(-1, 1)
+    valid = pos[None] < nv
+    if window is not None:
+        valid = valid & (pos[None] > nv - 1 - window)
+    qf = np.asarray(q).reshape(b, h_kv, h // h_kv, d) * (d ** -0.5)
+    logits = np.einsum("bhgd,bshd->bhgs", qf.astype(np.float64),
+                       np.asarray(cache.k, np.float64))
+    logits = np.where(valid[:, None, None], logits, -np.inf)
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bhgs,bshd->bhgd", p,
+                    np.asarray(cache.v, np.float64))
+    return out.reshape(b, h, d)
+
+
+@pytest.mark.parametrize("g", [1, 4, 8])
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("impl,fused", [("xla", False), ("pallas", True)])
+def test_batched_equals_dense_when_budget_covers_cache(g, window, impl,
+                                                       fused):
+    cache, w, q, k1, v1, pos = _setup(b=3, h_kv=2, g=g, seed=10 + g)
+    s = cache.max_len
+    hcfg = dataclasses.replace(HCFG, budget_min=s, budget_max=s,
+                               budget_frac=1.0)
+    with ops.use_impl(impl):
+        res = hata_decode_batched(q, k1, v1, w, cache, hcfg=hcfg,
+                                  pos=pos, window=window,
+                                  fused_gather=fused)
+    want = _dense_ref(q, res.cache, np.asarray(pos) + 1, window)
+    assert_allclose(np.asarray(res.out), want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel vs XLA reference — including in-kernel masking bit-exactness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("g", [1, 4, 8])
+def test_fused_kernel_matches_xla_reference(g):
+    cache, w, q, k1, v1, pos = _setup(b=3, h_kv=2, g=g, seed=20 + g)
+    with ops.use_impl("pallas"):
+        rp = hata_decode_batched(q, k1, v1, w, cache, hcfg=HCFG,
+                                 pos=pos, fused_gather=True)
+    with ops.use_impl("xla"):
+        rx = hata_decode_batched(q, k1, v1, w, cache, hcfg=HCFG,
+                                 pos=pos, fused_gather=False)
+    # identical integer scores -> identical selection
+    assert_array_equal(np.asarray(rp.scores), np.asarray(rx.scores))
+    assert_array_equal(np.asarray(rp.idx), np.asarray(rx.idx))
+    assert_allclose(np.asarray(rp.out), np.asarray(rx.out), atol=1e-5)
+
+
+@pytest.mark.parametrize("block_k", [8, 128])
+def test_fused_kernel_masking_is_bit_exact(block_k):
+    """Invalid selections must have exactly zero influence: repointing
+    every invalid idx entry at different (arbitrary) cache rows cannot
+    change a single output bit."""
+    rng = np.random.default_rng(3)
+    b, s, h_kv, g, d, k = 2, 48, 2, 4, 32, 24
+    q = jnp.asarray(rng.standard_normal((b, h_kv, g, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+    idx = np.asarray(rng.integers(0, s, (b, h_kv, k)), np.int32)
+    nv = rng.integers(1, k + 1, (b, h_kv))
+    invalid = np.arange(k)[None, None, :] >= nv[..., None]
+    idx2 = np.where(invalid, rng.integers(0, s, idx.shape), idx)
+    assert (idx2 != idx).any()
+    out = flash_decode_gathered_batched(q, kc, vc, jnp.asarray(idx),
+                                        jnp.asarray(nv, jnp.int32),
+                                        block_k=block_k, interpret=True)
+    out2 = flash_decode_gathered_batched(q, kc, vc, jnp.asarray(idx2),
+                                         jnp.asarray(nv, jnp.int32),
+                                         block_k=block_k, interpret=True)
+    assert_array_equal(np.asarray(out), np.asarray(out2))
+    # and the masked fused output matches the -inf-masked XLA oracle
+    sel_valid = jnp.arange(k)[None, None, :] < jnp.asarray(nv)[..., None]
+    want = ref.masked_gather_decode_ref(
+        q.reshape(b, h_kv * g, d), kc, vc, jnp.asarray(idx), sel_valid)
+    assert_allclose(np.asarray(out).reshape(b, h_kv * g, d),
+                    np.asarray(want), atol=1e-5)
+
+
+def test_batched_hamming_kernel_matches_ref():
+    rng = np.random.default_rng(4)
+    b, s, h_kv, g, w_words, rbit = 2, 70, 3, 4, 2, 64
+    qc = jnp.asarray(rng.integers(0, 2 ** 32, (b, h_kv, g, w_words),
+                                  dtype=np.uint32))
+    kc = jnp.asarray(rng.integers(0, 2 ** 32, (b, s, h_kv, w_words),
+                                  dtype=np.uint32))
+    got = hamming_score_batched(qc, kc, rbit=rbit, block_s=32,
+                                interpret=True)
+    want = ref.hamming_score_batched_ref(qc, kc, rbit)
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# selection-semantics properties (hypothesis; self-skip when absent)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(1, 24))
+def test_topk_tie_breaking_matches_batched_kernel_scores(seed, g, k):
+    """The batched kernel's integer scores are bit-identical to the
+    oracle's, so lax.top_k (ties -> lowest index) picks the same rows
+    on both paths — the invariant batched/looped parity rests on."""
+    rng = np.random.default_rng(seed)
+    b, s, h_kv, w_words, rbit = 2, 32, 2, 2, 64
+    qc = jnp.asarray(rng.integers(0, 2 ** 32, (b, h_kv, g, w_words),
+                                  dtype=np.uint32))
+    kc = jnp.asarray(rng.integers(0, 2 ** 32, (b, s, h_kv, w_words),
+                                  dtype=np.uint32))
+    kernel = hamming_score_batched(qc, kc, rbit=rbit, interpret=True)
+    oracle = ref.hamming_score_batched_ref(qc, kc, rbit)
+    assert_array_equal(np.asarray(kernel), np.asarray(oracle))
+    _, ik = topk.topk(kernel, min(k, s))
+    _, io = topk.topk(oracle, min(k, s))
+    assert_array_equal(np.asarray(ik), np.asarray(io))
+    # tie-breaking contract: stable descending sort by (score, -index)
+    sc = np.asarray(oracle)
+    order = np.argsort(-sc, axis=-1, kind="stable")[..., :min(k, s)]
+    assert_array_equal(np.asarray(io), order)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_recall_one_implies_identical_attention(seed):
+    """selection_recall == 1.0 means the estimated top-k *set* equals
+    the true top-k set, so attending over either selection (rows taken
+    in cache order) is bit-identical."""
+    rng = np.random.default_rng(seed)
+    s, k, h, d = 32, 8, 2, 16
+    true = rng.permutation(s).astype(np.float32)
+    # same top-k set, different ordering inside and outside the set
+    est = true.copy()
+    top = np.argsort(-true, kind="stable")[:k]
+    est[top] = true[top][::-1]
+    rest = np.setdiff1d(np.arange(s), top)
+    est[rest] = rng.permutation(est[rest])
+    rec = topk.selection_recall(jnp.asarray(est)[None],
+                                jnp.asarray(true)[None], k)
+    assert float(rec[0]) == 1.0
+    idx_t = np.sort(np.argsort(-true, kind="stable")[:k])
+    idx_e = np.sort(np.argsort(-est, kind="stable")[:k])
+    assert_array_equal(idx_t, idx_e)
+    q = jnp.asarray(rng.standard_normal((1, h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((1, s, 1, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((1, s, 1, d)), jnp.float32)
+    out_t = ref.masked_gather_decode_ref(q, kc, vc,
+                                         jnp.asarray(idx_t)[None, None])
+    out_e = ref.masked_gather_decode_ref(q, kc, vc,
+                                         jnp.asarray(idx_e)[None, None])
+    assert_array_equal(np.asarray(out_t), np.asarray(out_e))

@@ -48,8 +48,8 @@ from repro.models import Model
 from repro.distributed.decode import SPDecode
 from repro.distributed import strategy
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 for arch in ["llama3-405b", "deepseek-v2-lite-16b", "mixtral-8x22b",
              "hymba-1.5b"]:
     cfg = get_reduced(arch, d_model=64)
@@ -99,8 +99,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.distributed.collectives import distributed_topk
 
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("model",))
 rng = np.random.default_rng(0)
 for k in (1, 4, 16, 64):
     scores = jnp.asarray(rng.permutation(256).astype(np.float32))[None]
@@ -127,8 +127,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.distributed.collectives import distributed_topk
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(1)
 for k in (1, 8, 32, 128):          # incl. k > S_local (=32)
     scores = jnp.asarray(rng.permutation(256).astype(np.float32))[None]
@@ -155,8 +155,8 @@ PIPE_CODE = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.distributed.pipeline import spmd_pipeline
 
-mesh = jax.make_mesh((4,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("pod",))
 rng = np.random.default_rng(0)
 L, D, n_micro, mb = 8, 16, 6, 4
 w = jnp.asarray(rng.standard_normal((L, D, D)).astype(np.float32)) * 0.3
@@ -192,8 +192,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.optim.compression import compressed_psum, init_error_state
 
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("data",))
 rng = np.random.default_rng(0)
 g = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
 err0 = jnp.zeros((4, 64))

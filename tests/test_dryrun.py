@@ -19,9 +19,8 @@ import repro.launch.mesh as mesh_mod
 def small_mesh(*, multi_pod=False):
     shape = (2, 2, 2) if multi_pod else (2, 2)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(axes))
+    from repro.launch.mesh import make_mesh
+    return make_mesh(shape, axes)
 
 mesh_mod.make_production_mesh = small_mesh
 dr.make_production_mesh = small_mesh
