@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import HataConfig
 from repro.core.kvcache import LayerKVCache, append_kv
+from repro.core.topk import chunked_topk
 from repro.kernels import ops, ref
 
 
@@ -135,7 +136,9 @@ def hata_score_select(q: jax.Array, w_h: jax.Array, codes: jax.Array, *,
     q_codes = aggregate_q_codes(q, w_h, h_kv)        # (B, H_kv, G, W)
     scores = ops.hamming_scores(q_codes, codes, rbit=rbit)
     scores = mask_scores(scores, n_valid, window=window)
-    top_scores, idx = jax.lax.top_k(scores, budget)  # (B, H_kv, k)
+    # two-stage on-device top-k: bit-identical to lax.top_k (ties
+    # included) but without its long-minor-axis cost — see core/topk.py
+    top_scores, idx = chunked_topk(scores, budget)   # (B, H_kv, k)
     return top_scores, idx, scores
 
 

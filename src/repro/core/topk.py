@@ -22,6 +22,35 @@ def topk(scores: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     return jax.lax.top_k(scores, k)
 
 
+def chunked_topk(scores: jax.Array, k: int, *,
+                 chunk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Exact two-stage top-k over the last axis: local top-k per chunk,
+    then top-k of the gathered (value, index) candidates.
+
+    The on-device mirror of ``collectives.distributed_topk``: XLA's
+    TopK over a long minor axis is the select stage's bottleneck (it
+    dominates the whole HATA decode pipeline at S >= 4k), while two
+    stages of short top-ks are both cheap. Exact for k <= chunk by the
+    usual subset argument, *including* lax.top_k's tie-break contract:
+    within a chunk, equal-value candidates keep ascending-index order
+    (local tie-break), and the chunk-major candidate layout keeps that
+    order globally, so stage 2's stable selection picks the same
+    lowest-index winners as a flat lax.top_k. Falls back to flat
+    lax.top_k when the axis doesn't chunk evenly or k > chunk.
+    """
+    n = scores.shape[-1]
+    if n % chunk or k > chunk or n <= chunk:
+        return jax.lax.top_k(scores, k)
+    lead = scores.shape[:-1]
+    n_chunks = n // chunk
+    local = scores.reshape(*lead, n_chunks, chunk)
+    lv, li = jax.lax.top_k(local, k)
+    gi = li + (jnp.arange(n_chunks) * chunk)[:, None]
+    v, sel = jax.lax.top_k(lv.reshape(*lead, n_chunks * k), k)
+    return v, jnp.take_along_axis(gi.reshape(*lead, n_chunks * k), sel,
+                                  axis=-1)
+
+
 def topk_mask(scores: jax.Array, k: int) -> jax.Array:
     """Boolean mask of the top-k entries along the last axis."""
     _, idx = topk(scores, k)

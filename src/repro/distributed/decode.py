@@ -225,20 +225,18 @@ class SPDecode:
         qg = q.reshape(b, h_kv, g, d)
         scale = d ** -0.5
 
-        def gather_rows(leaf, idx):
-            """leaf (B,S,Hkv,d) + per-head rows idx (B,Hkv,R)
-            -> (B,R,Hkv,d) without transposing the cache."""
-            ridx = jnp.moveaxis(idx, 1, 2)[..., None]     # (B,R,Hkv,1)
-            return jnp.take_along_axis(leaf, ridx, axis=1)
-
         def dense():
             mask = jnp.broadcast_to(valid, (b, h_kv, s_local))
             return _partial_stats(qg, k_cache, v_cache, mask, scale)
 
         def hata():
-            # local shard of the same batched score pipeline as
-            # hata_decode_batched: shared q aggregation, batched Hamming
-            # kernel, shared validity/window masking at shard offsets.
+            # local shard of the same batched score -> select -> gather
+            # pipeline as hata_decode_batched: shared q aggregation,
+            # batched Hamming kernel, shared validity/window masking at
+            # shard offsets, then the stats-emitting paged fused-gather
+            # kernel over the winners this shard holds — no transposed
+            # cache copy, no XLA row gather (the merge below is the only
+            # cross-shard traffic).
             q_codes = ha.aggregate_q_codes(q, w_h, h_kv)
             scores = ops.hamming_scores(q_codes, codes,
                                         rbit=cfg.hata.rbit)
@@ -251,18 +249,17 @@ class SPDecode:
             if self.mode == "local_split":
                 k_loc = min(max(budget // self.n_seq_shards, 1), s_local)
                 top_s, idx_l = jax.lax.top_k(scores, k_loc)
-                return _partial_stats(qg, gather_rows(k_cache, idx_l),
-                                      gather_rows(v_cache, idx_l),
-                                      top_s >= 0, scale)
-            # two-stage exact
+                return ops.gather_decode_stats(q, k_cache, v_cache,
+                                               idx_l, top_s >= 0)
+            # two-stage exact: attend only over the global winners this
+            # shard owns — an arbitrary (non-prefix) selection mask.
             gv, gi = distributed_topk(scores, budget, self.seq_axes,
                                       s_local)
             li = gi - offset
             owned = (li >= 0) & (li < s_local) & (gv >= 0)
             li_c = jnp.clip(li, 0, s_local - 1)
-            return _partial_stats(qg, gather_rows(k_cache, li_c),
-                                  gather_rows(v_cache, li_c), owned,
-                                  scale)
+            return ops.gather_decode_stats(q, k_cache, v_cache, li_c,
+                                           owned)
 
         if static_flag is None:
             m, l, o = jax.lax.cond(use_hata, hata, dense)
@@ -359,15 +356,20 @@ class SPDecode:
                 logits, jnp.broadcast_to(valid, (b, s_local)), ckv)
 
         def hata():
-            rbit = cfg.hata.rbit
+            # local shard of the MLA latent pipeline: batched Hamming
+            # kernel over the shared code stream, shard-offset masking,
+            # then the split-latent stats-emitting paged gather kernel
+            # (q_c·c + q_r·k_r logits computed in-kernel; W_uv applied
+            # after the cross-shard merge).
             q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
-            x_ = jax.lax.population_count(jnp.bitwise_xor(
-                q_codes[:, :, None, :], codes[:, None, :, :]))
-            scores = (h * rbit
-                      - jnp.sum(x_.astype(jnp.int32), axis=(1, 3)))
-            scores = jnp.where(valid, scores, -1)          # (B, S_l)
+            scores = ops.hamming_scores_latent(q_codes, codes,
+                                               rbit=cfg.hata.rbit)
+            scores = ha.mask_scores(scores[:, None], n_valid,
+                                    window=cfg.sliding_window,
+                                    positions=abs_pos)[:, 0]  # (B, S_l)
             s_total = s_local * self.n_seq_shards
-            budget = min(cfg.hata.budget(s_total), s_total)
+            budget = ha.clamped_budget(cfg.hata, s_total,
+                                       cfg.sliding_window)
             if self.mode == "local_split":
                 k_loc = min(max(budget // self.n_seq_shards, 1), s_local)
                 top_s, idx_l = jax.lax.top_k(scores, k_loc)
@@ -378,10 +380,11 @@ class SPDecode:
                 li = gi - offset
                 mask = (li >= 0) & (li < s_local) & (gv >= 0)
                 idx_l = jnp.clip(li, 0, s_local - 1)
-            sel_c = jnp.take_along_axis(ckv, idx_l[..., None], 1)
-            sel_r = jnp.take_along_axis(krope, idx_l[..., None], 1)
-            logits = self._mla_logits(cfg, q_lat, sel_c, sel_r)
-            return self._mla_stats(logits, mask, sel_c)
+            m = cfg.mla
+            return ops.mla_gather_decode(
+                q_lat, ckv, krope, idx_l, lora_rank=m.kv_lora_rank,
+                scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
+                sel_mask=mask, return_stats=True)
 
         if static_flag is None:
             mm, ll, oo = jax.lax.cond(use_hata, hata, dense)

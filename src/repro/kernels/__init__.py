@@ -4,15 +4,21 @@
 ops.py      batched jit wrappers with pallas/xla dispatch
 ref.py      pure-jnp oracles (ground truth + dry-run execution path)
 """
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, runtime
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import (flash_decode,
                                         flash_decode_gathered,
-                                        flash_decode_gathered_batched)
+                                        flash_decode_gathered_batched,
+                                        flash_decode_gathered_stats_batched,
+                                        mla_decode_gathered_batched)
 from repro.kernels.hamming_score import (hamming_score,
-                                         hamming_score_batched)
+                                         hamming_score_batched,
+                                         hamming_score_latent)
 from repro.kernels.hash_encode import hash_encode
 
-__all__ = ["ops", "ref", "flash_attention", "flash_decode",
+__all__ = ["ops", "ref", "runtime", "flash_attention", "flash_decode",
            "flash_decode_gathered", "flash_decode_gathered_batched",
-           "hamming_score", "hamming_score_batched", "hash_encode"]
+           "flash_decode_gathered_stats_batched",
+           "mla_decode_gathered_batched", "hamming_score",
+           "hamming_score_batched", "hamming_score_latent",
+           "hash_encode"]

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import runtime
+
 NEG_INF = -1e30
 
 
@@ -93,9 +95,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     q_offset: int = 0, block_q: int = 512,
-                    block_k: int = 512, interpret: bool = True) -> jax.Array:
+                    block_k: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
     """Single-head flash attention. q: (Sq, d), k: (Sk, d), v: (Sk, dv)
     -> (Sq, dv). dv may differ from d (MLA materialized form)."""
+    interpret = runtime.resolve_interpret(interpret)
     sq, d = q.shape
     sk = k.shape[0]
     dv = v.shape[-1]

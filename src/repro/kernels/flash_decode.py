@@ -1,7 +1,10 @@
 """Flash decode kernels: one query token against a KV cache.
 
-Two variants implement the paper's "fuse gather with FlashAttention"
-(§4, third optimization) on TPU:
+These implement the paper's "fuse gather with FlashAttention" (§4,
+third optimization) on TPU. The batched variants at the bottom are the
+*only* HATA decode data path — GQA, MLA-latent and the sequence-parallel
+shards all bottom out in the same paged-gather chunk pipeline
+(:func:`_paged_chunk_pipeline`).
 
 ``flash_decode``
     Dense/compacted decode: the G query heads of one GQA group attend
@@ -11,14 +14,11 @@ Two variants implement the paper's "fuse gather with FlashAttention"
     is a single fused HBM pass, which GSPMD also partitions best.
 
 ``flash_decode_gathered``
-    The fused-gather variant: top-k row indices are scalar-prefetched
-    into SMEM and drive the BlockSpec index_map, so the kernel DMAs
-    exactly the selected KV rows HBM->VMEM (the TPU paged-attention
-    pattern with page_size = 1 row). No compacted copy is materialized.
-    Trade-off (see DESIGN.md §3): row-granular DMA descriptors issue at
-    (1, d) granularity — bytes win is identical to gather_dense, but the
-    DMA issue rate can bind at small d; `rows_per_block` batches the
-    grid so multiple row DMAs are in flight.
+    The per-head fused-gather variant: top-k row indices are scalar-
+    prefetched into SMEM and drive the BlockSpec index_map, so the
+    kernel DMAs exactly the selected KV rows HBM->VMEM (the TPU
+    paged-attention pattern with page_size = 1 row). Kept as the
+    benchmark baseline for the batched pipeline.
 
 ``flash_decode_gathered_batched``
     The production decode path: the same fused gather, batched over
@@ -27,6 +27,29 @@ Two variants implement the paper's "fuse gather with FlashAttention"
     Applies the selection-validity mask inside the kernel, which is what
     lets the caller drop the exact-recompute correction branch the
     per-head variant needed (see core/hash_attention.py).
+
+``flash_decode_gathered_stats_batched``
+    The sequence-parallel variant of the same kernel: identical paged
+    gather + online softmax, but it emits the flash partials (m, l, o~)
+    *unnormalized* instead of dividing by l, so a sharded caller can
+    psum-merge across shards (``collectives.merge_partial_softmax``).
+    Accepts an arbitrary per-selection ``sel_mask`` because the
+    two_stage SP mode attends only over the global winners a shard
+    *owns* — not a prefix of the selection.
+
+``mla_decode_gathered_batched``
+    The split-latent MLA variant (beyond-paper HATA-over-latent): one
+    shared (B, S, r) + (B, S, rope) latent cache, absorbed queries, and
+    logits computed as q_c·c + q_r·k_r so no concatenated copy of the
+    latent cache is ever materialized. Same chunk pipeline, two DMA
+    streams per selected row — the (ckv, krope) pair. Normalized or
+    stats-emitting (``return_stats``) for the SP shards.
+
+Trade-off (see DESIGN.md §3): row-granular DMA descriptors issue at
+(1, d) granularity — the bytes win is identical to gather_dense, but
+the DMA issue rate can bind at small d; ``block_k`` batches rows into
+double-buffered chunks so a whole chunk's row copies are in flight
+while the previous chunk computes.
 """
 from __future__ import annotations
 
@@ -36,6 +59,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import runtime
 
 NEG_INF = -1e30
 
@@ -84,8 +109,10 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  valid_len: Optional[jax.Array] = None, *,
-                 block_k: int = 1024, interpret: bool = True) -> jax.Array:
+                 block_k: int = 1024,
+                 interpret: Optional[bool] = None) -> jax.Array:
     """q: (G, d), k/v: (S, d), valid_len: scalar int32 (default S)."""
+    interpret = runtime.resolve_interpret(interpret)
     g, d = q.shape
     s = k.shape[0]
     if valid_len is None:
@@ -119,7 +146,7 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Fused-gather decode (scalar-prefetched top-k indices)
+# Fused-gather decode (scalar-prefetched top-k indices), per head
 # ---------------------------------------------------------------------------
 def _gather_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                    acc_ref, *, scale: float, rows: int, n_blocks: int):
@@ -155,7 +182,7 @@ def _gather_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def flash_decode_gathered(q: jax.Array, k_cache: jax.Array,
                           v_cache: jax.Array, idx: jax.Array, *,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: Optional[bool] = None) -> jax.Array:
     """Fused gather+decode. q: (G, d), caches: (S, d), idx: (k,) int32.
 
     Each grid step DMAs one selected KV row pair (page_size=1 paged
@@ -163,6 +190,7 @@ def flash_decode_gathered(q: jax.Array, k_cache: jax.Array,
     Exact w.r.t. ``ref.gather_decode_attention_ref`` for duplicate-free
     idx (top-k indices are unique by construction).
     """
+    interpret = runtime.resolve_interpret(interpret)
     g, d = q.shape
     n_sel = idx.shape[0]
     from jax.experimental.pallas import tpu as pltpu
@@ -191,68 +219,222 @@ def flash_decode_gathered(q: jax.Array, k_cache: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Shared paged-row DMA chunk pipeline
+# ---------------------------------------------------------------------------
+def _paged_chunk_pipeline(n_chunks: int, block_k: int, row_copies,
+                          compute, carry):
+    """Double-buffered selected-row DMA pipeline shared by every batched
+    gather kernel (GQA normalized, GQA stats, MLA split-latent).
+
+    ``row_copies(pos, j, slot)`` returns the async-copy descriptors that
+    land selected row ``pos`` (an index into the padded selection) in
+    buffer row ``j`` of double-buffer ``slot``; ``compute(ci, slot,
+    carry)`` consumes one resident chunk. Chunk ci+1's row copies are
+    issued *before* chunk ci is consumed, so a whole chunk's DMAs are in
+    flight while the previous chunk computes (and, on hardware, overlap
+    the MXU work). Both the chunk walk and the per-row issue/drain are
+    ``fori_loop``s: trace size is O(1) in the budget, where the previous
+    revision python-unrolled one DMA pair per selected row and large
+    budgets exploded the jaxpr.
+
+    Callers must pad the selection to ``n_chunks * block_k`` entries
+    (kept in-range) and mask the tail out of the softmax — uniform
+    chunks are what keep the loop bodies static.
+    """
+    def start(ci, slot):
+        def issue(j, _):
+            for c in row_copies(ci * block_k + j, j, slot):
+                c.start()
+            return 0
+        jax.lax.fori_loop(0, block_k, issue, 0)
+
+    def wait(ci, slot):
+        def drain(j, _):
+            for c in row_copies(ci * block_k + j, j, slot):
+                c.wait()
+            return 0
+        jax.lax.fori_loop(0, block_k, drain, 0)
+
+    start(0, 0)
+
+    def body(ci, carry):
+        slot = jax.lax.rem(ci, 2)
+
+        @pl.when(ci + 1 < n_chunks)
+        def _prefetch():
+            start(ci + 1, 1 - slot)
+
+        wait(ci, slot)
+        return compute(ci, slot, carry)
+
+    return jax.lax.fori_loop(0, n_chunks, body, carry)
+
+
+def _pad_selection(idx: jax.Array, sel_mask: Optional[jax.Array],
+                   block_k: int):
+    """Pad the selection axis to a block_k multiple (zeros stay in-range;
+    padded mask entries are False). Returns (idx, sel_mask, n_chunks)."""
+    n_sel = idx.shape[-1]
+    block_k = min(block_k, n_sel)
+    n_chunks = pl.cdiv(n_sel, block_k)
+    pad = n_chunks * block_k - n_sel
+    if pad:
+        cfg = [(0, 0)] * (idx.ndim - 1) + [(0, pad)]
+        idx = jnp.pad(idx, cfg)
+        if sel_mask is not None:
+            sel_mask = jnp.pad(sel_mask.astype(jnp.int32), cfg)
+    if sel_mask is not None:
+        sel_mask = sel_mask.astype(jnp.int32)
+    return idx, sel_mask, block_k, n_chunks
+
+
+# ---------------------------------------------------------------------------
 # Batched fused-gather decode: score -> select -> gather in one pipeline
 # ---------------------------------------------------------------------------
-def _gather_batched_kernel(idx_ref, nvalid_ref, q_ref, k_ref, v_ref,
-                           o_ref, kbuf, vbuf, sems, *, scale: float,
-                           block_k: int, n_sel: int):
-    from jax.experimental.pallas import tpu as pltpu
+def _gqa_gather_kernel(idx_ref, nvalid_ref, q_ref, *refs, scale: float,
+                       block_k: int, n_chunks: int, n_sel: int,
+                       has_mask: bool, return_stats: bool):
+    from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+    if has_mask:
+        mask_ref, k_ref, v_ref = refs[:3]
+        refs = refs[3:]
+    else:
+        mask_ref = None
+        k_ref, v_ref = refs[:2]
+        refs = refs[2:]
+    if return_stats:
+        m_ref, l_ref, o_ref, kbuf, vbuf, sems = refs
+    else:
+        (o_ref, kbuf, vbuf, sems) = refs
+        m_ref = l_ref = None
+
     bi = pl.program_id(0)
     hi = pl.program_id(1)
     n_valid = nvalid_ref[bi, hi]
     q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, d)
     g, d = q.shape
-    m = jnp.full((g, 1), NEG_INF, jnp.float32)
-    l = jnp.zeros((g, 1), jnp.float32)
-    acc = jnp.zeros((g, d), jnp.float32)
-    for base in range(0, n_sel, block_k):
-        rows = min(block_k, n_sel - base)
 
-        def row_dma(j, which, buf):
-            row = idx_ref[bi, hi, base + j]
-            src = (k_ref if which == 0 else v_ref)
-            return pltpu.make_async_copy(
-                src.at[bi, pl.ds(row, 1), hi],            # (1, d) row
-                buf.at[pl.ds(j, 1)], sems.at[which, j])
+    def row_copies(pos, j, slot):
+        from jax.experimental.pallas import tpu as pltpu
+        row = idx_ref[bi, hi, pos]
+        return [
+            pltpu.make_async_copy(k_ref.at[bi, pl.ds(row, 1), hi],
+                                  kbuf.at[slot, pl.ds(j, 1)],
+                                  sems.at[slot, 0, j]),
+            pltpu.make_async_copy(v_ref.at[bi, pl.ds(row, 1), hi],
+                                  vbuf.at[slot, pl.ds(j, 1)],
+                                  sems.at[slot, 1, j]),
+        ]
 
-        # issue every row-pair DMA of the chunk, then drain: the copies
-        # overlap each other (and, on hardware, the previous chunk's
-        # compute) instead of serializing row by row.
-        for j in range(rows):
-            row_dma(j, 0, kbuf).start()
-            row_dma(j, 1, vbuf).start()
-        for j in range(rows):
-            row_dma(j, 0, kbuf).wait()
-            row_dma(j, 1, vbuf).wait()
-
-        k = kbuf[:rows].astype(jnp.float32)               # (rows, d)
+    def compute(ci, slot, carry):
+        m, l, acc = carry
+        k = kbuf[slot].astype(jnp.float32)                # (block_k, d)
         logits = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)           # (G, rows)
-        # sel_valid applied *inside* the kernel: invalid selections'
+            preferred_element_type=jnp.float32)           # (G, block_k)
+        # validity applied *inside* the kernel: invalid selections'
         # logits go to -inf before the softmax. p is zeroed explicitly
         # so an all-invalid chunk can't inject exp(-inf - -inf) mass
-        # while m is still at its -inf init.
-        kpos = base + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
-        vmask = kpos < n_valid
+        # while m is still at its -inf init. Padded tail rows (pos >=
+        # n_sel) are masked by the same predicate since n_valid <= n_sel.
+        kpos = ci * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        vmask = kpos < jnp.minimum(n_valid, n_sel)
+        if has_mask:
+            sel = mask_ref[0, 0, pl.ds(ci * block_k, block_k)]
+            vmask = vmask & (sel != 0)[None, :]
         logits = jnp.where(vmask, logits, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(logits, -1, keepdims=True))
         alpha = jnp.exp(m - m_new)
         p = jnp.where(vmask, jnp.exp(logits - m_new), 0.0)
-        l = l * alpha + jnp.sum(p, -1, keepdims=True)
-        v = vbuf[:rows].astype(jnp.float32)
-        acc = acc * alpha + jnp.dot(p, v,
-                                    preferred_element_type=jnp.float32)
-        m = m_new
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        l_new = l * alpha + jnp.sum(p, -1, keepdims=True)
+        v = vbuf[slot].astype(jnp.float32)
+        acc_new = acc * alpha + jnp.dot(p, v,
+                                        preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    carry0 = (jnp.full((g, 1), NEG_INF, jnp.float32),
+              jnp.zeros((g, 1), jnp.float32),
+              jnp.zeros((g, d), jnp.float32))
+    m, l, acc = _paged_chunk_pipeline(n_chunks, block_k, row_copies,
+                                      compute, carry0)
+    if return_stats:
+        m_ref[0, 0] = m[:, 0]
+        l_ref[0, 0] = l[:, 0]
+        o_ref[0, 0] = acc.astype(o_ref.dtype)
+    else:
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _gqa_gather_call(q, k_cache, v_cache, idx, n_valid, sel_mask, *,
+                     block_k, interpret, return_stats):
+    b, h_kv, g, d = q.shape
+    n_sel = idx.shape[-1]
+    assert idx.shape == (b, h_kv, n_sel), (idx.shape, q.shape)
+    if n_valid is None:
+        n_valid = jnp.full((b, h_kv), n_sel, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    # scalar or exact-shape only: a (B,) vector would silently broadcast
+    # onto the trailing h_kv axis whenever B == H_kv
+    assert n_valid.shape in ((), (b, h_kv)), (n_valid.shape, q.shape)
+    n_valid = jnp.broadcast_to(n_valid, (b, h_kv))
+    idx, sel_mask, block_k, n_chunks = _pad_selection(
+        idx.astype(jnp.int32), sel_mask, block_k)
+    has_mask = sel_mask is not None
+    from jax.experimental.pallas import tpu as pltpu
+    k_pad = idx.shape[-1]
+    in_specs = [pl.BlockSpec((1, 1, g, d),
+                             lambda bi, hi, idx_ref, nv_ref: (bi, hi, 0, 0))]
+    if has_mask:
+        in_specs.append(pl.BlockSpec(
+            (1, 1, k_pad), lambda bi, hi, idx_ref, nv_ref: (bi, hi, 0)))
+    in_specs += [pl.BlockSpec(memory_space=pltpu.ANY),
+                 pl.BlockSpec(memory_space=pltpu.ANY)]
+    out_spec = pl.BlockSpec((1, 1, g, d),
+                            lambda bi, hi, idx_ref, nv_ref: (bi, hi, 0, 0))
+    if return_stats:
+        ml_spec = pl.BlockSpec((1, 1, g),
+                               lambda bi, hi, idx_ref, nv_ref: (bi, hi, 0))
+        out_specs = (ml_spec, ml_spec, out_spec)
+        out_shape = (jax.ShapeDtypeStruct((b, h_kv, g), jnp.float32),
+                     jax.ShapeDtypeStruct((b, h_kv, g), jnp.float32),
+                     jax.ShapeDtypeStruct((b, h_kv, g, d), jnp.float32))
+    else:
+        out_specs = out_spec
+        out_shape = jax.ShapeDtypeStruct((b, h_kv, g, d), q.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h_kv),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((2, block_k, d), k_cache.dtype),
+            pltpu.VMEM((2, block_k, d), v_cache.dtype),
+            pltpu.SemaphoreType.DMA((2, 2, block_k)),
+        ],
+    )
+    operands = (idx, n_valid, q)
+    if has_mask:
+        operands += (sel_mask,)
+    operands += (k_cache, v_cache)
+    return pl.pallas_call(
+        functools.partial(_gqa_gather_kernel, scale=d ** -0.5,
+                          block_k=block_k, n_chunks=n_chunks, n_sel=n_sel,
+                          has_mask=has_mask, return_stats=return_stats),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=runtime.resolve_interpret(interpret),
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def flash_decode_gathered_batched(q: jax.Array, k_cache: jax.Array,
                                   v_cache: jax.Array, idx: jax.Array,
-                                  n_valid: Optional[jax.Array] = None, *,
-                                  block_k: int = 128,
-                                  interpret: bool = True) -> jax.Array:
+                                  n_valid: Optional[jax.Array] = None,
+                                  sel_mask: Optional[jax.Array] = None, *,
+                                  block_k: Optional[int] = None,
+                                  interpret: Optional[bool] = None,
+                                  ) -> jax.Array:
     """Batched fused gather+decode attention — one dispatch, no vmap.
 
     q: (B, H_kv, G, d), k_cache/v_cache: (B, S, H_kv, d) *native* cache
@@ -260,51 +442,219 @@ def flash_decode_gathered_batched(q: jax.Array, k_cache: jax.Array,
     (B, H_kv) int32 count of valid selections — entries past it are
     masked out of the softmax (idx must sort invalid entries last,
     which lax.top_k guarantees under the match-score convention).
-    Returns (B, H_kv, G, d).
+    sel_mask: optional (B, H_kv, k) bool/int32 arbitrary per-selection
+    mask, ANDed with the prefix mask (sequence-parallel ownership
+    filtering). Returns (B, H_kv, G, d).
 
     The TPU paged-attention pattern with page_size = 1 row: the caches
-    stay in ANY/HBM memory space (never auto-tiled into VMEM), the
-    top-k indices are scalar-prefetched into SMEM, and each (B, H_kv)
-    grid step manually DMAs its selected rows HBM->VMEM in
-    ``block_k``-row chunks — all of a chunk's row-pair copies in flight
-    at once — then runs the chunk through an online softmax. No
+    stay in ANY/HBM space (never auto-tiled into VMEM), the top-k
+    indices are scalar-prefetched into SMEM, and each (B, H_kv) grid
+    step walks its selection in ``block_k``-row double-buffered chunks —
+    all of a chunk's row-pair DMAs in flight while the previous chunk
+    runs the online softmax (see ``_paged_chunk_pipeline``). No
     transposed cache copy, no compacted intermediate; the only HBM
     traffic is the k selected rows. Invalid rows' DMAs still land (idx
     stays in-range) but their logits are masked to -inf inside the
     kernel, so the output is bit-identical to running over only the
     valid prefix (same chunk alignment).
     """
-    b, h_kv, g, d = q.shape
+    return _gqa_gather_call(q, k_cache, v_cache, idx, n_valid, sel_mask,
+                            block_k=runtime.gather_block_k(block_k),
+                            interpret=interpret, return_stats=False)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_gathered_stats_batched(
+        q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+        idx: jax.Array, n_valid: Optional[jax.Array] = None,
+        sel_mask: Optional[jax.Array] = None, *,
+        block_k: Optional[int] = None,
+        interpret: Optional[bool] = None):
+    """Stats-emitting variant of :func:`flash_decode_gathered_batched`.
+
+    Same paged gather and in-kernel masking, but returns the flash
+    partials (m, l, o~) — m/l: (B, H_kv, G) f32, o~: (B, H_kv, G, d)
+    f32 *unnormalized* — for the sequence-parallel psum merge
+    (``collectives.merge_partial_softmax``). A grid cell whose whole
+    selection is masked emits (m=-1e30, l=0, o=0), the merge's
+    nothing-to-contribute convention.
+    """
+    return _gqa_gather_call(q, k_cache, v_cache, idx, n_valid, sel_mask,
+                            block_k=runtime.gather_block_k(block_k),
+                            interpret=interpret, return_stats=True)
+
+
+# ---------------------------------------------------------------------------
+# Batched split-latent MLA fused-gather decode
+# ---------------------------------------------------------------------------
+def _mla_gather_kernel(idx_ref, nvalid_ref, q_ref, *refs, scale: float,
+                       lora_rank: int, block_k: int, n_chunks: int,
+                       n_sel: int, has_mask: bool, return_stats: bool):
+    if has_mask:
+        mask_ref, ckv_ref, kr_ref = refs[:3]
+        refs = refs[3:]
+    else:
+        mask_ref = None
+        ckv_ref, kr_ref = refs[:2]
+        refs = refs[2:]
+    if return_stats:
+        m_ref, l_ref, o_ref, cbuf, rbuf, sems = refs
+    else:
+        o_ref, cbuf, rbuf, sems = refs
+        m_ref = l_ref = None
+
+    bi = pl.program_id(0)
+    n_valid = nvalid_ref[bi]
+    q = q_ref[0].astype(jnp.float32) * scale              # (H, r+rd)
+    h = q.shape[0]
+    q_c = q[:, :lora_rank]
+    q_r = q[:, lora_rank:]
+
+    def row_copies(pos, j, slot):
+        from jax.experimental.pallas import tpu as pltpu
+        row = idx_ref[bi, pos]
+        return [
+            pltpu.make_async_copy(ckv_ref.at[bi, pl.ds(row, 1)],
+                                  cbuf.at[slot, pl.ds(j, 1)],
+                                  sems.at[slot, 0, j]),
+            pltpu.make_async_copy(kr_ref.at[bi, pl.ds(row, 1)],
+                                  rbuf.at[slot, pl.ds(j, 1)],
+                                  sems.at[slot, 1, j]),
+        ]
+
+    def compute(ci, slot, carry):
+        m, l, acc = carry
+        c = cbuf[slot].astype(jnp.float32)                # (block_k, r)
+        kr = rbuf[slot].astype(jnp.float32)               # (block_k, rd)
+        # absorbed-q split-latent logits: q·[c;k_r] = q_c·c + q_r·k_r —
+        # the concatenated latent row never exists in VMEM.
+        logits = (jax.lax.dot_general(
+                      q_c, c, (((1,), (1,)), ((), ())),
+                      preferred_element_type=jnp.float32)
+                  + jax.lax.dot_general(
+                      q_r, kr, (((1,), (1,)), ((), ())),
+                      preferred_element_type=jnp.float32))  # (H, block_k)
+        kpos = ci * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        vmask = kpos < jnp.minimum(n_valid, n_sel)
+        if has_mask:
+            sel = mask_ref[0, pl.ds(ci * block_k, block_k)]
+            vmask = vmask & (sel != 0)[None, :]
+        logits = jnp.where(vmask, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, -1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(vmask, jnp.exp(logits - m_new), 0.0)
+        l_new = l * alpha + jnp.sum(p, -1, keepdims=True)
+        # values are the compressed-latent rows themselves (W_uv is
+        # applied by the caller after the merge)
+        acc_new = acc * alpha + jnp.dot(p, c,
+                                        preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    carry0 = (jnp.full((h, 1), NEG_INF, jnp.float32),
+              jnp.zeros((h, 1), jnp.float32),
+              jnp.zeros((h, lora_rank), jnp.float32))
+    m, l, acc = _paged_chunk_pipeline(n_chunks, block_k, row_copies,
+                                      compute, carry0)
+    if return_stats:
+        m_ref[0] = m[:, 0]
+        l_ref[0] = l[:, 0]
+        o_ref[0] = acc
+    else:
+        o_ref[0] = acc / jnp.maximum(l, 1e-30)
+
+
+def _mla_gather_call(q_lat, ckv, krope, idx, n_valid, sel_mask, *,
+                     lora_rank, scale, block_k, interpret, return_stats):
+    b, h, qdim = q_lat.shape
+    assert qdim > lora_rank, (q_lat.shape, lora_rank)
     n_sel = idx.shape[-1]
-    assert idx.shape == (b, h_kv, n_sel), (idx.shape, q.shape)
+    assert idx.shape == (b, n_sel), (idx.shape, q_lat.shape)
     if n_valid is None:
-        n_valid = jnp.full((b, h_kv), n_sel, jnp.int32)
-    assert n_valid.shape == (b, h_kv), (n_valid.shape, q.shape)
-    block_k = min(block_k, n_sel)
+        n_valid = jnp.full((b,), n_sel, jnp.int32)
+    n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b,))
+    idx, sel_mask, block_k, n_chunks = _pad_selection(
+        idx.astype(jnp.int32), sel_mask, block_k)
+    has_mask = sel_mask is not None
     from jax.experimental.pallas import tpu as pltpu
+    k_pad = idx.shape[-1]
+    r = lora_rank
+    in_specs = [pl.BlockSpec((1, h, qdim),
+                             lambda bi, idx_ref, nv_ref: (bi, 0, 0))]
+    if has_mask:
+        in_specs.append(pl.BlockSpec(
+            (1, k_pad), lambda bi, idx_ref, nv_ref: (bi, 0)))
+    in_specs += [pl.BlockSpec(memory_space=pltpu.ANY),
+                 pl.BlockSpec(memory_space=pltpu.ANY)]
+    o_spec = pl.BlockSpec((1, h, r), lambda bi, idx_ref, nv_ref: (bi, 0, 0))
+    if return_stats:
+        ml_spec = pl.BlockSpec((1, h), lambda bi, idx_ref, nv_ref: (bi, 0))
+        out_specs = (ml_spec, ml_spec, o_spec)
+        out_shape = (jax.ShapeDtypeStruct((b, h), jnp.float32),
+                     jax.ShapeDtypeStruct((b, h), jnp.float32),
+                     jax.ShapeDtypeStruct((b, h, r), jnp.float32))
+    else:
+        out_specs = o_spec
+        out_shape = jax.ShapeDtypeStruct((b, h, r), jnp.float32)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, h_kv),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda bi, hi, idx_ref, nv_ref: (bi, hi, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda bi, hi, idx_ref, nv_ref:
-                               (bi, hi, 0, 0)),
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[
-            pltpu.VMEM((block_k, d), k_cache.dtype),
-            pltpu.VMEM((block_k, d), v_cache.dtype),
-            pltpu.SemaphoreType.DMA((2, block_k)),
+            pltpu.VMEM((2, block_k, r), ckv.dtype),
+            pltpu.VMEM((2, block_k, krope.shape[-1]), krope.dtype),
+            pltpu.SemaphoreType.DMA((2, 2, block_k)),
         ],
     )
+    operands = (idx, n_valid, q_lat)
+    if has_mask:
+        operands += (sel_mask,)
+    operands += (ckv, krope)
     return pl.pallas_call(
-        functools.partial(_gather_batched_kernel, scale=d ** -0.5,
-                          block_k=block_k, n_sel=n_sel),
+        functools.partial(_mla_gather_kernel, scale=scale,
+                          lora_rank=lora_rank, block_k=block_k,
+                          n_chunks=n_chunks, n_sel=n_sel,
+                          has_mask=has_mask, return_stats=return_stats),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h_kv, g, d), q.dtype),
-        interpret=interpret,
-    )(idx.astype(jnp.int32), n_valid.astype(jnp.int32), q, k_cache,
-      v_cache)
+        out_shape=out_shape,
+        interpret=runtime.resolve_interpret(interpret),
+    )(*operands)
+
+
+@functools.partial(jax.jit, static_argnames=("lora_rank", "scale",
+                                             "block_k", "interpret",
+                                             "return_stats"))
+def mla_decode_gathered_batched(q_lat: jax.Array, ckv: jax.Array,
+                                krope: jax.Array, idx: jax.Array,
+                                n_valid: Optional[jax.Array] = None,
+                                sel_mask: Optional[jax.Array] = None, *,
+                                lora_rank: int, scale: float,
+                                block_k: Optional[int] = None,
+                                interpret: Optional[bool] = None,
+                                return_stats: bool = False):
+    """Batched split-latent MLA fused gather+decode — one dispatch.
+
+    q_lat: (B, H, r+rd) absorbed queries (f32), ckv: (B, S, r) and
+    krope: (B, S, rd) latent caches in native layout, idx: (B, k) int32
+    selected rows (one shared latent stream per layer — no per-head
+    selection), n_valid: optional (B,) valid-selection prefix count,
+    sel_mask: optional (B, k) arbitrary mask (SP ownership filtering).
+    ``scale`` is the model's (qk_nope+qk_rope)**-0.5, not r**-0.5.
+
+    Same paged chunk pipeline as the GQA variant, but each selected row
+    DMAs a *pair* of latent rows (ckv, krope) and the logits are the
+    absorbed-q split form q_c·c + q_r·k_r, so neither a concatenated
+    latent cache copy nor an (B, S) score tensor is materialized. The
+    attention values are the ckv rows themselves; the caller applies
+    W_uv after (for SP shards: after the psum merge).
+
+    Returns o_lat (B, H, r) f32, or the unnormalized flash partials
+    (m, l, o~) when ``return_stats`` (see
+    :func:`flash_decode_gathered_stats_batched`).
+    """
+    return _mla_gather_call(q_lat, ckv, krope, idx, n_valid, sel_mask,
+                            lora_rank=lora_rank, scale=scale,
+                            block_k=runtime.gather_block_k(block_k),
+                            interpret=interpret,
+                            return_stats=return_stats)

@@ -18,10 +18,13 @@ top-k always selects the LARGEST scores (see kernels/ref.py docstring).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import runtime
 
 
 def _hamming_kernel(q_ref, k_ref, out_ref, *, g_rbit: int):
@@ -43,12 +46,15 @@ def _hamming_batched_kernel(q_ref, k_ref, out_ref, *, g_rbit: int):
 
 @functools.partial(jax.jit, static_argnames=("rbit", "block_s", "interpret"))
 def hamming_score(q_codes: jax.Array, k_codes: jax.Array, *, rbit: int,
-                  block_s: int = 2048, interpret: bool = True) -> jax.Array:
+                  block_s: Optional[int] = None,
+                  interpret: Optional[bool] = None) -> jax.Array:
     """Aggregated hash match scores for one kv head.
 
     q_codes: (G, W) uint32, k_codes: (S, W) uint32 -> (S,) int32.
     Batched shapes via ``ops.hamming_score`` (vmap over B, H_kv).
     """
+    block_s = runtime.hamming_block_s(block_s)
+    interpret = runtime.resolve_interpret(interpret)
     g, w = q_codes.shape
     s, w2 = k_codes.shape
     assert w == w2, (q_codes.shape, k_codes.shape)
@@ -72,8 +78,8 @@ def hamming_score(q_codes: jax.Array, k_codes: jax.Array, *, rbit: int,
 
 @functools.partial(jax.jit, static_argnames=("rbit", "block_s", "interpret"))
 def hamming_score_batched(q_codes: jax.Array, k_codes: jax.Array, *,
-                          rbit: int, block_s: int = 2048,
-                          interpret: bool = True) -> jax.Array:
+                          rbit: int, block_s: Optional[int] = None,
+                          interpret: Optional[bool] = None) -> jax.Array:
     """Batched aggregated hash match scores — one dispatch, no vmap.
 
     q_codes: (B, H_kv, G, W) uint32, k_codes: (B, S, H_kv, W) uint32
@@ -85,6 +91,8 @@ def hamming_score_batched(q_codes: jax.Array, k_codes: jax.Array, *,
     (B, H_kv, S, W) copy of the whole code cache before dispatch, which
     doubled the 16-byte/token stream this kernel exists to minimize.
     """
+    block_s = runtime.hamming_block_s(block_s)
+    interpret = runtime.resolve_interpret(interpret)
     b, h_kv, g, w = q_codes.shape
     b2, s, h_kv2, w2 = k_codes.shape
     assert (b, h_kv, w) == (b2, h_kv2, w2), (q_codes.shape, k_codes.shape)
@@ -101,5 +109,51 @@ def hamming_score_batched(q_codes: jax.Array, k_codes: jax.Array, *,
         out_specs=pl.BlockSpec((1, 1, block_s),
                                lambda bi, hi, si: (bi, hi, si)),
         out_shape=jax.ShapeDtypeStruct((b, h_kv, s), jnp.int32),
+        interpret=interpret,
+    )(q_codes, k_codes)
+
+
+def _hamming_latent_kernel(q_ref, k_ref, out_ref, *, h_rbit: int):
+    q = q_ref[...]                      # (B, H, W) uint32
+    k = k_ref[...]                      # (B, block_s, W) uint32
+    x = jnp.bitwise_xor(q[:, :, None, :], k[:, None, :, :])
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    out_ref[...] = h_rbit - jnp.sum(pc, axis=(1, 3))    # (B, block_s)
+
+
+@functools.partial(jax.jit, static_argnames=("rbit", "block_s", "interpret"))
+def hamming_score_latent(q_codes: jax.Array, k_codes: jax.Array, *,
+                         rbit: int, block_s: Optional[int] = None,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Single-stream (MLA latent) aggregated match scores.
+
+    q_codes: (B, H, W) uint32 — every query head hashed against the one
+    shared latent stream — k_codes: (B, S, W) uint32 -> (B, S) int32
+    with score = H*rbit - sum_h hamming(q_h, k).
+
+    The latent stream is :func:`hamming_score_batched`'s degenerate
+    case of a single kv head whose GQA group is all H query heads, so
+    the batch dim would be the whole grid — instead the grid is
+    S-blocks only and each step streams the (B, block_s, W) slab of
+    every request at once (one latent stream per layer makes the whole
+    batch's tile a contiguous (B, block_s) slab in the native layout).
+    Same 16-byte/token HBM stream, 1/B the dispatch count.
+    """
+    block_s = runtime.hamming_block_s(block_s)
+    interpret = runtime.resolve_interpret(interpret)
+    b, h, w = q_codes.shape
+    b2, s, w2 = k_codes.shape
+    assert (b, w) == (b2, w2), (q_codes.shape, k_codes.shape)
+    block_s = min(block_s, s)
+    n_blocks = pl.cdiv(s, block_s)
+    return pl.pallas_call(
+        functools.partial(_hamming_latent_kernel, h_rbit=h * rbit),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((b, h, w), lambda si: (0, 0, 0)),
+            pl.BlockSpec((b, block_s, w), lambda si: (0, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_s), lambda si: (0, si)),
+        out_shape=jax.ShapeDtypeStruct((b, s), jnp.int32),
         interpret=interpret,
     )(q_codes, k_codes)

@@ -16,11 +16,13 @@ packs to (block_s, rbit/32) uint32. VMEM footprint at defaults
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import runtime
 from repro.kernels.ref import WORD_BITS
 
 
@@ -40,13 +42,16 @@ def _hash_encode_kernel(x_ref, w_ref, out_ref, *, rbit: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def hash_encode(x: jax.Array, w_h: jax.Array, *, block_s: int = 512,
-                interpret: bool = True) -> jax.Array:
+def hash_encode(x: jax.Array, w_h: jax.Array, *,
+                block_s: Optional[int] = None,
+                interpret: Optional[bool] = None) -> jax.Array:
     """Encode vectors into bit-packed hash codes.
 
     x: (s, d) float, w_h: (d, rbit) float -> (s, rbit//32) uint32.
     Batched/multi-head shapes are handled by ``ops.hash_encode`` via vmap.
     """
+    block_s = runtime.encode_block_s(block_s)
+    interpret = runtime.resolve_interpret(interpret)
     s, d = x.shape
     d2, rbit = w_h.shape
     assert d == d2, (x.shape, w_h.shape)

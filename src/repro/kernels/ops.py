@@ -28,12 +28,15 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_decode as _fd
 from repro.kernels import hamming_score as _hs
 from repro.kernels import hash_encode as _he
-from repro.kernels import ref
+from repro.kernels import ref, runtime
 
 WORD_BITS = ref.WORD_BITS
 
 _IMPL = "xla" if jax.default_backend() == "cpu" else "pallas"
-_INTERPRET = jax.default_backend() != "tpu"
+# interpret-mode selection and block sizes live in kernels/runtime.py:
+# auto (interpret iff not on TPU), overridable via REPRO_PALLAS_INTERPRET
+# and REPRO_*_BLOCK_* env knobs. The kernel entry points resolve their
+# ``None`` defaults there, so the wrappers below simply omit the args.
 
 
 def get_impl() -> str:
@@ -60,13 +63,17 @@ def use_impl(impl: str):
 # HashEncode
 # ---------------------------------------------------------------------------
 def hash_encode(x: jax.Array, w_h: jax.Array) -> jax.Array:
-    """x: (..., s, d), w_h: (d, rbit) -> (..., s, rbit//32) uint32."""
+    """x: (..., s, d), w_h: (d, rbit) -> (..., s, rbit//32) uint32.
+
+    The encode is row-independent under one shared weight, so batch
+    dims fold into rows: one Pallas dispatch regardless of rank, where
+    a vmap would emit a kernel call per leading-dim lane.
+    """
     if get_impl() == "xla":
         return ref.hash_encode_ref(x, w_h)
-    fn = functools.partial(_he.hash_encode, interpret=_INTERPRET)
-    for _ in range(x.ndim - 2):
-        fn = jax.vmap(fn, in_axes=(0, None))
-    return fn(x, w_h)
+    lead = x.shape[:-1]
+    out = _he.hash_encode(x.reshape(-1, x.shape[-1]), w_h)
+    return out.reshape(*lead, out.shape[-1])
 
 
 def hash_encode_heads(x: jax.Array, w_h: jax.Array) -> jax.Array:
@@ -77,9 +84,8 @@ def hash_encode_heads(x: jax.Array, w_h: jax.Array) -> jax.Array:
                           w_h.astype(jnp.float32))
         return ref.bitpack_ref((proj >= 0).astype(jnp.uint32))
     # inner vmap sees the batch-stripped (S, H, d): heads are axis 1
-    fn = functools.partial(_he.hash_encode, interpret=_INTERPRET)
-    fn = jax.vmap(fn, in_axes=(1, 0), out_axes=1)   # heads
-    fn = jax.vmap(fn, in_axes=(0, None))            # batch
+    fn = jax.vmap(_he.hash_encode, in_axes=(1, 0), out_axes=1)  # heads
+    fn = jax.vmap(fn, in_axes=(0, None))                        # batch
     return fn(x, w_h)
 
 
@@ -87,7 +93,7 @@ def hash_encode_heads(x: jax.Array, w_h: jax.Array) -> jax.Array:
 # Hamming score
 # ---------------------------------------------------------------------------
 def hamming_scores(q_codes: jax.Array, k_codes: jax.Array, *,
-                   rbit: int) -> jax.Array:
+                   rbit: int, block_s: Optional[int] = None) -> jax.Array:
     """q_codes: (B, H_kv, G, W), k_codes: (B, S, H_kv, W) -> (B, H_kv, S).
 
     Pallas impl: one batched dispatch with a (B, H_kv, S-blocks) grid
@@ -96,7 +102,22 @@ def hamming_scores(q_codes: jax.Array, k_codes: jax.Array, *,
     if get_impl() == "xla":
         return ref.hamming_score_batched_ref(q_codes, k_codes, rbit)
     return _hs.hamming_score_batched(q_codes, k_codes, rbit=rbit,
-                                     interpret=_INTERPRET)
+                                     block_s=block_s)
+
+
+def hamming_scores_latent(q_codes: jax.Array, k_codes: jax.Array, *,
+                          rbit: int,
+                          block_s: Optional[int] = None) -> jax.Array:
+    """Single-stream (MLA latent) match scores.
+
+    q_codes: (B, H, W), k_codes: (B, S, W) -> (B, S). Pallas impl: the
+    same batched Hamming dispatch, with the shared latent stream cast as
+    one kv head whose group is all H query heads.
+    """
+    if get_impl() == "xla":
+        return ref.hamming_score_latent_ref(q_codes, k_codes, rbit)
+    return _hs.hamming_score_latent(q_codes, k_codes, rbit=rbit,
+                                    block_s=block_s)
 
 
 def hamming_scores_vmapped(q_codes: jax.Array, k_codes: jax.Array, *,
@@ -109,8 +130,7 @@ def hamming_scores_vmapped(q_codes: jax.Array, k_codes: jax.Array, *,
     """
     if get_impl() == "xla":
         return ref.hamming_score_batched_ref(q_codes, k_codes, rbit)
-    fn = functools.partial(_hs.hamming_score, rbit=rbit,
-                           interpret=_INTERPRET)
+    fn = functools.partial(_hs.hamming_score, rbit=rbit)
     fn = jax.vmap(fn, in_axes=(0, 1), out_axes=0)   # kv heads
     fn = jax.vmap(fn, in_axes=(0, 0))               # batch
     return fn(q_codes, k_codes)
@@ -200,8 +220,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     h_kv = k.shape[2]
     g = h // h_kv
     fn = functools.partial(_fa.flash_attention, causal=causal,
-                           window=window, q_offset=q_offset,
-                           interpret=_INTERPRET)
+                           window=window, q_offset=q_offset)
     # map q head -> kv head, vmap over (B, H).
     qh = jnp.moveaxis(q, 2, 0)                       # (H, B, Sq, d)
     kh = jnp.moveaxis(k, 2, 0)                       # (H_kv, B, Sk, d)
@@ -236,7 +255,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         return out.reshape(b, h, d).astype(q.dtype)
     vl = (jnp.full((b,), s, jnp.int32) if valid_len is None
           else jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,)))
-    fn = functools.partial(_fd.flash_decode, interpret=_INTERPRET)
+    fn = _fd.flash_decode
     qg = q.reshape(b, h_kv, g, d)
     kh = jnp.moveaxis(k, 2, 1)                       # (B, H_kv, S, d)
     vh = jnp.moveaxis(v, 2, 1)
@@ -248,7 +267,8 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def gather_decode_attention(q: jax.Array, k_cache: jax.Array,
                             v_cache: jax.Array, idx: jax.Array, *,
                             sel_valid: Optional[jax.Array] = None,
-                            fused: bool = False) -> jax.Array:
+                            fused: bool = False,
+                            block_k: Optional[int] = None) -> jax.Array:
     """HATA sparse decode: attend over selected rows only.
 
     q: (B, H, d), caches: (B, S, H_kv, d), idx: (B, H_kv, k) int32,
@@ -271,8 +291,7 @@ def gather_decode_attention(q: jax.Array, k_cache: jax.Array,
         nv = (None if sel_valid is None
               else jnp.sum(sel_valid.astype(jnp.int32), axis=-1))
         out = _fd.flash_decode_gathered_batched(qg, k_cache, v_cache,
-                                                idx, nv,
-                                                interpret=_INTERPRET)
+                                                idx, nv, block_k=block_k)
         return out.reshape(b, h, d)
     if get_impl() == "xla":
         return ref.masked_gather_decode_ref(q, k_cache, v_cache, idx,
@@ -282,7 +301,7 @@ def gather_decode_attention(q: jax.Array, k_cache: jax.Array,
                              idx[..., None], axis=2)  # (B, H_kv, k, d)
     vg = jnp.take_along_axis(jnp.moveaxis(v_cache, 2, 1),
                              idx[..., None], axis=2)
-    fn = functools.partial(_fd.flash_decode, interpret=_INTERPRET)
+    fn = _fd.flash_decode
     qg = q.reshape(b, h_kv, g, d)
     if sel_valid is None:
         out = jax.vmap(jax.vmap(fn, in_axes=(0, 0, 0, None)),
@@ -307,10 +326,67 @@ def gather_decode_attention_vmapped(q: jax.Array, k_cache: jax.Array,
     g = h // h_kv
     if get_impl() != "pallas":
         return ref.masked_gather_decode_ref(q, k_cache, v_cache, idx)
-    fn = functools.partial(_fd.flash_decode_gathered,
-                           interpret=_INTERPRET)
+    fn = _fd.flash_decode_gathered
     qg = q.reshape(b, h_kv, g, d)
     kh = jnp.moveaxis(k_cache, 2, 1)
     vh = jnp.moveaxis(v_cache, 2, 1)
     out = jax.vmap(jax.vmap(fn))(qg, kh, vh, idx)
     return out.reshape(b, h, d)
+
+
+def gather_decode_stats(q: jax.Array, k_cache: jax.Array,
+                        v_cache: jax.Array, idx: jax.Array,
+                        sel_mask: Optional[jax.Array] = None, *,
+                        block_k: Optional[int] = None,
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gathered flash partials for the sequence-parallel HATA shards.
+
+    q: (B, H, d), caches: (B, S, H_kv, d) — the *local* shard in native
+    layout — idx: (B, H_kv, R) int32 in-range local rows, sel_mask:
+    optional (B, H_kv, R) bool (arbitrary, not necessarily a prefix:
+    the two_stage mode keeps only the global winners this shard owns).
+    Returns unnormalized (m, l, o~) with m/l: (B, H_kv, G) and
+    o~: (B, H_kv, G, d), ready for ``merge_partial_softmax``.
+    """
+    b, h, d = q.shape
+    h_kv = k_cache.shape[2]
+    g = h // h_kv
+    if get_impl() == "xla":
+        return ref.gather_decode_stats_ref(q, k_cache, v_cache, idx,
+                                           sel_mask)
+    qg = q.reshape(b, h_kv, g, d)
+    return _fd.flash_decode_gathered_stats_batched(
+        qg, k_cache, v_cache, idx, None, sel_mask, block_k=block_k)
+
+
+def mla_gather_decode(q_lat: jax.Array, ckv: jax.Array, krope: jax.Array,
+                      idx: jax.Array, *, lora_rank: int, scale: float,
+                      n_valid: Optional[jax.Array] = None,
+                      sel_mask: Optional[jax.Array] = None,
+                      return_stats: bool = False,
+                      block_k: Optional[int] = None):
+    """Split-latent MLA gathered decode over the shared latent stream.
+
+    q_lat: (B, H, r+rd) absorbed queries, ckv: (B, S, r), krope:
+    (B, S, rd), idx: (B, k) int32 selected rows. Exactly one of
+    ``n_valid`` (B,) prefix count / ``sel_mask`` (B, k) arbitrary mask
+    (or neither: all selections valid). Returns o_lat (B, H, r) f32 —
+    the caller applies W_uv — or the unnormalized flash partials
+    (m, l, o~) when ``return_stats`` (SP shards merge them first).
+    """
+    # "exactly one" is load-bearing: the xla branch lowers n_valid to a
+    # mask, so passing both would AND on pallas but drop n_valid on xla
+    assert n_valid is None or sel_mask is None, \
+        "pass n_valid or sel_mask, not both"
+    if get_impl() == "xla":
+        mask = sel_mask
+        if mask is None and n_valid is not None:
+            k = idx.shape[-1]
+            mask = jnp.arange(k)[None, :] < jnp.reshape(
+                jnp.asarray(n_valid), (-1, 1))
+        return ref.mla_gather_decode_ref(q_lat, ckv, krope, idx, mask,
+                                         lora_rank=lora_rank, scale=scale,
+                                         return_stats=return_stats)
+    return _fd.mla_decode_gathered_batched(
+        q_lat, ckv, krope, idx, n_valid, sel_mask, lora_rank=lora_rank,
+        scale=scale, block_k=block_k, return_stats=return_stats)

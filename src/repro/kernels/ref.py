@@ -98,6 +98,21 @@ def hamming_score_batched_ref(q_codes: jax.Array, k_codes: jax.Array,
     return g * rbit - jnp.sum(ham, axis=2)
 
 
+def hamming_score_latent_ref(q_codes: jax.Array, k_codes: jax.Array,
+                             rbit: int) -> jax.Array:
+    """Single-stream (MLA latent) oracle.
+
+    q_codes: (B, H, W) — all H query heads hashed against the shared
+    latent stream — k_codes: (B, S, W). Returns (B, S) int32 with
+    score = H*rbit - sum_h hamming(q_h, k): the latent stream is one kv
+    head whose GQA group is every query head.
+    """
+    x = jnp.bitwise_xor(q_codes[:, :, None, :], k_codes[:, None, :, :])
+    ham = jnp.sum(jax.lax.population_count(x).astype(jnp.int32),
+                  axis=(1, 3))
+    return q_codes.shape[1] * rbit - ham
+
+
 # ---------------------------------------------------------------------------
 # Attention oracles
 # ---------------------------------------------------------------------------
@@ -204,6 +219,77 @@ def masked_gather_decode_ref(q: jax.Array, k_cache: jax.Array,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def gather_decode_stats_ref(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, idx: jax.Array,
+                            sel_mask: Optional[jax.Array] = None,
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gathered flash-partials oracle (sequence-parallel HATA shards).
+
+    q: (B, H, d), k_cache/v_cache: (B, S, H_kv, d) native layout (the
+    local shard), idx: (B, H_kv, R) int32 in-range rows, sel_mask:
+    optional (B, H_kv, R) bool — False rows contribute nothing (the
+    two_stage ownership filter; masks may be arbitrary, not prefixes).
+    Returns m/l: (B, H_kv, G) f32, o~: (B, H_kv, G, d) f32
+    *unnormalized*, ready for ``merge_partial_softmax`` — the ground
+    truth for ``flash_decode_gathered_stats_batched``. A fully-masked
+    row emits (m=-1e30, l=0, o=0).
+    """
+    b, h, d = q.shape
+    h_kv = k_cache.shape[2]
+    g = h // h_kv
+    ridx = jnp.moveaxis(idx, 1, 2)[..., None]         # (B, R, H_kv, 1)
+    kg = jnp.take_along_axis(k_cache, ridx, axis=1)   # (B, R, H_kv, d)
+    vg = jnp.take_along_axis(v_cache, ridx, axis=1)
+    qg = q.reshape(b, h_kv, g, d)
+    logits = jnp.einsum("bhgd,brhd->bhgr", qg, kg,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    if sel_mask is not None:
+        logits = jnp.where(sel_mask[:, :, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)
+    m_safe = jnp.maximum(m, -1e30)
+    p = jnp.exp(logits - m_safe[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgr,brhd->bhgd", p.astype(vg.dtype), vg,
+                   preferred_element_type=jnp.float32)
+    return m_safe, l, o
+
+
+def mla_gather_decode_ref(q_lat: jax.Array, ckv: jax.Array,
+                          krope: jax.Array, idx: jax.Array,
+                          sel_mask: Optional[jax.Array] = None, *,
+                          lora_rank: int, scale: float,
+                          return_stats: bool = False):
+    """Split-latent MLA gathered-decode oracle.
+
+    q_lat: (B, H, r+rd) absorbed queries, ckv: (B, S, r), krope:
+    (B, S, rd), idx: (B, k) int32 selected rows of the shared latent
+    stream, sel_mask: optional (B, k) bool. Logits are the split form
+    q_c·c + q_r·k_r (no concatenated latent copy); values are the ckv
+    rows (the caller applies W_uv). Returns o_lat (B, H, r) f32
+    normalized, or the unnormalized flash partials (m, l, o~) when
+    ``return_stats`` — the ground truth for
+    ``mla_decode_gathered_batched``.
+    """
+    sel_c = jnp.take_along_axis(ckv, idx[..., None], axis=1)   # (B, k, r)
+    sel_r = jnp.take_along_axis(krope, idx[..., None], axis=1)
+    q_c = q_lat[..., :lora_rank].astype(sel_c.dtype)
+    q_r = q_lat[..., lora_rank:].astype(sel_r.dtype)
+    logits = (jnp.einsum("bhr,bkr->bhk", q_c, sel_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhr,bkr->bhk", q_r, sel_r,
+                           preferred_element_type=jnp.float32)) * scale
+    if sel_mask is not None:
+        logits = jnp.where(sel_mask[:, None, :], logits, -jnp.inf)
+    m = jnp.maximum(jnp.max(logits, axis=-1), -1e30)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhk,bkr->bhr", p.astype(sel_c.dtype), sel_c,
+                   preferred_element_type=jnp.float32)
+    if return_stats:
+        return m, l, o
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
 # ---------------------------------------------------------------------------
 # Partial-softmax (flash) statistics — used by the distributed SP decode
 # merge and by the flash kernels' scratch math.
@@ -230,10 +316,15 @@ def softmax_stats_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def merge_softmax_stats_ref(stats: Tuple[jax.Array, ...]) -> jax.Array:
-    """Merge per-shard (m, l, o) stacked on a leading axis -> (G, dv)."""
-    m, l, o = stats  # (P, G), (P, G), (P, G, dv)
-    m_g = jnp.max(m, axis=0)                       # (G,)
-    alpha = jnp.exp(m - m_g[None])                 # (P, G)
+    """Merge per-shard (m, l, o) stacked on a leading axis.
+
+    m/l: (P, ...), o: (P, ..., dv) -> (..., dv) — any batch shape
+    between the shard axis and o's value axis (the in-process stand-in
+    for ``collectives.merge_partial_softmax``'s pmax/psum).
+    """
+    m, l, o = stats
+    m_g = jnp.max(m, axis=0)
+    alpha = jnp.exp(m - m_g[None])                 # (P, ...)
     l_g = jnp.sum(alpha * l, axis=0)
     o_g = jnp.sum(alpha[..., None] * o, axis=0)
-    return o_g / jnp.maximum(l_g, 1e-30)[:, None]
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]

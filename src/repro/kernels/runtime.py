@@ -1,0 +1,85 @@
+"""Runtime knobs for the Pallas kernel stack.
+
+One switch decides whether every kernel entry point runs compiled
+(Mosaic) or in interpret mode, instead of each entry point hardcoding
+``interpret=True``:
+
+  * auto (default): ``interpret=False`` iff ``jax.default_backend()``
+    is ``"tpu"`` — the kernels compile on real hardware and emulate
+    everywhere else (CPU CI, tests, benchmarks).
+  * ``REPRO_PALLAS_INTERPRET=0|1`` overrides the auto rule (e.g. force
+    interpret on a TPU host while bisecting a Mosaic lowering issue, or
+    assert-compile in a TPU CI job).
+
+Block sizes are the second knob class. Every kernel keeps a tuned
+default but reads it through :func:`block_env`, so a deployment can
+sweep ``REPRO_GATHER_BLOCK_K`` / ``REPRO_HAMMING_BLOCK_S`` / ... without
+touching call sites (see DESIGN.md §3 for what each block controls).
+
+Resolution happens at trace time: the kernel wrappers are jitted with
+``interpret``/``block_*`` as static args, so the first call under a
+given configuration bakes it into the jit cache. Change the env before
+the process imports jax, not mid-run.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def _env_flag(name: str) -> Optional[bool]:
+    val = os.environ.get(name)
+    if val is None:
+        return None
+    low = val.strip().lower()
+    if low in _TRUTHY:
+        return True
+    if low in _FALSY:
+        return False
+    raise ValueError(f"{name}={val!r}: expected one of "
+                     f"{_TRUTHY + _FALSY}")
+
+
+def use_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode."""
+    override = _env_flag("REPRO_PALLAS_INTERPRET")
+    if override is not None:
+        return override
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Kernel entry points pass their ``interpret=None`` default here."""
+    return use_interpret() if interpret is None else bool(interpret)
+
+
+def block_env(name: str, default: int) -> int:
+    """Env-tunable block size (``None``-default resolution helper)."""
+    val = os.environ.get(name)
+    return default if val is None else int(val)
+
+
+def gather_block_k(block_k: Optional[int] = None) -> int:
+    """Rows per DMA chunk of the paged fused-gather kernels."""
+    if block_k is not None:
+        return block_k
+    return block_env("REPRO_GATHER_BLOCK_K", 128)
+
+
+def hamming_block_s(block_s: Optional[int] = None) -> int:
+    """Code-cache rows per tile of the batched Hamming kernels."""
+    if block_s is not None:
+        return block_s
+    return block_env("REPRO_HAMMING_BLOCK_S", 2048)
+
+
+def encode_block_s(block_s: Optional[int] = None) -> int:
+    """Sequence rows per tile of the fused hash-encode kernel."""
+    if block_s is not None:
+        return block_s
+    return block_env("REPRO_ENCODE_BLOCK_S", 512)

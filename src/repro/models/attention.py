@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import hash_attention as ha
 from repro.core.kvcache import LayerKVCache, MLACache, append_kv, append_mla
+from repro.core.topk import chunked_topk
 from repro.distributed.strategy import get_decode_strategy
 from repro.kernels import ops
 from repro.models.layers import apply_rope, init_linear
@@ -385,20 +386,26 @@ def mla_decode_attend(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
         return _mla_attend(cfg, p, q_lat, cache.ckv, cache.krope, mask)
 
     def hata_path():
-        # scores over the single shared latent stream; G = all H heads.
-        rbit = cfg.hata.rbit
+        # The same batched score -> select -> gather pipeline as the GQA
+        # decode, over the single shared latent stream (G = all H heads):
+        # one batched Hamming dispatch, top-k, one split-latent paged
+        # fused-gather dispatch. No (B, S) popcount tensor, no XLA row
+        # gather — see kernels/flash_decode.mla_decode_gathered_batched.
+        m = cfg.mla
         q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
-        x_ = jax.lax.population_count(jnp.bitwise_xor(
-            q_codes[:, :, None, :], cache.codes[:, None, :, :]))
-        scores = (cfg.n_heads * rbit
-                  - jnp.sum(x_.astype(jnp.int32), axis=(1, 3)))  # (B, S)
-        scores = jnp.where(seq[None] < nv, scores, -1)
-        budget = min(cfg.hata.budget(s), s)
-        top_scores, idx = jax.lax.top_k(scores, budget)   # (B, k)
-        ckv_rows = jnp.take_along_axis(cache.ckv, idx[..., None], axis=1)
-        kr_rows = jnp.take_along_axis(cache.krope, idx[..., None], axis=1)
-        return _mla_attend(cfg, p, q_lat, ckv_rows, kr_rows,
-                           top_scores >= 0)
+        scores = ops.hamming_scores_latent(q_codes, cache.codes,
+                                           rbit=cfg.hata.rbit)  # (B, S)
+        scores = ha.mask_scores(scores[:, None], n_valid,
+                                window=cfg.sliding_window)[:, 0]
+        budget = ha.clamped_budget(cfg.hata, s, cfg.sliding_window)
+        top_scores, idx = chunked_topk(scores, budget)    # (B, k)
+        o_lat = ops.mla_gather_decode(
+            q_lat, cache.ckv, cache.krope, idx,
+            lora_rank=m.kv_lora_rank,
+            scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
+            n_valid=jnp.sum((top_scores >= 0).astype(jnp.int32), -1))
+        wuv = p["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
+        return jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
 
     hata_on = cache.codes is not None and cfg.hata.enabled
     strat = get_decode_strategy()

@@ -12,6 +12,15 @@ reference, including the bit-exactness of its *in-kernel* validity
 masking, and property tests for the selection semantics the pipeline
 rests on (top-k tie-breaking on integer hash scores, recall == 1.0
 => identical attention).
+
+The MLA section applies the same treatment to the latent-stream decode:
+the batched latent pipeline (batched Hamming kernel over the shared
+code stream + split-latent paged gather kernel) against the inline-jnp
+path it replaced — integer scores and selection bit-exact, outputs
+numerically tight — batched ≡ looped bit-exact, and ≡ dense latent
+attention whenever the budget covers the cache. The stats-emitting
+kernel variant is checked against its oracle under arbitrary
+(non-prefix) selection masks, the two_stage SP contract.
 """
 import dataclasses
 
@@ -25,10 +34,13 @@ from hypothesis_compat import given, settings, st
 from repro.configs.base import HataConfig
 from repro.core import kvcache, topk
 from repro.core.hash_attention import (clamped_budget, hata_decode,
-                                       hata_decode_batched)
+                                       hata_decode_batched, mask_scores)
 from repro.kernels import ops, ref
-from repro.kernels.flash_decode import flash_decode_gathered_batched
-from repro.kernels.hamming_score import hamming_score_batched
+from repro.kernels.flash_decode import (
+    flash_decode_gathered_batched, flash_decode_gathered_stats_batched,
+    mla_decode_gathered_batched)
+from repro.kernels.hamming_score import (hamming_score_batched,
+                                         hamming_score_latent)
 
 RNG = np.random.default_rng(7)
 HCFG = HataConfig(rbit=64, budget_min=16, budget_max=32,
@@ -148,7 +160,7 @@ def test_fused_kernel_matches_xla_reference(g):
     assert_allclose(np.asarray(rp.out), np.asarray(rx.out), atol=1e-5)
 
 
-@pytest.mark.parametrize("block_k", [8, 128])
+@pytest.mark.parametrize("block_k", [7, 8, 128])
 def test_fused_kernel_masking_is_bit_exact(block_k):
     """Invalid selections must have exactly zero influence: repointing
     every invalid idx entry at different (arbitrary) cache rows cannot
@@ -178,6 +190,205 @@ def test_fused_kernel_masking_is_bit_exact(block_k):
                     np.asarray(want), atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# stats-emitting gather kernel (sequence-parallel variant)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("block_k", [7, 128])
+def test_gathered_stats_kernel_matches_ref(block_k):
+    """The SP variant must agree with its oracle under an *arbitrary*
+    per-selection mask (two_stage ownership filtering is not a prefix),
+    including rows whose whole selection is masked (m=-1e30, l=0)."""
+    rng = np.random.default_rng(11)
+    b, s, h_kv, g, d, k = 2, 40, 2, 4, 32, 24
+    q = jnp.asarray(rng.standard_normal((b, h_kv, g, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, s, (b, h_kv, k)), jnp.int32)
+    mask = np.asarray(rng.integers(0, 2, (b, h_kv, k)), bool)
+    mask[0, 0] = False                      # a shard that owns nothing
+    m, l, o = flash_decode_gathered_stats_batched(
+        q, kc, vc, idx, None, jnp.asarray(mask), block_k=block_k,
+        interpret=True)
+    mr, lr, orf = ref.gather_decode_stats_ref(
+        q.reshape(b, h_kv * g, d), kc, vc, idx, jnp.asarray(mask))
+    assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-5)
+    assert_allclose(np.asarray(l), np.asarray(lr), atol=1e-5)
+    assert_allclose(np.asarray(o), np.asarray(orf), atol=1e-5)
+    # nothing-to-contribute convention for the psum merge
+    assert_array_equal(np.asarray(m[0, 0]), np.full(g, -1e30, np.float32))
+    assert_array_equal(np.asarray(l[0, 0]), np.zeros(g))
+    assert_array_equal(np.asarray(o[0, 0]), np.zeros((g, d)))
+
+
+def test_stats_merge_equals_normalized_kernel():
+    """Splitting one selection across 'shards' and psum-merging the
+    stats kernel's partials must reproduce the normalized kernel."""
+    rng = np.random.default_rng(12)
+    b, s, h_kv, g, d, k, n_shards = 2, 48, 2, 2, 16, 16, 4
+    q = jnp.asarray(rng.standard_normal((b, h_kv, g, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, s, (b, h_kv, k)), jnp.int32)
+    whole = flash_decode_gathered_batched(q, kc, vc, idx, interpret=True)
+    owner = rng.integers(0, n_shards, (b, h_kv, k))
+    stats = []
+    for p_ in range(n_shards):
+        mask = jnp.asarray(owner == p_)
+        stats.append(flash_decode_gathered_stats_batched(
+            q, kc, vc, idx, None, mask, interpret=True))
+    m, l, o = (jnp.stack(x) for x in zip(*stats))
+    merged = ref.merge_softmax_stats_ref((m, l, o))
+    assert_allclose(np.asarray(merged), np.asarray(whole), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MLA latent pipeline: batched kernels vs the inline-jnp path they replaced
+# ---------------------------------------------------------------------------
+MLA_DIMS = dict(h=6, r=48, rd=16, rbit=64, qk_dim=40)
+
+
+def _mla_setup(b, s, seed=0, dims=MLA_DIMS):
+    rng = np.random.default_rng(seed)
+    h, r, rd = dims["h"], dims["r"], dims["rd"]
+    w = jnp.asarray(rng.standard_normal((1, r + rd, dims["rbit"])),
+                    jnp.float32) / np.sqrt(r + rd)
+    ckv = jnp.asarray(rng.standard_normal((b, s, r)), jnp.float32)
+    krope = jnp.asarray(rng.standard_normal((b, s, rd)), jnp.float32)
+    latent = jnp.concatenate([ckv, krope], axis=-1)
+    codes = ops.hash_encode(latent, w[0])            # (B, S, W)
+    q_lat = jnp.asarray(rng.standard_normal((b, h, r + rd)), jnp.float32)
+    pos = rng.integers(s // 4, s - 1, b)
+    pos[-1] = s - 1
+    return w, ckv, krope, codes, q_lat, jnp.asarray(pos, jnp.int32)
+
+
+def _inline_mla_path(q_lat, w, ckv, krope, codes, n_valid, budget, *,
+                     rbit, lora_rank, scale):
+    """The pre-refactor inline-jnp MLA HATA decode, kept verbatim as the
+    differential reference: (B, S) popcount scores, XLA row gathers,
+    concatenated-latent softmax."""
+    b, h, _ = q_lat.shape
+    s = ckv.shape[1]
+    q_codes = ops.hash_encode(q_lat, w[0])           # (B, H, W)
+    x_ = jax.lax.population_count(jnp.bitwise_xor(
+        q_codes[:, :, None, :], codes[:, None, :, :]))
+    scores = h * rbit - jnp.sum(x_.astype(jnp.int32), axis=(1, 3))
+    nv = jnp.reshape(n_valid, (-1, 1))
+    scores = jnp.where(jnp.arange(s)[None] < nv, scores, -1)
+    top_scores, idx = jax.lax.top_k(scores, budget)  # (B, k)
+    ckv_rows = jnp.take_along_axis(ckv, idx[..., None], axis=1)
+    kr_rows = jnp.take_along_axis(krope, idx[..., None], axis=1)
+    kv = jnp.concatenate([ckv_rows, kr_rows], axis=-1)
+    logits = jnp.einsum("bhr,bkr->bhk", q_lat.astype(kv.dtype), kv,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where((top_scores >= 0)[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", probs.astype(ckv_rows.dtype),
+                       ckv_rows, preferred_element_type=jnp.float32)
+    return scores, idx, o_lat
+
+
+def _batched_mla_pipeline(q_lat, w, ckv, krope, codes, n_valid, budget, *,
+                          rbit, lora_rank, scale, block_k=None):
+    """The refactored pipeline exactly as models/attention.py runs it."""
+    q_codes = ops.hash_encode(q_lat, w[0])
+    scores = hamming_score_latent(q_codes, codes, rbit=rbit,
+                                  interpret=True)
+    scores = mask_scores(scores[:, None], n_valid)[:, 0]
+    top_scores, idx = jax.lax.top_k(scores, budget)
+    nv_sel = jnp.sum((top_scores >= 0).astype(jnp.int32), -1)
+    o_lat = mla_decode_gathered_batched(
+        q_lat, ckv, krope, idx, nv_sel, lora_rank=lora_rank, scale=scale,
+        block_k=block_k, interpret=True)
+    return scores, idx, o_lat
+
+
+@pytest.mark.parametrize("budget", [12, 32])
+def test_mla_batched_pipeline_matches_inline_path(budget):
+    """Integer scores and the selected rows must be bit-identical to the
+    inline path (same popcount math, same lax.top_k tie-breaks); the
+    attention output agrees numerically (online vs plain softmax)."""
+    b, s = 3, 64
+    w, ckv, krope, codes, q_lat, pos = _mla_setup(b, s, seed=31)
+    dims = MLA_DIMS
+    kw = dict(rbit=dims["rbit"], lora_rank=dims["r"],
+              scale=dims["qk_dim"] ** -0.5)
+    n_valid = pos + 1
+    s_i, i_i, o_i = _inline_mla_path(q_lat, w, ckv, krope, codes,
+                                     n_valid, budget, **kw)
+    s_b, i_b, o_b = _batched_mla_pipeline(q_lat, w, ckv, krope, codes,
+                                          n_valid, budget, **kw)
+    assert_array_equal(np.asarray(s_b), np.asarray(s_i))
+    assert_array_equal(np.asarray(i_b), np.asarray(i_i))
+    assert_allclose(np.asarray(o_b), np.asarray(o_i), atol=1e-5)
+
+
+@pytest.mark.parametrize("block_k", [5, 128])
+def test_mla_batched_equals_looped(block_k):
+    """One batched dispatch over ragged per-row depths ≡ running the
+    same kernel on B=1 slices — bit-exact (independent grid cells)."""
+    b, s, budget = 3, 64, 16
+    w, ckv, krope, codes, q_lat, pos = _mla_setup(b, s, seed=32)
+    dims = MLA_DIMS
+    kw = dict(rbit=dims["rbit"], lora_rank=dims["r"],
+              scale=dims["qk_dim"] ** -0.5, block_k=block_k)
+    s_b, i_b, o_b = _batched_mla_pipeline(q_lat, w, ckv, krope, codes,
+                                          pos + 1, budget, **kw)
+    for i in range(b):
+        s_1, i_1, o_1 = _batched_mla_pipeline(
+            q_lat[i:i + 1], w, ckv[i:i + 1], krope[i:i + 1],
+            codes[i:i + 1], pos[i:i + 1] + 1, budget, **kw)
+        assert_array_equal(np.asarray(s_b[i]), np.asarray(s_1[0]))
+        assert_array_equal(np.asarray(i_b[i]), np.asarray(i_1[0]))
+        assert_array_equal(np.asarray(o_b[i]), np.asarray(o_1[0]))
+
+
+def test_mla_batched_equals_dense_when_budget_covers_cache():
+    """budget >= cache fill selects every valid latent row, so the
+    pipeline must reproduce dense masked latent attention."""
+    b, s = 3, 48
+    w, ckv, krope, codes, q_lat, pos = _mla_setup(b, s, seed=33)
+    dims = MLA_DIMS
+    _, _, o_b = _batched_mla_pipeline(
+        q_lat, w, ckv, krope, codes, pos + 1, s, rbit=dims["rbit"],
+        lora_rank=dims["r"], scale=dims["qk_dim"] ** -0.5)
+    # float64 dense latent reference
+    kv = np.concatenate([np.asarray(ckv), np.asarray(krope)], axis=-1)
+    logits = np.einsum("bhr,bsr->bhs", np.asarray(q_lat, np.float64),
+                       kv.astype(np.float64)) * dims["qk_dim"] ** -0.5
+    valid = np.arange(s)[None] < (np.asarray(pos) + 1)[:, None]
+    logits = np.where(valid[:, None, :], logits, -np.inf)
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    want = np.einsum("bhs,bsr->bhr", p, np.asarray(ckv, np.float64))
+    assert_allclose(np.asarray(o_b), want, atol=1e-5)
+
+
+def test_mla_stats_kernel_matches_ref_under_arbitrary_mask():
+    """The SP stats variant of the latent kernel vs its oracle with a
+    two_stage-style ownership mask (non-prefix, one all-masked row)."""
+    rng = np.random.default_rng(34)
+    b, s, budget = 3, 64, 16
+    w, ckv, krope, codes, q_lat, pos = _mla_setup(b, s, seed=34)
+    dims = MLA_DIMS
+    idx = jnp.asarray(rng.integers(0, s, (b, budget)), jnp.int32)
+    mask = np.asarray(rng.integers(0, 2, (b, budget)), bool)
+    mask[0] = False
+    kw = dict(lora_rank=dims["r"], scale=dims["qk_dim"] ** -0.5)
+    m, l, o = mla_decode_gathered_batched(
+        q_lat, ckv, krope, idx, None, jnp.asarray(mask),
+        return_stats=True, interpret=True, **kw)
+    mr, lr, orf = ref.mla_gather_decode_ref(
+        q_lat, ckv, krope, idx, jnp.asarray(mask), return_stats=True,
+        **kw)
+    assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-5)
+    assert_allclose(np.asarray(l), np.asarray(lr), atol=1e-5)
+    assert_allclose(np.asarray(o), np.asarray(orf), atol=1e-5)
+    assert_array_equal(np.asarray(m[0]),
+                       np.full(dims["h"], -1e30, np.float32))
+    assert_array_equal(np.asarray(l[0]), np.zeros(dims["h"]))
+
+
 def test_batched_hamming_kernel_matches_ref():
     rng = np.random.default_rng(4)
     b, s, h_kv, g, w_words, rbit = 2, 70, 3, 4, 2, 64
@@ -194,6 +405,21 @@ def test_batched_hamming_kernel_matches_ref():
 # ---------------------------------------------------------------------------
 # selection-semantics properties (hypothesis; self-skip when absent)
 # ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 24),
+       st.sampled_from([16, 32, 64]))
+def test_chunked_topk_bit_identical_to_flat(seed, k, chunk):
+    """The pipeline's two-stage on-device top-k must match lax.top_k
+    bit-for-bit — values, indices AND tie ordering — on heavily-tied
+    integer hash scores (the regime the selection runs in)."""
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.integers(-1, 6, (2, 256)), jnp.int32)
+    v1, i1 = jax.lax.top_k(scores, k)
+    v2, i2 = topk.chunked_topk(scores, k, chunk=chunk)
+    assert_array_equal(np.asarray(v1), np.asarray(v2))
+    assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(1, 24))
 def test_topk_tie_breaking_matches_batched_kernel_scores(seed, g, k):

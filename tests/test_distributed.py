@@ -1,14 +1,103 @@
 """Distributed runtime: SP decode exactness, two-stage top-k, pipeline,
 compressed gradient sync. Multi-device tests run in subprocesses (the
-pytest process keeps 1 device)."""
+pytest process keeps 1 device); the stats-variant kernel cases emulate
+the shard loop in-process (per-shard math has no cross-device state
+beyond the final merge)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from numpy.testing import assert_allclose
 
 from conftest import run_subprocess
+from repro.kernels import ops, ref
 from repro.optim.compression import (compress_with_feedback,
                                      dequantize_int8)
+
+
+def _merge_stats(stats):
+    """Flash (m, l, o) merge over a leading shard axis — the in-process
+    stand-in for collectives.merge_partial_softmax (pmax/psum)."""
+    stacked = tuple(jnp.stack([jnp.asarray(x[i]) for x in stats])
+                    for i in range(3))
+    return np.asarray(ref.merge_softmax_stats_ref(stacked))
+
+
+# ---------------------------------------------------------------------------
+# in-process: two_stage stats-variant gather — kernel ≡ XLA under the merge
+# ---------------------------------------------------------------------------
+def test_two_stage_stats_kernel_matches_xla_under_merge():
+    """The stats-emitting paged-gather kernel must agree with the XLA
+    gather shard-for-shard under the psum merge: every shard attends
+    only over the global winners it owns (arbitrary ownership masks),
+    and the merged output equals global masked gather attention."""
+    rng = np.random.default_rng(5)
+    b, h_kv, g, d, n_shards, s_local, k = 2, 2, 4, 32, 4, 16, 12
+    s = n_shards * s_local
+    h = h_kv * g
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+    # emulate distributed_topk's replicated output: global winners with
+    # a few invalid (-1-score) tail entries
+    scores = jnp.asarray(rng.standard_normal((b, h_kv, s)), jnp.float32)
+    gv, gi = jax.lax.top_k(scores, k)
+    gv = gv.at[:, :, -2:].set(-1.0)                  # invalid tail
+    stats_pallas, stats_xla = [], []
+    for p_ in range(n_shards):
+        off = p_ * s_local
+        li = np.asarray(gi) - off
+        owned = (li >= 0) & (li < s_local) & (np.asarray(gv) >= 0)
+        li_c = jnp.asarray(np.clip(li, 0, s_local - 1), jnp.int32)
+        shard_k = kc[:, off:off + s_local]
+        shard_v = vc[:, off:off + s_local]
+        with ops.use_impl("pallas"):
+            stats_pallas.append(ops.gather_decode_stats(
+                q, shard_k, shard_v, li_c, jnp.asarray(owned)))
+        with ops.use_impl("xla"):
+            stats_xla.append(ops.gather_decode_stats(
+                q, shard_k, shard_v, li_c, jnp.asarray(owned)))
+    merged_p = _merge_stats(stats_pallas)
+    merged_x = _merge_stats(stats_xla)
+    assert_allclose(merged_p, merged_x, atol=1e-5)
+    # and both equal the unsharded masked gather over the same winners
+    want = ref.masked_gather_decode_ref(q, kc, vc, gi, gv >= 0)
+    got = merged_p.reshape(b, h, d)
+    assert_allclose(got, np.asarray(want), atol=1e-5)
+
+
+def test_two_stage_mla_stats_kernel_matches_xla_under_merge():
+    """Same contract for the split-latent MLA stats kernel."""
+    rng = np.random.default_rng(6)
+    b, h, r, rd, n_shards, s_local, k = 2, 6, 48, 16, 4, 16, 12
+    s = n_shards * s_local
+    scale = (r + rd) ** -0.5
+    q_lat = jnp.asarray(rng.standard_normal((b, h, r + rd)), jnp.float32)
+    ckv = jnp.asarray(rng.standard_normal((b, s, r)), jnp.float32)
+    krope = jnp.asarray(rng.standard_normal((b, s, rd)), jnp.float32)
+    scores = jnp.asarray(rng.standard_normal((b, s)), jnp.float32)
+    gv, gi = jax.lax.top_k(scores, k)
+    gv = gv.at[:, -2:].set(-1.0)
+    stats_pallas, stats_xla = [], []
+    for p_ in range(n_shards):
+        off = p_ * s_local
+        li = np.asarray(gi) - off
+        owned = (li >= 0) & (li < s_local) & (np.asarray(gv) >= 0)
+        li_c = jnp.asarray(np.clip(li, 0, s_local - 1), jnp.int32)
+        args = (q_lat, ckv[:, off:off + s_local],
+                krope[:, off:off + s_local], li_c)
+        kw = dict(lora_rank=r, scale=scale,
+                  sel_mask=jnp.asarray(owned), return_stats=True)
+        with ops.use_impl("pallas"):
+            stats_pallas.append(ops.mla_gather_decode(*args, **kw))
+        with ops.use_impl("xla"):
+            stats_xla.append(ops.mla_gather_decode(*args, **kw))
+    merged_p = _merge_stats(stats_pallas)
+    merged_x = _merge_stats(stats_xla)
+    assert_allclose(merged_p, merged_x, atol=1e-5)
+    want = ref.mla_gather_decode_ref(q_lat, ckv, krope, gi, gv >= 0,
+                                     lora_rank=r, scale=scale)
+    assert_allclose(merged_p, np.asarray(want), atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -50,39 +139,49 @@ from repro.distributed import strategy
 
 from repro.launch.mesh import make_mesh
 mesh = make_mesh((2, 4), ("data", "model"))
+B, S, max_len = 2, 24, 64
 for arch in ["llama3-405b", "deepseek-v2-lite-16b", "mixtral-8x22b",
              "hymba-1.5b"]:
-    cfg = get_reduced(arch, d_model=64)
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    if cfg.moe:
-        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
-            cfg.moe,
-            capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k))
-    m = Model(cfg)
+    base = get_reduced(arch, d_model=64)
+    base = dataclasses.replace(base, dtype="float32")
+    if base.moe:
+        base = dataclasses.replace(base, moe=dataclasses.replace(
+            base.moe,
+            capacity_factor=float(base.moe.n_experts) / base.moe.top_k))
+    # two_stage is exact at any budget; local_split only where the
+    # budget saturates every shard (k_loc == S_local) — run it with a
+    # cache-covering budget (clamped_budget floors at the cache size,
+    # which meta tokens may have extended past max_len) and no window
+    # clamp, so its kernel path has an exactness oracle. The reference
+    # is recomputed under the same config.
+    saturated = dataclasses.replace(
+        base, sliding_window=None, hata=dataclasses.replace(
+            base.hata, budget_min=8192, budget_max=8192))
     key = jax.random.PRNGKey(0)
-    p = m.init(key)
-    B, S, max_len = 2, 24, 64
-    toks = jax.random.randint(key, (B, S + 3), 0, cfg.vocab_size)
+    p = Model(base).init(key)          # shapes independent of budget
+    toks = jax.random.randint(key, (B, S + 3), 0, base.vocab_size)
     batch = {"tokens": toks[:, :S]}
-    strategy.set_decode_strategy(None)
-    caches = m.init_caches(B, max_len)
-    lg, c = m.prefill(p, batch, caches, jnp.int32(0))
-    ref = []
-    for i in range(3):
-        lg, c = m.decode_step(p, toks[:, S + i], c,
-                              jnp.int32(S + i + cfg.meta_tokens))
-        ref.append(lg)
-    strategy.set_decode_strategy(SPDecode(
-        mesh, seq_axes=("model",), batch_axes=("data",),
-        mode="two_stage"))
-    caches2 = m.init_caches(B, max_len)
-    lg2, c2 = m.prefill(p, batch, caches2, jnp.int32(0))
-    for i in range(3):
-        lg2, c2 = m.decode_step(p, toks[:, S + i], c2,
-                                jnp.int32(S + i + cfg.meta_tokens))
-        err = float(jnp.abs(lg2 - ref[i]).max())
-        assert err < 1e-4, (arch, i, err)
-    strategy.set_decode_strategy(None)
+    for mode, cfg in (("two_stage", base), ("local_split", saturated)):
+        m = Model(cfg)
+        strategy.set_decode_strategy(None)
+        caches = m.init_caches(B, max_len)
+        lg, c = m.prefill(p, batch, caches, jnp.int32(0))
+        ref = []
+        for i in range(3):
+            lg, c = m.decode_step(p, toks[:, S + i], c,
+                                  jnp.int32(S + i + cfg.meta_tokens))
+            ref.append(lg)
+        strategy.set_decode_strategy(SPDecode(
+            mesh, seq_axes=("model",), batch_axes=("data",),
+            mode=mode))
+        caches2 = m.init_caches(B, max_len)
+        lg2, c2 = m.prefill(p, batch, caches2, jnp.int32(0))
+        for i in range(3):
+            lg2, c2 = m.decode_step(p, toks[:, S + i], c2,
+                                    jnp.int32(S + i + cfg.meta_tokens))
+            err = float(jnp.abs(lg2 - ref[i]).max())
+            assert err < 1e-4, (arch, mode, i, err)
+        strategy.set_decode_strategy(None)
 print("SP-OK")
 """
 
