@@ -1,15 +1,19 @@
 """HATA core: learning-to-hash + hash-aware top-k attention (paper §3),
 the baselines it is compared against (§5.1), and the HATA-off offloading
 extension (§5.3)."""
-from repro.core import baselines, hashing, kvcache, offload, topk
+from repro.core import baselines, hashing, kvcache, offload, paged_cache, topk
 from repro.core.hash_attention import (HataDecodeOut, hata_decode,
-                                       hata_decode_batched, hata_prefill)
+                                       hata_decode_batched,
+                                       hata_decode_paged, hata_prefill)
 from repro.core.kvcache import (LayerKVCache, MLACache, SSMState,
                                 append_kv, append_mla, init_kv_cache,
                                 init_mla_cache, init_ssm_state)
+from repro.core.paged_cache import (PageAllocator, PagedKVPool,
+                                    PagedMLAPool, PrefixCache)
 
-__all__ = ["baselines", "hashing", "kvcache", "offload", "topk",
-           "HataDecodeOut", "hata_decode", "hata_decode_batched",
-           "hata_prefill", "LayerKVCache", "MLACache", "SSMState",
-           "append_kv", "append_mla", "init_kv_cache", "init_mla_cache",
-           "init_ssm_state"]
+__all__ = ["baselines", "hashing", "kvcache", "offload", "paged_cache",
+           "topk", "HataDecodeOut", "hata_decode", "hata_decode_batched",
+           "hata_decode_paged", "hata_prefill", "LayerKVCache",
+           "MLACache", "SSMState", "append_kv", "append_mla",
+           "init_kv_cache", "init_mla_cache", "init_ssm_state",
+           "PageAllocator", "PagedKVPool", "PagedMLAPool", "PrefixCache"]

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import HataConfig
+from repro.core import paged_cache as paged
 from repro.core.kvcache import LayerKVCache, append_kv
 from repro.core.topk import chunked_topk
 from repro.kernels import ops, ref
@@ -205,6 +206,68 @@ def hata_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
     return hata_decode_batched(q, k_new, v_new, w_h, cache, hcfg=hcfg,
                                pos=jnp.asarray(pos, jnp.int32),
                                window=window, fused_gather=fused_gather)
+
+
+def hata_score_select_paged(q: jax.Array, w_h: jax.Array,
+                            codes_pool: jax.Array,
+                            block_table: jax.Array, *, rbit: int,
+                            budget: int, n_valid: jax.Array,
+                            window: Optional[int] = None,
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Paged analogue of :func:`hata_score_select`.
+
+    codes_pool: (P, page, H_kv, W) shared per-layer code pool;
+    block_table: (B, T) int32. Scores are *logical* (B, H_kv, T*page)
+    with garbage rows at -1 (masked inside the paged Hamming kernel),
+    so selection — including the window clamp and the score>=0 validity
+    convention — is byte-for-byte the contiguous selection math; only
+    the score kernel's page fetch differs.
+    """
+    h_kv = codes_pool.shape[2]
+    q_codes = aggregate_q_codes(q, w_h, h_kv)
+    scores = ops.hamming_scores_paged(q_codes, codes_pool, block_table,
+                                      n_valid, rbit=rbit)
+    if window is not None:
+        scores = mask_scores(scores, n_valid, window=window)
+    top_scores, idx = chunked_topk(scores, budget)
+    return top_scores, idx, scores
+
+
+def hata_decode_paged(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                      w_h: jax.Array, pool: paged.PagedKVPool,
+                      block_table: jax.Array, *, hcfg: HataConfig,
+                      pos: jax.Array, window: Optional[int] = None,
+                      ) -> Tuple[jax.Array, paged.PagedKVPool,
+                                 jax.Array, jax.Array]:
+    """Alg. 3 over a paged cache: the serving decode wave's per-layer
+    HATA step.
+
+    q: (B, H, d); k_new/v_new: (B, 1, H_kv, d); pool: the shared
+    per-layer page pool; block_table: (B, T) int32; pos: (B,) int32
+    per-request fill before this token (inactive slots point at the
+    scratch page). Encode + scatter-append, paged score -> select, then
+    logical -> physical translation feeds the shared-pool fused gather.
+    Returns (out (B, H, d), pool, idx (B, H_kv, k) logical, scores).
+    """
+    psz = pool.page_size
+    rbit = w_h.shape[-1]
+    s_log = block_table.shape[1] * psz
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (q.shape[0],))
+    k_codes = ops.hash_encode_heads(k_new, w_h)        # (B, 1, H_kv, W)
+    phys_new = paged.physical_rows(block_table, pos, psz)
+    pool = paged.append_rows_kv(pool, k_new, v_new, k_codes, phys_new)
+
+    n_valid = jnp.asarray(pos) + 1
+    budget = clamped_budget(hcfg, s_log, window)
+    top_scores, idx, scores = hata_score_select_paged(
+        q, w_h, pool.codes, block_table, rbit=rbit, budget=budget,
+        n_valid=n_valid, window=window)
+
+    phys_idx = paged.physical_rows(block_table, idx, psz)
+    out = ops.gather_decode_attention_paged(
+        q, pool.k, pool.v, phys_idx, sel_valid=top_scores >= 0)
+    return out, pool, idx, scores
 
 
 def _xla_masked(q: jax.Array, cache: LayerKVCache, idx: jax.Array,

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HataConfig
+from repro.core.topk import chunked_topk
 from repro.kernels import ops
 
 
@@ -110,7 +111,11 @@ class OffloadedKV:
         pos_mask = jnp.arange(self.codes.shape[1]) < self.pos
         scores = jnp.where(pos_mask[None, None], scores, -1)
         budget = min(hcfg.budget(self.pos), self.pos)
-        _, idx = jax.lax.top_k(scores, budget)        # (B, n_kv, k)
+        # same two-stage on-device top-k as the serving decode path
+        # (core/topk.chunked_topk, bit-identical to lax.top_k): the
+        # offload simulator's prefetch selection and the on-device
+        # pipeline share one implementation.
+        _, idx = chunked_topk(scores, budget)         # (B, n_kv, k)
         idx_np = np.asarray(idx)
         # host gather + PCIe up (the prefetch step)
         bi = np.arange(b)[:, None, None]

@@ -1,0 +1,412 @@
+"""Paged KV + hash-code cache: block tables over one shared page pool.
+
+The vLLM idea, specialized for HATA: because hash-based selection never
+needs contiguous KV (scores are per-row, the fused gather is per-row
+DMA), the cache can live in fixed-size *pages* of one shared pool per
+layer, addressed through per-request *block tables*. The code cache is
+paged together with K/V — rbit/32 words per token ride along in the same
+page — so the whole score -> select -> gather pipeline runs over pages
+with zero compaction (DASH-KV and HashAttention make the same
+observation; see PAPERS.md).
+
+Two halves:
+
+Device side (this file, jit-land)
+  * :class:`PagedKVPool` / :class:`PagedMLAPool` — per-layer pools of
+    shape (num_pages, page_size, ...). Page 0 by convention is the
+    engine's *scratch* page (inactive batch slots write their garbage
+    rows there so they can never corrupt a page owned by a live
+    request).
+  * :func:`physical_rows` — logical row -> physical row translation
+    through a block table (``bt[b, l // page] * page + l % page``).
+    Selection math stays logical; only the final gather and the cache
+    append see physical rows.
+  * ``append_*`` (scatter new rows at physical positions) and
+    ``gather_*`` (materialize the padded logical view — the dense-path
+    and chunked-prefill context read).
+
+Host side (plain Python, engine-land)
+  * :class:`PageAllocator` — free list + per-page refcounts. Refcounts
+    are what make prefix sharing safe: shared pages are always *full*
+    and therefore immutable (writes only ever land past the shared
+    prefix, in pages the writer owns alone), so sharing is
+    copy-on-write that never needs the copy.
+  * :class:`PrefixCache` — hash-of-token-prefix -> page lookup at full
+    page granularity, LRU evicted under memory pressure. A hit lets a
+    new request adopt the donor's prefix pages (refcount bump) and skip
+    their prefill compute entirely.
+
+Invariants (property-tested in tests/test_paged.py): every page is
+either in the free list or has refcount >= 1, never both; releases
+below zero raise; ``free + held == num_pages`` at all times.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import register_dataclass
+
+
+# ---------------------------------------------------------------------------
+# Device-side pools
+# ---------------------------------------------------------------------------
+@register_dataclass
+@dataclasses.dataclass
+class PagedKVPool:
+    """One GQA/MHA layer's shared page pool (+ paged hash codes)."""
+    k: jax.Array                      # (P, page, H_kv, d)
+    v: jax.Array                      # (P, page, H_kv, d)
+    codes: Optional[jax.Array]        # (P, page, H_kv, rbit//32) uint32
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
+@register_dataclass
+@dataclasses.dataclass
+class PagedMLAPool:
+    """One MLA layer's shared latent page pool (+ paged codes)."""
+    ckv: jax.Array                    # (P, page, r)
+    krope: jax.Array                  # (P, page, rope_dim)
+    codes: Optional[jax.Array]        # (P, page, rbit//32) uint32
+
+    @property
+    def num_pages(self) -> int:
+        return self.ckv.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.ckv.shape[1]
+
+
+def init_paged_kv_pool(num_pages: int, page_size: int, n_kv_heads: int,
+                       head_dim: int, *, rbit: int = 0,
+                       dtype=jnp.bfloat16) -> PagedKVPool:
+    codes = None
+    if rbit:
+        codes = jnp.zeros((num_pages, page_size, n_kv_heads, rbit // 32),
+                          jnp.uint32)
+    return PagedKVPool(
+        k=jnp.zeros((num_pages, page_size, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((num_pages, page_size, n_kv_heads, head_dim), dtype),
+        codes=codes)
+
+
+def init_paged_mla_pool(num_pages: int, page_size: int, kv_lora_rank: int,
+                        rope_dim: int, *, rbit: int = 0,
+                        dtype=jnp.bfloat16) -> PagedMLAPool:
+    codes = None
+    if rbit:
+        codes = jnp.zeros((num_pages, page_size, rbit // 32), jnp.uint32)
+    return PagedMLAPool(
+        ckv=jnp.zeros((num_pages, page_size, kv_lora_rank), dtype),
+        krope=jnp.zeros((num_pages, page_size, rope_dim), dtype),
+        codes=codes)
+
+
+# ---------------------------------------------------------------------------
+# Logical -> physical translation
+# ---------------------------------------------------------------------------
+def physical_rows(block_table: jax.Array, logical: jax.Array,
+                  page_size: int) -> jax.Array:
+    """Translate logical rows to physical pool rows through a block table.
+
+    block_table: (B, T) int32 page ids; logical: (B, ...) int32 logical
+    row indices in [0, T * page_size). Returns physical row ids of the
+    same shape: ``bt[b, l // page] * page + l % page``. This is the one
+    place the paged subsystem maps selection output (logical) onto pool
+    storage (physical) — kernels and selection math never see pages.
+    """
+    b, t = block_table.shape
+    li = logical // page_size
+    if logical.ndim == 1:
+        pages = jnp.take_along_axis(block_table, li[:, None],
+                                    axis=-1)[:, 0]
+    else:
+        bt = block_table.reshape((b,) + (1,) * (logical.ndim - 2) + (t,))
+        pages = jnp.take_along_axis(
+            jnp.broadcast_to(bt, logical.shape[:-1] + (t,)), li, axis=-1)
+    return pages * page_size + logical % page_size
+
+
+def _flat(pool_leaf: jax.Array) -> jax.Array:
+    """(P, page, ...) -> (P * page, ...) physical row view."""
+    return pool_leaf.reshape((-1,) + pool_leaf.shape[2:])
+
+
+def _scatter_rows(pool_leaf: jax.Array, rows: jax.Array,
+                  phys: jax.Array) -> jax.Array:
+    """Write ``rows`` (N, ...) at physical row ids ``phys`` (N,)."""
+    flat = _flat(pool_leaf)
+    flat = flat.at[phys].set(rows.astype(flat.dtype))
+    return flat.reshape(pool_leaf.shape)
+
+
+# ---------------------------------------------------------------------------
+# Appends (scatter) and logical gathers
+# ---------------------------------------------------------------------------
+def append_rows_kv(pool: PagedKVPool, k: jax.Array, v: jax.Array,
+                   codes: Optional[jax.Array],
+                   phys: jax.Array) -> PagedKVPool:
+    """Decode-wave append: one new row per request.
+
+    k/v: (B, 1, H_kv, d), codes: (B, 1, H_kv, W) | None, phys: (B,)
+    physical rows (inactive slots point at the scratch page — duplicate
+    scratch writes are fine, the garbage is never read).
+    """
+    return PagedKVPool(
+        k=_scatter_rows(pool.k, k[:, 0], phys),
+        v=_scatter_rows(pool.v, v[:, 0], phys),
+        codes=None if pool.codes is None
+        else _scatter_rows(pool.codes, codes[:, 0], phys))
+
+
+def append_rows_mla(pool: PagedMLAPool, ckv: jax.Array, krope: jax.Array,
+                    codes: Optional[jax.Array],
+                    phys: jax.Array) -> PagedMLAPool:
+    """ckv: (B, 1, r), krope: (B, 1, rd), codes: (B, 1, W), phys: (B,)."""
+    return PagedMLAPool(
+        ckv=_scatter_rows(pool.ckv, ckv[:, 0], phys),
+        krope=_scatter_rows(pool.krope, krope[:, 0], phys),
+        codes=None if pool.codes is None
+        else _scatter_rows(pool.codes, codes[:, 0], phys))
+
+
+def _chunk_phys(block_table: jax.Array, ctx: jax.Array, c: int,
+                page_size: int, num_pages: int) -> jax.Array:
+    """Physical destinations for a chunk's C rows starting at ``ctx``.
+
+    A chunk is written at its fixed compiled width, so its zero-padded
+    tail can reach past the block table's logical capacity (e.g. the
+    last chunk of a prompt that ends near the table wall). Those rows
+    must not be translated — an out-of-bounds table column would come
+    back as take_along_axis's fill value and alias arbitrary pool rows
+    after the page arithmetic. They are routed to one-past-the-pool
+    instead, which JAX's scatter drops (out-of-bounds *updates* are
+    dropped by default), so the padded tail lands nowhere.
+    """
+    capacity = block_table.shape[1] * page_size
+    logical = ctx + jnp.arange(c)
+    safe = jnp.minimum(logical, capacity - 1)
+    phys = physical_rows(block_table, safe[None], page_size)[0]
+    return jnp.where(logical < capacity, phys, num_pages * page_size)
+
+
+def append_chunk_kv(pool: PagedKVPool, k: jax.Array, v: jax.Array,
+                    codes: Optional[jax.Array], block_table: jax.Array,
+                    ctx: jax.Array) -> PagedKVPool:
+    """Chunked-prefill append (B=1): k/v (1, C, H_kv, d) at logical
+    rows [ctx, ctx + C); rows past the table capacity are dropped."""
+    phys = _chunk_phys(block_table, ctx, k.shape[1], pool.page_size,
+                       pool.num_pages)
+    return PagedKVPool(
+        k=_scatter_rows(pool.k, k[0], phys),
+        v=_scatter_rows(pool.v, v[0], phys),
+        codes=None if pool.codes is None
+        else _scatter_rows(pool.codes, codes[0], phys))
+
+
+def append_chunk_mla(pool: PagedMLAPool, ckv: jax.Array, krope: jax.Array,
+                     codes: Optional[jax.Array], block_table: jax.Array,
+                     ctx: jax.Array) -> PagedMLAPool:
+    phys = _chunk_phys(block_table, ctx, ckv.shape[1], pool.page_size,
+                       pool.num_pages)
+    return PagedMLAPool(
+        ckv=_scatter_rows(pool.ckv, ckv[0], phys),
+        krope=_scatter_rows(pool.krope, krope[0], phys),
+        codes=None if pool.codes is None
+        else _scatter_rows(pool.codes, codes[0], phys))
+
+
+def logical_view(pool_leaf: jax.Array,
+                 block_table: jax.Array) -> jax.Array:
+    """Materialize the padded logical view of one pool leaf.
+
+    pool_leaf: (P, page, ...), block_table: (B, T) ->
+    (B, T * page, ...). Rows past a request's fill are garbage (drawn
+    from whatever page the table names there — inactive table slots
+    point at the scratch page) and must be masked by the consumer, which
+    every caller already does through ``n_valid``. This is the
+    dense-path / chunked-prefill context read; the HATA hot path never
+    materializes it (the paged kernels read pages in place).
+    """
+    page = pool_leaf.shape[1]
+    flat = _flat(pool_leaf)
+    b, t = block_table.shape
+    logical = jnp.broadcast_to(jnp.arange(t * page)[None], (b, t * page))
+    phys = physical_rows(block_table, logical, page)
+    return flat[phys]
+
+
+# ---------------------------------------------------------------------------
+# Host-side page allocator
+# ---------------------------------------------------------------------------
+class PageAllocator:
+    """Free list + refcounted pages (host side, no jax).
+
+    Refcounts implement prefix sharing: an allocation starts at ref 1;
+    adopting a shared page bumps it (:meth:`retain`); :meth:`release`
+    drops it and returns the page to the free list at zero. Shared
+    pages are immutable by construction (only *full* pages are ever
+    shared), so no copy-on-write copy is needed.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        # pop() from the end -> ascending page ids first
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._ref: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def used_count(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages at refcount 1, or None if short (the
+        caller decides whether to evict, preempt, or wait)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def retain(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if self._ref.get(p, 0) <= 0:
+                raise ValueError(f"retain of unallocated page {p}")
+            self._ref[p] += 1
+
+    def release(self, pages: Sequence[int]) -> int:
+        """Drop one ref per page; pages hitting zero return to the free
+        list. Returns how many pages were actually freed."""
+        freed = 0
+        for p in pages:
+            ref = self._ref.get(p, 0)
+            if ref <= 0:
+                raise ValueError(f"double free of page {p}")
+            if ref == 1:
+                del self._ref[p]
+                self._free.append(p)
+                freed += 1
+            else:
+                self._ref[p] = ref - 1
+        return freed
+
+    # ------------------------------------------------------------------
+    def check(self) -> None:
+        """Assert the allocator invariants (property tests)."""
+        held = set(self._ref)
+        free = set(self._free)
+        assert not (held & free), f"pages both held and free: {held & free}"
+        assert len(self._free) == len(free), "duplicate free-list entries"
+        assert held | free == set(range(self.num_pages)), "page leaked"
+        assert all(r >= 1 for r in self._ref.values()), self._ref
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache (hash-of-prefix -> page), LRU
+# ---------------------------------------------------------------------------
+def _prefix_key(tokens: np.ndarray, n: int) -> bytes:
+    return np.ascontiguousarray(tokens[:n], dtype=np.int32).tobytes()
+
+
+class PrefixCache:
+    """Full-page prefix reuse: token-prefix hash -> pool page.
+
+    Each entry holds one allocator reference on its page, so cached
+    prefixes outlive the request that produced them; :meth:`evict`
+    drops LRU entries when the engine needs pages back. Lookups are
+    clamped to ``prompt_len - 1`` tokens so a fully-cached prompt still
+    runs its last token through prefill (the logits must come from
+    somewhere), then rounded *down* to whole pages so adopters only
+    ever write into pages they own alone.
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        self._alloc = alloc
+        self.page_size = page_size
+        self._entries: "OrderedDict[bytes, int]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ------------------------------------------------------------------
+    def register(self, tokens: np.ndarray, pages: Sequence[int]) -> None:
+        """Offer a finished prefill's full pages to the cache."""
+        psz = self.page_size
+        n_full = min(len(pages), len(tokens) // psz)
+        for i in range(n_full):
+            key = _prefix_key(tokens, (i + 1) * psz)
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                continue
+            self._alloc.retain([pages[i]])
+            self._entries[key] = pages[i]
+
+    def peek(self, tokens: np.ndarray) -> int:
+        """Number of full prefix pages a :meth:`lookup` would return —
+        WITHOUT touching refcounts, LRU order or hit/miss counters.
+        Admission uses this for its watermark check so a request stuck
+        waiting below the watermark doesn't churn the cache every
+        engine step."""
+        psz = self.page_size
+        max_pages = max(0, (len(tokens) - 1) // psz)
+        n = 0
+        for i in range(max_pages):
+            if _prefix_key(tokens, (i + 1) * psz) not in self._entries:
+                break
+            n += 1
+        return n
+
+    def lookup(self, tokens: np.ndarray) -> List[int]:
+        """Longest cached full-page prefix of ``tokens``; the returned
+        pages are retained for the caller (one ref each)."""
+        psz = self.page_size
+        max_pages = max(0, (len(tokens) - 1) // psz)
+        pages: List[int] = []
+        for i in range(max_pages):
+            key = _prefix_key(tokens, (i + 1) * psz)
+            page = self._entries.get(key)
+            if page is None:
+                break
+            self._entries.move_to_end(key)
+            pages.append(page)
+        if pages:
+            self._alloc.retain(pages)
+            self.hits += 1
+        else:
+            self.misses += 1
+        return pages
+
+    def evict(self, n_pages: int) -> int:
+        """Drop LRU entries until ~``n_pages`` pages were actually freed
+        (an entry whose page is still referenced elsewhere frees
+        nothing but its cache ref). Returns pages freed."""
+        freed = 0
+        while self._entries and freed < n_pages:
+            _, page = self._entries.popitem(last=False)
+            freed += self._alloc.release([page])
+        return freed
+
+    def clear(self) -> int:
+        return self.evict(len(self._entries) + self._alloc.num_pages)

@@ -229,6 +229,39 @@ class ShardingPolicy:
         return jax.tree_util.tree_unflatten(treedef, specs)
 
     # ------------------------------------------------------------------
+    def pool_spec(self, path: str, leaf) -> P:
+        """Paged page-pool leaves: (P, page, H_kv, d) / (P, page, r).
+
+        Pages are shared across requests (any request may hold any
+        page), so neither the page axis nor the in-page row axis can be
+        sequence-sharded the way a contiguous (B, S, ...) cache's S
+        axis is — the TP-natural split for a pool is the kv-head axis
+        over ``model`` (each device then holds every page of *its*
+        heads, and the paged kernels' per-head grids read locally).
+        Latent pools (MLA: one shared stream, no head axis) replicate;
+        so does a head axis that doesn't divide the ``model`` axis.
+        """
+        mesh = self.mesh
+        shape = leaf.shape
+        name = path.split("/")[-1].lstrip(".")
+        if name in ("k", "v") or (name == "codes" and len(shape) == 4):
+            h_ax = ("model" if _fits(shape[2], mesh, "model") else None)
+            if h_ax is None:
+                self.notes.append(
+                    f"pool {path}: H_kv={shape[2]} !% model -> replicated")
+            return P(None, None, h_ax, None)
+        return self._repl(shape)          # ckv / krope / latent codes
+
+    def pool_specs(self, pools) -> Any:
+        """Specs for a list of per-layer page pools (Model.init_paged_pools)."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(pools)
+        specs = []
+        for path, leaf in flat:
+            p = "/".join(str(k) for k in path)
+            specs.append(self.pool_spec(p, leaf))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    # ------------------------------------------------------------------
     def named(self, spec_tree) -> Any:
         return jax.tree.map(
             lambda s: NamedSharding(self.mesh, s), spec_tree,

@@ -293,7 +293,8 @@ def _pad_selection(idx: jax.Array, sel_mask: Optional[jax.Array],
 # ---------------------------------------------------------------------------
 def _gqa_gather_kernel(idx_ref, nvalid_ref, q_ref, *refs, scale: float,
                        block_k: int, n_chunks: int, n_sel: int,
-                       has_mask: bool, return_stats: bool):
+                       has_mask: bool, return_stats: bool,
+                       shared_pool: bool = False):
     from jax.experimental.pallas import tpu as pltpu  # noqa: F401
     if has_mask:
         mask_ref, k_ref, v_ref = refs[:3]
@@ -317,12 +318,20 @@ def _gqa_gather_kernel(idx_ref, nvalid_ref, q_ref, *refs, scale: float,
     def row_copies(pos, j, slot):
         from jax.experimental.pallas import tpu as pltpu
         row = idx_ref[bi, hi, pos]
+        # shared_pool: the caches are one (N_phys, H_kv, d) page pool
+        # shared by every request, and ``row`` is already a *physical*
+        # row (the caller translated logical -> page*size+offset), so
+        # the DMA source drops the batch index. Everything else —
+        # chunking, masking, softmax — is identical to the contiguous
+        # path, which is what makes paged decode bit-exact against it.
+        k_src = (k_ref.at[pl.ds(row, 1), hi] if shared_pool
+                 else k_ref.at[bi, pl.ds(row, 1), hi])
+        v_src = (v_ref.at[pl.ds(row, 1), hi] if shared_pool
+                 else v_ref.at[bi, pl.ds(row, 1), hi])
         return [
-            pltpu.make_async_copy(k_ref.at[bi, pl.ds(row, 1), hi],
-                                  kbuf.at[slot, pl.ds(j, 1)],
+            pltpu.make_async_copy(k_src, kbuf.at[slot, pl.ds(j, 1)],
                                   sems.at[slot, 0, j]),
-            pltpu.make_async_copy(v_ref.at[bi, pl.ds(row, 1), hi],
-                                  vbuf.at[slot, pl.ds(j, 1)],
+            pltpu.make_async_copy(v_src, vbuf.at[slot, pl.ds(j, 1)],
                                   sems.at[slot, 1, j]),
         ]
 
@@ -367,10 +376,15 @@ def _gqa_gather_kernel(idx_ref, nvalid_ref, q_ref, *refs, scale: float,
 
 
 def _gqa_gather_call(q, k_cache, v_cache, idx, n_valid, sel_mask, *,
-                     block_k, interpret, return_stats):
+                     block_k, interpret, return_stats,
+                     shared_pool=False):
     b, h_kv, g, d = q.shape
     n_sel = idx.shape[-1]
     assert idx.shape == (b, h_kv, n_sel), (idx.shape, q.shape)
+    if shared_pool:
+        assert k_cache.ndim == 3, (k_cache.shape,)  # (N_phys, H_kv, d)
+    else:
+        assert k_cache.ndim == 4, (k_cache.shape,)  # (B, S, H_kv, d)
     if n_valid is None:
         n_valid = jnp.full((b, h_kv), n_sel, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)
@@ -420,7 +434,8 @@ def _gqa_gather_call(q, k_cache, v_cache, idx, n_valid, sel_mask, *,
     return pl.pallas_call(
         functools.partial(_gqa_gather_kernel, scale=d ** -0.5,
                           block_k=block_k, n_chunks=n_chunks, n_sel=n_sel,
-                          has_mask=has_mask, return_stats=return_stats),
+                          has_mask=has_mask, return_stats=return_stats,
+                          shared_pool=shared_pool),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=runtime.resolve_interpret(interpret),
@@ -484,12 +499,40 @@ def flash_decode_gathered_stats_batched(
                             interpret=interpret, return_stats=True)
 
 
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_gathered_paged(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, phys_idx: jax.Array,
+                                n_valid: Optional[jax.Array] = None,
+                                sel_mask: Optional[jax.Array] = None, *,
+                                block_k: Optional[int] = None,
+                                interpret: Optional[bool] = None,
+                                ) -> jax.Array:
+    """Block-table-indirect variant of :func:`flash_decode_gathered_batched`.
+
+    q: (B, H_kv, G, d); k_pool/v_pool: (N_phys, H_kv, d) — the shared
+    per-layer page pool flattened to physical rows; phys_idx:
+    (B, H_kv, k) int32 *physical* rows (the caller translates selected
+    logical rows through its block table — logical // page and
+    logical % page — *before* the call, so selection math is untouched
+    and the kernel's per-row DMA just reads a different address space).
+    n_valid / sel_mask as in the contiguous variant. Same chunk
+    pipeline, same in-kernel masking: paged decode is bit-exact vs. the
+    contiguous path given equal selected rows.
+    """
+    return _gqa_gather_call(q, k_pool, v_pool, phys_idx, n_valid,
+                            sel_mask,
+                            block_k=runtime.gather_block_k(block_k),
+                            interpret=interpret, return_stats=False,
+                            shared_pool=True)
+
+
 # ---------------------------------------------------------------------------
 # Batched split-latent MLA fused-gather decode
 # ---------------------------------------------------------------------------
 def _mla_gather_kernel(idx_ref, nvalid_ref, q_ref, *refs, scale: float,
                        lora_rank: int, block_k: int, n_chunks: int,
-                       n_sel: int, has_mask: bool, return_stats: bool):
+                       n_sel: int, has_mask: bool, return_stats: bool,
+                       shared_pool: bool = False):
     if has_mask:
         mask_ref, ckv_ref, kr_ref = refs[:3]
         refs = refs[3:]
@@ -513,12 +556,16 @@ def _mla_gather_kernel(idx_ref, nvalid_ref, q_ref, *refs, scale: float,
     def row_copies(pos, j, slot):
         from jax.experimental.pallas import tpu as pltpu
         row = idx_ref[bi, pos]
+        # shared_pool: (N_phys, r) / (N_phys, rd) page pools with
+        # physical rows — see _gqa_gather_kernel.row_copies.
+        c_src = (ckv_ref.at[pl.ds(row, 1)] if shared_pool
+                 else ckv_ref.at[bi, pl.ds(row, 1)])
+        r_src = (kr_ref.at[pl.ds(row, 1)] if shared_pool
+                 else kr_ref.at[bi, pl.ds(row, 1)])
         return [
-            pltpu.make_async_copy(ckv_ref.at[bi, pl.ds(row, 1)],
-                                  cbuf.at[slot, pl.ds(j, 1)],
+            pltpu.make_async_copy(c_src, cbuf.at[slot, pl.ds(j, 1)],
                                   sems.at[slot, 0, j]),
-            pltpu.make_async_copy(kr_ref.at[bi, pl.ds(row, 1)],
-                                  rbuf.at[slot, pl.ds(j, 1)],
+            pltpu.make_async_copy(r_src, rbuf.at[slot, pl.ds(j, 1)],
                                   sems.at[slot, 1, j]),
         ]
 
@@ -565,9 +612,14 @@ def _mla_gather_kernel(idx_ref, nvalid_ref, q_ref, *refs, scale: float,
 
 
 def _mla_gather_call(q_lat, ckv, krope, idx, n_valid, sel_mask, *,
-                     lora_rank, scale, block_k, interpret, return_stats):
+                     lora_rank, scale, block_k, interpret, return_stats,
+                     shared_pool=False):
     b, h, qdim = q_lat.shape
     assert qdim > lora_rank, (q_lat.shape, lora_rank)
+    if shared_pool:
+        assert ckv.ndim == 2, (ckv.shape,)          # (N_phys, r)
+    else:
+        assert ckv.ndim == 3, (ckv.shape,)          # (B, S, r)
     n_sel = idx.shape[-1]
     assert idx.shape == (b, n_sel), (idx.shape, q_lat.shape)
     if n_valid is None:
@@ -615,7 +667,8 @@ def _mla_gather_call(q_lat, ckv, krope, idx, n_valid, sel_mask, *,
         functools.partial(_mla_gather_kernel, scale=scale,
                           lora_rank=lora_rank, block_k=block_k,
                           n_chunks=n_chunks, n_sel=n_sel,
-                          has_mask=has_mask, return_stats=return_stats),
+                          has_mask=has_mask, return_stats=return_stats,
+                          shared_pool=shared_pool),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=runtime.resolve_interpret(interpret),
@@ -658,3 +711,29 @@ def mla_decode_gathered_batched(q_lat: jax.Array, ckv: jax.Array,
                             block_k=runtime.gather_block_k(block_k),
                             interpret=interpret,
                             return_stats=return_stats)
+
+
+@functools.partial(jax.jit, static_argnames=("lora_rank", "scale",
+                                             "block_k", "interpret"))
+def mla_decode_gathered_paged(q_lat: jax.Array, ckv_pool: jax.Array,
+                              krope_pool: jax.Array, phys_idx: jax.Array,
+                              n_valid: Optional[jax.Array] = None,
+                              sel_mask: Optional[jax.Array] = None, *,
+                              lora_rank: int, scale: float,
+                              block_k: Optional[int] = None,
+                              interpret: Optional[bool] = None):
+    """Block-table-indirect variant of :func:`mla_decode_gathered_batched`.
+
+    ckv_pool: (N_phys, r), krope_pool: (N_phys, rd) — the shared latent
+    page pools flattened to physical rows; phys_idx: (B, k) int32
+    physical rows (logical selection translated through the block table
+    before the call). Same split-latent chunk pipeline; returns o_lat
+    (B, H, r) f32 normalized (the serving decode wave path — SP shards
+    stay on the contiguous stats variant for now).
+    """
+    return _mla_gather_call(q_lat, ckv_pool, krope_pool, phys_idx,
+                            n_valid, sel_mask, lora_rank=lora_rank,
+                            scale=scale,
+                            block_k=runtime.gather_block_k(block_k),
+                            interpret=interpret, return_stats=False,
+                            shared_pool=True)

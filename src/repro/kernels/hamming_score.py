@@ -113,6 +113,132 @@ def hamming_score_batched(q_codes: jax.Array, k_codes: jax.Array, *,
     )(q_codes, k_codes)
 
 
+def _hamming_paged_kernel(bt_ref, nv_ref, q_ref, k_ref, out_ref, *,
+                          g_rbit: int, page: int):
+    del bt_ref                          # consumed by the index_map
+    bi = pl.program_id(0)
+    si = pl.program_id(2)
+    q = q_ref[0, 0]                     # (G, W) uint32
+    k = k_ref[0, :, 0, :]               # (page, W) uint32 — one pool page
+    x = jnp.bitwise_xor(q[:, None, :], k[None, :, :])   # (G, page, W)
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    score = g_rbit - jnp.sum(pc, axis=(0, 2))           # (page,)
+    # Garbage masked *in-kernel*: rows at logical positions >= n_valid
+    # (pages past the request's fill, scratch-page rows of inactive
+    # slots, tail rows of the last partial page) score -1 — below the
+    # floor of 0 for valid rows — exactly what mask_scores would write,
+    # so the paged scores equal the contiguous masked scores bit-exact.
+    kpos = si * page + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page), 1)[0]
+    out_ref[0, 0] = jnp.where(kpos < nv_ref[bi], score, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("rbit", "interpret"))
+def hamming_score_paged(q_codes: jax.Array, codes_pool: jax.Array,
+                        block_table: jax.Array, n_valid: jax.Array, *,
+                        rbit: int,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Batched Hamming match scores over a paged code pool.
+
+    q_codes: (B, H_kv, G, W) uint32; codes_pool: (P, page, H_kv, W)
+    uint32 — the shared per-layer page pool; block_table: (B, T) int32
+    page ids; n_valid: (B,) int32 valid logical rows. Returns
+    (B, H_kv, T * page) int32 logical scores with invalid rows at -1.
+
+    Identical math to :func:`hamming_score_batched`, but the code tile
+    for grid step (b, h, t) is fetched through the scalar-prefetched
+    block table — the index_map reads ``bt[b, t]`` to pick the physical
+    page, so the kernel streams exactly the pages the table names and
+    never sees a compacted copy. One tile = one page; garbage rows are
+    masked to -1 in-kernel (see ``_hamming_paged_kernel``).
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    b, h_kv, g, w = q_codes.shape
+    p, page, h_kv2, w2 = codes_pool.shape
+    assert (h_kv, w) == (h_kv2, w2), (q_codes.shape, codes_pool.shape)
+    b2, t = block_table.shape
+    assert b == b2, (q_codes.shape, block_table.shape)
+    n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b,))
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h_kv, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, w),
+                         lambda bi, hi, si, bt, nv: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page, 1, w),
+                         lambda bi, hi, si, bt, nv: (bt[bi, si], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, page),
+                               lambda bi, hi, si, bt, nv: (bi, hi, si)),
+    )
+    return pl.pallas_call(
+        functools.partial(_hamming_paged_kernel, g_rbit=g * rbit,
+                          page=page),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h_kv, t * page), jnp.int32),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), n_valid, q_codes, codes_pool)
+
+
+def _hamming_latent_paged_kernel(bt_ref, nv_ref, q_ref, k_ref, out_ref, *,
+                                 h_rbit: int, page: int):
+    del bt_ref
+    bi = pl.program_id(0)
+    si = pl.program_id(1)
+    q = q_ref[0]                        # (H, W) uint32
+    k = k_ref[0]                        # (page, W) uint32
+    x = jnp.bitwise_xor(q[:, None, :], k[None, :, :])
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    score = h_rbit - jnp.sum(pc, axis=(0, 2))
+    kpos = si * page + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page), 1)[0]
+    out_ref[0] = jnp.where(kpos < nv_ref[bi], score, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("rbit", "interpret"))
+def hamming_score_latent_paged(q_codes: jax.Array, codes_pool: jax.Array,
+                               block_table: jax.Array,
+                               n_valid: jax.Array, *, rbit: int,
+                               interpret: Optional[bool] = None,
+                               ) -> jax.Array:
+    """Single-stream (MLA latent) paged match scores.
+
+    q_codes: (B, H, W) uint32; codes_pool: (P, page, W) uint32;
+    block_table: (B, T) int32; n_valid: (B,). Returns (B, T * page)
+    int32 with invalid rows at -1. The latent analogue of
+    :func:`hamming_score_paged` — per-request block tables force a
+    (B, pages) grid (the contiguous latent kernel folds the whole batch
+    into one tile, but here each request walks its own page list).
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    b, h, w = q_codes.shape
+    p, page, w2 = codes_pool.shape
+    assert w == w2, (q_codes.shape, codes_pool.shape)
+    b2, t = block_table.shape
+    assert b == b2, (q_codes.shape, block_table.shape)
+    n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b,))
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, t),
+        in_specs=[
+            pl.BlockSpec((1, h, w), lambda bi, si, bt, nv: (bi, 0, 0)),
+            pl.BlockSpec((1, page, w),
+                         lambda bi, si, bt, nv: (bt[bi, si], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page),
+                               lambda bi, si, bt, nv: (bi, si)),
+    )
+    return pl.pallas_call(
+        functools.partial(_hamming_latent_paged_kernel, h_rbit=h * rbit,
+                          page=page),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t * page), jnp.int32),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), n_valid, q_codes, codes_pool)
+
+
 def _hamming_latent_kernel(q_ref, k_ref, out_ref, *, h_rbit: int):
     q = q_ref[...]                      # (B, H, W) uint32
     k = k_ref[...]                      # (B, block_s, W) uint32

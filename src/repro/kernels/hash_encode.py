@@ -41,6 +41,59 @@ def _hash_encode_kernel(x_ref, w_ref, out_ref, *, rbit: int):
     out_ref[...] = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
 
 
+def _hash_encode_heads_kernel(x_ref, w_ref, out_ref, *, rbit: int):
+    x = x_ref[...]                                # (B, block_s, 1, d)
+    w = w_ref[0]                                  # (d, rbit)
+    b, blk = x.shape[0], x.shape[1]
+    xf = x[:, :, 0, :].reshape(b * blk, -1).astype(jnp.float32)
+    proj = jnp.dot(xf, w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    bits = (proj >= 0).astype(jnp.uint32)
+    w_words = rbit // WORD_BITS
+    bits = bits.reshape(b * blk, w_words, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    packed = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+    out_ref[...] = packed.reshape(b, blk, 1, w_words)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def hash_encode_heads(x: jax.Array, w_h: jax.Array, *,
+                      block_s: Optional[int] = None,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Per-head fused hash encode in ONE grid dispatch.
+
+    x: (B, S, H, d) float, w_h: (H, d, rbit) -> (B, S, H, rbit//32)
+    uint32. Grid is (H, S-blocks): each step loads one head's (d, rbit)
+    weight and a (B, block_s, 1, d) slab of that head's keys — the
+    batch is folded into the tile like the latent encode flattening —
+    so the per-(batch, head) vmap this replaces (one kernel launch per
+    lane, ~B*H dispatches) collapses to a single ``pallas_call``. Same
+    f32 projection / sign / bit-pack as :func:`hash_encode`, so codes
+    are bit-identical to the vmapped path and the XLA oracle.
+    """
+    block_s = runtime.encode_block_s(block_s)
+    interpret = runtime.resolve_interpret(interpret)
+    b, s, h, d = x.shape
+    h2, d2, rbit = w_h.shape
+    assert (h, d) == (h2, d2), (x.shape, w_h.shape)
+    assert rbit % WORD_BITS == 0
+    block_s = min(block_s, s)
+    n_blocks = pl.cdiv(s, block_s)
+    return pl.pallas_call(
+        functools.partial(_hash_encode_heads_kernel, rbit=rbit),
+        grid=(h, n_blocks),
+        in_specs=[
+            pl.BlockSpec((b, block_s, 1, d), lambda hi, si: (0, si, hi, 0)),
+            pl.BlockSpec((1, d, rbit), lambda hi, si: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_s, 1, rbit // WORD_BITS),
+                               lambda hi, si: (0, si, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, rbit // WORD_BITS),
+                                       jnp.uint32),
+        interpret=interpret,
+    )(x, w_h)
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def hash_encode(x: jax.Array, w_h: jax.Array, *,
                 block_s: Optional[int] = None,

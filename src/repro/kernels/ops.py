@@ -78,15 +78,17 @@ def hash_encode(x: jax.Array, w_h: jax.Array) -> jax.Array:
 
 def hash_encode_heads(x: jax.Array, w_h: jax.Array) -> jax.Array:
     """Per-head weights. x: (B, S, H, d), w_h: (H, d, rbit)
-    -> (B, S, H, rbit//32)."""
+    -> (B, S, H, rbit//32).
+
+    Pallas impl: one (H, S-blocks) grid dispatch with the batch folded
+    into the tile (``hash_encode.hash_encode_heads``) — the former
+    per-(batch, head) vmap launched B*H kernels.
+    """
     if get_impl() == "xla":
         proj = jnp.einsum("bshd,hdr->bshr", x.astype(jnp.float32),
                           w_h.astype(jnp.float32))
         return ref.bitpack_ref((proj >= 0).astype(jnp.uint32))
-    # inner vmap sees the batch-stripped (S, H, d): heads are axis 1
-    fn = jax.vmap(_he.hash_encode, in_axes=(1, 0), out_axes=1)  # heads
-    fn = jax.vmap(fn, in_axes=(0, None))                        # batch
-    return fn(x, w_h)
+    return _he.hash_encode_heads(x, w_h)
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +120,61 @@ def hamming_scores_latent(q_codes: jax.Array, k_codes: jax.Array, *,
         return ref.hamming_score_latent_ref(q_codes, k_codes, rbit)
     return _hs.hamming_score_latent(q_codes, k_codes, rbit=rbit,
                                     block_s=block_s)
+
+
+def _pool_logical_view(pool: jax.Array,
+                       block_table: jax.Array) -> jax.Array:
+    """XLA reference paths only — the pallas paged kernels read pages
+    in place. One address-math implementation for the whole repo: this
+    defers to ``core.paged_cache.logical_view`` (function-level import;
+    the top-level core -> kernels dependency runs the other way)."""
+    from repro.core.paged_cache import logical_view
+    return logical_view(pool, block_table)
+
+
+def hamming_scores_paged(q_codes: jax.Array, codes_pool: jax.Array,
+                         block_table: jax.Array, n_valid: jax.Array, *,
+                         rbit: int) -> jax.Array:
+    """Match scores over a paged code pool, invalid rows at -1.
+
+    q_codes: (B, H_kv, G, W); codes_pool: (P, page, H_kv, W);
+    block_table: (B, T) int32; n_valid: scalar or (B,). Returns
+    (B, H_kv, T*page) int32 — bit-identical to
+    ``mask_scores(hamming_scores(...), n_valid)`` over the contiguous
+    cache holding the same rows. Pallas impl: the block-table-indirect
+    kernel (garbage pages masked in-kernel); xla impl: gather the
+    logical view, score, mask.
+    """
+    b = q_codes.shape[0]
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b,))
+    if get_impl() == "xla":
+        view = _pool_logical_view(codes_pool, block_table)
+        scores = ref.hamming_score_batched_ref(q_codes, view, rbit)
+        s = scores.shape[-1]
+        valid = jnp.arange(s)[None, None] < nv[:, None, None]
+        return jnp.where(valid, scores, -1)
+    return _hs.hamming_score_paged(q_codes, codes_pool,
+                                   block_table, nv, rbit=rbit)
+
+
+def hamming_scores_latent_paged(q_codes: jax.Array, codes_pool: jax.Array,
+                                block_table: jax.Array,
+                                n_valid: jax.Array, *,
+                                rbit: int) -> jax.Array:
+    """Latent-stream paged match scores, invalid rows at -1.
+
+    q_codes: (B, H, W); codes_pool: (P, page, W); block_table: (B, T);
+    n_valid: scalar or (B,). Returns (B, T*page) int32.
+    """
+    b = q_codes.shape[0]
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (b,))
+    if get_impl() == "xla":
+        view = _pool_logical_view(codes_pool, block_table)
+        scores = ref.hamming_score_latent_ref(q_codes, view, rbit)
+        valid = jnp.arange(scores.shape[-1])[None] < nv[:, None]
+        return jnp.where(valid, scores, -1)
+    return _hs.hamming_score_latent_paged(q_codes, codes_pool,
+                                          block_table, nv, rbit=rbit)
 
 
 def hamming_scores_vmapped(q_codes: jax.Array, k_codes: jax.Array, *,
@@ -310,6 +367,80 @@ def gather_decode_attention(q: jax.Array, k_cache: jax.Array,
         n_valid = jnp.sum(sel_valid.astype(jnp.int32), axis=-1)
         out = jax.vmap(jax.vmap(fn))(qg, kg, vg, n_valid)
     return out.reshape(b, h, d)
+
+
+def gather_decode_attention_paged(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, phys_idx: jax.Array,
+                                  *, sel_valid: Optional[jax.Array] = None,
+                                  block_k: Optional[int] = None,
+                                  ) -> jax.Array:
+    """HATA sparse decode over a shared page pool (block-table serving).
+
+    q: (B, H, d); k_pool/v_pool: (P, page, H_kv, d) per-layer pools;
+    phys_idx: (B, H_kv, k) int32 *physical* rows — the caller translated
+    selected logical rows through its block table; sel_valid: optional
+    prefix-validity mask as in :func:`gather_decode_attention`.
+    Bit-identical to the contiguous fused path given equal rows.
+    """
+    b, h, d = q.shape
+    h_kv = k_pool.shape[2]
+    g = h // h_kv
+    kf = k_pool.reshape((-1,) + k_pool.shape[2:])      # (N_phys, H_kv, d)
+    vf = v_pool.reshape((-1,) + v_pool.shape[2:])
+    if get_impl() == "xla":
+        return ref.masked_gather_decode_pool_ref(q, kf, vf, phys_idx,
+                                                 sel_valid)
+    qg = q.reshape(b, h_kv, g, d)
+    nv = (None if sel_valid is None
+          else jnp.sum(sel_valid.astype(jnp.int32), axis=-1))
+    out = _fd.flash_decode_gathered_paged(qg, kf, vf, phys_idx, nv,
+                                          block_k=block_k)
+    return out.reshape(b, h, d)
+
+
+def mla_gather_decode_paged(q_lat: jax.Array, ckv_pool: jax.Array,
+                            krope_pool: jax.Array, phys_idx: jax.Array,
+                            *, lora_rank: int, scale: float,
+                            n_valid: Optional[jax.Array] = None,
+                            block_k: Optional[int] = None) -> jax.Array:
+    """Split-latent MLA gathered decode over shared latent page pools.
+
+    ckv_pool: (P, page, r), krope_pool: (P, page, rd); phys_idx: (B, k)
+    int32 physical rows; n_valid: optional (B,) valid-selection prefix
+    count. Returns o_lat (B, H, r) f32 (caller applies W_uv).
+    """
+    cf = ckv_pool.reshape((-1,) + ckv_pool.shape[2:])  # (N_phys, r)
+    rf = krope_pool.reshape((-1,) + krope_pool.shape[2:])
+    if get_impl() == "xla":
+        mask = None
+        if n_valid is not None:
+            k = phys_idx.shape[-1]
+            mask = jnp.arange(k)[None, :] < jnp.reshape(
+                jnp.asarray(n_valid), (-1, 1))
+        return ref.mla_gather_decode_pool_ref(
+            q_lat, cf, rf, phys_idx, mask, lora_rank=lora_rank,
+            scale=scale)
+    return _fd.mla_decode_gathered_paged(
+        q_lat, cf, rf, phys_idx, n_valid, lora_rank=lora_rank,
+        scale=scale, block_k=block_k)
+
+
+def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_offset: jax.Array,
+                    window: Optional[int] = None) -> jax.Array:
+    """Chunked-prefill context attention: a chunk of fresh queries over
+    the full (gathered) logical KV view, causal at absolute positions.
+
+    q: (B, C, H, d) the prefill chunk; k/v: (B, S_log, H_kv, d) the
+    padded logical view (garbage rows sit at positions > the chunk's
+    last row, so causality masks them); q_offset: *traced* scalar — the
+    tokens already in the cache. Always the XLA online-softmax path:
+    the pallas flash kernel bakes q_offset in as a static arg, which
+    would retrace per context length (DESIGN.md §Paged lists the
+    static-offset prefill kernel as an open item).
+    """
+    return _xla_flash_gqa(q, k, v, causal=True, window=window,
+                          q_offset=q_offset)
 
 
 def gather_decode_attention_vmapped(q: jax.Array, k_cache: jax.Array,

@@ -219,6 +219,74 @@ def masked_gather_decode_ref(q: jax.Array, k_cache: jax.Array,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def gather_pool_rows_ref(pool_flat: jax.Array,
+                         phys_idx: jax.Array) -> jax.Array:
+    """Gather per-head rows from a flattened shared page pool.
+
+    pool_flat: (N_phys, H_kv, d); phys_idx: (B, H_kv, k) int32 physical
+    rows. Returns (B, H_kv, k, d): row ``phys_idx[b, h, j]`` read at
+    head ``h`` — the XLA stand-in for the shared-pool kernel's per-row
+    DMA source.
+    """
+    per_head = jnp.moveaxis(pool_flat, 1, 0)          # (H_kv, N, d)
+    return jax.vmap(lambda rows, ix: rows[ix],
+                    in_axes=(0, 1), out_axes=1)(per_head, phys_idx)
+
+
+def masked_gather_decode_pool_ref(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, phys_idx: jax.Array,
+                                  sel_valid: Optional[jax.Array] = None,
+                                  ) -> jax.Array:
+    """Shared-pool oracle for ``flash_decode_gathered_paged``.
+
+    q: (B, H, d); k_pool/v_pool: (N_phys, H_kv, d) flattened page
+    pools; phys_idx: (B, H_kv, k) int32 physical rows; sel_valid as in
+    :func:`masked_gather_decode_ref`. Same masked softmax math — only
+    the gather source differs, which is the whole point: given equal
+    selected rows the paged output is bit-identical.
+    """
+    b, h, d = q.shape
+    h_kv = k_pool.shape[1]
+    g = h // h_kv
+    kg = gather_pool_rows_ref(k_pool, phys_idx)       # (B, H_kv, k, d)
+    vg = gather_pool_rows_ref(v_pool, phys_idx)
+    qf = q.reshape(b, h_kv, g, d).astype(jnp.float32) * (d ** -0.5)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qf, kg.astype(jnp.float32))
+    if sel_valid is not None:
+        logits = jnp.where(sel_valid[:, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, vg.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def mla_gather_decode_pool_ref(q_lat: jax.Array, ckv_pool: jax.Array,
+                               krope_pool: jax.Array, phys_idx: jax.Array,
+                               sel_mask: Optional[jax.Array] = None, *,
+                               lora_rank: int, scale: float):
+    """Shared-pool oracle for ``mla_decode_gathered_paged``.
+
+    ckv_pool: (N_phys, r), krope_pool: (N_phys, rd), phys_idx: (B, k)
+    physical rows of the shared latent pool. Same split-form logits and
+    values as :func:`mla_gather_decode_ref`.
+    """
+    sel_c = ckv_pool[phys_idx]                        # (B, k, r)
+    sel_r = krope_pool[phys_idx]
+    q_c = q_lat[..., :lora_rank].astype(sel_c.dtype)
+    q_r = q_lat[..., lora_rank:].astype(sel_r.dtype)
+    logits = (jnp.einsum("bhr,bkr->bhk", q_c, sel_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhr,bkr->bhk", q_r, sel_r,
+                           preferred_element_type=jnp.float32)) * scale
+    if sel_mask is not None:
+        logits = jnp.where(sel_mask[:, None, :], logits, -jnp.inf)
+    m = jnp.maximum(jnp.max(logits, axis=-1), -1e30)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhk,bkr->bhr", p.astype(sel_c.dtype), sel_c,
+                   preferred_element_type=jnp.float32)
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
 def gather_decode_stats_ref(q: jax.Array, k_cache: jax.Array,
                             v_cache: jax.Array, idx: jax.Array,
                             sel_mask: Optional[jax.Array] = None,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import hash_attention as ha
+from repro.core import paged_cache as paged
 from repro.core.kvcache import LayerKVCache, MLACache, append_kv, append_mla
 from repro.core.topk import chunked_topk
 from repro.distributed.strategy import get_decode_strategy
@@ -105,26 +106,30 @@ def gqa_prefill(cfg: ModelConfig, p, w_h, x: jax.Array,
     return out.reshape(b, s, -1) @ p["wo"], cache
 
 
-def _dense_decode(cfg: ModelConfig, q, cache: LayerKVCache, n_valid):
+def _dense_decode(cfg: ModelConfig, q, k: jax.Array, v: jax.Array,
+                  n_valid):
     """Full-cache decode with length (and SWA window) masking.
-    n_valid: scalar or (B,)."""
+
+    k/v: (B, S, H_kv, d) — either a contiguous cache's buffers or the
+    gathered logical view of a paged pool (garbage rows land past
+    ``n_valid`` and mask identically). n_valid: scalar or (B,).
+    """
     if cfg.sliding_window is None:
-        return ops.decode_attention(q, cache.k, cache.v, n_valid)
+        return ops.decode_attention(q, k, v, n_valid)
     b, h, d = q.shape
-    h_kv = cache.k.shape[2]
-    s = cache.max_len
+    h_kv = k.shape[2]
+    s = k.shape[1]
     pos = jnp.arange(s)
     nv = jnp.reshape(n_valid, (-1, 1))                  # (1|B, 1)
     valid = (pos[None] < nv) & (pos[None] > nv - 1 - cfg.sliding_window)
     valid = jnp.broadcast_to(valid, (b, s))
     qg = q.reshape(b, h_kv, h // h_kv, d)
-    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(cache.k.dtype),
-                        cache.k,
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(k.dtype), k,
                         preferred_element_type=jnp.float32) * (d ** -0.5)
     logits = jnp.where(valid[:, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(cache.v.dtype),
-                     cache.v, preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v.dtype),
+                     v, preferred_element_type=jnp.float32)
     return out.reshape(b, h, d).astype(q.dtype)
 
 
@@ -191,18 +196,19 @@ def gqa_decode_attend(cfg: ModelConfig, p, w_h, q1: jax.Array,
                         use_hata if hata_on else False)
     if out is None:
         if not hata_on:
-            out = _dense_decode(cfg, q1, cache, n_valid)
+            out = _dense_decode(cfg, q1, cache.k, cache.v, n_valid)
         elif isinstance(use_hata, bool):
             # static layer split (segmented scan): only one branch is
             # lowered — the dry-run sees steady-state HATA cost
             out = (_hata_score_select(cfg, q1, w_h, cache, n_valid)
-                   if use_hata else _dense_decode(cfg, q1, cache,
-                                                  n_valid))
+                   if use_hata else _dense_decode(cfg, q1, cache.k,
+                                                  cache.v, n_valid))
         else:
             out = jax.lax.cond(
                 use_hata,
                 lambda: _hata_score_select(cfg, q1, w_h, cache, n_valid),
-                lambda: _dense_decode(cfg, q1, cache, n_valid))
+                lambda: _dense_decode(cfg, q1, cache.k, cache.v,
+                                      n_valid))
     return out.reshape(b, 1, -1) @ p["wo"]
 
 
@@ -216,6 +222,87 @@ def gqa_decode(cfg: ModelConfig, p, w_h, x: jax.Array,
     cache = append_kv(cache, k, v, codes, pos)
     return gqa_decode_attend(cfg, p, w_h, q1, cache, pos,
                              use_hata), cache
+
+
+def gqa_decode_attend_paged(cfg: ModelConfig, p, w_h, q1: jax.Array,
+                            pool: paged.PagedKVPool,
+                            block_table: jax.Array, pos: jax.Array,
+                            use_hata) -> jax.Array:
+    """Paged analogue of :func:`gqa_decode_attend`: attention over the
+    shared page pool through a per-request block table. Selection is
+    logical (bit-exact vs. the contiguous path); only the score
+    kernel's page fetch and the gather's physical rows differ."""
+    b = q1.shape[0]
+    psz = pool.page_size
+    n_valid = pos + 1
+    hata_on = pool.codes is not None and cfg.hata.enabled
+
+    def dense_path():
+        k_view = paged.logical_view(pool.k, block_table)
+        v_view = paged.logical_view(pool.v, block_table)
+        return _dense_decode(cfg, q1, k_view, v_view, n_valid)
+
+    def hata_path():
+        s_log = block_table.shape[1] * psz
+        budget = ha.clamped_budget(cfg.hata, s_log, cfg.sliding_window)
+        top_scores, idx, _ = ha.hata_score_select_paged(
+            q1, w_h, pool.codes, block_table, rbit=cfg.hata.rbit,
+            budget=budget, n_valid=n_valid, window=cfg.sliding_window)
+        phys_idx = paged.physical_rows(block_table, idx, psz)
+        return ops.gather_decode_attention_paged(
+            q1, pool.k, pool.v, phys_idx, sel_valid=top_scores >= 0)
+
+    if not hata_on:
+        out = dense_path()
+    elif isinstance(use_hata, bool):
+        out = hata_path() if use_hata else dense_path()
+    else:
+        out = jax.lax.cond(use_hata, hata_path, dense_path)
+    return out.reshape(b, 1, -1) @ p["wo"]
+
+
+def gqa_decode_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
+                     pool: paged.PagedKVPool, block_table: jax.Array,
+                     pos: jax.Array, use_hata,
+                     ) -> Tuple[jax.Array, paged.PagedKVPool]:
+    """One paged decode step. x: (B, 1, D); pos: (B,) per-request fill
+    (inactive slots' block-table rows point at the scratch page)."""
+    q1, k1, v1, codes = gqa_decode_project(cfg, p, w_h, x, pos)
+    if pool.codes is None:
+        codes = None
+    phys_new = paged.physical_rows(block_table,
+                                   jnp.asarray(pos, jnp.int32),
+                                   pool.page_size)
+    pool = paged.append_rows_kv(pool, k1, v1, codes, phys_new)
+    return gqa_decode_attend_paged(cfg, p, w_h, q1, pool, block_table,
+                                   pos, use_hata), pool
+
+
+def gqa_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
+                            pool: paged.PagedKVPool,
+                            block_table: jax.Array, ctx: jax.Array,
+                            ) -> Tuple[jax.Array, paged.PagedKVPool]:
+    """One chunk of a paged prefill (Alg. 1 in page-sized pieces).
+
+    x: (1, C, D) — the chunk's hidden states — at absolute positions
+    [ctx, ctx + C); block_table: (1, T). The fresh K/V/code rows are
+    scattered into the request's pages, then the chunk's queries attend
+    causally over the gathered logical context (rows past ctx + C are
+    garbage, excluded by causality). ``ctx`` is traced: one compiled
+    chunk shape serves every chunk of every prompt.
+    """
+    b, c, _ = x.shape
+    positions = jnp.arange(c) + ctx
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    codes = None
+    if w_h is not None and cfg.hata.enabled and pool.codes is not None:
+        codes = ops.hash_encode_heads(k, w_h)
+    pool = paged.append_chunk_kv(pool, k, v, codes, block_table, ctx)
+    k_view = paged.logical_view(pool.k, block_table)
+    v_view = paged.logical_view(pool.v, block_table)
+    a = ops.chunk_attention(q, k_view, v_view, q_offset=ctx,
+                            window=cfg.sliding_window)
+    return a.reshape(b, c, -1) @ p["wo"], pool
 
 
 # ===========================================================================
@@ -432,6 +519,104 @@ def mla_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache: MLACache,
     out = mla_decode_attend(cfg, p, w_h, q_lat, cache, pos, use_hata,
                             x.dtype)
     return out, cache
+
+
+def mla_decode_attend_paged(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
+                            pool: paged.PagedMLAPool,
+                            block_table: jax.Array, pos: jax.Array,
+                            use_hata, x_dtype) -> jax.Array:
+    """Paged analogue of :func:`mla_decode_attend`: the shared latent
+    stream scored page-by-page through the block table, selection
+    logical, gather over physical (ckv, krope) row pairs."""
+    b = q_lat.shape[0]
+    m = cfg.mla
+    psz = pool.page_size
+    n_valid = pos + 1
+    s_log = block_table.shape[1] * psz
+
+    def dense_path():
+        ckv_view = paged.logical_view(pool.ckv, block_table)
+        kr_view = paged.logical_view(pool.krope, block_table)
+        mask = jnp.arange(s_log)[None] < jnp.reshape(n_valid, (-1, 1))
+        mask = jnp.broadcast_to(mask, (b, s_log))
+        return _mla_attend(cfg, p, q_lat, ckv_view, kr_view, mask)
+
+    def hata_path():
+        q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
+        scores = ops.hamming_scores_latent_paged(
+            q_codes, pool.codes, block_table, n_valid,
+            rbit=cfg.hata.rbit)                        # (B, S_log)
+        if cfg.sliding_window is not None:
+            scores = ha.mask_scores(scores[:, None], n_valid,
+                                    window=cfg.sliding_window)[:, 0]
+        budget = ha.clamped_budget(cfg.hata, s_log, cfg.sliding_window)
+        top_scores, idx = chunked_topk(scores, budget)    # (B, k)
+        phys_idx = paged.physical_rows(block_table, idx, psz)
+        o_lat = ops.mla_gather_decode_paged(
+            q_lat, pool.ckv, pool.krope, phys_idx,
+            lora_rank=m.kv_lora_rank,
+            scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
+            n_valid=jnp.sum((top_scores >= 0).astype(jnp.int32), -1))
+        wuv = p["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
+        return jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+
+    hata_on = pool.codes is not None and cfg.hata.enabled
+    if not hata_on:
+        o = dense_path()
+    elif isinstance(use_hata, bool):
+        o = hata_path() if use_hata else dense_path()
+    else:
+        o = jax.lax.cond(use_hata, hata_path, dense_path)
+    return o.reshape(b, 1, -1).astype(x_dtype) @ p["wo"]
+
+
+def mla_decode_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
+                     pool: paged.PagedMLAPool, block_table: jax.Array,
+                     pos: jax.Array, use_hata,
+                     ) -> Tuple[jax.Array, paged.PagedMLAPool]:
+    """One paged MLA decode step. x: (B, 1, D); pos: (B,)."""
+    q_lat, ckv, krope, codes = mla_decode_project(cfg, p, w_h, x, pos)
+    if pool.codes is None:
+        codes = None
+    phys_new = paged.physical_rows(block_table,
+                                   jnp.asarray(pos, jnp.int32),
+                                   pool.page_size)
+    pool = paged.append_rows_mla(pool, ckv, krope, codes, phys_new)
+    return mla_decode_attend_paged(cfg, p, w_h, q_lat, pool,
+                                   block_table, pos, use_hata,
+                                   x.dtype), pool
+
+
+def mla_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
+                            pool: paged.PagedMLAPool,
+                            block_table: jax.Array, ctx: jax.Array,
+                            ) -> Tuple[jax.Array, paged.PagedMLAPool]:
+    """One chunk of a paged MLA prefill: scatter the chunk's latents,
+    then attend with K/V *materialized from the gathered latent view*
+    (K = [W_uk c ; k_rope], V = W_uv c — row-independent matmuls, so
+    chunked values equal the monolithic prefill's bit-for-bit)."""
+    m = cfg.mla
+    b, c, _ = x.shape
+    h = cfg.n_heads
+    positions = jnp.arange(c) + ctx
+    q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
+    codes = None
+    if w_h is not None and cfg.hata.enabled and pool.codes is not None:
+        latent = jnp.concatenate([ckv, krope], axis=-1)
+        codes = ops.hash_encode(latent, w_h[0])
+    pool = paged.append_chunk_mla(pool, ckv, krope, codes, block_table,
+                                  ctx)
+    ckv_view = paged.logical_view(pool.ckv, block_table)   # (1, S_log, r)
+    kr_view = paged.logical_view(pool.krope, block_table)
+    s_log = ckv_view.shape[1]
+    k_nope = (ckv_view @ p["wuk"]).reshape(b, s_log, h, m.qk_nope_dim)
+    v_full = (ckv_view @ p["wuv"]).reshape(b, s_log, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_view[:, :, None, :],
+                                  (b, s_log, h, m.qk_rope_dim))], axis=-1)
+    a = ops.chunk_attention(q, k_full, v_full, q_offset=ctx)
+    return a.reshape(b, c, -1) @ p["wo"], pool
 
 
 # ===========================================================================

@@ -365,6 +365,69 @@ def block_prefill_stacked(cfg: ModelConfig, p, w_h, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# paged serving paths (block-table caches; dense/moe attention families)
+# ---------------------------------------------------------------------------
+def init_block_pool(cfg: ModelConfig, num_pages: int, page_size: int):
+    """One layer's shared page pool (KV+codes paged together)."""
+    from repro.core.paged_cache import (init_paged_kv_pool,
+                                        init_paged_mla_pool)
+    dtype = jnp.dtype(cfg.dtype)
+    rbit = cfg.hata.rbit if cfg.hata.enabled else 0
+    if _is_mla(cfg):
+        return init_paged_mla_pool(num_pages, page_size,
+                                   cfg.mla.kv_lora_rank,
+                                   cfg.mla.qk_rope_dim, rbit=rbit,
+                                   dtype=dtype)
+    return init_paged_kv_pool(num_pages, page_size, cfg.n_kv_heads,
+                              cfg.head_dim, rbit=rbit, dtype=dtype)
+
+
+def block_decode_paged(cfg: ModelConfig, p, w_h, x: jax.Array, pool,
+                       block_table: jax.Array, pos: jax.Array,
+                       use_hata):
+    """One decode block over a paged cache. x: (B, 1, D); pos: (B,).
+    Attention families only (dense/moe, GQA or MLA) — SSM/hybrid state
+    is O(1) per slot and has nothing to page."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if _is_mla(cfg):
+        a, pool = attn.mla_decode_paged(cfg, p["attn"], w_h, h, pool,
+                                        block_table, pos, use_hata)
+    else:
+        a, pool = attn.gqa_decode_paged(cfg, p["attn"], w_h, h, pool,
+                                        block_table, pos, use_hata)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_mod.moe_ffn(cfg, p["moe"], h, group_size=x.shape[0])
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], h)
+    return x, pool
+
+
+def block_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
+                              pool, block_table: jax.Array,
+                              ctx: jax.Array):
+    """One chunk of a paged prefill through one block. x: (1, C, D) at
+    absolute positions [ctx, ctx + C)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if _is_mla(cfg):
+        a, pool = attn.mla_prefill_chunk_paged(cfg, p["attn"], w_h, h,
+                                               pool, block_table, ctx)
+    else:
+        a, pool = attn.gqa_prefill_chunk_paged(cfg, p["attn"], w_h, h,
+                                               pool, block_table, ctx)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_mod.moe_ffn(cfg, p["moe"], h)
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], h)
+    return x, pool
+
+
+# ---------------------------------------------------------------------------
 # decode (one token; Alg. 3)
 # ---------------------------------------------------------------------------
 def block_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,

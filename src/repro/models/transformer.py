@@ -297,6 +297,80 @@ class Model:
         return out
 
     # ------------------------------------------------------------------
+    # paged caches (block-table serving; see serving/scheduler.py)
+    # ------------------------------------------------------------------
+    @property
+    def supports_paged(self) -> bool:
+        """Paged serving covers the attention-KV families (GQA and MLA,
+        dense or MoE FFNs). SSM/hybrid state is O(1) per slot (nothing
+        to page), VLM carries static image KV, audio/meta-token streams
+        keep the slot engine.
+
+        MoE caveat: chunked prefill routes experts per chunk-sized
+        group while monolithic prefill groups over the whole prompt,
+        so paged ≡ dense outputs are guaranteed only under *dropless*
+        capacity (capacity_factor >= n_experts / top_k — the serving
+        setting; with capacity dropping, the two paths may drop
+        different tokens)."""
+        cfg = self.cfg
+        return (cfg.family in ("dense", "moe") and cfg.n_heads > 0
+                and cfg.meta_tokens == 0)
+
+    def init_paged_pools(self, num_pages: int, page_size: int):
+        """One shared (num_pages, page_size, ...) pool per layer —
+        K/V and hash codes paged together."""
+        assert self.supports_paged, self.cfg.family
+        return [blocks.init_block_pool(self.cfg, num_pages, page_size)
+                for _ in range(self.cfg.n_layers)]
+
+    def _paged_layer_params(self, params):
+        for i in range(self.n_pre):
+            yield params["pre"][i], params["hash_pre"][i]
+        for j in range(self.n_stack):
+            yield (jax.tree.map(lambda t: t[j], params["stack"]),
+                   jax.tree.map(lambda t: t[j], params["hash_stack"]))
+
+    def decode_step_paged(self, params, tokens: jax.Array, pools,
+                          block_table: jax.Array, pos: jax.Array):
+        """One paged decode wave. tokens: (B,); block_table: (B, T)
+        int32 page ids; pos: (B,) per-request fill (inactive slots
+        point at the scratch page). Returns (logits (B, V), pools)."""
+        cfg = self.cfg
+        x = self.embed_decode(params, tokens)
+        hata_on = cfg.hata.enabled
+        new_pools = []
+        for li, (bp, w_h) in enumerate(self._paged_layer_params(params)):
+            flag = hata_on and li >= cfg.hata.dense_layers
+            x, pool = blocks.block_decode_paged(
+                cfg, bp, w_h, x, pools[li], block_table, pos, flag)
+            new_pools.append(pool)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._head_last(params, x[:, 0]), new_pools
+
+    def prefill_chunk_paged(self, params, tokens: jax.Array, pools,
+                            block_table: jax.Array, ctx: jax.Array,
+                            last: jax.Array):
+        """One chunk of a paged prefill (B=1). tokens: (1, C) — the
+        chunk, zero-padded past the prompt; block_table: (1, T); ctx:
+        traced token count already in the cache (page-aligned when the
+        prefix cache contributed pages); last: traced index of the last
+        *real* token within the chunk. Returns (logits (1, V) at
+        ``last``, pools) — only the final chunk's logits are consumed.
+        ``ctx``/``last`` being traced means one compiled shape serves
+        every chunk of every prompt."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)
+        new_pools = []
+        for li, (bp, w_h) in enumerate(self._paged_layer_params(params)):
+            x, pool = blocks.block_prefill_chunk_paged(
+                cfg, bp, w_h, x, pools[li], block_table, ctx)
+            new_pools.append(pool)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        x_last = jax.lax.dynamic_index_in_dim(x, last, axis=1,
+                                              keepdims=False)
+        return self._head_last(params, x_last), new_pools
+
+    # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
     def prefill(self, params, batch: Dict[str, jax.Array], caches,

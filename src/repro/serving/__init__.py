@@ -1,4 +1,5 @@
 from repro.serving.engine import ServingEngine
 from repro.serving.request import Request
+from repro.serving.scheduler import PagedServingEngine
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "Request", "PagedServingEngine"]

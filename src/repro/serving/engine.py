@@ -83,6 +83,13 @@ class ServingEngine:
     def _admit(self):
         while self.queue and None in self.slots:
             req = self.queue.popleft()
+            if req.prompt_len > self.max_len:
+                # the prompt alone overflows the cache — truncate at
+                # admission (prefilling it would be a shape error)
+                req.truncated = True
+                req.t_done = time.monotonic()
+                self._rejected.append(req)
+                continue
             slot = self.slots.index(None)
             req.slot = slot
             single = self.model.init_caches(1, self.max_len,
@@ -115,23 +122,33 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def step(self) -> List[Request]:
         """Admit + one decode wave. Returns requests finished this step."""
+        self._rejected: List[Request] = []
         self._admit()
+        finished = list(self._rejected)
+        # out-of-cache: a slot whose next decode would write at or past
+        # max_len is terminated NOW with an explicit ``truncated`` flag
+        # and its slot freed — decoding on would clamp the cache append
+        # onto the last row and emit garbage tokens.
+        for slot, req in enumerate(self.slots):
+            if req is not None and \
+                    self.pos[slot] >= self.max_len + self.meta:
+                req.truncated = True
+                req.t_done = time.monotonic()
+                finished.append(req)
+                self.slots[slot] = None
         active = [s is not None for s in self.slots]
         if not any(active):
-            return []
+            return finished
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self.last_tok), self.caches,
             jnp.asarray(self.pos))
         toks = self._pick(logits)
         self.stats["decode_steps"] += 1
-        finished = []
         toks_np = np.asarray(toks)
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
             self.pos[slot] += 1
-            if self.pos[slot] >= self.max_len + self.meta - 1:
-                req.t_done = time.monotonic()     # out of cache
             req.output.append(self._to_py(toks_np[slot]))
             self.last_tok[slot] = toks_np[slot]
             self.stats["tokens_out"] += 1

@@ -23,6 +23,13 @@ class Request:
     t_submit: float = dataclasses.field(default_factory=time.monotonic)
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    # terminated early because the engine ran out of cache capacity
+    # (dense engine: the max_len wall; paged engine: the pool itself
+    # can't fit the request even after eviction + preemption)
+    truncated: bool = False
+    # times this request was evicted mid-flight by the paged scheduler
+    # (greedy decode replays its tokens identically on resume)
+    preemptions: int = 0
 
     @property
     def done(self) -> bool:

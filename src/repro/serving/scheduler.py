@@ -1,0 +1,387 @@
+"""Paged serving scheduler: continuous batching on pages.
+
+The dense :class:`~repro.serving.engine.ServingEngine` allocates one
+``max_batch x max_len`` cache, prefills each admitted prompt in a single
+blocking B=1 call, and kills requests at the ``max_len`` wall. This
+engine replaces all three with the paged subsystem
+(``core/paged_cache.py`` + the block-table kernels):
+
+  * **one shared page pool per layer** — a request holds exactly
+    ``ceil(rows / page_size)`` pages, so memory scales with live tokens,
+    not with ``max_batch * max_len``;
+  * **chunked prefill** — prompts prefill in fixed-size chunks
+    interleaved with decode waves, so a long prompt never blocks the
+    running requests for more than one chunk; ``ctx`` is traced, so one
+    compiled chunk shape serves every prompt;
+  * **prefix sharing** — full prompt-prefix pages are published to a
+    hash-of-prefix cache (refcounted, immutable by construction); a hit
+    adopts the donor's pages and skips their prefill compute;
+  * **admission by free-page watermark** — a prompt is admitted only
+    when its prefill fits above the watermark, keeping slack for the
+    running requests' decode growth;
+  * **preemption by eviction** — when the pool runs dry mid-flight the
+    youngest running request is evicted (pages freed, request requeued;
+    greedy decoding makes the re-run reproduce its tokens) after the
+    prefix cache has been squeezed first;
+  * **growth past max_len** — decode appends pages on demand; a request
+    is only ``truncated`` when the *pool itself* can't be made to fit
+    it (dense engines truncate at a static wall), or when it outgrows
+    the per-request logical capacity ``max_len_pages`` (the block-table
+    width — defaults to the whole pool; pass
+    ``max_len // page_size`` to reproduce the dense engine's budget
+    semantics exactly, since the static HATA budget derives from
+    ``table_pages * page_size`` the way the dense one derives from
+    ``max_len``).
+
+Slot model: decode waves still run at a static ``max_batch`` width (the
+jit-friendly TPU pattern); inactive slots decode garbage into the
+reserved *scratch page* (page 0), which no request ever owns, so they
+can't corrupt live pages.
+
+Differential guarantee (tests/test_paged.py): greedy outputs equal the
+offline/dense engine's per request; prefix-shared prefills produce the
+same logits as cold ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paged_cache import PageAllocator, PrefixCache
+from repro.models import Model
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class _PrefillState:
+    """A request mid-prefill (chunked; possibly resumed after
+    preemption)."""
+    req: Request
+    tokens: np.ndarray              # prompt (+ replayed output on resume)
+    ctx: int                        # rows already in the cache
+    pages: List[int]                # pages owned (incl. adopted prefix)
+    resume: bool                    # True -> suppress the emitted token
+
+
+class PagedServingEngine:
+    """Continuous batching over a paged KV+code cache."""
+
+    def __init__(self, model: Model, params, *, num_pages: int = 64,
+                 page_size: int = 8, max_batch: int = 4,
+                 max_len_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 watermark_pages: int = 0, prefix_sharing: bool = True,
+                 sample: str = "greedy", seed: int = 0):
+        assert model.supports_paged, (
+            f"{model.cfg.name}: family {model.cfg.family!r} has no paged "
+            "decode path (attention-KV families only)")
+        self.model = model
+        self.params = params
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.prefill_chunk = prefill_chunk or 2 * page_size
+        self.watermark = watermark_pages
+        self.sample = sample
+        self.key = jax.random.PRNGKey(seed)
+
+        self.pools = model.init_paged_pools(num_pages, page_size)
+        self.alloc = PageAllocator(num_pages)
+        # the scratch page: inactive decode slots write their garbage
+        # rows here; never owned by a request, never scored as valid
+        self.scratch = self.alloc.alloc(1)[0]
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(self.alloc, page_size) if prefix_sharing else None)
+
+        self.num_pages = num_pages
+        # Per-request logical capacity = block-table width, decoupled
+        # from the pool: the paged score grid, the dense-path logical
+        # view and the (static) HATA budget all scale with
+        # table_pages * page_size, and the contiguous engine's budget
+        # semantics are recovered by passing max_len_pages =
+        # max_len // page_size. Default: the whole pool (one request
+        # may grow into every free page).
+        self.table_pages = min(max_len_pages or num_pages, num_pages)
+        self.bt = np.full((max_batch, self.table_pages), self.scratch,
+                          np.int32)
+        self.pos = np.zeros(max_batch, np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        self._slot_order: List[int] = []      # admission order (slot ids)
+        self.last_tok = np.zeros(max_batch, np.int32)
+        self.queue: Deque[Request] = deque()
+        self.prefilling: Optional[_PrefillState] = None
+        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
+                      "prefills": 0, "tokens_out": 0, "preemptions": 0,
+                      "prefix_hit_tokens": 0, "peak_pages": 1,
+                      "truncated": 0}
+
+        # pools are donated: row scatters stay in place instead of
+        # copying every pool per wave (a no-op warning on backends
+        # without donation support, e.g. CPU tests)
+        self._decode = jax.jit(
+            lambda p, t, pools, bt, pos: model.decode_step_paged(
+                p, t, pools, bt, pos), donate_argnums=(2,))
+        self._chunk = jax.jit(
+            lambda p, t, pools, bt, ctx, last:
+            model.prefill_chunk_paged(p, t, pools, bt, ctx, last),
+            donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _note_usage(self):
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self.alloc.used_count())
+
+    # ------------------------------------------------------------------
+    # page acquisition: evict prefix cache, then preempt, then give up
+    # ------------------------------------------------------------------
+    def _acquire(self, n: int, protect_slot: int = -1
+                 ) -> Optional[List[int]]:
+        while True:
+            pages = self.alloc.alloc(n)
+            if pages is not None:
+                self._note_usage()
+                return pages
+            short = n - self.alloc.free_count()
+            if self.prefix is not None and self.prefix.evict(short):
+                continue
+            if not self._preempt_one(protect_slot):
+                return None
+
+    def _preempt_one(self, protect_slot: int) -> bool:
+        """Evict the youngest running request (LIFO keeps the oldest
+        requests' latency bounds intact) and requeue it for a resumed
+        prefill. Greedy decoding replays the identical tokens."""
+        victims = [s for s in reversed(self._slot_order)
+                   if s != protect_slot and self.slots[s] is not None]
+        if not victims:
+            return False
+        slot = victims[0]
+        req = self.slots[slot]
+        self._free_slot(slot)
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.queue.appendleft(req)
+        return True
+
+    def _free_slot(self, slot: int):
+        """Tear a slot down: release its pages, park its block table on
+        the scratch page, clear ordering state."""
+        self.alloc.release(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self.bt[slot] = self.scratch
+        self.pos[slot] = 0
+        self.slots[slot] = None
+        if slot in self._slot_order:
+            self._slot_order.remove(slot)
+
+    # ------------------------------------------------------------------
+    # admission + chunked prefill
+    # ------------------------------------------------------------------
+    def _pages_for(self, rows: int) -> int:
+        return -(-rows // self.page_size)
+
+    def _admit(self):
+        """Start prefilling the next queued request if a slot is free
+        and its prompt fits above the free-page watermark."""
+        if self.prefilling is not None or not self.queue:
+            return
+        if None not in self.slots:
+            return
+        req = self.queue[0]
+        # a prompt that can never fit the per-request logical capacity
+        # (block-table width) or the pool is truncated AT ADMISSION —
+        # prefilling it to the wall first would burn chunks across all
+        # layers and possibly preempt live requests for nothing
+        if self._pages_for(req.prompt_len) > min(self.table_pages,
+                                                 self.num_pages - 1):
+            self.queue.popleft()
+            self._finish_truncated(req, [])
+            return
+        resume = len(req.output) > 0
+        # resumed requests replay prompt + emitted tokens (minus the
+        # last, which becomes last_tok of the next decode step)
+        tokens = np.concatenate([
+            np.asarray(req.prompt, np.int32),
+            np.asarray(req.output[:-1], np.int32)]) if resume \
+            else np.asarray(req.prompt, np.int32)
+        # watermark check with a side-effect-free probe: a request that
+        # keeps waiting here must not churn refcounts / LRU / hit stats
+        n_hit = self.prefix.peek(tokens) if self.prefix is not None else 0
+        need = self._pages_for(len(tokens)) - n_hit
+        if self.alloc.free_count() - need < self.watermark \
+                and len(self.slots) - self.slots.count(None) > 0:
+            return                     # pool too tight while others run
+        prefix_pages: List[int] = []
+        if self.prefix is not None:
+            prefix_pages = self.prefix.lookup(tokens)
+        ctx = len(prefix_pages) * self.page_size
+        self.queue.popleft()
+        self.stats["prefix_hit_tokens"] += ctx
+        self.prefilling = _PrefillState(req=req, tokens=tokens, ctx=ctx,
+                                        pages=prefix_pages, resume=resume)
+
+    def _prefill_step(self):
+        """Run one chunk of the in-flight prefill (if any)."""
+        st = self.prefilling
+        if st is None:
+            return
+        n_tok = len(st.tokens)
+        end = min(st.ctx + self.prefill_chunk, n_tok)
+        need = self._pages_for(end) - len(st.pages)
+        if self._pages_for(end) > self.table_pages:
+            # past the per-request logical capacity (block-table width)
+            self._finish_truncated(st.req, st.pages)
+            self.prefilling = None
+            return
+        if need > 0:
+            got = self._acquire(need)
+            if got is None:
+                # the pool can't hold even this prompt alone: truncate
+                self._finish_truncated(st.req, st.pages)
+                self.prefilling = None
+                return
+            st.pages.extend(got)
+        bt_row = np.full((1, self.table_pages), self.scratch, np.int32)
+        bt_row[0, :len(st.pages)] = st.pages
+        chunk = np.zeros(self.prefill_chunk, np.int32)
+        chunk[:end - st.ctx] = st.tokens[st.ctx:end]
+        logits, self.pools = self._chunk(
+            self.params, jnp.asarray(chunk[None]), self.pools,
+            jnp.asarray(bt_row), jnp.int32(st.ctx),
+            jnp.int32(end - st.ctx - 1))
+        self.stats["prefill_chunks"] += 1
+        st.ctx = end
+        if end == n_tok:
+            self._finish_prefill(st, logits)
+            self.prefilling = None
+
+    def _finish_prefill(self, st: _PrefillState, logits):
+        req = st.req
+        slot = self.slots.index(None)
+        req.slot = slot
+        if st.resume:
+            # the re-run's "first token" repeats an already-emitted one
+            tok = int(req.output[-1])
+        else:
+            tok = self._to_py(self._pick(logits)[0])
+            req.output.append(tok)
+            req.t_first_token = time.monotonic()
+            self.stats["tokens_out"] += 1
+        self.last_tok[slot] = tok
+        self.pos[slot] = len(st.tokens)
+        self.bt[slot] = self.scratch
+        self.bt[slot, :len(st.pages)] = st.pages
+        self._slot_pages[slot] = st.pages
+        self.slots[slot] = req
+        self._slot_order.append(slot)
+        self.stats["prefills"] += 1
+        if self.prefix is not None:
+            self.prefix.register(np.asarray(req.prompt, np.int32),
+                                 st.pages)
+        # a zero-new-token request is already done
+        if req.done:
+            self._retire(slot, req)
+
+    def _finish_truncated(self, req: Request, pages: List[int]):
+        self.alloc.release(pages)
+        req.truncated = True
+        req.t_done = time.monotonic()
+        self.stats["truncated"] += 1
+        self._done_this_step.append(req)
+
+    # ------------------------------------------------------------------
+    # decode wave
+    # ------------------------------------------------------------------
+    def _ensure_decode_pages(self) -> List[int]:
+        """Grow each active slot's block table to cover its next row;
+        slots the pool cannot serve are truncated. Returns live slots."""
+        live = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            rows = int(self.pos[slot]) + 1
+            need = self._pages_for(rows) - len(self._slot_pages[slot])
+            if self._pages_for(rows) > self.table_pages:
+                self._free_slot(slot)              # logical-capacity wall
+                self._finish_truncated(req, [])
+                continue
+            if need > 0:
+                got = self._acquire(need, protect_slot=slot)
+                if got is None:
+                    self._free_slot(slot)
+                    self._finish_truncated(req, [])
+                    continue
+                base = len(self._slot_pages[slot])
+                self.bt[slot, base:base + len(got)] = got
+                self._slot_pages[slot].extend(got)
+            live.append(slot)
+        # _acquire may have preempted a slot already collected above
+        return [s for s in live if self.slots[s] is not None]
+
+    def _decode_wave(self):
+        live = self._ensure_decode_pages()
+        if not live:
+            return
+        logits, self.pools = self._decode(
+            self.params, jnp.asarray(self.last_tok), self.pools,
+            jnp.asarray(self.bt), jnp.asarray(self.pos))
+        toks = np.asarray(self._pick(logits))
+        self.stats["decode_steps"] += 1
+        for slot in live:
+            req = self.slots[slot]
+            self.pos[slot] += 1
+            req.output.append(self._to_py(toks[slot]))
+            self.last_tok[slot] = toks[slot]
+            self.stats["tokens_out"] += 1
+            if req.t_first_token is None:
+                req.t_first_token = time.monotonic()
+            if req.done:
+                self._retire(slot, req)
+
+    def _retire(self, slot: int, req: Request):
+        if req.t_done is None:
+            req.t_done = time.monotonic()
+        self._free_slot(slot)
+        self._done_this_step.append(req)
+
+    # ------------------------------------------------------------------
+    def _pick(self, logits):
+        if self.sample == "greedy":
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits, axis=-1
+                                      ).astype(jnp.int32)
+
+    @staticmethod
+    def _to_py(tok):
+        return int(np.asarray(tok))
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Admit, advance one prefill chunk, run one decode wave.
+        Returns the requests that finished this step."""
+        self._done_this_step: List[Request] = []
+        self._admit()
+        self._prefill_step()
+        self._decode_wave()
+        return self._done_this_step
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        done: List[Request] = []
+        guard = 0
+        while len(done) < len(requests):
+            done.extend(self.step())
+            guard += 1
+            assert guard < 100000, "scheduler livelock"
+        return done

@@ -1,0 +1,647 @@
+"""Differential suite for the paged KV+code cache subsystem.
+
+Four layers of guarantees:
+
+  1. Kernel parity — the block-table-indirect kernels (paged Hamming,
+     shared-pool fused gather, GQA and MLA) are *bit-exact* against the
+     contiguous batched pipeline holding the same rows, across ragged
+     depths, window on/off and budget clamping.
+  2. Allocator properties — no page is ever leaked or double-freed
+     under random admit/retain/release/evict traces; the prefix cache
+     keeps refcounts consistent through registration, adoption and LRU
+     eviction.
+  3. Model parity — chunked paged prefill reproduces the monolithic
+     prefill's logits; a prefix-shared prefill reproduces the cold
+     prefill's logits on the *same pages*.
+  4. Engine parity — the paged scheduler's greedy outputs equal the
+     offline decode per request (GQA and MLA/MoE), through chunked
+     prefill, prefix sharing, preemption-and-replay, growth past the
+     dense engine's max_len wall, and pool-exhaustion truncation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose, assert_array_equal
+
+from repro.configs import get_reduced
+from repro.configs.base import HataConfig
+from repro.core import hash_attention as ha
+from repro.core import kvcache, paged_cache
+from repro.core.paged_cache import (PageAllocator, PagedKVPool,
+                                    PagedMLAPool, PrefixCache)
+from repro.kernels import ops, ref
+from repro.models import Model
+from repro.serving import PagedServingEngine, Request, ServingEngine
+
+RNG_SEED = 11
+HCFG = HataConfig(rbit=64, budget_min=16, budget_max=32,
+                  budget_frac=0.5)
+
+
+# ===========================================================================
+# helpers: build a contiguous cache and a paged pool holding the same rows
+# ===========================================================================
+def _paged_pair_gqa(b=2, h_kv=2, g=2, d=32, page=8, t=6, seed=0):
+    """Returns (cache, pool, block_table, n_valid, q, w) where the pool's
+    pages hold exactly the contiguous cache's rows, with a shuffled
+    page assignment (page 0 reserved as scratch, like the engine)."""
+    rng = np.random.default_rng(seed)
+    s = t * page
+    h = h_kv * g
+    cache = kvcache.init_kv_cache(b, s, h_kv, d, rbit=HCFG.rbit,
+                                  dtype=jnp.float32)
+    cache = dataclasses.replace(
+        cache,
+        k=jnp.asarray(rng.standard_normal(cache.k.shape), jnp.float32),
+        v=jnp.asarray(rng.standard_normal(cache.v.shape), jnp.float32),
+        codes=jnp.asarray(rng.integers(0, 2 ** 32, cache.codes.shape,
+                                       dtype=np.uint32)))
+    n_pages = b * t + 1
+    perm = rng.permutation(n_pages - 1) + 1           # page 0 = scratch
+    bt = perm.reshape(b, t).astype(np.int32)
+    k_pool = np.zeros((n_pages, page, h_kv, d), np.float32)
+    v_pool = np.zeros((n_pages, page, h_kv, d), np.float32)
+    c_pool = np.zeros((n_pages, page, h_kv, HCFG.rbit // 32), np.uint32)
+    for bi in range(b):
+        for ti in range(t):
+            rows = slice(ti * page, (ti + 1) * page)
+            k_pool[bt[bi, ti]] = np.asarray(cache.k[bi, rows])
+            v_pool[bt[bi, ti]] = np.asarray(cache.v[bi, rows])
+            c_pool[bt[bi, ti]] = np.asarray(cache.codes[bi, rows])
+    pool = PagedKVPool(k=jnp.asarray(k_pool), v=jnp.asarray(v_pool),
+                       codes=jnp.asarray(c_pool))
+    n_valid = jnp.asarray(rng.integers(page, s - 1, b), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((h_kv, d, HCFG.rbit)),
+                    jnp.float32) / np.sqrt(d)
+    return cache, pool, jnp.asarray(bt), n_valid, q, w
+
+
+def _paged_pair_mla(b=2, h=4, r=32, rd=8, page=8, t=6, seed=0):
+    rng = np.random.default_rng(seed)
+    s = t * page
+    ckv = rng.standard_normal((b, s, r)).astype(np.float32)
+    krope = rng.standard_normal((b, s, rd)).astype(np.float32)
+    codes = rng.integers(0, 2 ** 32, (b, s, HCFG.rbit // 32),
+                         dtype=np.uint32)
+    n_pages = b * t + 1
+    perm = rng.permutation(n_pages - 1) + 1
+    bt = perm.reshape(b, t).astype(np.int32)
+    c_pool = np.zeros((n_pages, page, r), np.float32)
+    r_pool = np.zeros((n_pages, page, rd), np.float32)
+    h_pool = np.zeros((n_pages, page, HCFG.rbit // 32), np.uint32)
+    for bi in range(b):
+        for ti in range(t):
+            rows = slice(ti * page, (ti + 1) * page)
+            c_pool[bt[bi, ti]] = ckv[bi, rows]
+            r_pool[bt[bi, ti]] = krope[bi, rows]
+            h_pool[bt[bi, ti]] = codes[bi, rows]
+    pool = PagedMLAPool(ckv=jnp.asarray(c_pool), krope=jnp.asarray(r_pool),
+                        codes=jnp.asarray(h_pool))
+    n_valid = jnp.asarray(rng.integers(page, s - 1, b), jnp.int32)
+    q_codes = jnp.asarray(rng.integers(0, 2 ** 32, (b, h, HCFG.rbit // 32),
+                                       dtype=np.uint32))
+    q_lat = jnp.asarray(rng.standard_normal((b, h, r + rd)), jnp.float32)
+    return (jnp.asarray(ckv), jnp.asarray(krope), jnp.asarray(codes),
+            pool, jnp.asarray(bt), n_valid, q_codes, q_lat)
+
+
+# ===========================================================================
+# 1. kernel parity (xla refs AND pallas interpret)
+# ===========================================================================
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_paged_hamming_bit_exact(impl):
+    cache, pool, bt, n_valid, q, w = _paged_pair_gqa(seed=1)
+    q_codes = ha.aggregate_q_codes(q, w, pool.k.shape[2])
+    with ops.use_impl(impl):
+        sp = ops.hamming_scores_paged(q_codes, pool.codes, bt, n_valid,
+                                      rbit=HCFG.rbit)
+    sc = ref.hamming_score_batched_ref(q_codes, cache.codes, HCFG.rbit)
+    sc = ha.mask_scores(sc, n_valid)
+    assert_array_equal(np.asarray(sp), np.asarray(sc))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_paged_hamming_latent_bit_exact(impl):
+    (_, _, codes, pool, bt, n_valid, q_codes, _) = _paged_pair_mla(seed=2)
+    with ops.use_impl(impl):
+        sp = ops.hamming_scores_latent_paged(q_codes, pool.codes, bt,
+                                             n_valid, rbit=HCFG.rbit)
+    sc = ref.hamming_score_latent_ref(q_codes, codes, HCFG.rbit)
+    sc = ha.mask_scores(sc[:, None], n_valid)[:, 0]
+    assert_array_equal(np.asarray(sp), np.asarray(sc))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_paged_gather_bit_exact(impl):
+    """Given equal selected rows, the shared-pool gather kernel must be
+    bit-identical to the contiguous batched kernel."""
+    cache, pool, bt, n_valid, q, w = _paged_pair_gqa(seed=3)
+    rng = np.random.default_rng(3)
+    b, h_kv, page = q.shape[0], pool.k.shape[2], pool.page_size
+    k_sel = 16
+    nv = np.asarray(n_valid)
+    idx = np.stack([np.stack([
+        rng.choice(nv[bi], size=k_sel, replace=False)
+        for _ in range(h_kv)]) for bi in range(b)]).astype(np.int32)
+    sel_valid = np.arange(k_sel)[None, None] < \
+        rng.integers(4, k_sel + 1, (b, h_kv))[..., None]
+    phys = np.asarray(paged_cache.physical_rows(bt, jnp.asarray(idx),
+                                                page))
+    with ops.use_impl(impl):
+        out_p = ops.gather_decode_attention_paged(
+            q, pool.k, pool.v, jnp.asarray(phys),
+            sel_valid=jnp.asarray(sel_valid))
+        out_c = ops.gather_decode_attention(
+            q, cache.k, cache.v, jnp.asarray(idx),
+            sel_valid=jnp.asarray(sel_valid), fused=True)
+    assert_array_equal(np.asarray(out_p), np.asarray(out_c))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_paged_mla_gather_bit_exact(impl):
+    (ckv, krope, _, pool, bt, n_valid, _, q_lat) = _paged_pair_mla(seed=4)
+    rng = np.random.default_rng(4)
+    b, page = q_lat.shape[0], pool.page_size
+    r = pool.ckv.shape[-1]
+    k_sel = 16
+    nv = np.asarray(n_valid)
+    idx = np.stack([rng.choice(nv[bi], size=k_sel, replace=False)
+                    for bi in range(b)]).astype(np.int32)
+    sel_n = rng.integers(4, k_sel + 1, b).astype(np.int32)
+    phys = np.asarray(paged_cache.physical_rows(bt, jnp.asarray(idx),
+                                                page))
+    scale = (r + pool.krope.shape[-1]) ** -0.5
+    with ops.use_impl(impl):
+        out_p = ops.mla_gather_decode_paged(
+            q_lat, pool.ckv, pool.krope, jnp.asarray(phys),
+            lora_rank=r, scale=scale, n_valid=jnp.asarray(sel_n))
+        out_c = ops.mla_gather_decode(
+            q_lat, ckv, krope, jnp.asarray(idx), lora_rank=r,
+            scale=scale, n_valid=jnp.asarray(sel_n))
+    assert_array_equal(np.asarray(out_p), np.asarray(out_c))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("window", [None, 24])
+def test_hata_decode_paged_matches_batched(impl, window):
+    """Full pipeline parity: scores, selection and outputs of the paged
+    decode step equal the contiguous batched pipeline, at ragged
+    depths, window on/off."""
+    cache, pool, bt, n_valid, q, w = _paged_pair_gqa(seed=5)
+    rng = np.random.default_rng(5)
+    b, h_kv, d = q.shape[0], pool.k.shape[2], q.shape[-1]
+    pos = n_valid - 1                                 # append at pos
+    k1 = jnp.asarray(rng.standard_normal((b, 1, h_kv, d)), jnp.float32)
+    v1 = jnp.asarray(rng.standard_normal((b, 1, h_kv, d)), jnp.float32)
+    hcfg = HCFG
+    with ops.use_impl(impl):
+        ref_out = ha.hata_decode_batched(q, k1, v1, w, cache, hcfg=hcfg,
+                                         pos=pos, window=window,
+                                         fused_gather=True)
+        out, pool2, idx, scores = ha.hata_decode_paged(
+            q, k1, v1, w, pool, bt, hcfg=hcfg, pos=pos, window=window)
+    assert_array_equal(np.asarray(idx), np.asarray(ref_out.idx))
+    assert_array_equal(np.asarray(scores),
+                       np.asarray(ha.mask_scores(ref_out.scores, pos + 1,
+                                                 window=window)))
+    assert_array_equal(np.asarray(out), np.asarray(ref_out.out))
+    # the appended rows landed at the right physical slots
+    phys = paged_cache.physical_rows(bt, pos, pool.page_size)
+    got = paged_cache._flat(pool2.k)[phys]            # (B, H_kv, d)
+    assert_array_equal(np.asarray(got), np.asarray(k1[:, 0]))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_hata_decode_paged_budget_clamp_short_cache(impl):
+    """cache_len <= budget: every valid row selected, paged ≡ batched
+    bit-exact (the short-cache exactness guarantee survives paging)."""
+    cache, pool, bt, _, q, w = _paged_pair_gqa(seed=6)
+    rng = np.random.default_rng(6)
+    b, h_kv, d = q.shape[0], pool.k.shape[2], q.shape[-1]
+    pos = jnp.asarray(rng.integers(2, HCFG.budget_min, b), jnp.int32)
+    k1 = jnp.asarray(rng.standard_normal((b, 1, h_kv, d)), jnp.float32)
+    v1 = jnp.asarray(rng.standard_normal((b, 1, h_kv, d)), jnp.float32)
+    with ops.use_impl(impl):
+        ref_out = ha.hata_decode_batched(q, k1, v1, w, cache, hcfg=HCFG,
+                                         pos=pos, fused_gather=True)
+        out, _, idx, _ = ha.hata_decode_paged(q, k1, v1, w, pool, bt,
+                                              hcfg=HCFG, pos=pos)
+    assert_array_equal(np.asarray(idx), np.asarray(ref_out.idx))
+    assert_array_equal(np.asarray(out), np.asarray(ref_out.out))
+
+
+def test_hash_encode_heads_single_dispatch_bit_exact():
+    """The (H, S-blocks) single-dispatch encode ≡ XLA oracle ≡ the
+    legacy per-(batch, head) vmap, including the decode shape S=1."""
+    from repro.kernels.hash_encode import hash_encode as single_encode
+    rng = np.random.default_rng(7)
+    for b, s, h, d, rbit in [(2, 9, 3, 16, 64), (3, 1, 2, 32, 64)]:
+        x = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((h, d, rbit)), jnp.float32)
+        oracle = ref.hash_encode_ref(
+            np.moveaxis(np.asarray(x), 2, 0).reshape(h, b * s, d)[0], w[0])
+        with ops.use_impl("pallas"):
+            got = ops.hash_encode_heads(x, w)
+        with ops.use_impl("xla"):
+            want = ops.hash_encode_heads(x, w)
+        legacy = jax.vmap(jax.vmap(single_encode, in_axes=(1, 0),
+                                   out_axes=1), in_axes=(0, None))(x, w)
+        assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_array_equal(np.asarray(got), np.asarray(legacy))
+        assert_array_equal(np.asarray(got[:, :, 0].reshape(b * s, -1)[0]),
+                           np.asarray(oracle[0]))
+
+
+# ===========================================================================
+# 2. allocator + prefix-cache properties
+# ===========================================================================
+def test_chunk_append_tail_past_table_capacity_is_dropped():
+    """A chunk whose zero-padded tail reaches past the block-table
+    capacity must not write anywhere (regression: the out-of-bounds
+    table column used to alias back into physical page 0)."""
+    rng = np.random.default_rng(20)
+    page, t = 4, 3
+    pool = paged_cache.init_paged_kv_pool(10, page, 2, 8, rbit=64,
+                                          dtype=jnp.float32)
+    before = np.asarray(pool.k).copy()
+    bt = jnp.asarray(np.array([[7, 8, 9]], np.int32))
+    k = jnp.asarray(rng.standard_normal((1, 8, 2, 8)), jnp.float32)
+    c = jnp.asarray(rng.integers(0, 2 ** 32, (1, 8, 2, 2),
+                                 dtype=np.uint32))
+    # ctx=8: rows 8..11 are real (page 9), rows 12..15 overflow the table
+    pool = paged_cache.append_chunk_kv(pool, k, k, c, bt, jnp.int32(8))
+    after = np.asarray(pool.k)
+    assert_array_equal(after[9], np.asarray(k[0, :4]))  # real rows land
+    mask = np.ones(10, bool)
+    mask[9] = False
+    assert_array_equal(after[mask], before[mask])       # nothing else
+    mla = paged_cache.init_paged_mla_pool(10, page, 8, 4, rbit=64,
+                                          dtype=jnp.float32)
+    before_m = np.asarray(mla.ckv).copy()
+    ck = jnp.asarray(rng.standard_normal((1, 8, 8)), jnp.float32)
+    kr = jnp.asarray(rng.standard_normal((1, 8, 4)), jnp.float32)
+    cm = jnp.asarray(rng.integers(0, 2 ** 32, (1, 8, 2),
+                                  dtype=np.uint32))
+    mla = paged_cache.append_chunk_mla(mla, ck, kr, cm, bt, jnp.int32(8))
+    after_m = np.asarray(mla.ckv)
+    assert_array_equal(after_m[9], np.asarray(ck[0, :4]))
+    assert_array_equal(after_m[mask], before_m[mask])
+
+
+def test_allocator_random_trace_no_leak_no_double_free():
+    rng = np.random.default_rng(8)
+    alloc = PageAllocator(32)
+    held = []                                          # [pages...]
+    for _ in range(500):
+        op = rng.integers(0, 3)
+        if op == 0:                                    # admit
+            n = int(rng.integers(1, 5))
+            pages = alloc.alloc(n)
+            if pages is None:
+                assert alloc.free_count() < n
+            else:
+                assert len(set(pages)) == n
+                held.append(pages)
+        elif op == 1 and held:                         # evict/finish
+            alloc.release(held.pop(rng.integers(len(held))))
+        elif op == 2 and held:                         # prefix adoption
+            donor = held[rng.integers(len(held))]
+            alloc.retain(donor)
+            held.append(list(donor))
+        alloc.check()
+        n_held = sum(len(h) for h in held)
+        refs = sum(alloc.refcount(p)
+                   for p in {p for h in held for p in h})
+        assert refs == n_held
+    for h in held:
+        alloc.release(h)
+    alloc.check()
+    assert alloc.free_count() == 32
+
+
+def test_allocator_double_free_raises():
+    alloc = PageAllocator(4)
+    pages = alloc.alloc(2)
+    alloc.release(pages)
+    with pytest.raises(ValueError):
+        alloc.release(pages)
+    with pytest.raises(ValueError):
+        alloc.retain([pages[0]])
+    alloc.check()
+
+
+def test_prefix_cache_register_lookup_evict():
+    alloc = PageAllocator(16)
+    cache = PrefixCache(alloc, page_size=4)
+    toks = np.arange(11, dtype=np.int32)               # 2 full pages
+    pages = alloc.alloc(3)
+    cache.register(toks, pages)
+    assert alloc.refcount(pages[0]) == 2               # owner + cache
+    assert alloc.refcount(pages[2]) == 1               # partial page
+    # adoption: same prefix, clamped to (len-1)//page full pages
+    hit = cache.lookup(toks)
+    assert hit == pages[:2] and alloc.refcount(pages[1]) == 3
+    alloc.release(hit)
+    # a 9-token prompt sharing one full page only
+    hit = cache.lookup(np.concatenate([toks[:7], [99, 99]]).astype(np.int32))
+    assert hit == pages[:1]
+    alloc.release(hit)
+    # owner finishes: cached pages survive via the cache's refs
+    alloc.release(pages)
+    assert alloc.refcount(pages[0]) == 1
+    assert alloc.free_count() == 16 - 2
+    # eviction returns them to the free list
+    assert cache.evict(2) == 2
+    alloc.check()
+    assert alloc.free_count() == 16
+
+
+# ===========================================================================
+# 3 + 4. model + engine parity (reduced configs, f32, CPU/xla impl)
+# ===========================================================================
+def _setup_model(arch):
+    cfg = get_reduced(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)
+            / cfg.moe.top_k))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    return _setup_model("qwen1.5-0.5b")
+
+
+def _offline(model, params, prompt, n_new, max_len=64):
+    caches = model.init_caches(1, max_len, layout="list")
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, caches,
+        jnp.int32(0))
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt) + model.cfg.meta_tokens
+    for _ in range(n_new - 1):
+        logits, caches = model.decode_step(
+            params, jnp.asarray([out[-1]], jnp.int32), caches,
+            jnp.int32(pos))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+def test_paged_engine_matches_offline_gqa(qwen):
+    cfg, model, params = qwen
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(6, 16)).astype(np.int32)
+               for _ in range(5)]
+    eng = PagedServingEngine(model, params, num_pages=24, page_size=8,
+                             max_batch=2, prefill_chunk=8)
+    done = eng.run([Request(prompt=p, max_new_tokens=6)
+                    for p in prompts])
+    assert len(done) == 5
+    for r in done:
+        assert r.output == _offline(model, params, r.prompt, 6), r.id
+        assert not r.truncated
+    eng.alloc.check()
+    # finished requests freed their pages; only the prefix cache's
+    # retained full pages (and the scratch page) remain live
+    assert eng.alloc.used_count() == 1 + len(eng.prefix)
+    eng.prefix.clear()
+    eng.alloc.check()
+    assert eng.alloc.used_count() == 1                 # only scratch
+
+
+def test_paged_engine_matches_offline_mla_moe():
+    cfg, model, params = _setup_model("deepseek-v2-lite-16b")
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(6, 14)).astype(np.int32)
+               for _ in range(3)]
+    eng = PagedServingEngine(model, params, num_pages=20, page_size=8,
+                             max_batch=2, prefill_chunk=8)
+    done = eng.run([Request(prompt=p, max_new_tokens=5)
+                    for p in prompts])
+    for r in done:
+        assert r.output == _offline(model, params, r.prompt, 5), r.id
+    eng.alloc.check()
+
+
+def test_chunked_prefill_matches_monolithic(qwen):
+    """Chunk-by-chunk paged prefill reproduces the one-shot prefill's
+    last-token logits."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)
+    # monolithic (contiguous cache)
+    caches = model.init_caches(1, 64, layout="list")
+    want, _ = model.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                            caches, jnp.int32(0))
+    # chunked (paged)
+    chunk, page, t = 8, 8, 6
+    pools = model.init_paged_pools(t + 1, page)
+    bt = jnp.asarray(np.arange(1, t + 1, dtype=np.int32)[None])
+    got = None
+    for ctx in range(0, len(prompt), chunk):
+        end = min(ctx + chunk, len(prompt))
+        toks = np.zeros(chunk, np.int32)
+        toks[:end - ctx] = prompt[ctx:end]
+        got, pools = model.prefill_chunk_paged(
+            params, jnp.asarray(toks[None]), pools, bt,
+            jnp.int32(ctx), jnp.int32(end - ctx - 1))
+    assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
+                    rtol=1e-5)
+
+
+def test_prefix_sharing_identical_logits(qwen):
+    """A prefill that adopts the donor's prefix pages produces the same
+    logits as its own cold prefill — on shared pages, no recompute."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(13)
+    page, t, chunk = 8, 6, 8
+    prefix = rng.integers(0, cfg.vocab_size, 2 * page).astype(np.int32)
+    suffix = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    prompt = np.concatenate([prefix, suffix])
+
+    def run_chunks(pools, bt, start):
+        logits = None
+        for ctx in range(start, len(prompt), chunk):
+            end = min(ctx + chunk, len(prompt))
+            toks = np.zeros(chunk, np.int32)
+            toks[:end - ctx] = prompt[ctx:end]
+            logits, pools = model.prefill_chunk_paged(
+                params, jnp.asarray(toks[None]), pools, bt,
+                jnp.int32(ctx), jnp.int32(end - ctx - 1))
+        return logits, pools
+
+    pools = model.init_paged_pools(2 * t + 1, page)
+    bt_cold = jnp.asarray(np.arange(1, t + 1, dtype=np.int32)[None])
+    cold, pools = run_chunks(pools, bt_cold, 0)
+    # warm: adopt the donor's two prefix pages, own pages for the rest
+    warm_pages = np.concatenate([np.asarray(bt_cold[0, :2]),
+                                 np.arange(t + 1, 2 * t - 1,
+                                           dtype=np.int32)])
+    bt_warm = jnp.asarray(np.concatenate(
+        [warm_pages, [0] * (t - len(warm_pages))]).astype(np.int32)[None])
+    warm, _ = run_chunks(pools, bt_warm, 2 * page)
+    assert_array_equal(np.asarray(warm), np.asarray(cold))
+
+
+def test_paged_engine_prefix_sharing_end_to_end(qwen):
+    cfg, model, params = qwen
+    rng = np.random.default_rng(14)
+    prefix = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    reqs = [Request(prompt=np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, 6).astype(np.int32)]),
+        max_new_tokens=4) for _ in range(4)]
+    eng = PagedServingEngine(model, params, num_pages=32, page_size=8,
+                             max_batch=2, prefill_chunk=8)
+    done = eng.run(reqs)
+    for r in done:
+        assert r.output == _offline(model, params, r.prompt, 4), r.id
+    # 3 of 4 requests adopted the two full prefix pages
+    assert eng.stats["prefix_hit_tokens"] == 3 * 16
+    eng.alloc.check()
+
+
+def test_paged_engine_preemption_replays_exactly(qwen):
+    cfg, model, params = qwen
+    rng = np.random.default_rng(15)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        12).astype(np.int32),
+                    max_new_tokens=16) for _ in range(3)]
+    eng = PagedServingEngine(model, params, num_pages=9, page_size=8,
+                             max_batch=3, prefill_chunk=8,
+                             prefix_sharing=False)
+    done = eng.run(reqs)
+    assert eng.stats["preemptions"] >= 1
+    assert any(r.preemptions for r in done)
+    for r in done:
+        assert r.output == _offline(model, params, r.prompt, 16), r.id
+        assert not r.truncated
+    eng.alloc.check()
+
+
+def test_paged_engine_grows_past_dense_wall(qwen):
+    """A request that the dense engine truncates at max_len completes
+    in the paged engine by appending pages."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(16)
+    prompt = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    dense = ServingEngine(model, params, max_batch=1, max_len=32)
+    [r_dense] = dense.run([Request(prompt=prompt.copy(),
+                                   max_new_tokens=40)])
+    assert r_dense.truncated and len(r_dense.output) < 40
+    eng = PagedServingEngine(model, params, num_pages=8, page_size=8,
+                             max_batch=1)
+    [r] = eng.run([Request(prompt=prompt.copy(), max_new_tokens=40)])
+    assert not r.truncated and len(r.output) == 40
+    assert r.output == _offline(model, params, prompt, 40, max_len=64)
+    eng.alloc.check()
+
+
+def test_paged_engine_truncates_when_pool_exhausted(qwen):
+    cfg, model, params = qwen
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    eng = PagedServingEngine(model, params, num_pages=3, page_size=8,
+                             max_batch=1)                # 16 usable rows
+    [r] = eng.run([Request(prompt=prompt, max_new_tokens=40)])
+    assert r.truncated and len(r.output) < 40
+    eng.alloc.check()
+    assert eng.alloc.used_count() == 1                 # pages freed
+
+
+def test_paged_engine_logical_capacity_wall(qwen):
+    """max_len_pages bounds a single request's growth independently of
+    pool size (and pins the static budget to table_pages * page_size,
+    the dense engine's budget semantics)."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(19)
+    prompt = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    eng = PagedServingEngine(model, params, num_pages=16, page_size=8,
+                             max_batch=1, max_len_pages=3)
+    assert eng.table_pages == 3                        # 24-row capacity
+    [r] = eng.run([Request(prompt=prompt, max_new_tokens=40)])
+    assert r.truncated and len(r.output) < 40
+    eng.alloc.check()
+    assert eng.alloc.free_count() >= 16 - 1 - 1        # pages returned
+
+
+def test_paged_engine_oversized_prompt_truncated_at_admission(qwen):
+    """A prompt that can never fit the logical capacity is rejected
+    before any prefill chunk runs (no wasted compute, no preemption)."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(21)
+    big = Request(prompt=rng.integers(0, cfg.vocab_size,
+                                      40).astype(np.int32),
+                  max_new_tokens=4)
+    ok = Request(prompt=rng.integers(0, cfg.vocab_size,
+                                     10).astype(np.int32),
+                 max_new_tokens=4)
+    eng = PagedServingEngine(model, params, num_pages=16, page_size=8,
+                             max_batch=1, max_len_pages=3)
+    done = eng.run([big, ok])
+    assert big.truncated and big.output == []
+    assert eng.stats["prefill_chunks"] > 0             # ok's chunks only
+    assert not ok.truncated
+    assert ok.output == _offline(model, params, ok.prompt, 4)
+    eng.alloc.check()
+
+
+def test_dense_engine_truncation_is_immediate(qwen):
+    """Satellite fix: a request at the cache ceiling stops decoding and
+    frees its slot right away, with the explicit flag set."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(18)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        8).astype(np.int32),
+                    max_new_tokens=64) for _ in range(2)]
+    eng = ServingEngine(model, params, max_batch=1, max_len=16)
+    done = eng.run(reqs)
+    assert len(done) == 2
+    for r in done:
+        assert r.truncated
+        # 8 prompt rows + first token => decodes until row 16 is full
+        assert len(r.output) == 16 - 8 + 1
+        assert r.t_done is not None
+
+
+def test_dense_engine_oversized_prompt_truncated_at_admission(qwen):
+    cfg, model, params = qwen
+    rng = np.random.default_rng(22)
+    big = Request(prompt=rng.integers(0, cfg.vocab_size,
+                                      20).astype(np.int32),
+                  max_new_tokens=4)
+    ok = Request(prompt=rng.integers(0, cfg.vocab_size,
+                                     8).astype(np.int32),
+                 max_new_tokens=4)
+    eng = ServingEngine(model, params, max_batch=1, max_len=16)
+    done = eng.run([big, ok])
+    assert big.truncated and big.output == []
+    assert not ok.truncated and len(ok.output) == 4
+
+
+def test_pool_sharding_specs():
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.distributed.sharding import ShardingPolicy
+    cfg, model, params = _setup_model("qwen1.5-0.5b")
+    pools = model.init_paged_pools(4, 8)
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("dp", "model"))
+    pol = ShardingPolicy(cfg, mesh)
+    specs = pol.pool_specs(pools)
+    flat, _ = jax.tree_util.tree_flatten(specs,
+                                         is_leaf=lambda x:
+                                         isinstance(x, P))
+    assert all(isinstance(s, P) for s in flat)
+    # head axis lands on "model" when it divides (1-device mesh: always)
+    k_spec = specs[0].k if hasattr(specs[0], "k") else flat[0]
+    assert k_spec == P(None, None, "model", None)
