@@ -3,6 +3,7 @@
 
   recall_accuracy    Tables 1/2 (selection-recall proxy)
   decode_efficiency  Figs. 4/5 (HBM byte model + CPU wall-clock)
+  prefill_efficiency beyond-paper: paged flash-prefill kernel vs gather
   budget_ablation    Fig. 7
   hashbits_ablation  Fig. 8
   opt_ablation       Fig. 9
@@ -21,10 +22,12 @@ def main() -> None:
     from benchmarks import (budget_ablation, decode_efficiency,
                             distributed_topk, hashbits_ablation,
                             offload_model, opt_ablation,
-                            recall_accuracy, roofline)
+                            prefill_efficiency, recall_accuracy,
+                            roofline)
     suites = [
         ("recall_accuracy", recall_accuracy.main),
         ("decode_efficiency", decode_efficiency.main),
+        ("prefill_efficiency", prefill_efficiency.main),
         ("budget_ablation", budget_ablation.main),
         ("hashbits_ablation", hashbits_ablation.main),
         ("opt_ablation", opt_ablation.main),

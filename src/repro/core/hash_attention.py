@@ -6,7 +6,11 @@ semantics. The sequence-sharded SPMD decode lives in
 :func:`mask_scores`) are shared with it.
 
 Prefill (Alg. 1): full flash attention + fill KV cache + hash-encode and
-cache the key codes.
+cache the key codes. The attention bottoms out in
+``kernels/flash_attention.flash_prefill_batched`` (one batched dispatch,
+GQA folded into the tile, traced ``q_offset``); the paged serving
+engine's chunked prefill runs the block-table variant over the page
+pools in place.
 
 Decode (Alg. 3): hash-encode q and the new k; update caches; Hamming
 match scores against the whole code cache (GQA: summed over the q heads

@@ -236,9 +236,12 @@ def logical_view(pool_leaf: jax.Array,
     (B, T * page, ...). Rows past a request's fill are garbage (drawn
     from whatever page the table names there — inactive table slots
     point at the scratch page) and must be masked by the consumer, which
-    every caller already does through ``n_valid``. This is the
-    dense-path / chunked-prefill context read; the HATA hot path never
-    materializes it (the paged kernels read pages in place).
+    every caller already does through ``n_valid`` (or, for the chunked
+    prefill, by causality at absolute positions). Only the *dense*
+    decode fallback and the XLA reference paths read this: the HATA hot
+    path and the pallas chunked prefill never materialize it (the paged
+    score / gather / flash-prefill kernels all read pages in place
+    through the block-table index_map).
     """
     page = pool_leaf.shape[1]
     flat = _flat(pool_leaf)

@@ -1,16 +1,55 @@
-"""Causal flash attention Pallas kernel (prefill path).
+"""Flash attention Pallas kernels (prefill path).
 
-Single-head kernel, online-softmax over kv blocks (Dao et al.), grid
-(q_blocks, kv_blocks) with the kv dimension innermost and running
-(m, l, acc) statistics held in VMEM scratch. Causally-dead kv blocks are
-skipped with ``pl.when`` so the causal prefill does ~half the work.
+Online-softmax over kv blocks (Dao et al.) with the kv dimension
+innermost and running (m, l, acc) statistics held in VMEM scratch.
+Causally-dead kv blocks are skipped with ``pl.when`` so the causal
+prefill does ~half the work.
 
-Batch/heads are mapped by ``ops.flash_attention`` via vmap (on real TPU
-the G query heads of a GQA group would be folded into the q-block
-sublanes; single-head keeps the kernel readable and the grid identical).
+``flash_attention``
+    The original single-head kernel, grid (q_blocks, kv_blocks). Kept as
+    the readable reference / kernel-test subject; the production paths
+    below fold batch + heads into one dispatch.
 
-VMEM at defaults (block_q=block_k=512, d=128, f32): q/k/v tiles 768 KiB,
-acc 256 KiB, stats 4 KiB — well inside the ~16 MiB VMEM budget.
+``flash_prefill_batched``
+    The production prefill/chunked-prefill kernel: grid
+    (B, H_kv, q_blocks, kv_blocks) with the G query heads of each GQA
+    group folded into the q tile, reading K/V in their native
+    (B, S, H_kv, d) layout — the former per-(B, H) vmap dispatch made
+    XLA materialize ``g`` copies of the whole KV cache via jnp.repeat.
+    ``q_offset`` is a *traced* (B,) vector read through scalar prefetch,
+    so one compiled shape serves every chunk position of every prompt
+    (the former static offset recompiled per chunk).
+
+``flash_prefill_paged``
+    The block-table variant: K/V tiles are whole pool pages fetched
+    through a scalar-prefetched block-table ``index_map`` (the same
+    indirection as ``hamming_score_paged``), so a chunked prefill
+    attends over the paged cache *in place* — no gathered dense logical
+    view. Garbage rows (page tails past the request's fill, scratch
+    pages in unused table slots) sit at logical positions strictly
+    above every live query's absolute position, so the causal mask is
+    exactly the garbage mask; masked lanes contribute exact zeros (see
+    the in-kernel ``p`` zeroing), keeping the output bit-identical to
+    the contiguous kernel over the same logical view.
+
+``mla_prefill_batched`` / ``mla_prefill_paged``
+    The split-latent MLA twins (mirroring ``mla_decode_gathered_batched``):
+    absorbed queries, logits computed in-kernel as q_c·c + q_r·k_r over
+    the (ckv, krope) latent streams, values are the ckv rows themselves
+    (the caller applies W_uv) — no per-head K/V is ever materialized
+    from the latent cache (the former chunked MLA prefill up-projected
+    the *whole* gathered logical view every chunk).
+
+Accumulation convention (bit-exactness contract): masked lanes are
+forced to exactly 0 probability mass, so an all-masked tile is an exact
+identity on (m, l, acc) and the online softmax is invariant to the
+q-chunk partition — chunked prefill equals the same prompt prefilled in
+one chunk bit-for-bit, and the dead-tile ``pl.when`` skip equals
+processing the tile.
+
+VMEM at defaults (block_q=256, block_k=512, g=8, d=128, f32): q tile
+1 MiB, k/v tiles 512 KiB, acc 1 MiB, stats 16 KiB — inside the ~16 MiB
+VMEM budget.
 """
 from __future__ import annotations
 
@@ -128,3 +167,425 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def _offset_vec(q_offset, b: int) -> jax.Array:
+    """Broadcast a scalar/None/(B,) traced offset to a (B,) int32."""
+    if q_offset is None:
+        return jnp.zeros((b,), jnp.int32)
+    return jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+
+
+# ---------------------------------------------------------------------------
+# Batched GQA flash prefill (traced q_offset, GQA folded into the tile)
+# ---------------------------------------------------------------------------
+def _prefill_batched_kernel(*refs, scale: float, causal: bool,
+                            window: Optional[int], block_q: int,
+                            block_k: int, n_kv_blocks: int, g: int,
+                            sk: int, paged: bool):
+    if paged:
+        bt_ref, qoff_ref, q_ref, k_ref, v_ref = refs[:5]
+        del bt_ref                      # consumed by the index_map
+        refs = refs[5:]
+    else:
+        qoff_ref, q_ref, k_ref, v_ref = refs[:4]
+        refs = refs[4:]
+    o_ref, m_ref, l_ref, acc_ref = refs
+
+    bi = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    off = qoff_ref[bi]
+    rows = block_q * g
+    # Folded row r holds (q-row r // g, group head r % g); absolute
+    # positions depend only on the q-row.
+    qpos = off + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, block_k), 0) // g
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, block_k), 1)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale      # (block_q, g, d)
+        q2 = q.reshape(rows, q.shape[-1])
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # (block_k, d)
+        logits = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (rows, block_k)
+        mask = kpos < sk                              # static k padding
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # Masked lanes carry exactly 0 mass (not exp(NEG_INF - m), which
+        # is 1 while m is still at its -inf init): an all-masked tile is
+        # an exact identity on (m, l, acc), which is what makes the
+        # accumulation invariant to the chunk partition (chunked ≡
+        # monolithic bit-for-bit) and the dead-tile skip exact.
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)     # (block_k, dv)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip tiles strictly above the diagonal band. The predicate is
+        # traced (q_offset comes from SMEM) — pl.when handles it.
+        first_q = off + qi * block_q
+        live = ki * block_k <= first_q + block_q - 1
+        if window is not None:
+            live = jnp.logical_and(
+                live, (ki + 1) * block_k - 1 > first_q - window)
+        pl.when(live)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = (acc_ref[...] / l).astype(o_ref.dtype)
+        o_ref[0] = out.reshape(block_q, g, out.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_prefill_batched(q: jax.Array, k: jax.Array, v: jax.Array,
+                          q_offset: Optional[jax.Array] = None, *,
+                          causal: bool = True,
+                          window: Optional[int] = None,
+                          block_q: Optional[int] = None,
+                          block_k: Optional[int] = None,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """Batched GQA flash prefill — one dispatch, no vmap, no K/V copies.
+
+    q: (B, Sq, H, d), k: (B, Sk, H_kv, d), v: (B, Sk, H_kv, dv) in
+    their native layouts; q_offset: traced scalar or (B,) int32 absolute
+    position of q[:, 0] (None = 0) — read via scalar prefetch, so every
+    chunk position of a chunked prefill reuses one compiled shape.
+    Returns (B, Sq, H, dv) in q.dtype.
+
+    Grid (B, H_kv, q-blocks, kv-blocks): each step processes one GQA
+    group, its G query heads folded into the q tile as ``block_q * g``
+    MXU rows — where the former per-(B, H) vmap forced XLA to
+    ``jnp.repeat`` the K/V cache ``g`` times before dispatch.
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    block_q = runtime.prefill_block_q(block_q)
+    block_k = runtime.prefill_block_k(block_k)
+    b, sq, h, d = q.shape
+    b2, sk, h_kv, d2 = k.shape
+    assert (b, d) == (b2, d2) and h % h_kv == 0, (q.shape, k.shape)
+    g = h // h_kv
+    dv = v.shape[-1]
+    q_off = _offset_vec(q_offset, b)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    n_q = pl.cdiv(sq, block_q)
+    n_k = pl.cdiv(sk, block_k)
+    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h_kv, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, g, d),
+                         lambda bi, hi, qi, ki, off: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, ki, off: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, dv),
+                         lambda bi, hi, qi, ki, off: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, g, dv),
+                               lambda bi, hi, qi, ki, off: (bi, qi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * g, 1), jnp.float32),
+            pltpu.VMEM((block_q * g, 1), jnp.float32),
+            pltpu.VMEM((block_q * g, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _prefill_batched_kernel, scale=d ** -0.5, causal=causal,
+            window=window, block_q=block_q, block_k=block_k,
+            n_kv_blocks=n_k, g=g, sk=sk, paged=False),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, dv), q.dtype),
+        interpret=interpret,
+    )(q_off, q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q",
+                                             "interpret"))
+def flash_prefill_paged(q: jax.Array, k_pool: jax.Array,
+                        v_pool: jax.Array, block_table: jax.Array,
+                        q_offset: Optional[jax.Array] = None, *,
+                        window: Optional[int] = None,
+                        block_q: Optional[int] = None,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Block-table variant of :func:`flash_prefill_batched`.
+
+    q: (B, C, H, d) the prefill chunk; k_pool/v_pool:
+    (P, page, H_kv, d) — the shared per-layer page pools, read *in
+    place*; block_table: (B, T) int32 page ids; q_offset: traced scalar
+    or (B,) tokens already in the cache. Returns (B, C, H, dv).
+
+    One kv tile = one pool page, fetched through the scalar-prefetched
+    block-table index_map (the ``hamming_score_paged`` indirection).
+    Always causal at absolute positions: every garbage row the table
+    can name (page tails past the fill, scratch pages in unused slots)
+    sits at a logical position strictly above every live query, so
+    causality is exactly the garbage mask and the output is
+    bit-identical to the contiguous kernel over the gathered logical
+    view (same page-sized kv blocking).
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    block_q = runtime.prefill_block_q(block_q)
+    b, sq, h, d = q.shape
+    p, page, h_kv, d2 = k_pool.shape
+    assert d == d2 and h % h_kv == 0, (q.shape, k_pool.shape)
+    g = h // h_kv
+    dv = v_pool.shape[-1]
+    b2, t = block_table.shape
+    assert b == b2, (q.shape, block_table.shape)
+    q_off = _offset_vec(q_offset, b)
+    block_q = min(block_q, sq)
+    n_q = pl.cdiv(sq, block_q)
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h_kv, n_q, t),
+        in_specs=[
+            pl.BlockSpec((1, block_q, g, d),
+                         lambda bi, hi, qi, ki, bt, off: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, hi, qi, ki, bt, off:
+                         (bt[bi, ki], 0, hi, 0)),
+            pl.BlockSpec((1, page, 1, dv),
+                         lambda bi, hi, qi, ki, bt, off:
+                         (bt[bi, ki], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, g, dv),
+                               lambda bi, hi, qi, ki, bt, off:
+                               (bi, qi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * g, 1), jnp.float32),
+            pltpu.VMEM((block_q * g, 1), jnp.float32),
+            pltpu.VMEM((block_q * g, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _prefill_batched_kernel, scale=d ** -0.5, causal=True,
+            window=window, block_q=block_q, block_k=page,
+            n_kv_blocks=t, g=g, sk=t * page, paged=True),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, dv), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), q_off, q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# Split-latent MLA flash prefill (absorbed q, q_c·c + q_r·k_r in-kernel)
+# ---------------------------------------------------------------------------
+def _mla_prefill_kernel(*refs, scale: float, lora_rank: int,
+                        block_q: int, block_k: int, n_kv_blocks: int,
+                        h: int, sk: int, paged: bool):
+    if paged:
+        bt_ref, qoff_ref, q_ref, c_ref, r_ref = refs[:5]
+        del bt_ref
+        refs = refs[5:]
+    else:
+        qoff_ref, q_ref, c_ref, r_ref = refs[:4]
+        refs = refs[4:]
+    o_ref, m_ref, l_ref, acc_ref = refs
+
+    bi = pl.program_id(0)
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    off = qoff_ref[bi]
+    rows = block_q * h
+    qpos = off + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, block_k), 0) // h
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, block_k), 1)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale    # (block_q, H, r+rd)
+        q2 = q.reshape(rows, q.shape[-1])
+        q_c = q2[:, :lora_rank]
+        q_r = q2[:, lora_rank:]
+        c = c_ref[0].astype(jnp.float32)            # (block_k, r)
+        kr = r_ref[0].astype(jnp.float32)           # (block_k, rd)
+        # absorbed-q split-latent logits: q·[c;k_r] = q_c·c + q_r·k_r —
+        # no per-head K is ever materialized from the latent stream.
+        logits = (jax.lax.dot_general(
+                      q_c, c, (((1,), (1,)), ((), ())),
+                      preferred_element_type=jnp.float32)
+                  + jax.lax.dot_general(
+                      q_r, kr, (((1,), (1,)), ((), ())),
+                      preferred_element_type=jnp.float32))
+        mask = (kpos < sk) & (kpos <= qpos)
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        # values are the compressed-latent rows themselves (the caller
+        # applies W_uv after)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, c, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    live = ki * block_k <= off + qi * block_q + block_q - 1
+    pl.when(live)(_body)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = acc_ref[...] / l
+        o_ref[0] = out.reshape(block_q, h, lora_rank)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "lora_rank", "scale", "block_q", "block_k", "interpret"))
+def mla_prefill_batched(q_lat: jax.Array, ckv: jax.Array,
+                        krope: jax.Array,
+                        q_offset: Optional[jax.Array] = None, *,
+                        lora_rank: int, scale: float,
+                        block_q: Optional[int] = None,
+                        block_k: Optional[int] = None,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Batched split-latent MLA flash prefill (the prefill twin of
+    ``mla_decode_gathered_batched``).
+
+    q_lat: (B, C, H, r+rd) absorbed queries (f32 — W_uk folded in);
+    ckv: (B, S, r) and krope: (B, S, rd) latent caches in native
+    layout; q_offset: traced scalar or (B,) absolute position of
+    q_lat[:, 0]. ``scale`` is the model's (qk_nope+qk_rope)**-0.5.
+    Returns o_lat (B, C, H, r) f32 — the caller applies W_uv.
+
+    All H query heads share the one latent stream, so they fold into
+    the q tile (grid (B, q-blocks, kv-blocks)) and the logits are the
+    split form q_c·c + q_r·k_r — neither a concatenated latent copy nor
+    per-head K/V up-projections of the context are ever materialized.
+    Always causal (the chunked-prefill context read).
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    block_q = runtime.prefill_block_q(block_q)
+    block_k = runtime.prefill_block_k(block_k)
+    b, sq, h, qdim = q_lat.shape
+    assert qdim > lora_rank, (q_lat.shape, lora_rank)
+    b2, sk, r = ckv.shape
+    assert b == b2 and r == lora_rank, (q_lat.shape, ckv.shape)
+    rd = krope.shape[-1]
+    q_off = _offset_vec(q_offset, b)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    n_q = pl.cdiv(sq, block_q)
+    n_k = pl.cdiv(sk, block_k)
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, h, qdim),
+                         lambda bi, qi, ki, off: (bi, qi, 0, 0)),
+            pl.BlockSpec((1, block_k, r),
+                         lambda bi, qi, ki, off: (bi, ki, 0)),
+            pl.BlockSpec((1, block_k, rd),
+                         lambda bi, qi, ki, off: (bi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, h, r),
+                               lambda bi, qi, ki, off: (bi, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * h, 1), jnp.float32),
+            pltpu.VMEM((block_q * h, 1), jnp.float32),
+            pltpu.VMEM((block_q * h, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _mla_prefill_kernel, scale=scale, lora_rank=lora_rank,
+            block_q=block_q, block_k=block_k, n_kv_blocks=n_k, h=h,
+            sk=sk, paged=False),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, r), jnp.float32),
+        interpret=interpret,
+    )(q_off, q_lat, ckv, krope)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "lora_rank", "scale", "block_q", "interpret"))
+def mla_prefill_paged(q_lat: jax.Array, ckv_pool: jax.Array,
+                      krope_pool: jax.Array, block_table: jax.Array,
+                      q_offset: Optional[jax.Array] = None, *,
+                      lora_rank: int, scale: float,
+                      block_q: Optional[int] = None,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Block-table variant of :func:`mla_prefill_batched`.
+
+    ckv_pool: (P, page, r), krope_pool: (P, page, rd) — the shared
+    latent page pools read in place; block_table: (B, T) int32. One kv
+    tile = one (ckv, krope) page pair through the scalar-prefetched
+    index_map; causality at absolute positions masks every garbage row
+    (see :func:`flash_prefill_paged`).
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    block_q = runtime.prefill_block_q(block_q)
+    b, sq, h, qdim = q_lat.shape
+    assert qdim > lora_rank, (q_lat.shape, lora_rank)
+    p, page, r = ckv_pool.shape
+    assert r == lora_rank, (ckv_pool.shape, lora_rank)
+    rd = krope_pool.shape[-1]
+    b2, t = block_table.shape
+    assert b == b2, (q_lat.shape, block_table.shape)
+    q_off = _offset_vec(q_offset, b)
+    block_q = min(block_q, sq)
+    n_q = pl.cdiv(sq, block_q)
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_q, t),
+        in_specs=[
+            pl.BlockSpec((1, block_q, h, qdim),
+                         lambda bi, qi, ki, bt, off: (bi, qi, 0, 0)),
+            pl.BlockSpec((1, page, r),
+                         lambda bi, qi, ki, bt, off: (bt[bi, ki], 0, 0)),
+            pl.BlockSpec((1, page, rd),
+                         lambda bi, qi, ki, bt, off: (bt[bi, ki], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, h, r),
+                               lambda bi, qi, ki, bt, off: (bi, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * h, 1), jnp.float32),
+            pltpu.VMEM((block_q * h, 1), jnp.float32),
+            pltpu.VMEM((block_q * h, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _mla_prefill_kernel, scale=scale, lora_rank=lora_rank,
+            block_q=block_q, block_k=page, n_kv_blocks=t, h=h,
+            sk=t * page, paged=True),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, r), jnp.float32),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), q_off, q_lat, ckv_pool, krope_pool)

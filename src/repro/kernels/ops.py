@@ -197,12 +197,14 @@ def hamming_scores_vmapped(q_codes: jax.Array, k_codes: jax.Array, *,
 # Attention (prefill / training)
 # ---------------------------------------------------------------------------
 def _xla_flash_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                   causal: bool, window: Optional[int], q_offset: int,
+                   causal: bool, window: Optional[int], q_offset,
                    chunk_q: int = 1024, chunk_k: int = 1024) -> jax.Array:
     """Chunked online-softmax GQA attention, O(chunk_q*chunk_k) memory.
 
     q: (B, Sq, H, d), k/v: (B, Sk, H_kv, d) -> (B, Sq, H, d).
-    Differentiable (plain lax.scan); the dry-run path.
+    ``q_offset``: traced scalar or (B,) absolute position of q[:, 0].
+    Differentiable (plain lax.scan); the dry-run path and the
+    differential oracle for the batched Pallas prefill kernels.
     """
     b, sq, h, d = q.shape
     sk, h_kv = k.shape[1], k.shape[2]
@@ -228,7 +230,9 @@ def _xla_flash_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vf = jnp.moveaxis(v.reshape(b, nk, ck, h_kv, dv), 1, 0)
 
     def q_chunk(qi, qc):
-        qpos = qi * cq + jnp.arange(cq) + q_offset
+        # (1|B, cq): per-row offsets serve slots at different depths
+        qpos = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1, 1)) \
+            + qi * cq + jnp.arange(cq)[None]
 
         def kv_step(carry, xs):
             m, l, acc = carry
@@ -236,13 +240,14 @@ def _xla_flash_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
             kpos = ki * ck + jnp.arange(ck)
             logits = jnp.einsum("bqhgd,bkhd->bhgqk", qc,
                                 kc.astype(jnp.float32))
-            mask = jnp.broadcast_to((kpos < sk_valid)[None, :],
-                                    (cq, ck))
+            mask = jnp.broadcast_to((kpos < sk_valid)[None, None, :],
+                                    (qpos.shape[0], cq, ck))
             if causal:
-                mask = mask & (kpos[None, :] <= qpos[:, None])
+                mask = mask & (kpos[None, None, :] <= qpos[:, :, None])
             if window is not None:
-                mask = mask & (kpos[None, :] > qpos[:, None] - window)
-            logits = jnp.where(mask[None, None, None], logits, _fa.NEG_INF)
+                mask = mask & (kpos[None, None, :]
+                               > qpos[:, :, None] - window)
+            logits = jnp.where(mask[:, None, None], logits, _fa.NEG_INF)
             m_new = jnp.maximum(m, jnp.max(logits, -1))
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(logits - m_new[..., None])
@@ -268,23 +273,21 @@ def _xla_flash_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
-                    q_offset: int = 0) -> jax.Array:
-    """Batched GQA attention. q: (B, Sq, H, d), k/v: (B, Sk, H_kv, d)."""
+                    q_offset=0) -> jax.Array:
+    """Batched GQA attention. q: (B, Sq, H, d), k/v: (B, Sk, H_kv, d).
+
+    ``q_offset`` (scalar or (B,)) is *traced* on both impls. Pallas
+    impl: one batched flash-prefill dispatch with the GQA group folded
+    into the q tile and K/V streamed in their native layout — the
+    former per-(B, H) vmap of the single-head kernel made XLA
+    ``jnp.repeat`` the whole K/V cache ``g`` times before dispatch.
+    """
     if get_impl() == "xla":
         return _xla_flash_gqa(q, k, v, causal=causal, window=window,
                               q_offset=q_offset)
-    b, sq, h, d = q.shape
-    h_kv = k.shape[2]
-    g = h // h_kv
-    fn = functools.partial(_fa.flash_attention, causal=causal,
-                           window=window, q_offset=q_offset)
-    # map q head -> kv head, vmap over (B, H).
-    qh = jnp.moveaxis(q, 2, 0)                       # (H, B, Sq, d)
-    kh = jnp.moveaxis(k, 2, 0)                       # (H_kv, B, Sk, d)
-    kh = jnp.repeat(kh, g, axis=0)
-    vh = jnp.repeat(jnp.moveaxis(v, 2, 0), g, axis=0)
-    out = jax.vmap(jax.vmap(fn))(qh, kh, vh)         # (H, B, Sq, d)
-    return jnp.moveaxis(out, 0, 2)
+    return _fa.flash_prefill_batched(q, k, v,
+                                     jnp.asarray(q_offset, jnp.int32),
+                                     causal=causal, window=window)
 
 
 # ---------------------------------------------------------------------------
@@ -429,18 +432,93 @@ def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     q_offset: jax.Array,
                     window: Optional[int] = None) -> jax.Array:
     """Chunked-prefill context attention: a chunk of fresh queries over
-    the full (gathered) logical KV view, causal at absolute positions.
+    a contiguous (or pre-gathered) KV view, causal at absolute positions.
 
-    q: (B, C, H, d) the prefill chunk; k/v: (B, S_log, H_kv, d) the
-    padded logical view (garbage rows sit at positions > the chunk's
-    last row, so causality masks them); q_offset: *traced* scalar — the
-    tokens already in the cache. Always the XLA online-softmax path:
-    the pallas flash kernel bakes q_offset in as a static arg, which
-    would retrace per context length (DESIGN.md §Paged lists the
-    static-offset prefill kernel as an open item).
+    q: (B, C, H, d) the prefill chunk; k/v: (B, S_log, H_kv, d) (garbage
+    rows sit at positions > the chunk's last row, so causality masks
+    them); q_offset: *traced* scalar or (B,) — the tokens already in
+    the cache. The pallas impl reads it through scalar prefetch, so one
+    compiled chunk shape serves every chunk position; paged serving
+    should prefer :func:`chunk_attention_paged`, which skips the
+    gathered view entirely.
     """
-    return _xla_flash_gqa(q, k, v, causal=True, window=window,
-                          q_offset=q_offset)
+    if get_impl() == "xla":
+        return _xla_flash_gqa(q, k, v, causal=True, window=window,
+                              q_offset=q_offset)
+    return _fa.flash_prefill_batched(q, k, v,
+                                     jnp.asarray(q_offset, jnp.int32),
+                                     causal=True, window=window)
+
+
+def chunk_attention_paged(q: jax.Array, k_pool: jax.Array,
+                          v_pool: jax.Array, block_table: jax.Array,
+                          q_offset: jax.Array, *,
+                          window: Optional[int] = None) -> jax.Array:
+    """Chunked-prefill context attention over a paged KV pool.
+
+    q: (B, C, H, d); k_pool/v_pool: (P, page, H_kv, d) shared per-layer
+    page pools; block_table: (B, T) int32; q_offset: traced scalar or
+    (B,). Pallas impl: the block-table flash-prefill kernel fetches
+    pages in place through the scalar-prefetched index_map — no
+    gathered dense logical view exists anywhere on the path. xla impl:
+    gather the logical view, then the online-softmax reference (the
+    differential oracle). Causality at absolute positions masks every
+    garbage row the table can name, so both impls equal the contiguous
+    :func:`chunk_attention` over the same logical view.
+    """
+    if get_impl() == "xla":
+        k_view = _pool_logical_view(k_pool, block_table)
+        v_view = _pool_logical_view(v_pool, block_table)
+        return _xla_flash_gqa(q, k_view, v_view, causal=True,
+                              window=window, q_offset=q_offset)
+    return _fa.flash_prefill_paged(q, k_pool, v_pool, block_table,
+                                   jnp.asarray(q_offset, jnp.int32),
+                                   window=window)
+
+
+def mla_chunk_attention(q_lat: jax.Array, ckv: jax.Array,
+                        krope: jax.Array, q_offset: jax.Array, *,
+                        lora_rank: int, scale: float) -> jax.Array:
+    """Split-latent MLA chunked-prefill attention (contiguous caches).
+
+    q_lat: (B, C, H, r+rd) absorbed queries; ckv: (B, S, r); krope:
+    (B, S, rd); q_offset: traced scalar or (B,). Returns o_lat
+    (B, C, H, r) f32 — the caller applies W_uv. Logits are computed in
+    latent space (q_c·c + q_r·k_r), so no per-head K/V is materialized
+    from the latent stream on either impl.
+    """
+    if get_impl() == "xla":
+        return ref.mla_chunk_attention_ref(q_lat, ckv, krope, q_offset,
+                                           lora_rank=lora_rank,
+                                           scale=scale)
+    return _fa.mla_prefill_batched(q_lat, ckv, krope,
+                                   jnp.asarray(q_offset, jnp.int32),
+                                   lora_rank=lora_rank, scale=scale)
+
+
+def mla_chunk_attention_paged(q_lat: jax.Array, ckv_pool: jax.Array,
+                              krope_pool: jax.Array,
+                              block_table: jax.Array,
+                              q_offset: jax.Array, *, lora_rank: int,
+                              scale: float) -> jax.Array:
+    """Split-latent MLA chunked-prefill attention over paged latent
+    pools — the MLA twin of :func:`chunk_attention_paged`.
+
+    ckv_pool: (P, page, r), krope_pool: (P, page, rd); block_table:
+    (B, T) int32; q_offset: traced scalar or (B,). Returns o_lat
+    (B, C, H, r) f32.
+    """
+    if get_impl() == "xla":
+        ckv_view = _pool_logical_view(ckv_pool, block_table)
+        kr_view = _pool_logical_view(krope_pool, block_table)
+        return ref.mla_chunk_attention_ref(q_lat, ckv_view, kr_view,
+                                           q_offset,
+                                           lora_rank=lora_rank,
+                                           scale=scale)
+    return _fa.mla_prefill_paged(q_lat, ckv_pool, krope_pool,
+                                 block_table,
+                                 jnp.asarray(q_offset, jnp.int32),
+                                 lora_rank=lora_rank, scale=scale)
 
 
 def gather_decode_attention_vmapped(q: jax.Array, k_cache: jax.Array,

@@ -165,6 +165,40 @@ def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, sq, h, d).astype(q.dtype)
 
 
+def mla_chunk_attention_ref(q_lat: jax.Array, ckv: jax.Array,
+                            krope: jax.Array,
+                            q_offset=0, *, lora_rank: int,
+                            scale: float) -> jax.Array:
+    """Split-latent MLA chunked-prefill oracle.
+
+    q_lat: (B, C, H, r+rd) absorbed queries, ckv: (B, S, r), krope:
+    (B, S, rd), q_offset: scalar or (B,) absolute position of
+    q_lat[:, 0]. Causal at absolute positions; logits are the split
+    form q_c·c + q_r·k_r and the values are the ckv rows (the caller
+    applies W_uv) — the ground truth for ``mla_prefill_batched``.
+    Matmul-then-normalize with masked lanes at exactly 0 mass, matching
+    the kernel's accumulation convention bit-for-bit in the
+    single-kv-tile regime.
+    """
+    b, c, h, _ = q_lat.shape
+    s = ckv.shape[1]
+    q = q_lat.astype(jnp.float32) * scale
+    q_c, q_r = q[..., :lora_rank], q[..., lora_rank:]
+    logits = (jnp.einsum("bchr,bsr->bchs", q_c, ckv.astype(jnp.float32))
+              + jnp.einsum("bchr,bsr->bchs", q_r,
+                           krope.astype(jnp.float32)))
+    qpos = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1, 1)) \
+        + jnp.arange(c)[None]                        # (1|B, C)
+    kpos = jnp.arange(s)[None, None, None, :]        # (1, 1, 1, S)
+    mask = jnp.broadcast_to(kpos <= qpos[:, :, None, None], logits.shape)
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(logits - m), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bchs,bsr->bchr", p, ckv.astype(jnp.float32))
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          mask: Optional[jax.Array] = None) -> jax.Array:
     """Single-token decode oracle for one kv head.

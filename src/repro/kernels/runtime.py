@@ -83,3 +83,20 @@ def encode_block_s(block_s: Optional[int] = None) -> int:
     if block_s is not None:
         return block_s
     return block_env("REPRO_ENCODE_BLOCK_S", 512)
+
+
+def prefill_block_q(block_q: Optional[int] = None) -> int:
+    """Query rows per tile of the batched flash-prefill kernels. The
+    GQA group (or all H heads for MLA) is folded into the tile, so the
+    folded row count is ``block_q * g`` — size it with that in mind."""
+    if block_q is not None:
+        return block_q
+    return block_env("REPRO_PREFILL_BLOCK_Q", 256)
+
+
+def prefill_block_k(block_k: Optional[int] = None) -> int:
+    """KV rows per tile of the batched flash-prefill kernels (the paged
+    variants always tile at the pool's page size instead)."""
+    if block_k is not None:
+        return block_k
+    return block_env("REPRO_PREFILL_BLOCK_K", 512)

@@ -287,7 +287,8 @@ def gqa_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
     x: (1, C, D) — the chunk's hidden states — at absolute positions
     [ctx, ctx + C); block_table: (1, T). The fresh K/V/code rows are
     scattered into the request's pages, then the chunk's queries attend
-    causally over the gathered logical context (rows past ctx + C are
+    causally over the paged context *in place* (the block-table
+    flash-prefill kernel on the pallas impl; rows past ctx + C are
     garbage, excluded by causality). ``ctx`` is traced: one compiled
     chunk shape serves every chunk of every prompt.
     """
@@ -298,10 +299,8 @@ def gqa_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
     if w_h is not None and cfg.hata.enabled and pool.codes is not None:
         codes = ops.hash_encode_heads(k, w_h)
     pool = paged.append_chunk_kv(pool, k, v, codes, block_table, ctx)
-    k_view = paged.logical_view(pool.k, block_table)
-    v_view = paged.logical_view(pool.v, block_table)
-    a = ops.chunk_attention(q, k_view, v_view, q_offset=ctx,
-                            window=cfg.sliding_window)
+    a = ops.chunk_attention_paged(q, pool.k, pool.v, block_table, ctx,
+                                  window=cfg.sliding_window)
     return a.reshape(b, c, -1) @ p["wo"], pool
 
 
@@ -405,11 +404,12 @@ def mla_prefill(cfg: ModelConfig, p, w_h, x: jax.Array, cache: MLACache,
 
 def _mla_latent_q(cfg: ModelConfig, p, q_nope: jax.Array,
                   q_rope: jax.Array) -> jax.Array:
-    """Absorb W_uk: map q into latent space. -> (B, H, r + rope_dim)."""
+    """Absorb W_uk: map q into latent space. Any leading batch shape:
+    q_nope/q_rope (..., H, dims) -> (..., H, r + rope_dim) — (B, H, d)
+    for decode, (B, C, H, d) for the chunked prefill."""
     m = cfg.mla
-    b, h = q_nope.shape[0], cfg.n_heads
-    wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
-    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+    wuk = p["wuk"].reshape(m.kv_lora_rank, cfg.n_heads, m.qk_nope_dim)
+    q_lat = jnp.einsum("...hd,rhd->...hr", q_nope.astype(jnp.float32),
                        wuk.astype(jnp.float32))
     return jnp.concatenate(
         [q_lat, q_rope.astype(jnp.float32)], axis=-1)
@@ -592,12 +592,14 @@ def mla_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
                             block_table: jax.Array, ctx: jax.Array,
                             ) -> Tuple[jax.Array, paged.PagedMLAPool]:
     """One chunk of a paged MLA prefill: scatter the chunk's latents,
-    then attend with K/V *materialized from the gathered latent view*
-    (K = [W_uk c ; k_rope], V = W_uv c — row-independent matmuls, so
-    chunked values equal the monolithic prefill's bit-for-bit)."""
+    then attend *in latent space* with absorbed queries — the chunk's
+    queries carry W_uk, logits are q_c·c + q_r·k_r over the paged
+    (ckv, krope) streams, and W_uv is applied to the attended latents.
+    The former revision up-projected per-head K/V from the *whole*
+    gathered logical view on every chunk (a (B, S_log, H, d) pair per
+    layer per chunk); now no per-head context tensor exists at all."""
     m = cfg.mla
     b, c, _ = x.shape
-    h = cfg.n_heads
     positions = jnp.arange(c) + ctx
     q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
     codes = None
@@ -606,17 +608,14 @@ def mla_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
         codes = ops.hash_encode(latent, w_h[0])
     pool = paged.append_chunk_mla(pool, ckv, krope, codes, block_table,
                                   ctx)
-    ckv_view = paged.logical_view(pool.ckv, block_table)   # (1, S_log, r)
-    kr_view = paged.logical_view(pool.krope, block_table)
-    s_log = ckv_view.shape[1]
-    k_nope = (ckv_view @ p["wuk"]).reshape(b, s_log, h, m.qk_nope_dim)
-    v_full = (ckv_view @ p["wuv"]).reshape(b, s_log, h, m.v_head_dim)
-    q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k_full = jnp.concatenate(
-        [k_nope, jnp.broadcast_to(kr_view[:, :, None, :],
-                                  (b, s_log, h, m.qk_rope_dim))], axis=-1)
-    a = ops.chunk_attention(q, k_full, v_full, q_offset=ctx)
-    return a.reshape(b, c, -1) @ p["wo"], pool
+    q_lat = _mla_latent_q(cfg, p, q_nope, q_rope)       # (1, C, H, r+rd)
+    o_lat = ops.mla_chunk_attention_paged(
+        q_lat, pool.ckv, pool.krope, block_table, ctx,
+        lora_rank=m.kv_lora_rank,
+        scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5)
+    wuv = p["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
+    a = jnp.einsum("bchr,rhd->bchd", o_lat, wuv.astype(jnp.float32))
+    return a.reshape(b, c, -1).astype(x.dtype) @ p["wo"], pool
 
 
 # ===========================================================================

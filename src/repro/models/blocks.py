@@ -409,7 +409,10 @@ def block_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
                               pool, block_table: jax.Array,
                               ctx: jax.Array):
     """One chunk of a paged prefill through one block. x: (1, C, D) at
-    absolute positions [ctx, ctx + C)."""
+    absolute positions [ctx, ctx + C). On the pallas impl the chunk's
+    attention runs the block-table flash-prefill kernel over the page
+    pool in place (traced ``ctx``: one compiled chunk shape, no
+    gathered logical view)."""
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if _is_mla(cfg):
         a, pool = attn.mla_prefill_chunk_paged(cfg, p["attn"], w_h, h,

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.models import Model
 from repro.serving.request import Request
+from repro.serving.sampling import pick_tokens
 
 
 class ServingEngine:
@@ -44,7 +45,11 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.sample = sample
-        self.key = jax.random.PRNGKey(seed)
+        # one base key, never split: sampled picks derive a per-request
+        # stream from it (see _pick), so a request's tokens are a pure
+        # function of (seed, request id, step) — independent of which
+        # other requests happen to be co-scheduled.
+        self._base_key = jax.random.PRNGKey(seed)
         cfg = model.cfg
         self.meta = cfg.meta_tokens
         self.caches = model.init_caches(max_batch, max_len,
@@ -98,7 +103,7 @@ class ServingEngine:
             logits, single = self._prefill(self.params, batch, single)
             self.caches = self._insert(self.caches, single,
                                        jnp.int32(slot))
-            tok = self._pick(logits)[0]
+            tok = self._pick(logits, [req])[0]
             req.output.append(self._to_py(tok))
             req.t_first_token = time.monotonic()
             self.last_tok[slot] = np.asarray(tok)
@@ -107,12 +112,11 @@ class ServingEngine:
             self.stats["prefills"] += 1
             self.stats["tokens_out"] += 1
 
-    def _pick(self, logits):
-        if self.sample == "greedy":
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits, axis=-1
-                                      ).astype(jnp.int32)
+    def _pick(self, logits, reqs):
+        """Next-token pick for each logits row; ``reqs`` aligns a
+        Request (or None) with every row — per-request RNG streams,
+        see serving/sampling.py."""
+        return pick_tokens(self._base_key, logits, reqs, self.sample)
 
     @staticmethod
     def _to_py(tok):
@@ -142,7 +146,7 @@ class ServingEngine:
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self.last_tok), self.caches,
             jnp.asarray(self.pos))
-        toks = self._pick(logits)
+        toks = self._pick(logits, self.slots)
         self.stats["decode_steps"] += 1
         toks_np = np.asarray(toks)
         for slot, req in enumerate(self.slots):

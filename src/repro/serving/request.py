@@ -28,7 +28,8 @@ class Request:
     # can't fit the request even after eviction + preemption)
     truncated: bool = False
     # times this request was evicted mid-flight by the paged scheduler
-    # (greedy decode replays its tokens identically on resume)
+    # (resume replays its tokens identically — greedy trivially, sampled
+    # via the engine's per-request (id, step) RNG streams)
     preemptions: int = 0
 
     @property

@@ -1,0 +1,50 @@
+"""Next-token picking with per-request RNG streams.
+
+Shared by the dense ``ServingEngine`` and the ``PagedServingEngine`` so
+the sampled-replay contract lives in exactly one place: a sampled row
+draws from ``fold_in(fold_in(base_key, req.id), step)`` with
+``step = tokens already emitted``. Consequences:
+
+  * no randomness is ever consumed for empty/inactive slots, so a
+    request's tokens are a pure function of (seed, id, step) —
+    independent of co-scheduled traffic and engine history;
+  * a preempted request's replay regenerates the exact keys at the
+    exact steps, so sampled preemption replay is bit-exact
+    (tests/test_prefill_kernels.py).
+
+The whole pick is one jitted call per wave (ids/steps enter as arrays
+and the fold_ins run inside jit) — deriving keys eagerly per slot
+would put O(B) host dispatches on the decode hot path.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.request import Request
+
+
+@jax.jit
+def _categorical_rows(base_key, ids, steps, logits):
+    def one(req_id, step, row):
+        key = jax.random.fold_in(jax.random.fold_in(base_key, req_id),
+                                 step)
+        return jax.random.categorical(key, row, axis=-1)
+    return jax.vmap(one)(ids, steps, logits).astype(jnp.int32)
+
+
+def pick_tokens(base_key, logits, reqs: List[Optional[Request]],
+                sample: str) -> jax.Array:
+    """Pick one token per logits row; ``reqs`` aligns a Request (or
+    None for inactive/garbage rows) with every row. Greedy is RNG-free;
+    inactive rows reuse the (0, 0) stream — their draw is discarded and
+    never shifts a live row's stream."""
+    if sample == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    ids = jnp.asarray([0 if r is None else r.id for r in reqs],
+                      jnp.int32)
+    steps = jnp.asarray([0 if r is None else len(r.output)
+                         for r in reqs], jnp.int32)
+    return _categorical_rows(base_key, ids, steps, logits)

@@ -20,9 +20,10 @@ engine replaces all three with the paged subsystem
     when its prefill fits above the watermark, keeping slack for the
     running requests' decode growth;
   * **preemption by eviction** — when the pool runs dry mid-flight the
-    youngest running request is evicted (pages freed, request requeued;
-    greedy decoding makes the re-run reproduce its tokens) after the
-    prefix cache has been squeezed first;
+    youngest running request is evicted (pages freed, request requeued)
+    after the prefix cache has been squeezed first; replay is exact for
+    greedy *and* sampled decoding (every request draws from its own
+    persisted (id, step) RNG stream — see ``_pick``);
   * **growth past max_len** — decode appends pages on demand; a request
     is only ``truncated`` when the *pool itself* can't be made to fit
     it (dense engines truncate at a static wall), or when it outgrows
@@ -46,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Deque, List, Optional
 
@@ -56,6 +58,7 @@ import numpy as np
 from repro.core.paged_cache import PageAllocator, PrefixCache
 from repro.models import Model
 from repro.serving.request import Request
+from repro.serving.sampling import pick_tokens
 
 
 @dataclasses.dataclass
@@ -77,10 +80,31 @@ class PagedServingEngine:
                  max_len_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  watermark_pages: int = 0, prefix_sharing: bool = True,
-                 sample: str = "greedy", seed: int = 0):
+                 sample: str = "greedy", seed: int = 0,
+                 strict_moe_capacity: bool = False):
         assert model.supports_paged, (
             f"{model.cfg.name}: family {model.cfg.family!r} has no paged "
             "decode path (attention-KV families only)")
+        e = model.cfg.moe
+        if e is not None and e.capacity_factor * e.top_k < e.n_experts:
+            # Chunked prefill routes experts per chunk-sized group while
+            # monolithic prefill groups over the whole prompt; when
+            # expert capacity binds the two drop *different* tokens, so
+            # paged logits silently diverge from the dense engine's.
+            # Dropless capacity (capacity_factor >= E / top_k, the
+            # serving setting) makes capacity a no-op and restores
+            # chunked == monolithic.
+            msg = (f"{model.cfg.name}: MoE capacity_factor="
+                   f"{e.capacity_factor} < n_experts/top_k="
+                   f"{e.n_experts / e.top_k:.2f} — expert capacity can "
+                   "bind, and chunked prefill then drops different "
+                   "tokens than monolithic prefill (logits diverge "
+                   "from the dense engine). Serve with "
+                   "capacity_factor >= n_experts/top_k; "
+                   "strict_moe_capacity=True turns this into an error.")
+            if strict_moe_capacity:
+                raise ValueError(msg)
+            warnings.warn(msg, stacklevel=2)
         self.model = model
         self.params = params
         self.page_size = page_size
@@ -88,7 +112,9 @@ class PagedServingEngine:
         self.prefill_chunk = prefill_chunk or 2 * page_size
         self.watermark = watermark_pages
         self.sample = sample
-        self.key = jax.random.PRNGKey(seed)
+        # base key for the per-request sampled streams (see _pick);
+        # never split or advanced by engine-global events
+        self._base_key = jax.random.PRNGKey(seed)
 
         self.pools = model.init_paged_pools(num_pages, page_size)
         self.alloc = PageAllocator(num_pages)
@@ -159,7 +185,8 @@ class PagedServingEngine:
     def _preempt_one(self, protect_slot: int) -> bool:
         """Evict the youngest running request (LIFO keeps the oldest
         requests' latency bounds intact) and requeue it for a resumed
-        prefill. Greedy decoding replays the identical tokens."""
+        prefill. Replay emits the identical tokens under greedy and
+        sampled decoding alike (per-request RNG streams)."""
         victims = [s for s in reversed(self._slot_order)
                    if s != protect_slot and self.slots[s] is not None]
         if not victims:
@@ -272,7 +299,7 @@ class PagedServingEngine:
             # the re-run's "first token" repeats an already-emitted one
             tok = int(req.output[-1])
         else:
-            tok = self._to_py(self._pick(logits)[0])
+            tok = self._to_py(self._pick(logits, [req])[0])
             req.output.append(tok)
             req.t_first_token = time.monotonic()
             self.stats["tokens_out"] += 1
@@ -334,7 +361,7 @@ class PagedServingEngine:
         logits, self.pools = self._decode(
             self.params, jnp.asarray(self.last_tok), self.pools,
             jnp.asarray(self.bt), jnp.asarray(self.pos))
-        toks = np.asarray(self._pick(logits))
+        toks = np.asarray(self._pick(logits, self.slots))
         self.stats["decode_steps"] += 1
         for slot in live:
             req = self.slots[slot]
@@ -354,12 +381,11 @@ class PagedServingEngine:
         self._done_this_step.append(req)
 
     # ------------------------------------------------------------------
-    def _pick(self, logits):
-        if self.sample == "greedy":
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits, axis=-1
-                                      ).astype(jnp.int32)
+    def _pick(self, logits, reqs):
+        """Next-token pick; ``reqs`` aligns a Request (or None) with
+        every logits row. Per-request (id, step) RNG streams make
+        sampled preemption replay bit-exact — see serving/sampling.py."""
+        return pick_tokens(self._base_key, logits, reqs, self.sample)
 
     @staticmethod
     def _to_py(tok):
