@@ -285,6 +285,36 @@ for mode in ("two_stage", "local_split"):
     t = timeit(fn, q)
     print("decode_sp/{{mode}},{{t:.0f}},{{sp:.2f}}".format(
         mode=mode, t=t, sp=t_naive / t))
+
+# ---- paged rows: ShardedView-over-pages (PR-5 paged SP decode) -------
+from repro.core import cache_view as cv
+from repro.core.paged_cache import PagedKVPool
+
+n_sh, page = 8, 8
+t_loc = s // (n_sh * page)
+p_loc = b * t_loc
+def to_pool(arr):
+    # shard i's local page (bi * t_loc + j) holds contiguous rows
+    # [i*s_loc + j*page, ...): (B, S, ...) -> (n_sh*p_loc, page, ...)
+    a = np.asarray(arr).reshape(b, n_sh, t_loc, page, *arr.shape[2:])
+    return jnp.asarray(np.moveaxis(a, 1, 0).reshape(
+        n_sh * p_loc, page, *arr.shape[2:]))
+cols = np.arange(n_sh * t_loc)
+bt_np = (np.arange(b)[:, None] * t_loc
+         + (cols % t_loc)[None]).astype(np.int32)
+pool_sh = NamedSharding(mesh, P("model", None, None, None))
+pview = cv.PagedView(
+    PagedKVPool(k=jax.device_put(to_pool(kc), pool_sh),
+                v=jax.device_put(to_pool(vc), pool_sh),
+                codes=jax.device_put(to_pool(codes), pool_sh)),
+    jax.device_put(jnp.asarray(bt_np),
+                   NamedSharding(mesh, P(None, "model"))))
+for mode in ("two_stage", "local_split"):
+    strat = SPDecode(mesh, seq_axes=("model",), mode=mode)
+    fn = jax.jit(lambda qq: strat.gqa(cfg, qq, w, pview, n_valid, True))
+    t = timeit(fn, q)
+    print("decode_sp/{{mode}}_paged,{{t:.0f}},{{sp:.2f}}".format(
+        mode=mode, t=t, sp=t_naive / t))
 """
 
 
@@ -403,6 +433,10 @@ def run_paged():
 def main():
     if "--paged" in sys.argv:
         run_paged()
+        # paged-SP ladder rows (ShardedView-over-pages) ride the weekly
+        # --paged job so paged sequence-parallel perf is tracked from
+        # day one alongside the contiguous modes
+        wallclock_sp_modes()
         return None
     for row in byte_model():
         print(f"decode_bytes/seq{row['seq']}/dense,0,{row['dense']:.0f}")

@@ -3,13 +3,18 @@ continuous-batching engine (deliverable b, serving flavor).
 
 Each request prefills (filling KV + hash-code caches), then all active
 slots decode together with HATA top-k attention. Prints per-request
-TTFT/latency and engine throughput.
+TTFT/latency and engine throughput — first on the dense slab engine,
+then on the paged scheduler (``--paged``: page pools + block tables
+addressed through the ``core.cache_view`` view API; same model entry
+points, chunked prefill + prefix sharing on top).
 
 Run:  PYTHONPATH=src python examples/serve_longcontext.py
 """
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    main(["--arch", "qwen1.5-0.5b", "--requests", "8",
-          "--max-batch", "4", "--max-len", "192", "--prompt-len", "64",
-          "--new-tokens", "24"])
+    common = ["--arch", "qwen1.5-0.5b", "--requests", "8",
+              "--max-batch", "4", "--max-len", "192", "--prompt-len",
+              "64", "--new-tokens", "24"]
+    main(common)
+    main(common + ["--paged"])

@@ -1,7 +1,10 @@
 """HATA core: learning-to-hash + hash-aware top-k attention (paper §3),
-the baselines it is compared against (§5.1), and the HATA-off offloading
-extension (§5.3)."""
-from repro.core import baselines, hashing, kvcache, offload, paged_cache, topk
+the baselines it is compared against (§5.1), the HATA-off offloading
+extension (§5.3), and the cache-view addressing layer (DESIGN.md §5)."""
+from repro.core import (baselines, cache_view, hashing, kvcache, offload,
+                        paged_cache, topk)
+from repro.core.cache_view import (ContiguousMLAView, ContiguousView,
+                                   PagedMLAView, PagedView, ShardedView)
 from repro.core.hash_attention import (HataDecodeOut, hata_decode,
                                        hata_decode_batched,
                                        hata_decode_paged, hata_prefill)
@@ -11,9 +14,11 @@ from repro.core.kvcache import (LayerKVCache, MLACache, SSMState,
 from repro.core.paged_cache import (PageAllocator, PagedKVPool,
                                     PagedMLAPool, PrefixCache)
 
-__all__ = ["baselines", "hashing", "kvcache", "offload", "paged_cache",
-           "topk", "HataDecodeOut", "hata_decode", "hata_decode_batched",
-           "hata_decode_paged", "hata_prefill", "LayerKVCache",
-           "MLACache", "SSMState", "append_kv", "append_mla",
-           "init_kv_cache", "init_mla_cache", "init_ssm_state",
-           "PageAllocator", "PagedKVPool", "PagedMLAPool", "PrefixCache"]
+__all__ = ["baselines", "cache_view", "hashing", "kvcache", "offload",
+           "paged_cache", "topk", "ContiguousView", "ContiguousMLAView",
+           "PagedView", "PagedMLAView", "ShardedView", "HataDecodeOut",
+           "hata_decode", "hata_decode_batched", "hata_decode_paged",
+           "hata_prefill", "LayerKVCache", "MLACache", "SSMState",
+           "append_kv", "append_mla", "init_kv_cache", "init_mla_cache",
+           "init_ssm_state", "PageAllocator", "PagedKVPool",
+           "PagedMLAPool", "PrefixCache"]

@@ -1,0 +1,449 @@
+"""Cache views: one addressing API for dense, paged, and sequence-
+sharded attention.
+
+HATA's score -> select -> gather discipline is layout-independent: the
+Hamming scores are per-row, the fused gather is per-row DMA, and the
+chunked-prefill context read is causal at absolute positions. What
+*differs* between a contiguous ``(B, S, ...)`` cache, a block-table page
+pool and a sequence-sharded slice is purely how rows are addressed — so
+the addressing lives here, behind a small pytree protocol, and the model
+stack (``models/attention.py`` down to the serving engines and the SP
+decode strategy) carries exactly one attend/decode/prefill entry point
+per attention family.
+
+Two protocols, three concrete shapes each:
+
+``KVView``  (GQA/MHA)                 ``MLAView`` (latent stream)
+  :class:`ContiguousView`               :class:`ContiguousMLAView`
+  :class:`PagedView`                    :class:`PagedMLAView`
+  :class:`ShardedView`  (wraps either family's local slice)
+
+Every view exposes the same verbs, each bottoming out in the existing
+Pallas kernels (``hamming_score_batched/_paged``,
+``flash_decode_gathered_batched/_paged``, ``flash_prefill_batched/
+_paged`` and the MLA twins) — no view introduces new kernel code:
+
+  ``append(…, pos)``          decode-row write (scalar or (B,) ``pos``)
+  ``append_chunk(…, ctx)``    chunked-prefill write at offset ``ctx``
+  ``hamming_scores(…)``       masked logical match scores
+  ``gather_decode(…)``        fused sparse attend over selected rows
+  ``gather_stats(…)``         unnormalized (m, l, o~) flash partials
+  ``prefill_attend(…)``       chunk queries over the context in place
+
+Logical/physical convention: selection math (budgets, top-k, validity
+masks) always runs in *logical* row space; :class:`PagedView` translates
+through its block table only at the append/gather boundary (see
+``core/paged_cache.physical_rows``). :class:`ShardedView` adds the
+shard's absolute offset on top of its inner view's local rows, so the
+sequence-parallel two_stage/local_split modes run over paged pools with
+the same ownership-mask stats kernels they use over contiguous shards.
+
+All views are ``register_dataclass`` pytrees: they cross jit/shard_map
+boundaries, can be donated (donation reaches the wrapped buffers), and
+wrapping is free — no leaf is copied.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import register_dataclass
+
+from repro.core import paged_cache as paged
+from repro.core.kvcache import (LayerKVCache, MLACache, append_kv,
+                                append_mla)
+from repro.kernels import ops
+
+_static = dataclasses.field(metadata=dict(static=True))
+
+
+def _mask_rows(scores: jax.Array, n_valid, window: Optional[int],
+               positions: Optional[jax.Array]) -> jax.Array:
+    """Validity + sliding-window mask at (absolute) positions -> -1."""
+    from repro.core.hash_attention import mask_scores
+    return mask_scores(scores, n_valid, window=window,
+                       positions=positions)
+
+
+# ===========================================================================
+# GQA / MHA views
+# ===========================================================================
+@register_dataclass
+@dataclasses.dataclass
+class ContiguousView:
+    """A plain ``(B, S_max, H_kv, d)`` cache seen through the view API."""
+    cache: LayerKVCache
+
+    # -- protocol ----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Static logical row capacity (drives the HATA budget)."""
+        return self.cache.max_len
+
+    @property
+    def has_codes(self) -> bool:
+        return self.cache.codes is not None
+
+    def append(self, k: jax.Array, v: jax.Array,
+               codes: Optional[jax.Array], pos) -> "ContiguousView":
+        return ContiguousView(append_kv(self.cache, k, v, codes, pos))
+
+    # contiguous writes don't distinguish a decode row from a chunk —
+    # append_kv handles any (B, S_new, ...) at any offset
+    append_chunk = append
+
+    def hamming_scores(self, q_codes: jax.Array, n_valid, *, rbit: int,
+                       window: Optional[int] = None,
+                       positions: Optional[jax.Array] = None) -> jax.Array:
+        """(B, H_kv, G, W) q codes -> (B, H_kv, S_log) masked scores
+        (invalid / out-of-window rows at -1, the selection floor)."""
+        scores = ops.hamming_scores(q_codes, self.cache.codes, rbit=rbit)
+        return _mask_rows(scores, n_valid, window, positions)
+
+    def gather_decode(self, q: jax.Array, idx: jax.Array,
+                      sel_valid: jax.Array) -> jax.Array:
+        """Fused sparse attend over selected *logical* rows.
+        q: (B, H, d); idx: (B, H_kv, k); sel_valid: prefix mask."""
+        return ops.gather_decode_attention(q, self.cache.k, self.cache.v,
+                                           idx, sel_valid=sel_valid,
+                                           fused=True)
+
+    def gather_stats(self, q: jax.Array, idx: jax.Array,
+                     sel_mask: Optional[jax.Array]):
+        """Unnormalized (m, l, o~) partials over selected rows —
+        arbitrary ``sel_mask`` (the SP ownership filter)."""
+        return ops.gather_decode_stats(q, self.cache.k, self.cache.v,
+                                       idx, sel_mask)
+
+    def kv_logical(self) -> Tuple[jax.Array, jax.Array]:
+        """The (B, S_log, H_kv, d) logical K/V read (dense fallback /
+        XLA reference paths). Free for contiguous caches."""
+        return self.cache.k, self.cache.v
+
+    def prefill_attend(self, q: jax.Array, ctx, *,
+                       window: Optional[int] = None) -> jax.Array:
+        """Chunk queries (B, C, H, d) at absolute positions
+        [ctx, ctx+C) attend causally over the cached context."""
+        return ops.chunk_attention(q, self.cache.k, self.cache.v,
+                                   q_offset=ctx, window=window)
+
+    def unwrap(self):
+        return self.cache
+
+
+@register_dataclass
+@dataclasses.dataclass
+class PagedView:
+    """A shared page pool + per-request block table, same verbs.
+
+    ``pool``: one layer's ``(P, page, H_kv, ...)`` pool (K/V and hash
+    codes paged together); ``block_table``: (B, T) int32 page ids.
+    Logical capacity is the table width ``T * page`` — the pool size
+    never leaks into selection shapes.
+    """
+    pool: paged.PagedKVPool
+    block_table: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.block_table.shape[1] * self.pool.page_size
+
+    @property
+    def has_codes(self) -> bool:
+        return self.pool.codes is not None
+
+    def _phys(self, logical: jax.Array) -> jax.Array:
+        return paged.physical_rows(self.block_table, logical,
+                                   self.pool.page_size)
+
+    def append(self, k: jax.Array, v: jax.Array,
+               codes: Optional[jax.Array], pos) -> "PagedView":
+        b = k.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        pool = paged.append_rows_kv(self.pool, k, v, codes,
+                                    self._phys(pos))
+        return PagedView(pool, self.block_table)
+
+    def append_chunk(self, k: jax.Array, v: jax.Array,
+                     codes: Optional[jax.Array], ctx) -> "PagedView":
+        pool = paged.append_chunk_kv(self.pool, k, v, codes,
+                                     self.block_table, ctx)
+        return PagedView(pool, self.block_table)
+
+    def hamming_scores(self, q_codes: jax.Array, n_valid, *, rbit: int,
+                       window: Optional[int] = None,
+                       positions: Optional[jax.Array] = None) -> jax.Array:
+        scores = ops.hamming_scores_paged(q_codes, self.pool.codes,
+                                          self.block_table, n_valid,
+                                          rbit=rbit)
+        if window is None and positions is None:
+            return scores          # validity already masked in-kernel
+        return _mask_rows(scores, n_valid, window, positions)
+
+    def gather_decode(self, q: jax.Array, idx: jax.Array,
+                      sel_valid: jax.Array) -> jax.Array:
+        return ops.gather_decode_attention_paged(
+            q, self.pool.k, self.pool.v, self._phys(idx),
+            sel_valid=sel_valid)
+
+    def gather_stats(self, q: jax.Array, idx: jax.Array,
+                     sel_mask: Optional[jax.Array]):
+        return ops.gather_decode_stats_paged(
+            q, self.pool.k, self.pool.v, self._phys(idx), sel_mask)
+
+    def kv_logical(self) -> Tuple[jax.Array, jax.Array]:
+        return (paged.logical_view(self.pool.k, self.block_table),
+                paged.logical_view(self.pool.v, self.block_table))
+
+    def prefill_attend(self, q: jax.Array, ctx, *,
+                       window: Optional[int] = None) -> jax.Array:
+        return ops.chunk_attention_paged(q, self.pool.k, self.pool.v,
+                                         self.block_table, ctx,
+                                         window=window)
+
+    def unwrap(self):
+        return self.pool
+
+
+# ===========================================================================
+# MLA latent views
+# ===========================================================================
+@register_dataclass
+@dataclasses.dataclass
+class ContiguousMLAView:
+    cache: MLACache
+
+    @property
+    def capacity(self) -> int:
+        return self.cache.max_len
+
+    @property
+    def has_codes(self) -> bool:
+        return self.cache.codes is not None
+
+    def append(self, ckv: jax.Array, krope: jax.Array,
+               codes: Optional[jax.Array], pos) -> "ContiguousMLAView":
+        return ContiguousMLAView(append_mla(self.cache, ckv, krope,
+                                            codes, pos))
+
+    append_chunk = append
+
+    def hamming_scores(self, q_codes: jax.Array, n_valid, *, rbit: int,
+                       window: Optional[int] = None,
+                       positions: Optional[jax.Array] = None) -> jax.Array:
+        """(B, H, W) q codes -> (B, S_log) masked latent match scores."""
+        scores = ops.hamming_scores_latent(q_codes, self.cache.codes,
+                                           rbit=rbit)
+        return _mask_rows(scores[:, None], n_valid, window,
+                          positions)[:, 0]
+
+    def gather_latent(self, q_lat: jax.Array, idx: jax.Array, *,
+                      lora_rank: int, scale: float,
+                      n_valid: Optional[jax.Array] = None,
+                      sel_mask: Optional[jax.Array] = None,
+                      return_stats: bool = False):
+        """Split-latent fused gather over selected rows; returns o_lat
+        (B, H, r) f32 (caller applies W_uv) or (m, l, o~) partials."""
+        return ops.mla_gather_decode(
+            q_lat, self.cache.ckv, self.cache.krope, idx,
+            lora_rank=lora_rank, scale=scale, n_valid=n_valid,
+            sel_mask=sel_mask, return_stats=return_stats)
+
+    def latents_logical(self) -> Tuple[jax.Array, jax.Array]:
+        return self.cache.ckv, self.cache.krope
+
+    def prefill_attend(self, q_lat: jax.Array, ctx, *, lora_rank: int,
+                       scale: float) -> jax.Array:
+        return ops.mla_chunk_attention(q_lat, self.cache.ckv,
+                                       self.cache.krope, ctx,
+                                       lora_rank=lora_rank, scale=scale)
+
+    def unwrap(self):
+        return self.cache
+
+
+@register_dataclass
+@dataclasses.dataclass
+class PagedMLAView:
+    pool: paged.PagedMLAPool
+    block_table: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.block_table.shape[1] * self.pool.page_size
+
+    @property
+    def has_codes(self) -> bool:
+        return self.pool.codes is not None
+
+    def _phys(self, logical: jax.Array) -> jax.Array:
+        return paged.physical_rows(self.block_table, logical,
+                                   self.pool.page_size)
+
+    def append(self, ckv: jax.Array, krope: jax.Array,
+               codes: Optional[jax.Array], pos) -> "PagedMLAView":
+        b = ckv.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        pool = paged.append_rows_mla(self.pool, ckv, krope, codes,
+                                     self._phys(pos))
+        return PagedMLAView(pool, self.block_table)
+
+    def append_chunk(self, ckv: jax.Array, krope: jax.Array,
+                     codes: Optional[jax.Array], ctx) -> "PagedMLAView":
+        pool = paged.append_chunk_mla(self.pool, ckv, krope, codes,
+                                      self.block_table, ctx)
+        return PagedMLAView(pool, self.block_table)
+
+    def hamming_scores(self, q_codes: jax.Array, n_valid, *, rbit: int,
+                       window: Optional[int] = None,
+                       positions: Optional[jax.Array] = None) -> jax.Array:
+        scores = ops.hamming_scores_latent_paged(
+            q_codes, self.pool.codes, self.block_table, n_valid,
+            rbit=rbit)
+        if window is None and positions is None:
+            return scores
+        return _mask_rows(scores[:, None], n_valid, window,
+                          positions)[:, 0]
+
+    def gather_latent(self, q_lat: jax.Array, idx: jax.Array, *,
+                      lora_rank: int, scale: float,
+                      n_valid: Optional[jax.Array] = None,
+                      sel_mask: Optional[jax.Array] = None,
+                      return_stats: bool = False):
+        return ops.mla_gather_decode_paged(
+            q_lat, self.pool.ckv, self.pool.krope, self._phys(idx),
+            lora_rank=lora_rank, scale=scale, n_valid=n_valid,
+            sel_mask=sel_mask, return_stats=return_stats)
+
+    def latents_logical(self) -> Tuple[jax.Array, jax.Array]:
+        return (paged.logical_view(self.pool.ckv, self.block_table),
+                paged.logical_view(self.pool.krope, self.block_table))
+
+    def prefill_attend(self, q_lat: jax.Array, ctx, *, lora_rank: int,
+                       scale: float) -> jax.Array:
+        return ops.mla_chunk_attention_paged(
+            q_lat, self.pool.ckv, self.pool.krope, self.block_table,
+            ctx, lora_rank=lora_rank, scale=scale)
+
+    def unwrap(self):
+        return self.pool
+
+
+# ===========================================================================
+# Sequence-sharded view (SP decode shards)
+# ===========================================================================
+@register_dataclass
+@dataclasses.dataclass
+class ShardedView:
+    """One SP shard's slice of the logical sequence, either family.
+
+    ``inner`` is the shard's *local* view (a :class:`ContiguousView`
+    over the local cache slice, or a :class:`PagedView` /
+    :class:`PagedMLAView` over the local pool + local block table —
+    table entries name local pages); ``offset`` is the absolute logical
+    position of local row 0. Built *inside* shard_map by
+    ``distributed/decode.SPDecode``, so the two_stage/local_split local
+    math is written once against this class and runs unchanged over
+    contiguous and paged layouts — physical-row translation (inner
+    ``PagedView``) composes with the ownership-mask stats kernels.
+    """
+    inner: Union[ContiguousView, PagedView, ContiguousMLAView,
+                 PagedMLAView]
+    offset: jax.Array                 # scalar int32, absolute row 0
+    n_shards: int = _static
+
+    @property
+    def s_local(self) -> int:
+        return self.inner.capacity
+
+    @property
+    def has_codes(self) -> bool:
+        return self.inner.has_codes
+
+    def positions(self) -> jax.Array:
+        """Absolute logical positions of the local rows."""
+        return self.offset + jnp.arange(self.s_local)
+
+    def hamming_scores(self, q_codes: jax.Array, n_valid, *, rbit: int,
+                       window: Optional[int] = None) -> jax.Array:
+        """Local match scores masked at *absolute* positions: validity
+        and window are both computed against the global ``n_valid`` at
+        ``offset + local_row``. (A paged inner's in-kernel local-row
+        mask is a superset of the valid set; the absolute-position
+        remask makes shards agree with the unsharded scores exactly.)"""
+        return self.inner.hamming_scores(
+            q_codes, n_valid, rbit=rbit, window=window,
+            positions=self.positions())
+
+    def gather_decode(self, q, idx, sel_valid):
+        return self.inner.gather_decode(q, idx, sel_valid)
+
+    def gather_stats(self, q: jax.Array, idx: jax.Array,
+                     sel_mask: Optional[jax.Array]):
+        """Local-row partials: idx are in-range *local* rows, sel_mask
+        the ownership filter (two_stage keeps only global winners this
+        shard holds)."""
+        return self.inner.gather_stats(q, idx, sel_mask)
+
+    def gather_latent(self, q_lat, idx, **kw):
+        return self.inner.gather_latent(q_lat, idx, **kw)
+
+    def kv_logical(self):
+        return self.inner.kv_logical()
+
+    def latents_logical(self):
+        return self.inner.latents_logical()
+
+    def unwrap(self):
+        return self.inner
+
+
+# ===========================================================================
+# Coercion helpers — the one place raw caches meet the view API
+# ===========================================================================
+KVView = Union[ContiguousView, PagedView, ShardedView]
+MLAView = Union[ContiguousMLAView, PagedMLAView, ShardedView]
+AnyView = Union[KVView, MLAView]
+
+_VIEW_TYPES = (ContiguousView, PagedView, ContiguousMLAView,
+               PagedMLAView, ShardedView)
+
+
+def is_view(x) -> bool:
+    return isinstance(x, _VIEW_TYPES)
+
+
+def as_gqa_view(x) -> KVView:
+    """LayerKVCache -> ContiguousView; views pass through."""
+    if isinstance(x, LayerKVCache):
+        return ContiguousView(x)
+    assert isinstance(x, (ContiguousView, PagedView, ShardedView)), \
+        type(x)
+    return x
+
+
+def as_mla_view(x) -> MLAView:
+    """MLACache -> ContiguousMLAView; views pass through."""
+    if isinstance(x, MLACache):
+        return ContiguousMLAView(x)
+    assert isinstance(x, (ContiguousMLAView, PagedMLAView,
+                          ShardedView)), type(x)
+    return x
+
+
+def paged_view(pool, block_table: jax.Array):
+    """Wrap one layer's pool + table in the right paged view family."""
+    if isinstance(pool, paged.PagedMLAPool):
+        return PagedMLAView(pool, block_table)
+    assert isinstance(pool, paged.PagedKVPool), type(pool)
+    return PagedView(pool, block_table)
+
+
+def unwrap(view_or_cache):
+    """Return the wrapped storage (cache or pool); raw caches pass
+    through — the inverse of the ``as_*``/``paged_view`` coercions."""
+    if is_view(view_or_cache):
+        return view_or_cache.unwrap()
+    return view_or_cache

@@ -27,6 +27,18 @@ three selectable modes (the §Perf hillclimb ladder):
 The dense path (first-N dense layers / HATA off) is the same machinery
 minus selection: local partial attention + stat merge — i.e. classic
 sequence-parallel flash decode.
+
+Cache layouts come in through :mod:`repro.core.cache_view`:
+``SPDecode.gqa``/``mla`` accept a ``ContiguousView`` (sequence-sharded
+plain cache) *or* a ``PagedView``/``PagedMLAView`` — a page pool whose
+page axis is sharded over the sequence axes plus a block table whose
+column axis is sharded the same way, each shard's table naming *local*
+pages. Inside shard_map both layouts collapse to one
+:class:`~repro.core.cache_view.ShardedView` (local slice + absolute
+offset), so the two_stage/local_split local math is written once:
+physical-row translation (the paged inner view) composes with the
+ownership-mask stats kernels, and paged SP decode is bit-exact vs the
+contiguous SP decode holding the same rows — zero new kernel code.
 """
 from __future__ import annotations
 
@@ -40,7 +52,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
+from repro.core import cache_view as cv
 from repro.core import hash_attention as ha
+from repro.core import paged_cache as paged
 from repro.core.kvcache import LayerKVCache, MLACache
 from repro.distributed.collectives import (distributed_topk,
                                            merge_partial_softmax)
@@ -159,65 +173,124 @@ class SPDecode:
             leaf, new, lead_arr, jnp.asarray(pos, jnp.int32))
 
     # ------------------------------------------------------------------
-    def gqa(self, cfg: ModelConfig, q: jax.Array, w_h, cache: LayerKVCache,
+    # view plumbing: global view -> shard_map leaves -> local ShardedView
+    # ------------------------------------------------------------------
+    # view type -> (storage attr, storage ctor, field names) — the last
+    # field is the optional codes stream in every family
+    _VIEW_TABLE = {
+        cv.PagedView: ("pool", paged.PagedKVPool, ("k", "v", "codes")),
+        cv.PagedMLAView: ("pool", paged.PagedMLAPool,
+                          ("ckv", "krope", "codes")),
+        cv.ContiguousView: ("cache", LayerKVCache, ("k", "v", "codes")),
+        cv.ContiguousMLAView: ("cache", MLACache,
+                               ("ckv", "krope", "codes")),
+    }
+
+    def _view_leaves(self, view):
+        """Decompose a global view into (leaves, in_specs, rebuild).
+
+        ``rebuild(*local_leaves)`` reconstructs the shard's *local*
+        inner view inside shard_map. Contiguous caches shard their
+        sequence axis (dim 1, after batch); paged layouts shard the
+        pool's page axis (dim 0) AND the block table's column axis
+        together (each shard's table names local pages), so a shard's
+        slice is itself a well-formed paged view.
+        """
+        b_ax = self.batch_axes or None
+        view_cls = type(view)
+        attr, ctor, fields = self._VIEW_TABLE[view_cls]
+        store = getattr(view, attr)
+        is_paged = attr == "pool"
+        data = [getattr(store, f) for f in fields]
+        has_codes = data[-1] is not None
+        leaves = tuple(d for d in data if d is not None)
+        if is_paged:
+            specs = tuple(P(self.seq_axes, *([None] * (d.ndim - 1)))
+                          for d in leaves)
+            leaves += (view.block_table,)
+            specs += (P(b_ax, self.seq_axes),)
+        else:
+            specs = tuple(
+                P(b_ax, self.seq_axes, *([None] * (d.ndim - 2)))
+                for d in leaves)
+
+        def rebuild(*loc):
+            if is_paged:
+                *vals, bt = loc
+            else:
+                vals, bt = list(loc), None
+            if not has_codes:
+                vals = list(vals) + [None]
+            storage = ctor(**dict(zip(fields, vals)))
+            return view_cls(storage, bt) if is_paged else view_cls(storage)
+        return leaves, specs, rebuild
+
+    def _sharded(self, inner) -> cv.ShardedView:
+        """Wrap a shard's local inner view with its absolute offset."""
+        offset = _flat_axis_index(self.seq_axes) * inner.capacity
+        return cv.ShardedView(inner=inner, offset=offset,
+                              n_shards=self.n_seq_shards)
+
+    def _run(self, local_fn, view, operands, operand_specs, out_spec):
+        """shard_map ``local_fn(sharded_view, *operands)`` over the
+        view's leaves."""
+        leaves, leaf_specs, rebuild = self._view_leaves(view)
+
+        def body(*args):
+            ops_ = args[:len(operands)]
+            sv = self._sharded(rebuild(*args[len(operands):]))
+            return local_fn(sv, *ops_)
+
+        fn = shard_map(body, mesh=self.mesh,
+                       in_specs=tuple(operand_specs) + tuple(leaf_specs),
+                       out_specs=out_spec, check_rep=False)
+        return fn(*operands, *leaves)
+
+    # ------------------------------------------------------------------
+    def gqa(self, cfg: ModelConfig, q: jax.Array, w_h, view,
             n_valid: jax.Array, use_hata) -> jax.Array:
-        """q: (B, H, d) global; cache arrays (B, S, Hkv, d) sequence-
-        sharded. Returns (B, H, d) attention output (pre-Wo)."""
+        """q: (B, H, d) global; ``view`` a sequence-sharded cache view
+        (or a raw ``LayerKVCache``, coerced). Returns (B, H, d)
+        attention output (pre-Wo)."""
         if self.mode == "naive":
             return None                      # caller keeps GSPMD path
+        view = cv.as_gqa_view(view)
         b_ax = self.batch_axes or None
-        kv_spec = P(b_ax, self.seq_axes, None, None)
-        hata_possible = (cache.codes is not None and cfg.hata.enabled
+        q_spec = P(b_ax, None, None)
+        hata_possible = (view.has_codes and cfg.hata.enabled
                          and w_h is not None)
         if hata_possible and not (isinstance(use_hata, bool)
                                   and not use_hata):
             static = use_hata if isinstance(use_hata, bool) else None
-            fn = shard_map(
-                functools.partial(self._gqa_local, cfg, static),
-                mesh=self.mesh,
-                in_specs=(P(b_ax, None, None), P(None, None, None),
-                          kv_spec, kv_spec, kv_spec, P(), P()),
-                out_specs=P(b_ax, None, None),
-                check_rep=False)
-            return fn(q, w_h, cache.k, cache.v, cache.codes,
-                      jnp.asarray(n_valid, jnp.int32),
-                      jnp.asarray(use_hata, jnp.bool_))
-        fn = shard_map(
-            functools.partial(self._gqa_local_dense, cfg),
-            mesh=self.mesh,
-            in_specs=(P(b_ax, None, None), kv_spec, kv_spec, P()),
-            out_specs=P(b_ax, None, None),
-            check_rep=False)
-        return fn(q, cache.k, cache.v, jnp.asarray(n_valid, jnp.int32))
+            local = functools.partial(self._gqa_sharded, cfg, static)
+            return self._run(
+                local, view,
+                (q, w_h, jnp.asarray(n_valid, jnp.int32),
+                 jnp.asarray(use_hata, jnp.bool_)),
+                (q_spec, P(None, None, None), P(), P()), q_spec)
 
-    def _gqa_local_dense(self, cfg: ModelConfig, q, k_cache, v_cache,
-                         n_valid):
-        """Sequence-parallel dense flash decode (no selection)."""
-        b, h, d = q.shape
-        h_kv = k_cache.shape[2]
-        s_local = k_cache.shape[1]
-        offset = _flat_axis_index(self.seq_axes) * s_local
-        abs_pos = offset + jnp.arange(s_local)
-        valid = abs_pos[None, None, :] < n_valid
-        if cfg.sliding_window is not None:
-            valid = valid & (abs_pos[None, None, :]
-                             > n_valid - 1 - cfg.sliding_window)
-        qg = q.reshape(b, h_kv, h // h_kv, d)
-        m, l, o = _partial_stats(
-            qg, k_cache, v_cache,
-            jnp.broadcast_to(valid, (b, h_kv, s_local)), d ** -0.5)
-        out = merge_partial_softmax(m, l, o, self.seq_axes)
-        return out.reshape(b, h, d).astype(q.dtype)
+        def local_dense(sv, q_, nv_):
+            return self._gqa_sharded(cfg, False, sv, q_, None, nv_,
+                                     False)
+        return self._run(
+            local_dense, view,
+            (q, jnp.asarray(n_valid, jnp.int32)),
+            (q_spec, P()), q_spec)
 
-    def _gqa_local(self, cfg: ModelConfig, static_flag, q, w_h, k_cache,
-                   v_cache, codes, n_valid, use_hata):
+    def _gqa_sharded(self, cfg: ModelConfig, static_flag,
+                     sv: cv.ShardedView, q, w_h, n_valid, use_hata):
+        """One shard of the SP GQA decode over a :class:`ShardedView` —
+        the same local math for contiguous slices and paged pools:
+        batched Hamming scores at absolute positions, exact two-stage
+        top-k or local split, then the stats-emitting gather over the
+        rows this shard holds (the paged inner translates winners to
+        physical rows; the merge below is the only cross-shard
+        traffic)."""
         b, h, d = q.shape
-        h_kv = k_cache.shape[2]
+        h_kv = cfg.n_kv_heads
         g = h // h_kv
-        s_local = k_cache.shape[1]
-        shard = _flat_axis_index(self.seq_axes)
-        offset = shard * s_local
-        abs_pos = offset + jnp.arange(s_local)
+        s_local = sv.s_local
+        abs_pos = sv.positions()
         valid = abs_pos[None, None, :] < n_valid          # (1,1,S_l)
         if cfg.sliding_window is not None:
             valid = valid & (abs_pos[None, None, :]
@@ -226,40 +299,30 @@ class SPDecode:
         scale = d ** -0.5
 
         def dense():
+            k_loc, v_loc = sv.kv_logical()
             mask = jnp.broadcast_to(valid, (b, h_kv, s_local))
-            return _partial_stats(qg, k_cache, v_cache, mask, scale)
+            return _partial_stats(qg, k_loc, v_loc, mask, scale)
 
         def hata():
-            # local shard of the same batched score -> select -> gather
-            # pipeline as hata_decode_batched: shared q aggregation,
-            # batched Hamming kernel, shared validity/window masking at
-            # shard offsets, then the stats-emitting paged fused-gather
-            # kernel over the winners this shard holds — no transposed
-            # cache copy, no XLA row gather (the merge below is the only
-            # cross-shard traffic).
             q_codes = ha.aggregate_q_codes(q, w_h, h_kv)
-            scores = ops.hamming_scores(q_codes, codes,
-                                        rbit=cfg.hata.rbit)
-            scores = ha.mask_scores(scores, n_valid,
-                                    window=cfg.sliding_window,
-                                    positions=abs_pos)
+            scores = sv.hamming_scores(q_codes, n_valid,
+                                       rbit=cfg.hata.rbit,
+                                       window=cfg.sliding_window)
             budget = ha.clamped_budget(cfg.hata,
                                        s_local * self.n_seq_shards,
                                        cfg.sliding_window)
             if self.mode == "local_split":
                 k_loc = min(max(budget // self.n_seq_shards, 1), s_local)
                 top_s, idx_l = jax.lax.top_k(scores, k_loc)
-                return ops.gather_decode_stats(q, k_cache, v_cache,
-                                               idx_l, top_s >= 0)
+                return sv.gather_stats(q, idx_l, top_s >= 0)
             # two-stage exact: attend only over the global winners this
             # shard owns — an arbitrary (non-prefix) selection mask.
             gv, gi = distributed_topk(scores, budget, self.seq_axes,
                                       s_local)
-            li = gi - offset
+            li = gi - sv.offset
             owned = (li >= 0) & (li < s_local) & (gv >= 0)
             li_c = jnp.clip(li, 0, s_local - 1)
-            return ops.gather_decode_stats(q, k_cache, v_cache, li_c,
-                                           owned)
+            return sv.gather_stats(q, li_c, owned)
 
         if static_flag is None:
             m, l, o = jax.lax.cond(use_hata, hata, dense)
@@ -269,42 +332,39 @@ class SPDecode:
         return out.reshape(b, h, d).astype(q.dtype)
 
     # ------------------------------------------------------------------
-    def mla(self, cfg: ModelConfig, p, w_h, q_lat: jax.Array,
-            cache: MLACache, n_valid: jax.Array, use_hata) -> jax.Array:
-        """q_lat: (B, H, r+rope) absorbed queries; returns (B, H, v_dim)
+    def mla(self, cfg: ModelConfig, p, w_h, q_lat: jax.Array, view,
+            n_valid: jax.Array, use_hata) -> jax.Array:
+        """q_lat: (B, H, r+rope) absorbed queries; ``view`` a sequence-
+        sharded latent view (or raw ``MLACache``). Returns (B, H, v_dim)
         in f32 (caller applies Wo)."""
         if self.mode == "naive":
             return None
+        view = cv.as_mla_view(view)
         b_ax = self.batch_axes or None
-        seq_spec = P(b_ax, self.seq_axes, None)
+        q_spec = P(b_ax, None, None)
         m = cfg.mla
         h = cfg.n_heads
         wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
-        hata_possible = (cache.codes is not None and cfg.hata.enabled
+        hata_possible = (view.has_codes and cfg.hata.enabled
                          and w_h is not None)
         if hata_possible and not (isinstance(use_hata, bool)
                                   and not use_hata):
             static = use_hata if isinstance(use_hata, bool) else None
-            fn = shard_map(
-                functools.partial(self._mla_local, cfg, static),
-                mesh=self.mesh,
-                in_specs=(P(b_ax, None, None), P(None, None, None),
-                          P(None, None, None), seq_spec, seq_spec,
-                          seq_spec, P(), P()),
-                out_specs=P(b_ax, None, None),
-                check_rep=False)
-            return fn(q_lat, wuv, w_h, cache.ckv, cache.krope,
-                      cache.codes, jnp.asarray(n_valid, jnp.int32),
-                      jnp.asarray(use_hata, jnp.bool_))
-        fn = shard_map(
-            functools.partial(self._mla_local_dense, cfg),
-            mesh=self.mesh,
-            in_specs=(P(b_ax, None, None), P(None, None, None),
-                      seq_spec, seq_spec, P()),
-            out_specs=P(b_ax, None, None),
-            check_rep=False)
-        return fn(q_lat, wuv, cache.ckv, cache.krope,
-                  jnp.asarray(n_valid, jnp.int32))
+            local = functools.partial(self._mla_sharded, cfg, static)
+            return self._run(
+                local, view,
+                (q_lat, wuv, w_h, jnp.asarray(n_valid, jnp.int32),
+                 jnp.asarray(use_hata, jnp.bool_)),
+                (q_spec, P(None, None, None), P(None, None, None),
+                 P(), P()), q_spec)
+
+        def local_dense(sv, q_, wuv_, nv_):
+            return self._mla_sharded(cfg, False, sv, q_, wuv_, None,
+                                     nv_, False)
+        return self._run(
+            local_dense, view,
+            (q_lat, wuv, jnp.asarray(n_valid, jnp.int32)),
+            (q_spec, P(None, None, None), P()), q_spec)
 
     def _mla_logits(self, cfg: ModelConfig, q_lat, ckv_rows, krope_rows):
         """Split-latent logits: q·[c;k_r] = q_c·c + q_r·k_r — avoids
@@ -331,42 +391,31 @@ class SPDecode:
                        ckv_rows, preferred_element_type=jnp.float32)
         return m, l, o
 
-    def _mla_local_dense(self, cfg: ModelConfig, q_lat, wuv, ckv, krope,
-                         n_valid):
-        s_local = ckv.shape[1]
-        offset = _flat_axis_index(self.seq_axes) * s_local
-        valid = (offset + jnp.arange(s_local))[None] < n_valid
-        logits = self._mla_logits(cfg, q_lat, ckv, krope)
-        mm, ll, oo = self._mla_stats(logits, valid, ckv)
-        o_lat = merge_partial_softmax(mm, ll, oo, self.seq_axes)
-        return jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
-
-    def _mla_local(self, cfg: ModelConfig, static_flag, q_lat, wuv, w_h,
-                   ckv, krope, codes, n_valid, use_hata):
+    def _mla_sharded(self, cfg: ModelConfig, static_flag,
+                     sv: cv.ShardedView, q_lat, wuv, w_h, n_valid,
+                     use_hata):
+        """One shard of the SP MLA latent decode over a
+        :class:`ShardedView` (contiguous or paged inner): batched
+        Hamming kernel over the shared code stream, shard-offset
+        masking, then the split-latent stats-emitting gather (q_c·c +
+        q_r·k_r logits computed in-kernel; W_uv applied after the
+        cross-shard merge)."""
         b, h, _ = q_lat.shape
-        s_local = ckv.shape[1]
-        shard = _flat_axis_index(self.seq_axes)
-        offset = shard * s_local
-        abs_pos = offset + jnp.arange(s_local)
+        s_local = sv.s_local
+        abs_pos = sv.positions()
         valid = abs_pos[None] < n_valid                    # (1, S_l)
 
         def dense():
-            logits = self._mla_logits(cfg, q_lat, ckv, krope)
+            ckv_loc, kr_loc = sv.latents_logical()
+            logits = self._mla_logits(cfg, q_lat, ckv_loc, kr_loc)
             return self._mla_stats(
-                logits, jnp.broadcast_to(valid, (b, s_local)), ckv)
+                logits, jnp.broadcast_to(valid, (b, s_local)), ckv_loc)
 
         def hata():
-            # local shard of the MLA latent pipeline: batched Hamming
-            # kernel over the shared code stream, shard-offset masking,
-            # then the split-latent stats-emitting paged gather kernel
-            # (q_c·c + q_r·k_r logits computed in-kernel; W_uv applied
-            # after the cross-shard merge).
             q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
-            scores = ops.hamming_scores_latent(q_codes, codes,
-                                               rbit=cfg.hata.rbit)
-            scores = ha.mask_scores(scores[:, None], n_valid,
-                                    window=cfg.sliding_window,
-                                    positions=abs_pos)[:, 0]  # (B, S_l)
+            scores = sv.hamming_scores(q_codes, n_valid,
+                                       rbit=cfg.hata.rbit,
+                                       window=cfg.sliding_window)
             s_total = s_local * self.n_seq_shards
             budget = ha.clamped_budget(cfg.hata, s_total,
                                        cfg.sliding_window)
@@ -377,12 +426,12 @@ class SPDecode:
             else:
                 gv, gi = distributed_topk(scores, budget, self.seq_axes,
                                           s_local)
-                li = gi - offset
+                li = gi - sv.offset
                 mask = (li >= 0) & (li < s_local) & (gv >= 0)
                 idx_l = jnp.clip(li, 0, s_local - 1)
             m = cfg.mla
-            return ops.mla_gather_decode(
-                q_lat, ckv, krope, idx_l, lora_rank=m.kv_lora_rank,
+            return sv.gather_latent(
+                q_lat, idx_l, lora_rank=m.kv_lora_rank,
                 scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
                 sel_mask=mask, return_stats=True)
 

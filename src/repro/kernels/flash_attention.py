@@ -182,7 +182,8 @@ def _offset_vec(q_offset, b: int) -> jax.Array:
 def _prefill_batched_kernel(*refs, scale: float, causal: bool,
                             window: Optional[int], block_q: int,
                             block_k: int, n_kv_blocks: int, g: int,
-                            sk: int, paged: bool):
+                            sk: int, paged: bool,
+                            windowed_pages: int = 0):
     if paged:
         bt_ref, qoff_ref, q_ref, k_ref, v_ref = refs[:5]
         del bt_ref                      # consumed by the index_map
@@ -203,12 +204,25 @@ def _prefill_batched_kernel(*refs, scale: float, causal: bool,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     off = qoff_ref[bi]
+    # Windowed page-skip (paged only): the grid's kv extent was cut to
+    # the ``windowed_pages`` pages that can intersect the window band
+    # [off - window + 1, off + sq), and the index_map rebased the page
+    # fetch at ``base`` = the first possibly-live page — recompute the
+    # same traced base here so absolute kv positions stay aligned with
+    # the pages actually fetched (bit-exact: the dropped pages are all
+    # strictly below the window, i.e. exact identities on (m, l, acc)).
+    if windowed_pages:
+        base = jnp.clip((off - window + 1) // block_k, 0,
+                        sk // block_k - n_kv_blocks)
+        k_start = (base + ki) * block_k
+    else:
+        k_start = ki * block_k
     rows = block_q * g
     # Folded row r holds (q-row r // g, group head r % g); absolute
     # positions depend only on the q-row.
     qpos = off + qi * block_q + jax.lax.broadcasted_iota(
         jnp.int32, (rows, block_k), 0) // g
-    kpos = ki * block_k + jax.lax.broadcasted_iota(
+    kpos = k_start + jax.lax.broadcasted_iota(
         jnp.int32, (rows, block_k), 1)
 
     def _body():
@@ -240,13 +254,14 @@ def _prefill_batched_kernel(*refs, scale: float, causal: bool,
         m_ref[...] = m_new
 
     if causal:
-        # Skip tiles strictly above the diagonal band. The predicate is
+        # Skip tiles strictly above the diagonal band — and, with a
+        # window, whole tiles strictly below it. The predicate is
         # traced (q_offset comes from SMEM) — pl.when handles it.
         first_q = off + qi * block_q
-        live = ki * block_k <= first_q + block_q - 1
+        live = k_start <= first_q + block_q - 1
         if window is not None:
             live = jnp.logical_and(
-                live, (ki + 1) * block_k - 1 > first_q - window)
+                live, k_start + block_k - 1 > first_q - window)
         pl.when(live)(_body)
     else:
         _body()
@@ -347,6 +362,15 @@ def flash_prefill_paged(q: jax.Array, k_pool: jax.Array,
     causality is exactly the garbage mask and the output is
     bit-identical to the contiguous kernel over the gathered logical
     view (same page-sized kv blocking).
+
+    Sliding-window page-skip: with ``window`` set, only
+    ``ceil((C + window) / page) + 1`` pages can intersect the causal
+    window band of a C-row chunk, so the kv grid is cut to that many
+    steps and the index_map *rebases* the page walk at the first
+    possibly-live page (a traced function of the prefetched
+    ``q_offset``) instead of scoring the full table width. Pages
+    strictly below the window are never fetched; in-kernel masking
+    makes the skip bit-exact vs. the full-width walk.
     """
     interpret = runtime.resolve_interpret(interpret)
     block_q = runtime.prefill_block_q(block_q)
@@ -360,19 +384,31 @@ def flash_prefill_paged(q: jax.Array, k_pool: jax.Array,
     q_off = _offset_vec(q_offset, b)
     block_q = min(block_q, sq)
     n_q = pl.cdiv(sq, block_q)
+    t_live = t
+    if window is not None:
+        # pages intersecting [off - window + 1, off + sq - 1]: the span
+        # is sq + window - 1 rows, straddling at most this many pages
+        t_live = min(t, (sq + window - 2) // page + 2)
+
+    def _page(ki, bt, off, bi):
+        if window is None or t_live == t:
+            return bt[bi, ki]
+        base = jnp.clip((off[bi] - window + 1) // page, 0, t - t_live)
+        return bt[bi, base + ki]
+
     from jax.experimental.pallas import tpu as pltpu
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, h_kv, n_q, t),
+        grid=(b, h_kv, n_q, t_live),
         in_specs=[
             pl.BlockSpec((1, block_q, g, d),
                          lambda bi, hi, qi, ki, bt, off: (bi, qi, hi, 0)),
             pl.BlockSpec((1, page, 1, d),
                          lambda bi, hi, qi, ki, bt, off:
-                         (bt[bi, ki], 0, hi, 0)),
+                         (_page(ki, bt, off, bi), 0, hi, 0)),
             pl.BlockSpec((1, page, 1, dv),
                          lambda bi, hi, qi, ki, bt, off:
-                         (bt[bi, ki], 0, hi, 0)),
+                         (_page(ki, bt, off, bi), 0, hi, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, g, dv),
                                lambda bi, hi, qi, ki, bt, off:
@@ -387,7 +423,9 @@ def flash_prefill_paged(q: jax.Array, k_pool: jax.Array,
         functools.partial(
             _prefill_batched_kernel, scale=d ** -0.5, causal=True,
             window=window, block_q=block_q, block_k=page,
-            n_kv_blocks=t, g=g, sk=t * page, paged=True),
+            n_kv_blocks=t_live, g=g, sk=t * page, paged=True,
+            windowed_pages=0 if (window is None or t_live == t)
+            else t_live),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, sq, h, dv), q.dtype),
         interpret=interpret,

@@ -526,6 +526,31 @@ def flash_decode_gathered_paged(q: jax.Array, k_pool: jax.Array,
                             shared_pool=True)
 
 
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_gathered_stats_paged(
+        q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+        phys_idx: jax.Array, n_valid: Optional[jax.Array] = None,
+        sel_mask: Optional[jax.Array] = None, *,
+        block_k: Optional[int] = None,
+        interpret: Optional[bool] = None):
+    """Stats-emitting shared-pool gather: the paged twin of
+    :func:`flash_decode_gathered_stats_batched`, for sequence-parallel
+    shards whose local slice lives in a page pool.
+
+    Same chunk pipeline, DMA source and in-kernel masking as
+    :func:`flash_decode_gathered_paged` (``phys_idx`` carries physical
+    rows translated before the call), but returns the unnormalized
+    (m, l, o~) flash partials for ``merge_partial_softmax`` — no new
+    kernel code, just the existing (shared_pool, return_stats) corner
+    of the shared gather call.
+    """
+    return _gqa_gather_call(q, k_pool, v_pool, phys_idx, n_valid,
+                            sel_mask,
+                            block_k=runtime.gather_block_k(block_k),
+                            interpret=interpret, return_stats=True,
+                            shared_pool=True)
+
+
 # ---------------------------------------------------------------------------
 # Batched split-latent MLA fused-gather decode
 # ---------------------------------------------------------------------------
@@ -714,26 +739,30 @@ def mla_decode_gathered_batched(q_lat: jax.Array, ckv: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("lora_rank", "scale",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret",
+                                             "return_stats"))
 def mla_decode_gathered_paged(q_lat: jax.Array, ckv_pool: jax.Array,
                               krope_pool: jax.Array, phys_idx: jax.Array,
                               n_valid: Optional[jax.Array] = None,
                               sel_mask: Optional[jax.Array] = None, *,
                               lora_rank: int, scale: float,
                               block_k: Optional[int] = None,
-                              interpret: Optional[bool] = None):
+                              interpret: Optional[bool] = None,
+                              return_stats: bool = False):
     """Block-table-indirect variant of :func:`mla_decode_gathered_batched`.
 
     ckv_pool: (N_phys, r), krope_pool: (N_phys, rd) — the shared latent
     page pools flattened to physical rows; phys_idx: (B, k) int32
     physical rows (logical selection translated through the block table
     before the call). Same split-latent chunk pipeline; returns o_lat
-    (B, H, r) f32 normalized (the serving decode wave path — SP shards
-    stay on the contiguous stats variant for now).
+    (B, H, r) f32 normalized (the serving decode wave path), or the
+    unnormalized (m, l, o~) flash partials when ``return_stats`` (the
+    paged sequence-parallel shards, which merge across shards first).
     """
     return _mla_gather_call(q_lat, ckv_pool, krope_pool, phys_idx,
                             n_valid, sel_mask, lora_rank=lora_rank,
                             scale=scale,
                             block_k=runtime.gather_block_k(block_k),
-                            interpret=interpret, return_stats=False,
+                            interpret=interpret,
+                            return_stats=return_stats,
                             shared_pool=True)

@@ -405,27 +405,35 @@ def mla_gather_decode_paged(q_lat: jax.Array, ckv_pool: jax.Array,
                             krope_pool: jax.Array, phys_idx: jax.Array,
                             *, lora_rank: int, scale: float,
                             n_valid: Optional[jax.Array] = None,
-                            block_k: Optional[int] = None) -> jax.Array:
+                            sel_mask: Optional[jax.Array] = None,
+                            return_stats: bool = False,
+                            block_k: Optional[int] = None):
     """Split-latent MLA gathered decode over shared latent page pools.
 
     ckv_pool: (P, page, r), krope_pool: (P, page, rd); phys_idx: (B, k)
-    int32 physical rows; n_valid: optional (B,) valid-selection prefix
-    count. Returns o_lat (B, H, r) f32 (caller applies W_uv).
+    int32 physical rows. Exactly one of ``n_valid`` (B,) prefix count /
+    ``sel_mask`` (B, k) arbitrary mask (or neither). Returns o_lat
+    (B, H, r) f32 (caller applies W_uv), or the unnormalized flash
+    partials (m, l, o~) when ``return_stats`` (paged SP shards merge
+    them across shards first).
     """
+    assert n_valid is None or sel_mask is None, \
+        "pass n_valid or sel_mask, not both"
     cf = ckv_pool.reshape((-1,) + ckv_pool.shape[2:])  # (N_phys, r)
     rf = krope_pool.reshape((-1,) + krope_pool.shape[2:])
     if get_impl() == "xla":
-        mask = None
-        if n_valid is not None:
+        mask = sel_mask
+        if mask is None and n_valid is not None:
             k = phys_idx.shape[-1]
             mask = jnp.arange(k)[None, :] < jnp.reshape(
                 jnp.asarray(n_valid), (-1, 1))
         return ref.mla_gather_decode_pool_ref(
             q_lat, cf, rf, phys_idx, mask, lora_rank=lora_rank,
-            scale=scale)
+            scale=scale, return_stats=return_stats)
     return _fd.mla_decode_gathered_paged(
-        q_lat, cf, rf, phys_idx, n_valid, lora_rank=lora_rank,
-        scale=scale, block_k=block_k)
+        q_lat, cf, rf, phys_idx, n_valid, sel_mask,
+        lora_rank=lora_rank, scale=scale, block_k=block_k,
+        return_stats=return_stats)
 
 
 def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -566,6 +574,36 @@ def gather_decode_stats(q: jax.Array, k_cache: jax.Array,
     qg = q.reshape(b, h_kv, g, d)
     return _fd.flash_decode_gathered_stats_batched(
         qg, k_cache, v_cache, idx, None, sel_mask, block_k=block_k)
+
+
+def gather_decode_stats_paged(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, phys_idx: jax.Array,
+                              sel_mask: Optional[jax.Array] = None, *,
+                              block_k: Optional[int] = None,
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gathered flash partials over a shared page pool — the paged twin
+    of :func:`gather_decode_stats` for sequence-parallel shards whose
+    local slice lives in pages.
+
+    q: (B, H, d); k_pool/v_pool: (P, page, H_kv, d) per-layer pools;
+    phys_idx: (B, H_kv, R) int32 *physical* rows (local logical winners
+    translated through the shard's block table before the call);
+    sel_mask: optional arbitrary (B, H_kv, R) ownership mask. Returns
+    unnormalized (m, l, o~) ready for ``merge_partial_softmax`` —
+    bit-identical to :func:`gather_decode_stats` over a contiguous
+    slice holding the same rows.
+    """
+    b, h, d = q.shape
+    h_kv = k_pool.shape[2]
+    g = h // h_kv
+    kf = k_pool.reshape((-1,) + k_pool.shape[2:])      # (N_phys, H_kv, d)
+    vf = v_pool.reshape((-1,) + v_pool.shape[2:])
+    if get_impl() == "xla":
+        return ref.gather_decode_stats_pool_ref(q, kf, vf, phys_idx,
+                                                sel_mask)
+    qg = q.reshape(b, h_kv, g, d)
+    return _fd.flash_decode_gathered_stats_paged(
+        qg, kf, vf, phys_idx, None, sel_mask, block_k=block_k)
 
 
 def mla_gather_decode(q_lat: jax.Array, ckv: jax.Array, krope: jax.Array,

@@ -296,12 +296,14 @@ def masked_gather_decode_pool_ref(q: jax.Array, k_pool: jax.Array,
 def mla_gather_decode_pool_ref(q_lat: jax.Array, ckv_pool: jax.Array,
                                krope_pool: jax.Array, phys_idx: jax.Array,
                                sel_mask: Optional[jax.Array] = None, *,
-                               lora_rank: int, scale: float):
+                               lora_rank: int, scale: float,
+                               return_stats: bool = False):
     """Shared-pool oracle for ``mla_decode_gathered_paged``.
 
     ckv_pool: (N_phys, r), krope_pool: (N_phys, rd), phys_idx: (B, k)
     physical rows of the shared latent pool. Same split-form logits and
-    values as :func:`mla_gather_decode_ref`.
+    values as :func:`mla_gather_decode_ref`; ``return_stats`` yields the
+    unnormalized (m, l, o~) partials (paged SP shards).
     """
     sel_c = ckv_pool[phys_idx]                        # (B, k, r)
     sel_r = krope_pool[phys_idx]
@@ -318,7 +320,42 @@ def mla_gather_decode_pool_ref(q_lat: jax.Array, ckv_pool: jax.Array,
     l = jnp.sum(p, axis=-1)
     o = jnp.einsum("bhk,bkr->bhr", p.astype(sel_c.dtype), sel_c,
                    preferred_element_type=jnp.float32)
+    if return_stats:
+        return m, l, o
     return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+def gather_decode_stats_pool_ref(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, phys_idx: jax.Array,
+                                 sel_mask: Optional[jax.Array] = None,
+                                 ) -> Tuple[jax.Array, jax.Array,
+                                            jax.Array]:
+    """Shared-pool oracle for ``flash_decode_gathered_stats_paged``.
+
+    Same partials math as :func:`gather_decode_stats_ref`, but the
+    gather source is the flattened (N_phys, H_kv, d) page pool and
+    ``phys_idx`` (B, H_kv, R) carries physical rows. A fully-masked row
+    emits (m=-1e30, l=0, o=0).
+    """
+    b, h, d = q.shape
+    h_kv = k_pool.shape[1]
+    g = h // h_kv
+    # (B, R, H_kv, d) — the same operand layout as the contiguous
+    # gather_decode_stats_ref, so the two oracles (and hence the paged
+    # and contiguous stats paths) stay bit-identical, not just close
+    kg = jnp.moveaxis(gather_pool_rows_ref(k_pool, phys_idx), 1, 2)
+    vg = jnp.moveaxis(gather_pool_rows_ref(v_pool, phys_idx), 1, 2)
+    qg = q.reshape(b, h_kv, g, d)
+    logits = jnp.einsum("bhgd,brhd->bhgr", qg, kg,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    if sel_mask is not None:
+        logits = jnp.where(sel_mask[:, :, None, :], logits, -jnp.inf)
+    m = jnp.maximum(jnp.max(logits, axis=-1), -1e30)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgr,brhd->bhgd", p.astype(vg.dtype), vg,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
 
 
 def gather_decode_stats_ref(q: jax.Array, k_cache: jax.Array,

@@ -5,6 +5,12 @@ Alg. 3 HATA decode) with batched requests; prints per-request latency
 and engine throughput. Reduced configs run on this CPU container; the
 same engine serves full configs on a pod (decode is the jit'd
 sequence-parallel step).
+
+``--paged`` serves on the paged scheduler instead: one shared page pool
+per layer, chunked prefill interleaved with decode waves, prefix
+sharing, preemption — the model is driven through the same view-typed
+``decode_step``/``prefill_chunk`` as the dense engine (the pools +
+block table are wrapped in ``core.cache_view.PagedView``s per wave).
 """
 from __future__ import annotations
 
@@ -16,7 +22,7 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.models import Model
-from repro.serving import Request, ServingEngine
+from repro.serving import PagedServingEngine, Request, ServingEngine
 
 
 def main(argv=None):
@@ -30,14 +36,30 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve on the paged scheduler (page pools + "
+                         "block tables through the cache-view API)")
+    ap.add_argument("--page-size", type=int, default=8)
     args = ap.parse_args(argv)
 
     cfg = (get_reduced(args.arch) if args.reduced
            else get_config(args.arch))
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = ServingEngine(model, params, max_batch=args.max_batch,
-                           max_len=args.max_len)
+    if args.paged:
+        # pool sized to the dense engine's row budget; max_len_pages
+        # covers its per-request capacity (rounded UP to whole pages —
+        # equal, and the HATA budget identical, when page_size divides
+        # max_len; rounding down would truncate sooner than dense)
+        table_pages = -(-args.max_len // args.page_size)
+        engine = PagedServingEngine(
+            model, params,
+            num_pages=args.max_batch * table_pages + 1,
+            page_size=args.page_size, max_batch=args.max_batch,
+            max_len_pages=table_pages)
+    else:
+        engine = ServingEngine(model, params, max_batch=args.max_batch,
+                               max_len=args.max_len)
     rng = np.random.default_rng(args.seed)
     nb = cfg.audio.n_codebooks if cfg.family == "audio" else 0
     reqs = []
@@ -58,7 +80,8 @@ def main(argv=None):
         print(f"req {r.id:3d} prompt={r.prompt_len:4d} "
               f"out={len(r.output):4d} ttft={ttft:8.1f}ms "
               f"total={total:8.1f}ms")
-    print(f"[serve] {engine.stats} wall={dt:.2f}s "
+    mode = "paged" if args.paged else "dense"
+    print(f"[serve/{mode}] {engine.stats} wall={dt:.2f}s "
           f"tok/s={engine.stats['tokens_out'] / dt:.1f}")
     return done
 

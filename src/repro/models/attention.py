@@ -5,12 +5,20 @@ Every mixer exposes four pure functions closed over the static config:
   init(cfg, key)                         -> layer params
   forward_train(cfg, p, w_h, x, pos0)    -> y           (full attention)
   prefill(cfg, p, w_h, x, cache, pos)    -> (y, cache)  (Alg. 1)
-  decode(cfg, p, w_h, x, cache, pos, use_hata) -> (y, cache)  (Alg. 3)
+  decode(cfg, p, w_h, x, view, pos, use_hata) -> (y, view)  (Alg. 3)
 
 ``use_hata`` is a *traced* bool so the first-N dense layers (paper §5.1)
 stay inside one scanned layer structure; ``lax.cond`` picks the scoring
 path. Cache/code updates happen outside the cond so both branches share
 cache structure.
+
+Cache addressing goes through :mod:`repro.core.cache_view`: every
+decode/chunked-prefill entry point takes a *view* (``ContiguousView``
+over a plain cache, ``PagedView`` over a page pool + block table) — or
+a raw ``LayerKVCache``/``MLACache``, which is coerced for free. There
+is exactly ONE attend / decode / prefill-chunk function per family; the
+former ``*_paged`` twins are gone (``Model.decode_step_paged`` /
+``prefill_chunk_paged`` remain only as deprecation shims).
 """
 from __future__ import annotations
 
@@ -20,8 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import cache_view as cv
 from repro.core import hash_attention as ha
-from repro.core import paged_cache as paged
 from repro.core.kvcache import LayerKVCache, MLACache, append_kv, append_mla
 from repro.core.topk import chunked_topk
 from repro.distributed.strategy import get_decode_strategy
@@ -110,9 +118,9 @@ def _dense_decode(cfg: ModelConfig, q, k: jax.Array, v: jax.Array,
                   n_valid):
     """Full-cache decode with length (and SWA window) masking.
 
-    k/v: (B, S, H_kv, d) — either a contiguous cache's buffers or the
-    gathered logical view of a paged pool (garbage rows land past
-    ``n_valid`` and mask identically). n_valid: scalar or (B,).
+    k/v: (B, S, H_kv, d) — a view's logical K/V read (contiguous
+    buffers, or the gathered logical view of a paged pool; garbage rows
+    land past ``n_valid`` and mask identically). n_valid: scalar or (B,).
     """
     if cfg.sliding_window is None:
         return ops.decode_attention(q, k, v, n_valid)
@@ -133,18 +141,23 @@ def _dense_decode(cfg: ModelConfig, q, k: jax.Array, v: jax.Array,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
-def _hata_score_select(cfg: ModelConfig, q, w_h, cache: LayerKVCache,
+def _hata_score_select(cfg: ModelConfig, q, w_h, view: cv.KVView,
                        n_valid):
-    """Alg. 3 lines 6,10-17 via the shared batched pipeline: encode q,
-    batched Hamming scores, top-k, fused masked gather. ``n_valid`` may
-    be scalar or (B,) — the serving engine's decode wave advances slots
-    sitting at different depths in one call."""
-    budget = ha.clamped_budget(cfg.hata, cache.max_len,
+    """Alg. 3 lines 6,10-17 via the shared batched pipeline over any
+    cache view: encode q, batched Hamming scores (the view routes the
+    contiguous or block-table score kernel), top-k, fused masked gather
+    (ditto). ``n_valid`` may be scalar or (B,) — the serving engine's
+    decode wave advances slots sitting at different depths in one call.
+    Selection math is identical across layouts: a :class:`PagedView`
+    only changes the score kernel's page fetch and translates the
+    winners to physical rows at the gather boundary."""
+    budget = ha.clamped_budget(cfg.hata, view.capacity,
                                cfg.sliding_window)
-    top_scores, idx, _ = ha.hata_score_select(
-        q, w_h, cache.codes, rbit=cfg.hata.rbit, budget=budget,
-        n_valid=n_valid, window=cfg.sliding_window)
-    return ha.hata_attend(q, cache, idx, top_scores >= 0)
+    q_codes = ha.aggregate_q_codes(q, w_h, cfg.n_kv_heads)
+    scores = view.hamming_scores(q_codes, n_valid, rbit=cfg.hata.rbit,
+                                 window=cfg.sliding_window)
+    top_scores, idx = chunked_topk(scores, budget)
+    return view.gather_decode(q, idx, top_scores >= 0)
 
 
 def _project_qkv_perrow(cfg: ModelConfig, p, x: jax.Array,
@@ -182,126 +195,78 @@ def gqa_decode_project(cfg: ModelConfig, p, w_h, x: jax.Array,
 
 
 def gqa_decode_attend(cfg: ModelConfig, p, w_h, q1: jax.Array,
-                      cache: LayerKVCache, pos: jax.Array,
-                      use_hata) -> jax.Array:
-    """Alg. 3 lines 10-17 over a (possibly sequence-sharded) cache view.
-    Returns the block output (B, 1, D) (Wo applied)."""
+                      view, pos: jax.Array, use_hata) -> jax.Array:
+    """Alg. 3 lines 10-17 over ANY cache view — contiguous, paged, or
+    sequence-sharded (a raw ``LayerKVCache`` coerces to
+    ``ContiguousView`` for free). Returns the block output (B, 1, D)
+    (Wo applied)."""
+    view = cv.as_gqa_view(view)
     b = q1.shape[0]
     n_valid = pos + 1
-    hata_on = cache.codes is not None and cfg.hata.enabled
+    hata_on = view.has_codes and cfg.hata.enabled
     strat = get_decode_strategy()
     out = None
     if strat is not None:
-        out = strat.gqa(cfg, q1, w_h, cache, n_valid,
+        out = strat.gqa(cfg, q1, w_h, view, n_valid,
                         use_hata if hata_on else False)
     if out is None:
+        def dense_path():
+            k_log, v_log = view.kv_logical()
+            return _dense_decode(cfg, q1, k_log, v_log, n_valid)
+
         if not hata_on:
-            out = _dense_decode(cfg, q1, cache.k, cache.v, n_valid)
+            out = dense_path()
         elif isinstance(use_hata, bool):
             # static layer split (segmented scan): only one branch is
             # lowered — the dry-run sees steady-state HATA cost
-            out = (_hata_score_select(cfg, q1, w_h, cache, n_valid)
-                   if use_hata else _dense_decode(cfg, q1, cache.k,
-                                                  cache.v, n_valid))
+            out = (_hata_score_select(cfg, q1, w_h, view, n_valid)
+                   if use_hata else dense_path())
         else:
             out = jax.lax.cond(
                 use_hata,
-                lambda: _hata_score_select(cfg, q1, w_h, cache, n_valid),
-                lambda: _dense_decode(cfg, q1, cache.k, cache.v,
-                                      n_valid))
+                lambda: _hata_score_select(cfg, q1, w_h, view, n_valid),
+                dense_path)
     return out.reshape(b, 1, -1) @ p["wo"]
 
 
-def gqa_decode(cfg: ModelConfig, p, w_h, x: jax.Array,
-               cache: LayerKVCache, pos: jax.Array, use_hata,
-               ) -> Tuple[jax.Array, LayerKVCache]:
-    """x: (B, 1, D) one new token; pos: scalar cache fill."""
+def gqa_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
+               pos: jax.Array, use_hata):
+    """One decode step over any view (or raw cache). x: (B, 1, D) one
+    new token; pos: scalar cache fill, or (B,) per-slot fills (the
+    paged engine's decode wave — inactive slots' block-table rows point
+    at the scratch page). Returns (y, view-or-cache) matching the input
+    container type."""
+    view = cv.as_gqa_view(cache)
     q1, k, v, codes = gqa_decode_project(cfg, p, w_h, x, pos)
-    if cache.codes is None:
+    if not view.has_codes:
         codes = None
-    cache = append_kv(cache, k, v, codes, pos)
-    return gqa_decode_attend(cfg, p, w_h, q1, cache, pos,
-                             use_hata), cache
+    view = view.append(k, v, codes, pos)
+    out = gqa_decode_attend(cfg, p, w_h, q1, view, pos, use_hata)
+    return out, (view if cv.is_view(cache) else view.unwrap())
 
 
-def gqa_decode_attend_paged(cfg: ModelConfig, p, w_h, q1: jax.Array,
-                            pool: paged.PagedKVPool,
-                            block_table: jax.Array, pos: jax.Array,
-                            use_hata) -> jax.Array:
-    """Paged analogue of :func:`gqa_decode_attend`: attention over the
-    shared page pool through a per-request block table. Selection is
-    logical (bit-exact vs. the contiguous path); only the score
-    kernel's page fetch and the gather's physical rows differ."""
-    b = q1.shape[0]
-    psz = pool.page_size
-    n_valid = pos + 1
-    hata_on = pool.codes is not None and cfg.hata.enabled
-
-    def dense_path():
-        k_view = paged.logical_view(pool.k, block_table)
-        v_view = paged.logical_view(pool.v, block_table)
-        return _dense_decode(cfg, q1, k_view, v_view, n_valid)
-
-    def hata_path():
-        s_log = block_table.shape[1] * psz
-        budget = ha.clamped_budget(cfg.hata, s_log, cfg.sliding_window)
-        top_scores, idx, _ = ha.hata_score_select_paged(
-            q1, w_h, pool.codes, block_table, rbit=cfg.hata.rbit,
-            budget=budget, n_valid=n_valid, window=cfg.sliding_window)
-        phys_idx = paged.physical_rows(block_table, idx, psz)
-        return ops.gather_decode_attention_paged(
-            q1, pool.k, pool.v, phys_idx, sel_valid=top_scores >= 0)
-
-    if not hata_on:
-        out = dense_path()
-    elif isinstance(use_hata, bool):
-        out = hata_path() if use_hata else dense_path()
-    else:
-        out = jax.lax.cond(use_hata, hata_path, dense_path)
-    return out.reshape(b, 1, -1) @ p["wo"]
-
-
-def gqa_decode_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
-                     pool: paged.PagedKVPool, block_table: jax.Array,
-                     pos: jax.Array, use_hata,
-                     ) -> Tuple[jax.Array, paged.PagedKVPool]:
-    """One paged decode step. x: (B, 1, D); pos: (B,) per-request fill
-    (inactive slots' block-table rows point at the scratch page)."""
-    q1, k1, v1, codes = gqa_decode_project(cfg, p, w_h, x, pos)
-    if pool.codes is None:
-        codes = None
-    phys_new = paged.physical_rows(block_table,
-                                   jnp.asarray(pos, jnp.int32),
-                                   pool.page_size)
-    pool = paged.append_rows_kv(pool, k1, v1, codes, phys_new)
-    return gqa_decode_attend_paged(cfg, p, w_h, q1, pool, block_table,
-                                   pos, use_hata), pool
-
-
-def gqa_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
-                            pool: paged.PagedKVPool,
-                            block_table: jax.Array, ctx: jax.Array,
-                            ) -> Tuple[jax.Array, paged.PagedKVPool]:
-    """One chunk of a paged prefill (Alg. 1 in page-sized pieces).
+def gqa_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
+                      ctx: jax.Array):
+    """One chunk of a chunked prefill (Alg. 1 in pieces) over any view.
 
     x: (1, C, D) — the chunk's hidden states — at absolute positions
-    [ctx, ctx + C); block_table: (1, T). The fresh K/V/code rows are
-    scattered into the request's pages, then the chunk's queries attend
-    causally over the paged context *in place* (the block-table
-    flash-prefill kernel on the pallas impl; rows past ctx + C are
-    garbage, excluded by causality). ``ctx`` is traced: one compiled
-    chunk shape serves every chunk of every prompt.
+    [ctx, ctx + C). The fresh K/V/code rows are appended at ``ctx``,
+    then the chunk's queries attend causally over the cached context
+    *in place* (the block-table flash-prefill kernel on a
+    ``PagedView``; rows past ctx + C are garbage, excluded by
+    causality). ``ctx`` is traced: one compiled chunk shape serves
+    every chunk of every prompt.
     """
+    view = cv.as_gqa_view(view)
     b, c, _ = x.shape
     positions = jnp.arange(c) + ctx
     q, k, v = _project_qkv(cfg, p, x, positions)
     codes = None
-    if w_h is not None and cfg.hata.enabled and pool.codes is not None:
+    if w_h is not None and cfg.hata.enabled and view.has_codes:
         codes = ops.hash_encode_heads(k, w_h)
-    pool = paged.append_chunk_kv(pool, k, v, codes, block_table, ctx)
-    a = ops.chunk_attention_paged(q, pool.k, pool.v, block_table, ctx,
-                                  window=cfg.sliding_window)
-    return a.reshape(b, c, -1) @ p["wo"], pool
+    view = view.append_chunk(k, v, codes, ctx)
+    a = view.prefill_attend(q, ctx, window=cfg.sliding_window)
+    return a.reshape(b, c, -1) @ p["wo"], view
 
 
 # ===========================================================================
@@ -440,15 +405,21 @@ def _mla_attend(cfg: ModelConfig, p, q_lat: jax.Array, ckv_rows,
     return o
 
 
+def _apply_wuv(cfg: ModelConfig, p, o_lat: jax.Array) -> jax.Array:
+    m = cfg.mla
+    wuv = p["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
+    return jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+
+
 def mla_decode_project(cfg: ModelConfig, p, w_h, x: jax.Array,
                        pos: jax.Array):
     """-> (q_lat (B,H,r+rd) f32, ckv (B,1,r), krope (B,1,rd),
     codes (B,1,W)|None). pos: scalar or (B,) per-slot."""
     if jnp.ndim(pos) == 1:
-        qn, qr, cv, kr = jax.vmap(
+        qn, qr, cvv, kr = jax.vmap(
             lambda xr, pp: _mla_qkv(cfg, p, xr[None], pp[None]))(x, pos)
         q_nope, q_rope = qn[:, 0], qr[:, 0]
-        ckv, krope = cv[:, 0], kr[:, 0]
+        ckv, krope = cvv[:, 0], kr[:, 0]
     else:
         q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, pos[None])
     codes = None
@@ -459,163 +430,105 @@ def mla_decode_project(cfg: ModelConfig, p, w_h, x: jax.Array,
     return q_lat, ckv, krope, codes
 
 
+def _hata_mla_select(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
+                     view: cv.MLAView, n_valid) -> jax.Array:
+    """The same batched score -> select -> gather pipeline as the GQA
+    decode, over the single shared latent stream (G = all H heads):
+    one batched Hamming dispatch (contiguous or block-table, routed by
+    the view), top-k, one split-latent paged fused-gather dispatch. No
+    (B, S) popcount tensor, no XLA row gather — see
+    kernels/flash_decode.mla_decode_gathered_batched and its paged twin.
+    """
+    m = cfg.mla
+    q_codes = ops.hash_encode(q_lat, w_h[0])           # (B, H, W)
+    scores = view.hamming_scores(q_codes, n_valid, rbit=cfg.hata.rbit,
+                                 window=cfg.sliding_window)  # (B, S_log)
+    budget = ha.clamped_budget(cfg.hata, view.capacity,
+                               cfg.sliding_window)
+    top_scores, idx = chunked_topk(scores, budget)     # (B, k)
+    o_lat = view.gather_latent(
+        q_lat, idx, lora_rank=m.kv_lora_rank,
+        scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
+        n_valid=jnp.sum((top_scores >= 0).astype(jnp.int32), -1))
+    return _apply_wuv(cfg, p, o_lat)
+
+
 def mla_decode_attend(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
-                      cache: MLACache, pos: jax.Array,
-                      use_hata, x_dtype) -> jax.Array:
+                      view, pos: jax.Array, use_hata,
+                      x_dtype) -> jax.Array:
+    """MLA decode attention over ANY latent view (raw ``MLACache``
+    coerces to ``ContiguousMLAView``)."""
+    view = cv.as_mla_view(view)
     b = q_lat.shape[0]
     n_valid = pos + 1
-    s = cache.max_len
-    seq = jnp.arange(s)
-    nv = jnp.reshape(n_valid, (-1, 1))                  # (1|B, 1)
+    s_log = view.capacity
 
     def dense_path():
-        mask = jnp.broadcast_to(seq[None] < nv, (b, s))
-        return _mla_attend(cfg, p, q_lat, cache.ckv, cache.krope, mask)
+        ckv_log, kr_log = view.latents_logical()
+        mask = jnp.arange(s_log)[None] < jnp.reshape(n_valid, (-1, 1))
+        mask = jnp.broadcast_to(mask, (b, s_log))
+        return _mla_attend(cfg, p, q_lat, ckv_log, kr_log, mask)
 
-    def hata_path():
-        # The same batched score -> select -> gather pipeline as the GQA
-        # decode, over the single shared latent stream (G = all H heads):
-        # one batched Hamming dispatch, top-k, one split-latent paged
-        # fused-gather dispatch. No (B, S) popcount tensor, no XLA row
-        # gather — see kernels/flash_decode.mla_decode_gathered_batched.
-        m = cfg.mla
-        q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
-        scores = ops.hamming_scores_latent(q_codes, cache.codes,
-                                           rbit=cfg.hata.rbit)  # (B, S)
-        scores = ha.mask_scores(scores[:, None], n_valid,
-                                window=cfg.sliding_window)[:, 0]
-        budget = ha.clamped_budget(cfg.hata, s, cfg.sliding_window)
-        top_scores, idx = chunked_topk(scores, budget)    # (B, k)
-        o_lat = ops.mla_gather_decode(
-            q_lat, cache.ckv, cache.krope, idx,
-            lora_rank=m.kv_lora_rank,
-            scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
-            n_valid=jnp.sum((top_scores >= 0).astype(jnp.int32), -1))
-        wuv = p["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
-        return jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
-
-    hata_on = cache.codes is not None and cfg.hata.enabled
+    hata_on = view.has_codes and cfg.hata.enabled
     strat = get_decode_strategy()
     o = None
     if strat is not None:
-        o = strat.mla(cfg, p, w_h, q_lat, cache, n_valid,
+        o = strat.mla(cfg, p, w_h, q_lat, view, n_valid,
                       use_hata if hata_on else False)
     if o is None:
         if not hata_on:
             o = dense_path()
         elif isinstance(use_hata, bool):
-            o = hata_path() if use_hata else dense_path()
+            o = (_hata_mla_select(cfg, p, w_h, q_lat, view, n_valid)
+                 if use_hata else dense_path())
         else:
-            o = jax.lax.cond(use_hata, hata_path, dense_path)
+            o = jax.lax.cond(
+                use_hata,
+                lambda: _hata_mla_select(cfg, p, w_h, q_lat, view,
+                                         n_valid),
+                dense_path)
     return o.reshape(b, 1, -1).astype(x_dtype) @ p["wo"]
 
 
-def mla_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache: MLACache,
-               pos: jax.Array, use_hata) -> Tuple[jax.Array, MLACache]:
+def mla_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
+               pos: jax.Array, use_hata):
+    """One MLA decode step over any view (or raw cache); pos scalar or
+    (B,). Returns (y, view-or-cache) matching the input container."""
+    view = cv.as_mla_view(cache)
     q_lat, ckv, krope, codes = mla_decode_project(cfg, p, w_h, x, pos)
-    if cache.codes is None:
+    if not view.has_codes:
         codes = None
-    cache = append_mla(cache, ckv, krope, codes, pos)
-    out = mla_decode_attend(cfg, p, w_h, q_lat, cache, pos, use_hata,
+    view = view.append(ckv, krope, codes, pos)
+    out = mla_decode_attend(cfg, p, w_h, q_lat, view, pos, use_hata,
                             x.dtype)
-    return out, cache
+    return out, (view if cv.is_view(cache) else view.unwrap())
 
 
-def mla_decode_attend_paged(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
-                            pool: paged.PagedMLAPool,
-                            block_table: jax.Array, pos: jax.Array,
-                            use_hata, x_dtype) -> jax.Array:
-    """Paged analogue of :func:`mla_decode_attend`: the shared latent
-    stream scored page-by-page through the block table, selection
-    logical, gather over physical (ckv, krope) row pairs."""
-    b = q_lat.shape[0]
-    m = cfg.mla
-    psz = pool.page_size
-    n_valid = pos + 1
-    s_log = block_table.shape[1] * psz
-
-    def dense_path():
-        ckv_view = paged.logical_view(pool.ckv, block_table)
-        kr_view = paged.logical_view(pool.krope, block_table)
-        mask = jnp.arange(s_log)[None] < jnp.reshape(n_valid, (-1, 1))
-        mask = jnp.broadcast_to(mask, (b, s_log))
-        return _mla_attend(cfg, p, q_lat, ckv_view, kr_view, mask)
-
-    def hata_path():
-        q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
-        scores = ops.hamming_scores_latent_paged(
-            q_codes, pool.codes, block_table, n_valid,
-            rbit=cfg.hata.rbit)                        # (B, S_log)
-        if cfg.sliding_window is not None:
-            scores = ha.mask_scores(scores[:, None], n_valid,
-                                    window=cfg.sliding_window)[:, 0]
-        budget = ha.clamped_budget(cfg.hata, s_log, cfg.sliding_window)
-        top_scores, idx = chunked_topk(scores, budget)    # (B, k)
-        phys_idx = paged.physical_rows(block_table, idx, psz)
-        o_lat = ops.mla_gather_decode_paged(
-            q_lat, pool.ckv, pool.krope, phys_idx,
-            lora_rank=m.kv_lora_rank,
-            scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
-            n_valid=jnp.sum((top_scores >= 0).astype(jnp.int32), -1))
-        wuv = p["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
-        return jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
-
-    hata_on = pool.codes is not None and cfg.hata.enabled
-    if not hata_on:
-        o = dense_path()
-    elif isinstance(use_hata, bool):
-        o = hata_path() if use_hata else dense_path()
-    else:
-        o = jax.lax.cond(use_hata, hata_path, dense_path)
-    return o.reshape(b, 1, -1).astype(x_dtype) @ p["wo"]
-
-
-def mla_decode_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
-                     pool: paged.PagedMLAPool, block_table: jax.Array,
-                     pos: jax.Array, use_hata,
-                     ) -> Tuple[jax.Array, paged.PagedMLAPool]:
-    """One paged MLA decode step. x: (B, 1, D); pos: (B,)."""
-    q_lat, ckv, krope, codes = mla_decode_project(cfg, p, w_h, x, pos)
-    if pool.codes is None:
-        codes = None
-    phys_new = paged.physical_rows(block_table,
-                                   jnp.asarray(pos, jnp.int32),
-                                   pool.page_size)
-    pool = paged.append_rows_mla(pool, ckv, krope, codes, phys_new)
-    return mla_decode_attend_paged(cfg, p, w_h, q_lat, pool,
-                                   block_table, pos, use_hata,
-                                   x.dtype), pool
-
-
-def mla_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
-                            pool: paged.PagedMLAPool,
-                            block_table: jax.Array, ctx: jax.Array,
-                            ) -> Tuple[jax.Array, paged.PagedMLAPool]:
-    """One chunk of a paged MLA prefill: scatter the chunk's latents,
-    then attend *in latent space* with absorbed queries — the chunk's
-    queries carry W_uk, logits are q_c·c + q_r·k_r over the paged
-    (ckv, krope) streams, and W_uv is applied to the attended latents.
-    The former revision up-projected per-head K/V from the *whole*
-    gathered logical view on every chunk (a (B, S_log, H, d) pair per
-    layer per chunk); now no per-head context tensor exists at all."""
+def mla_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
+                      ctx: jax.Array):
+    """One chunk of a chunked MLA prefill over any view: append the
+    chunk's latents, then attend *in latent space* with absorbed
+    queries — the chunk's queries carry W_uk, logits are q_c·c + q_r·k_r
+    over the (ckv, krope) streams (read in place on a ``PagedMLAView``),
+    and W_uv is applied to the attended latents. No per-head context
+    tensor exists at all."""
+    view = cv.as_mla_view(view)
     m = cfg.mla
     b, c, _ = x.shape
     positions = jnp.arange(c) + ctx
     q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
     codes = None
-    if w_h is not None and cfg.hata.enabled and pool.codes is not None:
+    if w_h is not None and cfg.hata.enabled and view.has_codes:
         latent = jnp.concatenate([ckv, krope], axis=-1)
         codes = ops.hash_encode(latent, w_h[0])
-    pool = paged.append_chunk_mla(pool, ckv, krope, codes, block_table,
-                                  ctx)
+    view = view.append_chunk(ckv, krope, codes, ctx)
     q_lat = _mla_latent_q(cfg, p, q_nope, q_rope)       # (1, C, H, r+rd)
-    o_lat = ops.mla_chunk_attention_paged(
-        q_lat, pool.ckv, pool.krope, block_table, ctx,
-        lora_rank=m.kv_lora_rank,
+    o_lat = view.prefill_attend(
+        q_lat, ctx, lora_rank=m.kv_lora_rank,
         scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5)
     wuv = p["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
     a = jnp.einsum("bchr,rhd->bchd", o_lat, wuv.astype(jnp.float32))
-    return a.reshape(b, c, -1).astype(x.dtype) @ p["wo"], pool
+    return a.reshape(b, c, -1).astype(x.dtype) @ p["wo"], view
 
 
 # ===========================================================================

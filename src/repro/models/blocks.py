@@ -365,7 +365,7 @@ def block_prefill_stacked(cfg: ModelConfig, p, w_h, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# paged serving paths (block-table caches; dense/moe attention families)
+# view-typed serving paths (cache views; dense/moe attention families)
 # ---------------------------------------------------------------------------
 def init_block_pool(cfg: ModelConfig, num_pages: int, page_size: int):
     """One layer's shared page pool (KV+codes paged together)."""
@@ -382,44 +382,22 @@ def init_block_pool(cfg: ModelConfig, num_pages: int, page_size: int):
                               cfg.head_dim, rbit=rbit, dtype=dtype)
 
 
-def block_decode_paged(cfg: ModelConfig, p, w_h, x: jax.Array, pool,
-                       block_table: jax.Array, pos: jax.Array,
-                       use_hata):
-    """One decode block over a paged cache. x: (B, 1, D); pos: (B,).
-    Attention families only (dense/moe, GQA or MLA) — SSM/hybrid state
-    is O(1) per slot and has nothing to page."""
+def block_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
+                        ctx: jax.Array):
+    """One chunk of a chunked prefill through one block, over any cache
+    view (``PagedView``/``PagedMLAView`` in the paged engine — the
+    block-table flash-prefill kernel attends over the page pool in
+    place; ``Contiguous*View`` works identically for chunked prefill on
+    dense caches). x: (1, C, D) at absolute positions [ctx, ctx + C);
+    traced ``ctx``: one compiled chunk shape. Attention families only
+    (dense/moe, GQA or MLA)."""
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if _is_mla(cfg):
-        a, pool = attn.mla_decode_paged(cfg, p["attn"], w_h, h, pool,
-                                        block_table, pos, use_hata)
+        a, view = attn.mla_prefill_chunk(cfg, p["attn"], w_h, h, view,
+                                         ctx)
     else:
-        a, pool = attn.gqa_decode_paged(cfg, p["attn"], w_h, h, pool,
-                                        block_table, pos, use_hata)
-    x = x + a
-    h = rms_norm(x, p["ln2"], cfg.norm_eps)
-    if "moe" in p:
-        y, _ = moe_mod.moe_ffn(cfg, p["moe"], h, group_size=x.shape[0])
-        x = x + y
-    else:
-        x = x + ffn(p["ffn"], h)
-    return x, pool
-
-
-def block_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
-                              pool, block_table: jax.Array,
-                              ctx: jax.Array):
-    """One chunk of a paged prefill through one block. x: (1, C, D) at
-    absolute positions [ctx, ctx + C). On the pallas impl the chunk's
-    attention runs the block-table flash-prefill kernel over the page
-    pool in place (traced ``ctx``: one compiled chunk shape, no
-    gathered logical view)."""
-    h = rms_norm(x, p["ln1"], cfg.norm_eps)
-    if _is_mla(cfg):
-        a, pool = attn.mla_prefill_chunk_paged(cfg, p["attn"], w_h, h,
-                                               pool, block_table, ctx)
-    else:
-        a, pool = attn.gqa_prefill_chunk_paged(cfg, p["attn"], w_h, h,
-                                               pool, block_table, ctx)
+        a, view = attn.gqa_prefill_chunk(cfg, p["attn"], w_h, h, view,
+                                         ctx)
     x = x + a
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     if "moe" in p:
@@ -427,7 +405,7 @@ def block_prefill_chunk_paged(cfg: ModelConfig, p, w_h, x: jax.Array,
         x = x + y
     else:
         x = x + ffn(p["ffn"], h)
-    return x, pool
+    return x, view
 
 
 # ---------------------------------------------------------------------------

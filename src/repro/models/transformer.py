@@ -323,52 +323,85 @@ class Model:
         return [blocks.init_block_pool(self.cfg, num_pages, page_size)
                 for _ in range(self.cfg.n_layers)]
 
-    def _paged_layer_params(self, params):
+    def _flat_layer_params(self, params):
+        """(block params, hash weights) per layer, pre + stack — the
+        unrolled iteration order the view-typed serving paths use."""
         for i in range(self.n_pre):
             yield params["pre"][i], params["hash_pre"][i]
         for j in range(self.n_stack):
             yield (jax.tree.map(lambda t: t[j], params["stack"]),
                    jax.tree.map(lambda t: t[j], params["hash_stack"]))
 
-    def decode_step_paged(self, params, tokens: jax.Array, pools,
-                          block_table: jax.Array, pos: jax.Array):
-        """One paged decode wave. tokens: (B,); block_table: (B, T)
-        int32 page ids; pos: (B,) per-request fill (inactive slots
-        point at the scratch page). Returns (logits (B, V), pools)."""
+    def _decode_views(self, params, tokens: jax.Array, views,
+                      pos: jax.Array):
+        """One decode wave over per-layer cache views. tokens: (B,);
+        pos: scalar or (B,) per-request fill (a ``PagedView``'s
+        inactive slots point at the scratch page). Returns
+        (logits (B, V), views)."""
         cfg = self.cfg
         x = self.embed_decode(params, tokens)
         hata_on = cfg.hata.enabled
-        new_pools = []
-        for li, (bp, w_h) in enumerate(self._paged_layer_params(params)):
+        new_views = []
+        for li, (bp, w_h) in enumerate(self._flat_layer_params(params)):
             flag = hata_on and li >= cfg.hata.dense_layers
-            x, pool = blocks.block_decode_paged(
-                cfg, bp, w_h, x, pools[li], block_table, pos, flag)
-            new_pools.append(pool)
+            x, view = blocks.block_decode(cfg, bp, w_h, x, views[li],
+                                          self.kind, pos, flag)
+            new_views.append(view)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        return self._head_last(params, x[:, 0]), new_pools
+        return self._head_last(params, x[:, 0]), new_views
 
-    def prefill_chunk_paged(self, params, tokens: jax.Array, pools,
-                            block_table: jax.Array, ctx: jax.Array,
-                            last: jax.Array):
-        """One chunk of a paged prefill (B=1). tokens: (1, C) — the
-        chunk, zero-padded past the prompt; block_table: (1, T); ctx:
-        traced token count already in the cache (page-aligned when the
-        prefix cache contributed pages); last: traced index of the last
-        *real* token within the chunk. Returns (logits (1, V) at
-        ``last``, pools) — only the final chunk's logits are consumed.
+    def prefill_chunk(self, params, tokens: jax.Array, views,
+                      ctx: jax.Array, last: jax.Array):
+        """One chunk of a chunked prefill (B=1) over per-layer cache
+        views. tokens: (1, C) — the chunk, zero-padded past the prompt;
+        ctx: traced token count already in the cache (page-aligned when
+        the prefix cache contributed pages); last: traced index of the
+        last *real* token within the chunk. Returns (logits (1, V) at
+        ``last``, views) — only the final chunk's logits are consumed.
         ``ctx``/``last`` being traced means one compiled shape serves
         every chunk of every prompt."""
         cfg = self.cfg
         x = self.embed(params, tokens)
-        new_pools = []
-        for li, (bp, w_h) in enumerate(self._paged_layer_params(params)):
-            x, pool = blocks.block_prefill_chunk_paged(
-                cfg, bp, w_h, x, pools[li], block_table, ctx)
-            new_pools.append(pool)
+        new_views = []
+        for li, (bp, w_h) in enumerate(self._flat_layer_params(params)):
+            x, view = blocks.block_prefill_chunk(cfg, bp, w_h, x,
+                                                 views[li], ctx)
+            new_views.append(view)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         x_last = jax.lax.dynamic_index_in_dim(x, last, axis=1,
                                               keepdims=False)
-        return self._head_last(params, x_last), new_pools
+        return self._head_last(params, x_last), new_views
+
+    # -- deprecation shims (the pools+block_table twin surface) --------
+    def decode_step_paged(self, params, tokens: jax.Array, pools,
+                          block_table: jax.Array, pos: jax.Array):
+        """Deprecated: build ``PagedView``s and call ``decode_step``."""
+        import warnings
+        from repro.core import cache_view as cv
+        warnings.warn(
+            "Model.decode_step_paged is deprecated: wrap each layer's "
+            "pool in core.cache_view.paged_view(pool, block_table) and "
+            "call decode_step with the view list.",
+            DeprecationWarning, stacklevel=2)
+        views = [cv.paged_view(p_, block_table) for p_ in pools]
+        logits, views = self.decode_step(params, tokens, views, pos)
+        return logits, [v.unwrap() for v in views]
+
+    def prefill_chunk_paged(self, params, tokens: jax.Array, pools,
+                            block_table: jax.Array, ctx: jax.Array,
+                            last: jax.Array):
+        """Deprecated: build ``PagedView``s and call ``prefill_chunk``."""
+        import warnings
+        from repro.core import cache_view as cv
+        warnings.warn(
+            "Model.prefill_chunk_paged is deprecated: wrap each layer's "
+            "pool in core.cache_view.paged_view(pool, block_table) and "
+            "call prefill_chunk with the view list.",
+            DeprecationWarning, stacklevel=2)
+        views = [cv.paged_view(p_, block_table) for p_ in pools]
+        logits, views = self.prefill_chunk(params, tokens, views, ctx,
+                                           last)
+        return logits, [v.unwrap() for v in views]
 
     # ------------------------------------------------------------------
     # prefill
@@ -441,7 +474,15 @@ class Model:
     def decode_step(self, params, tokens: jax.Array, caches, pos
                     ) -> Tuple[jax.Array, Any]:
         """tokens: (B,) [audio: (B, nb)] the last generated token;
-        pos: scalar count of tokens already in the cache (incl. meta)."""
+        pos: scalar count of tokens already in the cache (incl. meta),
+        or (B,) per-slot fills when ``caches`` is a per-layer list of
+        cache *views* (``core.cache_view`` — the serving engines'
+        continuous-batching waves; contiguous and paged layouts route
+        through the same step)."""
+        from repro.core import cache_view as cv
+        if isinstance(caches, (list, tuple)) and caches \
+                and cv.is_view(caches[0]):
+            return self._decode_views(params, tokens, list(caches), pos)
         cfg = self.cfg
         x = self.embed_decode(params, tokens)
         if self.n_pre:

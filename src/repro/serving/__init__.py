@@ -1,5 +1,7 @@
+from repro.serving.base import EngineBase
 from repro.serving.engine import ServingEngine
 from repro.serving.request import Request
 from repro.serving.scheduler import PagedServingEngine
 
-__all__ = ["ServingEngine", "Request", "PagedServingEngine"]
+__all__ = ["EngineBase", "ServingEngine", "Request",
+           "PagedServingEngine"]

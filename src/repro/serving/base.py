@@ -1,0 +1,117 @@
+"""Shared continuous-batching engine machinery.
+
+:class:`EngineBase` owns everything that is policy-free and identical
+across engines: the request queue, the static slot table, per-request
+RNG sampling, the step/run driver loop, and — crucially — the ONE
+retirement path that stamps a :class:`~repro.serving.request.Request`'s
+terminal fields. The dense :class:`~repro.serving.engine.ServingEngine`
+and the paged :class:`~repro.serving.scheduler.PagedServingEngine`
+subclass it with only admission and capacity/eviction policy local
+(which is exactly what *should* differ between a static-slab cache and
+a page pool).
+
+Why the retirement path is centralized: the two engines' finish logic
+had drifted — the dense engine stamped ``truncated``/``t_done`` inline
+at admission and at the cache wall (and never counted truncations),
+the paged one via its own ``_finish_truncated`` (which did). Every
+terminal transition now goes through :meth:`EngineBase._finish`, so
+``truncated``, ``t_done`` and ``stats["truncated"]`` are set
+identically whichever engine retires the request.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+import jax
+import numpy as np
+
+from repro.models import Model
+from repro.serving.request import Request
+from repro.serving.sampling import pick_tokens
+
+
+class EngineBase:
+    """Queue + slots + RNG + retirement; subclasses add the waves."""
+
+    def __init__(self, model: Model, params, *, max_batch: int,
+                 sample: str = "greedy", seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.sample = sample
+        # one base key, never split or advanced by engine-global events:
+        # sampled picks derive a per-request stream from it (see _pick),
+        # so a request's tokens are a pure function of (seed, request
+        # id, step) — independent of which other requests happen to be
+        # co-scheduled, and bit-exact under preemption replay.
+        self._base_key = jax.random.PRNGKey(seed)
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)
+        self.stats = {"decode_steps": 0, "prefills": 0,
+                      "tokens_out": 0, "truncated": 0}
+        self._done_this_step: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _pick(self, logits, reqs):
+        """Next-token pick for each logits row; ``reqs`` aligns a
+        Request (or None) with every row — per-request (id, step) RNG
+        streams, see serving/sampling.py."""
+        return pick_tokens(self._base_key, logits, reqs, self.sample)
+
+    @staticmethod
+    def _to_py(tok):
+        a = np.asarray(tok)
+        return int(a) if a.ndim == 0 else a.tolist()
+
+    # ------------------------------------------------------------------
+    # unified retirement — the one place terminal fields are stamped
+    # ------------------------------------------------------------------
+    def _finish(self, req: Request, *, truncated: bool = False):
+        """Retire ``req`` this step. ``truncated=True`` marks an
+        engine-capacity termination (prompt too large, cache/pool wall)
+        and counts it; both engines stamp the same fields in the same
+        order."""
+        if truncated:
+            req.truncated = True
+            self.stats["truncated"] += 1
+        if req.t_done is None:
+            req.t_done = time.monotonic()
+        self._done_this_step.append(req)
+
+    # ------------------------------------------------------------------
+    # engine-specific hooks
+    # ------------------------------------------------------------------
+    def _admit(self):
+        """Admission policy: move queued requests toward slots."""
+        raise NotImplementedError
+
+    def _advance(self):
+        """One engine tick past admission (prefill chunks and/or the
+        decode wave)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Admit + advance one tick. Returns requests finished now."""
+        self._done_this_step = []
+        self._admit()
+        self._advance()
+        return self._done_this_step
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Submit all, run to completion, return in completion order."""
+        for r in requests:
+            self.submit(r)
+        done: List[Request] = []
+        guard = 0
+        while len(done) < len(requests):
+            done.extend(self.step())
+            guard += 1
+            assert guard < 100000, "engine livelock"
+        return done

@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine with HATA decode.
+"""Continuous-batching serving engine with HATA decode (dense slab).
 
 Slot model (static shapes, jit-friendly — the TPU serving pattern):
   * one batched KV+code cache of ``max_batch`` slots x ``max_len`` rows
@@ -19,49 +19,37 @@ Slot model (static shapes, jit-friendly — the TPU serving pattern):
     static shapes.
 
 The engine is model-agnostic: any family with a decode path works
-(GQA/MLA/hybrid; HATA on or off per config).
+(GQA/MLA/hybrid; HATA on or off per config). Queue, sampling and the
+unified retirement path live in :class:`~repro.serving.base.EngineBase`;
+only the slab admission + the max_len wall are local here.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
-from repro.serving.request import Request
-from repro.serving.sampling import pick_tokens
+from repro.serving.base import EngineBase
 
 
-class ServingEngine:
+class ServingEngine(EngineBase):
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_len: int = 256, sample: str = "greedy",
                  seed: int = 0):
-        self.model = model
-        self.params = params
-        self.max_batch = max_batch
+        super().__init__(model, params, max_batch=max_batch,
+                         sample=sample, seed=seed)
         self.max_len = max_len
-        self.sample = sample
-        # one base key, never split: sampled picks derive a per-request
-        # stream from it (see _pick), so a request's tokens are a pure
-        # function of (seed, request id, step) — independent of which
-        # other requests happen to be co-scheduled.
-        self._base_key = jax.random.PRNGKey(seed)
         cfg = model.cfg
         self.meta = cfg.meta_tokens
         self.caches = model.init_caches(max_batch, max_len,
                                         layout="list")
-        self.pos = np.zeros(max_batch, np.int32)
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: Deque[Request] = deque()
         self.last_tok = np.zeros(
             (max_batch, cfg.audio.n_codebooks) if cfg.family == "audio"
             else (max_batch,), np.int32)
-        self.stats = {"decode_steps": 0, "prefills": 0,
-                      "tokens_out": 0}
 
         # pos is the per-slot (B,) depth vector, not one shared scalar:
         # decode_step threads it through to hata_decode_batched's
@@ -71,10 +59,6 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, b, c: model.prefill(p, b, c, jnp.int32(0)))
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
-
-    # ------------------------------------------------------------------
-    def submit(self, req: Request):
-        self.queue.append(req)
 
     # ------------------------------------------------------------------
     def _insert_impl(self, caches, single, slot):
@@ -91,9 +75,7 @@ class ServingEngine:
             if req.prompt_len > self.max_len:
                 # the prompt alone overflows the cache — truncate at
                 # admission (prefilling it would be a shape error)
-                req.truncated = True
-                req.t_done = time.monotonic()
-                self._rejected.append(req)
+                self._finish(req, truncated=True)
                 continue
             slot = self.slots.index(None)
             req.slot = slot
@@ -106,29 +88,20 @@ class ServingEngine:
             tok = self._pick(logits, [req])[0]
             req.output.append(self._to_py(tok))
             req.t_first_token = time.monotonic()
+            self.stats["prefills"] += 1
+            self.stats["tokens_out"] += 1
+            if req.done:
+                # a zero/one-new-token request retires at admission —
+                # same rule as the paged engine's _finish_prefill
+                self._finish(req)
+                continue
             self.last_tok[slot] = np.asarray(tok)
             self.pos[slot] = req.prompt_len + self.meta
             self.slots[slot] = req
-            self.stats["prefills"] += 1
-            self.stats["tokens_out"] += 1
-
-    def _pick(self, logits, reqs):
-        """Next-token pick for each logits row; ``reqs`` aligns a
-        Request (or None) with every row — per-request RNG streams,
-        see serving/sampling.py."""
-        return pick_tokens(self._base_key, logits, reqs, self.sample)
-
-    @staticmethod
-    def _to_py(tok):
-        a = np.asarray(tok)
-        return int(a) if a.ndim == 0 else a.tolist()
 
     # ------------------------------------------------------------------
-    def step(self) -> List[Request]:
-        """Admit + one decode wave. Returns requests finished this step."""
-        self._rejected: List[Request] = []
-        self._admit()
-        finished = list(self._rejected)
+    def _advance(self):
+        """Truncate out-of-cache slots, then run one decode wave."""
         # out-of-cache: a slot whose next decode would write at or past
         # max_len is terminated NOW with an explicit ``truncated`` flag
         # and its slot freed — decoding on would clamp the cache append
@@ -136,13 +109,11 @@ class ServingEngine:
         for slot, req in enumerate(self.slots):
             if req is not None and \
                     self.pos[slot] >= self.max_len + self.meta:
-                req.truncated = True
-                req.t_done = time.monotonic()
-                finished.append(req)
+                self._finish(req, truncated=True)
                 self.slots[slot] = None
         active = [s is not None for s in self.slots]
         if not any(active):
-            return finished
+            return
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self.last_tok), self.caches,
             jnp.asarray(self.pos))
@@ -157,17 +128,5 @@ class ServingEngine:
             self.last_tok[slot] = toks_np[slot]
             self.stats["tokens_out"] += 1
             if req.done:
-                if req.t_done is None:
-                    req.t_done = time.monotonic()
-                finished.append(req)
+                self._finish(req)
                 self.slots[slot] = None
-        return finished
-
-    def run(self, requests: List[Request]) -> List[Request]:
-        """Submit all, run to completion, return in completion order."""
-        for r in requests:
-            self.submit(r)
-        done: List[Request] = []
-        while len(done) < len(requests):
-            done.extend(self.step())
-        return done

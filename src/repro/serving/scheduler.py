@@ -4,7 +4,8 @@ The dense :class:`~repro.serving.engine.ServingEngine` allocates one
 ``max_batch x max_len`` cache, prefills each admitted prompt in a single
 blocking B=1 call, and kills requests at the ``max_len`` wall. This
 engine replaces all three with the paged subsystem
-(``core/paged_cache.py`` + the block-table kernels):
+(``core/paged_cache.py`` + the block-table kernels behind
+``core.cache_view.PagedView``):
 
   * **one shared page pool per layer** — a request holds exactly
     ``ceil(rows / page_size)`` pages, so memory scales with live tokens,
@@ -23,7 +24,7 @@ engine replaces all three with the paged subsystem
     youngest running request is evicted (pages freed, request requeued)
     after the prefix cache has been squeezed first; replay is exact for
     greedy *and* sampled decoding (every request draws from its own
-    persisted (id, step) RNG stream — see ``_pick``);
+    persisted (id, step) RNG stream — see ``EngineBase._pick``);
   * **growth past max_len** — decode appends pages on demand; a request
     is only ``truncated`` when the *pool itself* can't be made to fit
     it (dense engines truncate at a static wall), or when it outgrows
@@ -39,6 +40,15 @@ jit-friendly TPU pattern); inactive slots decode garbage into the
 reserved *scratch page* (page 0), which no request ever owns, so they
 can't corrupt live pages.
 
+The model is driven through the view API: each jit'd wave wraps the
+per-layer pools + the block table in ``core.cache_view.paged_view`` and
+calls the same ``Model.decode_step`` / ``Model.prefill_chunk`` the
+dense stack uses — there is no paged twin of the model surface. Queue,
+sampling and the unified retirement path come from
+:class:`~repro.serving.base.EngineBase`; everything local here is page
+accounting (admission watermark, prefix adoption, preemption,
+truncation walls).
+
 Differential guarantee (tests/test_paged.py): greedy outputs equal the
 offline/dense engine's per request; prefix-shared prefills produce the
 same logits as cold ones.
@@ -48,17 +58,17 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from collections import deque
-from typing import Deque, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cache_view as cache_view_mod
 from repro.core.paged_cache import PageAllocator, PrefixCache
 from repro.models import Model
+from repro.serving.base import EngineBase
 from repro.serving.request import Request
-from repro.serving.sampling import pick_tokens
 
 
 @dataclasses.dataclass
@@ -72,7 +82,7 @@ class _PrefillState:
     resume: bool                    # True -> suppress the emitted token
 
 
-class PagedServingEngine:
+class PagedServingEngine(EngineBase):
     """Continuous batching over a paged KV+code cache."""
 
     def __init__(self, model: Model, params, *, num_pages: int = 64,
@@ -105,16 +115,12 @@ class PagedServingEngine:
             if strict_moe_capacity:
                 raise ValueError(msg)
             warnings.warn(msg, stacklevel=2)
-        self.model = model
-        self.params = params
+        super().__init__(model, params, max_batch=max_batch,
+                         sample=sample, seed=seed)
         self.page_size = page_size
-        self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk or 2 * page_size
+
         self.watermark = watermark_pages
-        self.sample = sample
-        # base key for the per-request sampled streams (see _pick);
-        # never split or advanced by engine-global events
-        self._base_key = jax.random.PRNGKey(seed)
 
         self.pools = model.init_paged_pools(num_pages, page_size)
         self.alloc = PageAllocator(num_pages)
@@ -135,33 +141,35 @@ class PagedServingEngine:
         self.table_pages = min(max_len_pages or num_pages, num_pages)
         self.bt = np.full((max_batch, self.table_pages), self.scratch,
                           np.int32)
-        self.pos = np.zeros(max_batch, np.int32)
-        self.slots: List[Optional[Request]] = [None] * max_batch
         self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
         self._slot_order: List[int] = []      # admission order (slot ids)
         self.last_tok = np.zeros(max_batch, np.int32)
-        self.queue: Deque[Request] = deque()
         self.prefilling: Optional[_PrefillState] = None
-        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
-                      "prefills": 0, "tokens_out": 0, "preemptions": 0,
-                      "prefix_hit_tokens": 0, "peak_pages": 1,
-                      "truncated": 0}
+        self.stats.update({"prefill_chunks": 0, "preemptions": 0,
+                           "prefix_hit_tokens": 0, "peak_pages": 1})
 
         # pools are donated: row scatters stay in place instead of
         # copying every pool per wave (a no-op warning on backends
-        # without donation support, e.g. CPU tests)
-        self._decode = jax.jit(
-            lambda p, t, pools, bt, pos: model.decode_step_paged(
-                p, t, pools, bt, pos), donate_argnums=(2,))
-        self._chunk = jax.jit(
-            lambda p, t, pools, bt, ctx, last:
-            model.prefill_chunk_paged(p, t, pools, bt, ctx, last),
-            donate_argnums=(2,))
+        # without donation support, e.g. CPU tests). The views are
+        # built inside the jit'd fn — one PagedView per layer around
+        # the donated pool + the shared block table — and unwrapped on
+        # the way out, so the engine's host state stays (pools, bt).
+        def _decode_fn(p, t, pools, bt, pos):
+            views = [cache_view_mod.paged_view(pool, bt)
+                     for pool in pools]
+            logits, views = model.decode_step(p, t, views, pos)
+            return logits, [v.unwrap() for v in views]
+
+        def _chunk_fn(p, t, pools, bt, ctx, last):
+            views = [cache_view_mod.paged_view(pool, bt)
+                     for pool in pools]
+            logits, views = model.prefill_chunk(p, t, views, ctx, last)
+            return logits, [v.unwrap() for v in views]
+
+        self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
+        self._chunk = jax.jit(_chunk_fn, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request):
-        self.queue.append(req)
-
     def _note_usage(self):
         self.stats["peak_pages"] = max(self.stats["peak_pages"],
                                        self.alloc.used_count())
@@ -320,10 +328,7 @@ class PagedServingEngine:
 
     def _finish_truncated(self, req: Request, pages: List[int]):
         self.alloc.release(pages)
-        req.truncated = True
-        req.t_done = time.monotonic()
-        self.stats["truncated"] += 1
-        self._done_this_step.append(req)
+        self._finish(req, truncated=True)
 
     # ------------------------------------------------------------------
     # decode wave
@@ -375,39 +380,12 @@ class PagedServingEngine:
                 self._retire(slot, req)
 
     def _retire(self, slot: int, req: Request):
-        if req.t_done is None:
-            req.t_done = time.monotonic()
         self._free_slot(slot)
-        self._done_this_step.append(req)
+        self._finish(req)
 
     # ------------------------------------------------------------------
-    def _pick(self, logits, reqs):
-        """Next-token pick; ``reqs`` aligns a Request (or None) with
-        every logits row. Per-request (id, step) RNG streams make
-        sampled preemption replay bit-exact — see serving/sampling.py."""
-        return pick_tokens(self._base_key, logits, reqs, self.sample)
-
-    @staticmethod
-    def _to_py(tok):
-        return int(np.asarray(tok))
-
-    # ------------------------------------------------------------------
-    def step(self) -> List[Request]:
-        """Admit, advance one prefill chunk, run one decode wave.
-        Returns the requests that finished this step."""
-        self._done_this_step: List[Request] = []
-        self._admit()
+    def _advance(self):
+        """One engine tick: advance the in-flight prefill by a chunk,
+        then run one decode wave."""
         self._prefill_step()
         self._decode_wave()
-        return self._done_this_step
-
-    def run(self, requests: List[Request]) -> List[Request]:
-        for r in requests:
-            self.submit(r)
-        done: List[Request] = []
-        guard = 0
-        while len(done) < len(requests):
-            done.extend(self.step())
-            guard += 1
-            assert guard < 100000, "scheduler livelock"
-        return done

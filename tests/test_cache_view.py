@@ -1,0 +1,579 @@
+"""View-contract suite for ``core/cache_view.py``.
+
+The one-CacheView-API redesign (PR 5) is held to a differential
+contract:
+
+  1. **Layout transparency** — ``gqa_decode_attend`` / ``mla_decode_attend``
+     produce bit-identical outputs whether addressed through a raw
+     cache, a :class:`ContiguousView`, or a :class:`PagedView` holding
+     the same rows (GQA + MLA, ragged depths, window on/off, xla and
+     pallas-interpret impls).
+  2. **Chunked prefill transparency** — ``Model.prefill_chunk`` over
+     ``ContiguousView``s equals the same chunks over ``PagedView``s
+     equals the monolithic prefill.
+  3. **Shim fidelity** — the deprecated ``decode_step_paged`` /
+     ``prefill_chunk_paged`` wrappers warn and return exactly what the
+     view API returns.
+  4. **Windowed paged prefill page-skip** — the rebased, grid-cut
+     sliding-window walk of ``flash_prefill_paged`` is bit-exact vs the
+     full-table walk (the contiguous kernel at page blocking).
+  5. **Sequence-parallel sweep (slow)** — ``ShardedView``-over-pages ≡
+     contiguous SP ≡ single-device decode for two_stage (exact) and
+     paged ≡ contiguous for local_split, GQA and MLA, on 8 host
+     devices.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose, assert_array_equal
+
+from repro.configs import get_reduced
+from repro.core import cache_view as cv
+from repro.core import kvcache
+from repro.core.paged_cache import PagedKVPool, PagedMLAPool
+from repro.kernels import ops
+from repro.models import Model
+from repro.models import attention as attn
+
+PAGE = 8
+
+
+def _gqa_cfg(window=None, budget=16):
+    cfg = get_reduced("qwen1.5-0.5b")
+    return dataclasses.replace(
+        cfg, dtype="float32", sliding_window=window,
+        hata=dataclasses.replace(cfg.hata, budget_min=budget,
+                                 budget_max=budget))
+
+
+def _mla_cfg(budget=16):
+    cfg = get_reduced("deepseek-v2-lite-16b")
+    return dataclasses.replace(
+        cfg, dtype="float32",
+        hata=dataclasses.replace(cfg.hata, budget_min=budget,
+                                 budget_max=budget))
+
+
+def _gqa_pair(cfg, b=2, t=6, seed=0):
+    """A contiguous cache and a paged pool holding the same rows
+    (shuffled page assignment, page 0 = scratch), plus ragged depths."""
+    rng = np.random.default_rng(seed)
+    h_kv, d, rbit = cfg.n_kv_heads, cfg.head_dim, cfg.hata.rbit
+    s = t * PAGE
+    cache = kvcache.init_kv_cache(b, s, h_kv, d, rbit=rbit,
+                                  dtype=jnp.float32)
+    cache = dataclasses.replace(
+        cache,
+        k=jnp.asarray(rng.standard_normal(cache.k.shape), jnp.float32),
+        v=jnp.asarray(rng.standard_normal(cache.v.shape), jnp.float32),
+        codes=jnp.asarray(rng.integers(0, 2 ** 32, cache.codes.shape,
+                                       dtype=np.uint32)))
+    n_pages = b * t + 1
+    perm = rng.permutation(n_pages - 1) + 1
+    bt = perm.reshape(b, t).astype(np.int32)
+    k_pool = np.zeros((n_pages, PAGE, h_kv, d), np.float32)
+    v_pool = np.zeros((n_pages, PAGE, h_kv, d), np.float32)
+    c_pool = np.zeros((n_pages, PAGE, h_kv, rbit // 32), np.uint32)
+    for bi in range(b):
+        for ti in range(t):
+            rows = slice(ti * PAGE, (ti + 1) * PAGE)
+            k_pool[bt[bi, ti]] = np.asarray(cache.k[bi, rows])
+            v_pool[bt[bi, ti]] = np.asarray(cache.v[bi, rows])
+            c_pool[bt[bi, ti]] = np.asarray(cache.codes[bi, rows])
+    pool = PagedKVPool(k=jnp.asarray(k_pool), v=jnp.asarray(v_pool),
+                       codes=jnp.asarray(c_pool))
+    pos = jnp.asarray(rng.integers(PAGE, s - 2, b), jnp.int32)
+    return cache, pool, jnp.asarray(bt), pos
+
+
+def _mla_pair(cfg, b=2, t=6, seed=1):
+    rng = np.random.default_rng(seed)
+    m = cfg.mla
+    r, rd, rbit = m.kv_lora_rank, m.qk_rope_dim, cfg.hata.rbit
+    s = t * PAGE
+    cache = kvcache.init_mla_cache(b, s, r, rd, rbit=rbit,
+                                   dtype=jnp.float32)
+    cache = dataclasses.replace(
+        cache,
+        ckv=jnp.asarray(rng.standard_normal(cache.ckv.shape),
+                        jnp.float32),
+        krope=jnp.asarray(rng.standard_normal(cache.krope.shape),
+                          jnp.float32),
+        codes=jnp.asarray(rng.integers(0, 2 ** 32, cache.codes.shape,
+                                       dtype=np.uint32)))
+    n_pages = b * t + 1
+    perm = rng.permutation(n_pages - 1) + 1
+    bt = perm.reshape(b, t).astype(np.int32)
+    c_pool = np.zeros((n_pages, PAGE, r), np.float32)
+    r_pool = np.zeros((n_pages, PAGE, rd), np.float32)
+    h_pool = np.zeros((n_pages, PAGE, rbit // 32), np.uint32)
+    for bi in range(b):
+        for ti in range(t):
+            rows = slice(ti * PAGE, (ti + 1) * PAGE)
+            c_pool[bt[bi, ti]] = np.asarray(cache.ckv[bi, rows])
+            r_pool[bt[bi, ti]] = np.asarray(cache.krope[bi, rows])
+            h_pool[bt[bi, ti]] = np.asarray(cache.codes[bi, rows])
+    pool = PagedMLAPool(ckv=jnp.asarray(c_pool),
+                        krope=jnp.asarray(r_pool),
+                        codes=jnp.asarray(h_pool))
+    pos = jnp.asarray(rng.integers(PAGE, s - 2, b), jnp.int32)
+    return cache, pool, jnp.asarray(bt), pos
+
+
+# ===========================================================================
+# 1. layout transparency at the attend entry points
+# ===========================================================================
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("use_hata", [True, False])
+def test_gqa_decode_attend_views_bit_exact(impl, window, use_hata):
+    cfg = _gqa_cfg(window=window)
+    cache, pool, bt, pos = _gqa_pair(cfg, seed=2)
+    rng = np.random.default_rng(2)
+    p = attn.gqa_init(cfg, jax.random.PRNGKey(0))
+    w_h = attn.gqa_hash_init(cfg, jax.random.PRNGKey(1))
+    q1 = jnp.asarray(rng.standard_normal(
+        (2, cfg.n_heads, cfg.head_dim)), jnp.float32)
+    with ops.use_impl(impl):
+        raw = attn.gqa_decode_attend(cfg, p, w_h, q1, cache, pos,
+                                     use_hata)
+        contig = attn.gqa_decode_attend(
+            cfg, p, w_h, q1, cv.ContiguousView(cache), pos, use_hata)
+        paged_ = attn.gqa_decode_attend(
+            cfg, p, w_h, q1, cv.PagedView(pool, bt), pos, use_hata)
+    assert_array_equal(np.asarray(raw), np.asarray(contig))
+    assert_array_equal(np.asarray(contig), np.asarray(paged_))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("use_hata", [True, False])
+def test_mla_decode_attend_views_bit_exact(impl, use_hata):
+    cfg = _mla_cfg()
+    cache, pool, bt, pos = _mla_pair(cfg, seed=3)
+    rng = np.random.default_rng(3)
+    m = cfg.mla
+    p = attn.mla_init(cfg, jax.random.PRNGKey(0))
+    w_h = attn.mla_hash_init(cfg, jax.random.PRNGKey(1))
+    q_lat = jnp.asarray(rng.standard_normal(
+        (2, cfg.n_heads, m.kv_lora_rank + m.qk_rope_dim)), jnp.float32)
+    with ops.use_impl(impl):
+        raw = attn.mla_decode_attend(cfg, p, w_h, q_lat, cache, pos,
+                                     use_hata, jnp.float32)
+        contig = attn.mla_decode_attend(
+            cfg, p, w_h, q_lat, cv.ContiguousMLAView(cache), pos,
+            use_hata, jnp.float32)
+        paged_ = attn.mla_decode_attend(
+            cfg, p, w_h, q_lat, cv.PagedMLAView(pool, bt), pos,
+            use_hata, jnp.float32)
+    assert_array_equal(np.asarray(raw), np.asarray(contig))
+    assert_array_equal(np.asarray(contig), np.asarray(paged_))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_gqa_decode_append_and_traced_flag(impl):
+    """Full decode step (append + attend) through both view layouts,
+    with the *traced* use_hata flag (the scanned-stack form)."""
+    cfg = _gqa_cfg()
+    cache, pool, bt, pos = _gqa_pair(cfg, seed=4)
+    rng = np.random.default_rng(4)
+    p = attn.gqa_init(cfg, jax.random.PRNGKey(0))
+    w_h = attn.gqa_hash_init(cfg, jax.random.PRNGKey(1))
+    x = jnp.asarray(rng.standard_normal((2, 1, cfg.d_model)),
+                    jnp.float32)
+    flag = jnp.asarray(True)
+    with ops.use_impl(impl):
+        y_c, view_c = attn.gqa_decode(cfg, p, w_h, x,
+                                      cv.ContiguousView(cache), pos,
+                                      flag)
+        y_p, view_p = attn.gqa_decode(cfg, p, w_h, x,
+                                      cv.PagedView(pool, bt), pos,
+                                      flag)
+        # raw-cache input returns a raw cache (container fidelity)
+        y_r, cache_r = attn.gqa_decode(cfg, p, w_h, x, cache, pos, flag)
+    assert isinstance(view_c, cv.ContiguousView)
+    assert isinstance(view_p, cv.PagedView)
+    assert isinstance(cache_r, kvcache.LayerKVCache)
+    assert_array_equal(np.asarray(y_c), np.asarray(y_p))
+    assert_array_equal(np.asarray(y_c), np.asarray(y_r))
+    # the appended rows agree across layouts
+    from repro.core import paged_cache
+    phys = paged_cache.physical_rows(bt, pos, PAGE)
+    got = paged_cache._flat(view_p.pool.k)[phys]
+    want = jax.vmap(lambda kk, pp: kk[pp])(view_c.cache.k, pos)
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_gather_stats_paged_bit_exact(impl):
+    """The SP stats corner, fast: view.gather_stats over a page pool is
+    bit-identical to the contiguous stats over the same rows, under an
+    arbitrary (ownership-style) mask including an all-masked row —
+    tier-1 coverage for flash_decode_gathered_stats_paged /
+    gather_decode_stats_pool_ref (the slow sweep only runs weekly)."""
+    cfg = _gqa_cfg()
+    cache, pool, bt, pos = _gqa_pair(cfg, seed=11)
+    rng = np.random.default_rng(11)
+    b, h_kv, d = 2, cfg.n_kv_heads, cfg.head_dim
+    n_sel = 8                      # <= min valid rows (pos floor PAGE)
+    nv = np.asarray(pos) + 1
+    idx = np.stack([np.stack([
+        rng.choice(nv[bi], size=n_sel, replace=False)
+        for _ in range(h_kv)]) for bi in range(b)]).astype(np.int32)
+    mask = rng.integers(0, 2, (b, h_kv, n_sel)).astype(bool)
+    mask[0, 0] = False                                # all-masked row
+    q = jnp.asarray(rng.standard_normal((b, cfg.n_heads, d)),
+                    jnp.float32)
+    with ops.use_impl(impl):
+        got = cv.PagedView(pool, bt).gather_stats(
+            q, jnp.asarray(idx), jnp.asarray(mask))
+        want = cv.ContiguousView(cache).gather_stats(
+            q, jnp.asarray(idx), jnp.asarray(mask))
+    for g_, w_ in zip(got, want):
+        assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mla_gather_latent_stats_paged_bit_exact(impl):
+    cfg = _mla_cfg()
+    cache, pool, bt, pos = _mla_pair(cfg, seed=12)
+    rng = np.random.default_rng(12)
+    m = cfg.mla
+    b, n_sel = 2, 8                # <= min valid rows (pos floor PAGE)
+    nv = np.asarray(pos) + 1
+    idx = np.stack([rng.choice(nv[bi], size=n_sel, replace=False)
+                    for bi in range(b)]).astype(np.int32)
+    mask = rng.integers(0, 2, (b, n_sel)).astype(bool)
+    mask[0] = False                                   # all-masked row
+    q_lat = jnp.asarray(rng.standard_normal(
+        (b, cfg.n_heads, m.kv_lora_rank + m.qk_rope_dim)), jnp.float32)
+    kw = dict(lora_rank=m.kv_lora_rank,
+              scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
+              sel_mask=jnp.asarray(mask), return_stats=True)
+    with ops.use_impl(impl):
+        got = cv.PagedMLAView(pool, bt).gather_latent(
+            q_lat, jnp.asarray(idx), **kw)
+        want = cv.ContiguousMLAView(cache).gather_latent(
+            q_lat, jnp.asarray(idx), **kw)
+    for g_, w_ in zip(got, want):
+        assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+def test_views_are_jit_transparent_pytrees():
+    cfg = _gqa_cfg()
+    cache, pool, bt, _ = _gqa_pair(cfg, seed=5)
+    for view in (cv.ContiguousView(cache), cv.PagedView(pool, bt)):
+        leaves, treedef = jax.tree_util.tree_flatten(view)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert type(back) is type(view)
+        out = jax.jit(lambda v: v.capacity
+                      + jnp.int32(0) * leaves[0].ravel()[0].astype(
+                          jnp.int32))(view)
+        assert int(out) == view.capacity
+    # coercion round trip
+    assert isinstance(cv.as_gqa_view(cache), cv.ContiguousView)
+    assert cv.unwrap(cv.as_gqa_view(cache)) is cache
+    assert isinstance(cv.paged_view(pool, bt), cv.PagedView)
+
+
+# ===========================================================================
+# 2 + 3. model level: prefill_chunk over views; shim fidelity
+# ===========================================================================
+@pytest.fixture(scope="module")
+def qwen_model():
+    cfg = _gqa_cfg(budget=16)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_prefill_chunk_contiguous_equals_paged_equals_monolithic(
+        qwen_model):
+    cfg, model, params = qwen_model
+    rng = np.random.default_rng(6)
+    t, chunk = 6, 8
+    prompt = rng.integers(0, cfg.vocab_size, 21).astype(np.int32)
+    # monolithic
+    caches = model.init_caches(1, t * PAGE, layout="list")
+    want, _ = model.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                            caches, jnp.int32(0))
+
+    def run_chunks(views):
+        logits = None
+        for ctx in range(0, len(prompt), chunk):
+            end = min(ctx + chunk, len(prompt))
+            toks = np.zeros(chunk, np.int32)
+            toks[:end - ctx] = prompt[ctx:end]
+            logits, views = model.prefill_chunk(
+                params, jnp.asarray(toks[None]), views, jnp.int32(ctx),
+                jnp.int32(end - ctx - 1))
+        return logits, views
+
+    pools = model.init_paged_pools(t + 1, PAGE)
+    bt = jnp.asarray(np.arange(1, t + 1, dtype=np.int32)[None])
+    got_paged, _ = run_chunks([cv.paged_view(p_, bt) for p_ in pools])
+    dense = model.init_caches(1, t * PAGE, layout="list")
+    got_contig, _ = run_chunks(
+        [cv.ContiguousView(c) for c in dense["stack"]])
+    # both view layouts see identical rows and (on the xla impl)
+    # identical chunking: bit-exact against each other...
+    assert_array_equal(np.asarray(got_paged), np.asarray(got_contig))
+    # ...and equal to the one-shot prefill up to blocking tolerance
+    assert_allclose(np.asarray(got_paged), np.asarray(want), atol=1e-5,
+                    rtol=1e-5)
+
+
+def test_paged_shims_warn_and_match_view_api(qwen_model):
+    cfg, model, params = qwen_model
+    rng = np.random.default_rng(7)
+    t = 6
+    prompt = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+    bt = jnp.asarray(np.arange(1, t + 1, dtype=np.int32)[None])
+
+    def chunked(step_fn):
+        pools = model.init_paged_pools(t + 1, PAGE)
+        logits, pools = step_fn(pools)
+        return logits, pools
+
+    toks = np.zeros(16, np.int32)
+    toks[:len(prompt)] = prompt
+    args = (jnp.asarray(toks[None]), jnp.int32(0),
+            jnp.int32(len(prompt) - 1))
+    with pytest.warns(DeprecationWarning, match="prefill_chunk_paged"):
+        got_shim, pools_shim = chunked(
+            lambda pools: model.prefill_chunk_paged(
+                params, args[0], pools, bt, args[1], args[2]))
+    views = [cv.paged_view(p_, bt)
+             for p_ in model.init_paged_pools(t + 1, PAGE)]
+    got_view, views = model.prefill_chunk(params, args[0], views,
+                                          args[1], args[2])
+    assert_array_equal(np.asarray(got_shim), np.asarray(got_view))
+
+    lt = jnp.asarray([int(jnp.argmax(got_view[0]))], jnp.int32)
+    pos = jnp.asarray([len(prompt)], jnp.int32)
+    with pytest.warns(DeprecationWarning, match="decode_step_paged"):
+        lg_shim, _ = model.decode_step_paged(params, lt, pools_shim, bt,
+                                             pos)
+    lg_view, _ = model.decode_step(params, lt, views, pos)
+    assert_array_equal(np.asarray(lg_shim), np.asarray(lg_view))
+
+
+def test_engine_truncation_fields_identical(qwen_model):
+    """EngineBase retirement: both engines stamp the same terminal
+    fields (truncated, t_done, stats) for an impossible prompt."""
+    from repro.serving import PagedServingEngine, Request, ServingEngine
+    cfg, model, params = qwen_model
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+    dense = ServingEngine(model, params, max_batch=1, max_len=16)
+    paged = PagedServingEngine(model, params, num_pages=16, page_size=8,
+                               max_batch=1, max_len_pages=3)
+    for eng in (dense, paged):
+        [r] = eng.run([Request(prompt=prompt.copy(), max_new_tokens=4)])
+        assert r.truncated and r.output == [] and r.t_done is not None
+        assert eng.stats["truncated"] == 1
+
+
+# ===========================================================================
+# 4. windowed paged prefill page-skip
+# ===========================================================================
+@pytest.mark.parametrize("offs", [(0, 0), (17, 30), (37, 21), (40, 40)])
+def test_windowed_paged_prefill_page_skip_bit_exact(offs):
+    """With a window, flash_prefill_paged walks only the pages that can
+    intersect the window band (grid cut + traced rebase) — bit-exact vs
+    the unskipped full-width walk (the contiguous kernel at page
+    blocking over the same logical rows)."""
+    import importlib
+    fa = importlib.import_module("repro.kernels.flash_attention")
+    rng = np.random.default_rng(9)
+    b, h, h_kv, d, t = 2, 4, 2, 16, 6
+    sq, window = 8, 12
+    s = t * PAGE
+    # the skip must actually engage: fewer live pages than the table
+    assert (sq + window - 2) // PAGE + 2 < t
+    k = rng.standard_normal((b, s, h_kv, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, h_kv, d)).astype(np.float32)
+    n_pages = b * t + 1
+    perm = rng.permutation(n_pages - 1) + 1
+    bt = perm.reshape(b, t).astype(np.int32)
+    k_pool = np.zeros((n_pages, PAGE, h_kv, d), np.float32)
+    v_pool = np.zeros((n_pages, PAGE, h_kv, d), np.float32)
+    for bi in range(b):
+        for ti in range(t):
+            rows = slice(ti * PAGE, (ti + 1) * PAGE)
+            k_pool[bt[bi, ti]] = k[bi, rows]
+            v_pool[bt[bi, ti]] = v[bi, rows]
+    q = rng.standard_normal((b, sq, h, d)).astype(np.float32)
+    off = jnp.asarray(offs, jnp.int32)
+    out_paged = fa.flash_prefill_paged(
+        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(bt), off, window=window, interpret=True)
+    out_full = fa.flash_prefill_batched(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), off,
+        causal=True, window=window, block_k=PAGE, interpret=True)
+    assert_array_equal(np.asarray(out_paged), np.asarray(out_full))
+
+
+def test_windowed_paged_prefill_model_level(qwen_model):
+    """Model-level: chunked prefill with a sliding window over pages
+    equals the windowed monolithic prefill."""
+    cfg, model, params = qwen_model
+    cfg_w = dataclasses.replace(cfg, sliding_window=16)
+    model_w = Model(cfg_w)
+    rng = np.random.default_rng(10)
+    t, chunk = 6, 8
+    prompt = rng.integers(0, cfg.vocab_size, 29).astype(np.int32)
+    caches = model_w.init_caches(1, t * PAGE, layout="list")
+    want, _ = model_w.prefill(params,
+                              {"tokens": jnp.asarray(prompt[None])},
+                              caches, jnp.int32(0))
+    pools = model_w.init_paged_pools(t + 1, PAGE)
+    bt = jnp.asarray(np.arange(1, t + 1, dtype=np.int32)[None])
+    views = [cv.paged_view(p_, bt) for p_ in pools]
+    logits = None
+    for ctx in range(0, len(prompt), chunk):
+        end = min(ctx + chunk, len(prompt))
+        toks = np.zeros(chunk, np.int32)
+        toks[:end - ctx] = prompt[ctx:end]
+        logits, views = model_w.prefill_chunk(
+            params, jnp.asarray(toks[None]), views, jnp.int32(ctx),
+            jnp.int32(end - ctx - 1))
+    assert_allclose(np.asarray(logits), np.asarray(want), atol=1e-5,
+                    rtol=1e-5)
+
+
+# ===========================================================================
+# 5. slow: ShardedView-over-pages ≡ contiguous SP ≡ single-device
+# ===========================================================================
+SP_VIEW_CODE = """
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_reduced
+from repro.core import cache_view as cv
+from repro.core import hash_attention as ha
+from repro.core.kvcache import LayerKVCache, MLACache
+from repro.core.paged_cache import PagedKVPool, PagedMLAPool
+from repro.distributed.decode import SPDecode
+from repro.launch.mesh import make_mesh
+
+n_sh, b, page, t_loc = 8, 2, 8, 4
+s_loc = page * t_loc
+s = n_sh * s_loc
+mesh = make_mesh((8,), ("model",))
+rng = np.random.default_rng(0)
+
+# ---- GQA --------------------------------------------------------------
+cfg = get_reduced("llama3-405b", d_model=64)
+cfg = dataclasses.replace(cfg, dtype="float32", hata=dataclasses.replace(
+    cfg.hata, budget_min=48, budget_max=48))
+h, h_kv, d, rbit = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.hata.rbit
+k = rng.standard_normal((b, s, h_kv, d)).astype(np.float32)
+v = rng.standard_normal((b, s, h_kv, d)).astype(np.float32)
+codes = rng.integers(0, 2**32, (b, s, h_kv, rbit // 32), dtype=np.uint32)
+q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+w = jnp.asarray(rng.standard_normal((h_kv, d, rbit)), jnp.float32)
+n_valid = jnp.int32(s - 5)
+seq = NamedSharding(mesh, P(None, "model", None, None))
+cache = LayerKVCache(k=jax.device_put(jnp.asarray(k), seq),
+                     v=jax.device_put(jnp.asarray(v), seq),
+                     codes=jax.device_put(jnp.asarray(codes), seq))
+# paged twin: per-shard local pools + local block tables (local page ids)
+p_loc = b * t_loc
+k_pool = np.zeros((n_sh * p_loc, page, h_kv, d), np.float32)
+v_pool = np.zeros_like(k_pool)
+c_pool = np.zeros((n_sh * p_loc, page, h_kv, rbit // 32), np.uint32)
+bt = np.zeros((b, n_sh * t_loc), np.int32)
+for i in range(n_sh):
+    perm = rng.permutation(p_loc)
+    for bi in range(b):
+        for j in range(t_loc):
+            lp = perm[bi * t_loc + j]
+            rows = slice(i * s_loc + j * page, i * s_loc + (j + 1) * page)
+            k_pool[i * p_loc + lp] = k[bi, rows]
+            v_pool[i * p_loc + lp] = v[bi, rows]
+            c_pool[i * p_loc + lp] = codes[bi, rows]
+            bt[bi, i * t_loc + j] = lp
+ps = NamedSharding(mesh, P("model", None, None, None))
+bs = NamedSharding(mesh, P(None, "model"))
+pview = cv.PagedView(
+    PagedKVPool(k=jax.device_put(jnp.asarray(k_pool), ps),
+                v=jax.device_put(jnp.asarray(v_pool), ps),
+                codes=jax.device_put(jnp.asarray(c_pool), ps)),
+    jax.device_put(jnp.asarray(bt), bs))
+
+def single(qq):
+    budget = ha.clamped_budget(cfg.hata, s, None)
+    top, idx, _ = ha.hata_score_select(
+        qq, w, jnp.asarray(codes), rbit=rbit, budget=budget,
+        n_valid=n_valid)
+    return ha.hata_attend(
+        qq, LayerKVCache(k=jnp.asarray(k), v=jnp.asarray(v),
+                         codes=jnp.asarray(codes)), idx, top >= 0)
+ref = np.asarray(jax.jit(single)(q))
+for mode in ("two_stage", "local_split"):
+    strat = SPDecode(mesh, seq_axes=("model",), mode=mode)
+    out_c = np.asarray(jax.jit(lambda qq: strat.gqa(
+        cfg, qq, w, cv.ContiguousView(cache), n_valid, True))(q))
+    out_p = np.asarray(jax.jit(lambda qq: strat.gqa(
+        cfg, qq, w, pview, n_valid, True))(q))
+    assert np.array_equal(out_p, out_c), ("gqa", mode)
+    if mode == "two_stage":
+        assert float(np.abs(out_c - ref).max()) < 1e-4, "gqa two_stage"
+
+# ---- MLA --------------------------------------------------------------
+cfg = get_reduced("deepseek-v2-lite-16b", d_model=64)
+cfg = dataclasses.replace(cfg, dtype="float32", hata=dataclasses.replace(
+    cfg.hata, budget_min=48, budget_max=48))
+m = cfg.mla
+h, rbit = cfg.n_heads, cfg.hata.rbit
+r, rd = m.kv_lora_rank, m.qk_rope_dim
+ckv = rng.standard_normal((b, s, r)).astype(np.float32)
+krope = rng.standard_normal((b, s, rd)).astype(np.float32)
+codes = rng.integers(0, 2**32, (b, s, rbit // 32), dtype=np.uint32)
+q_lat = jnp.asarray(rng.standard_normal((b, h, r + rd)), jnp.float32)
+w = jnp.asarray(rng.standard_normal((1, r + rd, rbit)), jnp.float32)
+p = {"wuv": jnp.asarray(
+    rng.standard_normal((r, h * m.v_head_dim)), jnp.float32)}
+seq3 = NamedSharding(mesh, P(None, "model", None))
+cache = MLACache(ckv=jax.device_put(jnp.asarray(ckv), seq3),
+                 krope=jax.device_put(jnp.asarray(krope), seq3),
+                 codes=jax.device_put(jnp.asarray(codes), seq3))
+c_pool = np.zeros((n_sh * p_loc, page, r), np.float32)
+r_pool = np.zeros((n_sh * p_loc, page, rd), np.float32)
+h_pool = np.zeros((n_sh * p_loc, page, rbit // 32), np.uint32)
+bt = np.zeros((b, n_sh * t_loc), np.int32)
+for i in range(n_sh):
+    perm = rng.permutation(p_loc)
+    for bi in range(b):
+        for j in range(t_loc):
+            lp = perm[bi * t_loc + j]
+            rows = slice(i * s_loc + j * page, i * s_loc + (j + 1) * page)
+            c_pool[i * p_loc + lp] = ckv[bi, rows]
+            r_pool[i * p_loc + lp] = krope[bi, rows]
+            h_pool[i * p_loc + lp] = codes[bi, rows]
+            bt[bi, i * t_loc + j] = lp
+ps3 = NamedSharding(mesh, P("model", None, None))
+pview = cv.PagedMLAView(
+    PagedMLAPool(ckv=jax.device_put(jnp.asarray(c_pool), ps3),
+                 krope=jax.device_put(jnp.asarray(r_pool), ps3),
+                 codes=jax.device_put(jnp.asarray(h_pool), ps3)),
+    jax.device_put(jnp.asarray(bt), bs))
+for mode in ("two_stage", "local_split"):
+    strat = SPDecode(mesh, seq_axes=("model",), mode=mode)
+    out_c = np.asarray(jax.jit(lambda qq: strat.mla(
+        cfg, p, w, qq, cv.ContiguousMLAView(cache), n_valid, True))(q_lat))
+    out_p = np.asarray(jax.jit(lambda qq: strat.mla(
+        cfg, p, w, qq, pview, n_valid, True))(q_lat))
+    assert np.array_equal(out_p, out_c), ("mla", mode)
+print("SPVIEW-OK")
+"""
+
+
+@pytest.mark.slow
+def test_sp_paged_view_matches_contiguous_and_single():
+    from conftest import run_subprocess
+    out = run_subprocess(SP_VIEW_CODE, n_devices=8, timeout=900)
+    assert "SPVIEW-OK" in out

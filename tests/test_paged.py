@@ -28,6 +28,7 @@ from numpy.testing import assert_allclose, assert_array_equal
 
 from repro.configs import get_reduced
 from repro.configs.base import HataConfig
+from repro.core import cache_view
 from repro.core import hash_attention as ha
 from repro.core import kvcache, paged_cache
 from repro.core.paged_cache import (PageAllocator, PagedKVPool,
@@ -444,17 +445,18 @@ def test_chunked_prefill_matches_monolithic(qwen):
     caches = model.init_caches(1, 64, layout="list")
     want, _ = model.prefill(params, {"tokens": jnp.asarray(prompt[None])},
                             caches, jnp.int32(0))
-    # chunked (paged)
+    # chunked (paged, through the view API)
     chunk, page, t = 8, 8, 6
-    pools = model.init_paged_pools(t + 1, page)
     bt = jnp.asarray(np.arange(1, t + 1, dtype=np.int32)[None])
+    views = [cache_view.paged_view(p_, bt)
+             for p_ in model.init_paged_pools(t + 1, page)]
     got = None
     for ctx in range(0, len(prompt), chunk):
         end = min(ctx + chunk, len(prompt))
         toks = np.zeros(chunk, np.int32)
         toks[:end - ctx] = prompt[ctx:end]
-        got, pools = model.prefill_chunk_paged(
-            params, jnp.asarray(toks[None]), pools, bt,
+        got, views = model.prefill_chunk(
+            params, jnp.asarray(toks[None]), views,
             jnp.int32(ctx), jnp.int32(end - ctx - 1))
     assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
                     rtol=1e-5)
@@ -472,14 +474,15 @@ def test_prefix_sharing_identical_logits(qwen):
 
     def run_chunks(pools, bt, start):
         logits = None
+        views = [cache_view.paged_view(p_, bt) for p_ in pools]
         for ctx in range(start, len(prompt), chunk):
             end = min(ctx + chunk, len(prompt))
             toks = np.zeros(chunk, np.int32)
             toks[:end - ctx] = prompt[ctx:end]
-            logits, pools = model.prefill_chunk_paged(
-                params, jnp.asarray(toks[None]), pools, bt,
+            logits, views = model.prefill_chunk(
+                params, jnp.asarray(toks[None]), views,
                 jnp.int32(ctx), jnp.int32(end - ctx - 1))
-        return logits, pools
+        return logits, [v.unwrap() for v in views]
 
     pools = model.init_paged_pools(2 * t + 1, page)
     bt_cold = jnp.asarray(np.arange(1, t + 1, dtype=np.int32)[None])

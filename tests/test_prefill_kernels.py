@@ -247,15 +247,17 @@ def test_chunk_attention_paged_ops_parity(impl):
 # 4. model parity + one compiled chunk shape
 # ===========================================================================
 def _run_chunks(model, params, prompt, pools, bt, chunk):
+    from repro.core import cache_view
     logits = None
+    views = [cache_view.paged_view(p_, bt) for p_ in pools]
     for ctx in range(0, len(prompt), chunk):
         end = min(ctx + chunk, len(prompt))
         toks = np.zeros(chunk, np.int32)
         toks[:end - ctx] = prompt[ctx:end]
-        logits, pools = model.prefill_chunk_paged(
-            params, jnp.asarray(toks[None]), pools, bt,
+        logits, views = model.prefill_chunk(
+            params, jnp.asarray(toks[None]), views,
             jnp.int32(ctx), jnp.int32(end - ctx - 1))
-    return logits, pools
+    return logits, [v.unwrap() for v in views]
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
