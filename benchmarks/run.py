@@ -8,6 +8,7 @@
   hashbits_ablation  Fig. 8
   opt_ablation       Fig. 9
   offload_model      Table 3
+  offload_efficiency beyond-paper: tiered OffloadedView residency curve
   distributed_topk   beyond-paper SP selection quality
   roofline           §Roofline (reads experiments/dryrun/*.json)
 """
@@ -21,9 +22,9 @@ import traceback
 def main() -> None:
     from benchmarks import (budget_ablation, decode_efficiency,
                             distributed_topk, hashbits_ablation,
-                            offload_model, opt_ablation,
-                            prefill_efficiency, recall_accuracy,
-                            roofline)
+                            offload_efficiency, offload_model,
+                            opt_ablation, prefill_efficiency,
+                            recall_accuracy, roofline)
     suites = [
         ("recall_accuracy", recall_accuracy.main),
         ("decode_efficiency", decode_efficiency.main),
@@ -32,6 +33,7 @@ def main() -> None:
         ("hashbits_ablation", hashbits_ablation.main),
         ("opt_ablation", opt_ablation.main),
         ("offload_model", offload_model.main),
+        ("offload_efficiency", offload_efficiency.main),
         ("distributed_topk", distributed_topk.main),
         ("roofline", roofline.main),
     ]

@@ -34,6 +34,16 @@ class HataConfig:
     pos_label_max: float = 20.0     # linearly decayed labels in [1, 20]
     neg_label: float = -1.0
 
+    def __post_init__(self):
+        # codes are bit-packed into uint32 words (rbit // 32 per code);
+        # a non-multiple would silently drop the trailing hash bits at
+        # every encode — fail loudly at construction instead
+        if self.rbit <= 0 or self.rbit % 32:
+            raise ValueError(
+                f"HataConfig.rbit={self.rbit} must be a positive "
+                "multiple of 32 (codes are bit-packed into uint32 "
+                f"words; {self.rbit % 32} bits would be dropped)")
+
     def budget(self, context_len: int) -> int:
         k = int(context_len * self.budget_frac)
         k = max(self.budget_min, min(k, self.budget_max))

@@ -49,8 +49,10 @@ from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.tree_util import register_dataclass
 
+from repro.core import offload
 from repro.core import paged_cache as paged
 from repro.core.kvcache import (LayerKVCache, MLACache, append_kv,
                                 append_mla)
@@ -332,6 +334,260 @@ class PagedMLAView:
 
 
 # ===========================================================================
+# Offloaded views (device codes + host rows) — the tiered layer
+# ===========================================================================
+def _concrete(x, what: str) -> np.ndarray:
+    """Offloaded waves cross the host boundary, so they run *eagerly*:
+    the selected indices must be concrete before the host gather. A
+    tracer here means someone jitted the offloaded path — fail with
+    direction instead of silently baking host state into the trace."""
+    if isinstance(x, jax.core.Tracer):
+        raise TypeError(
+            f"OffloadedView needs a concrete {what} — the top-k winners "
+            "are resolved to HOST pages outside the XLA program. Drive "
+            "offloaded decode eagerly (PagedServingEngine(offload=True) "
+            "skips jit); only the resident layers belong under jit.")
+    return np.asarray(x)
+
+
+@dataclasses.dataclass
+class OffloadedView:
+    """Tiered GQA/MHA pool: hash codes HBM-resident, K/V rows on host.
+
+    Same verbs, same *logical* selection math as :class:`PagedView` —
+    ``hamming_scores`` runs the identical paged score kernel over the
+    device codes pool, so view and all-resident pool pick bit-identical
+    rows. Only the gather boundary differs: the winners are translated
+    to host pages (``offload.physical_rows_np``), gathered compactly on
+    the host per kv head, DMA'd up through the engine's
+    :class:`~repro.core.offload.PrefetchPipeline` (A/B slots — wave
+    t+1's upload overlaps wave t's attention), and attended with the
+    same fused contiguous kernel via the identity index map
+    (``ops.gather_decode_attention_staged``).
+
+    NOT a pytree: the host half is numpy and the pipeline is a mutable
+    ledger. The view never crosses a jit boundary — see
+    :func:`_concrete`.
+    """
+    pool: offload.OffloadedKVPool
+    block_table: jax.Array
+    stream: str = "kv"                # staging-slot namespace
+
+    @property
+    def capacity(self) -> int:
+        return self.block_table.shape[1] * self.pool.page_size
+
+    @property
+    def has_codes(self) -> bool:
+        return self.pool.codes is not None
+
+    def _phys(self, logical: jax.Array) -> jax.Array:
+        return paged.physical_rows(self.block_table, logical,
+                                   self.pool.page_size)
+
+    def _bt_np(self) -> np.ndarray:
+        return np.asarray(self.block_table)
+
+    def _spill(self, k_rows: np.ndarray, v_rows: np.ndarray,
+               phys: np.ndarray) -> None:
+        """Fresh rows stream down to the host tier (metered)."""
+        self.pool.host.scatter_rows(k_rows, v_rows, phys)
+        n = k_rows.nbytes + v_rows.nbytes
+        ops.account_pcie(n, "down")
+        self.pool.pipeline.account_down(n)
+
+    def append(self, k: jax.Array, v: jax.Array,
+               codes: Optional[jax.Array], pos) -> "OffloadedView":
+        b = k.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        phys = self._phys(pos)
+        pool = dataclasses.replace(
+            self.pool,
+            codes=paged._scatter_rows(self.pool.codes, codes[:, 0],
+                                      phys))
+        self._spill(_concrete(k, "append")[:, 0],
+                    np.asarray(v)[:, 0], np.asarray(phys))
+        return OffloadedView(pool, self.block_table, self.stream)
+
+    def append_chunk(self, k: jax.Array, v: jax.Array,
+                     codes: Optional[jax.Array], ctx) -> "OffloadedView":
+        phys = paged._chunk_phys(self.block_table, ctx, k.shape[1],
+                                 self.pool.page_size,
+                                 self.pool.num_pages)
+        pool = dataclasses.replace(
+            self.pool,
+            codes=paged._scatter_rows(self.pool.codes, codes[0], phys))
+        # host scatter_rows drops the one-past-the-pool ids, matching
+        # the device scatter's OOB-drop convention for padded tails
+        self._spill(_concrete(k, "append_chunk")[0],
+                    np.asarray(v)[0], np.asarray(phys))
+        return OffloadedView(pool, self.block_table, self.stream)
+
+    def hamming_scores(self, q_codes: jax.Array, n_valid, *, rbit: int,
+                       window: Optional[int] = None,
+                       positions: Optional[jax.Array] = None) -> jax.Array:
+        scores = ops.hamming_scores_paged(q_codes, self.pool.codes,
+                                          self.block_table, n_valid,
+                                          rbit=rbit)
+        if window is None and positions is None:
+            return scores
+        return _mask_rows(scores, n_valid, window, positions)
+
+    def _stage_rows(self, idx: jax.Array):
+        """idx (B, H_kv, k) logical winners -> staged device rows
+        (B, k, H_kv, d): host page translate, per-head compact gather,
+        double-buffered PCIe upload."""
+        idx_np = _concrete(idx, "selection idx")
+        ops.account_pcie(idx_np.nbytes, "down")
+        self.pool.pipeline.account_down(idx_np.nbytes)
+        phys = offload.physical_rows_np(self._bt_np(), idx_np,
+                                        self.pool.page_size)
+        kg, vg = self.pool.host.gather_heads(phys)   # (B, H_kv, k, d)
+        return self.pool.pipeline.stage(
+            self.stream,
+            np.ascontiguousarray(np.moveaxis(kg, 1, 2)),
+            np.ascontiguousarray(np.moveaxis(vg, 1, 2)))
+
+    def gather_decode(self, q: jax.Array, idx: jax.Array,
+                      sel_valid: jax.Array) -> jax.Array:
+        k_st, v_st = self._stage_rows(idx)
+        return ops.gather_decode_attention_staged(q, k_st, v_st,
+                                                  sel_valid=sel_valid)
+
+    def gather_stats(self, q: jax.Array, idx: jax.Array,
+                     sel_mask: Optional[jax.Array]):
+        k_st, v_st = self._stage_rows(idx)
+        return ops.gather_decode_stats_staged(q, k_st, v_st, sel_mask)
+
+    def _upload_logical(self):
+        """Whole-context host read (dense fallback / prefill): honest —
+        every logical row crosses PCIe, which is exactly why offloaded
+        layers should be HATA layers (codes score on-device; only the
+        budget crosses)."""
+        k_log, v_log = self.pool.host.logical(self._bt_np())
+        self.pool.pipeline.account_up(k_log.nbytes + v_log.nbytes)
+        return (ops.device_put_accounted(k_log),
+                ops.device_put_accounted(v_log))
+
+    def kv_logical(self) -> Tuple[jax.Array, jax.Array]:
+        return self._upload_logical()
+
+    def prefill_attend(self, q: jax.Array, ctx, *,
+                       window: Optional[int] = None) -> jax.Array:
+        k_dev, v_dev = self._upload_logical()
+        return ops.chunk_attention(q, k_dev, v_dev, q_offset=ctx,
+                                   window=window)
+
+    def unwrap(self):
+        return self.pool
+
+
+@dataclasses.dataclass
+class OffloadedMLAView:
+    """MLA twin: latent codes (P, page, W) on device, (ckv, krope)
+    rows on host; fused split-latent attend over staged rows."""
+    pool: offload.OffloadedMLAPool
+    block_table: jax.Array
+    stream: str = "mla"
+
+    @property
+    def capacity(self) -> int:
+        return self.block_table.shape[1] * self.pool.page_size
+
+    @property
+    def has_codes(self) -> bool:
+        return self.pool.codes is not None
+
+    def _phys(self, logical: jax.Array) -> jax.Array:
+        return paged.physical_rows(self.block_table, logical,
+                                   self.pool.page_size)
+
+    def _bt_np(self) -> np.ndarray:
+        return np.asarray(self.block_table)
+
+    def _spill(self, ckv_rows: np.ndarray, krope_rows: np.ndarray,
+               phys: np.ndarray) -> None:
+        self.pool.host.scatter_rows(ckv_rows, krope_rows, phys)
+        n = ckv_rows.nbytes + krope_rows.nbytes
+        ops.account_pcie(n, "down")
+        self.pool.pipeline.account_down(n)
+
+    def append(self, ckv: jax.Array, krope: jax.Array,
+               codes: Optional[jax.Array], pos) -> "OffloadedMLAView":
+        b = ckv.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        phys = self._phys(pos)
+        pool = dataclasses.replace(
+            self.pool,
+            codes=paged._scatter_rows(self.pool.codes, codes[:, 0],
+                                      phys))
+        self._spill(_concrete(ckv, "append")[:, 0],
+                    np.asarray(krope)[:, 0], np.asarray(phys))
+        return OffloadedMLAView(pool, self.block_table, self.stream)
+
+    def append_chunk(self, ckv: jax.Array, krope: jax.Array,
+                     codes: Optional[jax.Array], ctx
+                     ) -> "OffloadedMLAView":
+        phys = paged._chunk_phys(self.block_table, ctx, ckv.shape[1],
+                                 self.pool.page_size,
+                                 self.pool.num_pages)
+        pool = dataclasses.replace(
+            self.pool,
+            codes=paged._scatter_rows(self.pool.codes, codes[0], phys))
+        self._spill(_concrete(ckv, "append_chunk")[0],
+                    np.asarray(krope)[0], np.asarray(phys))
+        return OffloadedMLAView(pool, self.block_table, self.stream)
+
+    def hamming_scores(self, q_codes: jax.Array, n_valid, *, rbit: int,
+                       window: Optional[int] = None,
+                       positions: Optional[jax.Array] = None) -> jax.Array:
+        scores = ops.hamming_scores_latent_paged(
+            q_codes, self.pool.codes, self.block_table, n_valid,
+            rbit=rbit)
+        if window is None and positions is None:
+            return scores
+        return _mask_rows(scores[:, None], n_valid, window,
+                          positions)[:, 0]
+
+    def gather_latent(self, q_lat: jax.Array, idx: jax.Array, *,
+                      lora_rank: int, scale: float,
+                      n_valid: Optional[jax.Array] = None,
+                      sel_mask: Optional[jax.Array] = None,
+                      return_stats: bool = False):
+        idx_np = _concrete(idx, "selection idx")
+        ops.account_pcie(idx_np.nbytes, "down")
+        self.pool.pipeline.account_down(idx_np.nbytes)
+        phys = offload.physical_rows_np(self._bt_np(), idx_np,
+                                        self.pool.page_size)
+        cg, rg = self.pool.host.gather_rows(phys)  # (B,k,r), (B,k,rd)
+        ckv_st, krope_st = self.pool.pipeline.stage(
+            self.stream, np.ascontiguousarray(cg),
+            np.ascontiguousarray(rg))
+        return ops.mla_gather_decode_staged(
+            q_lat, ckv_st, krope_st, lora_rank=lora_rank, scale=scale,
+            n_valid=n_valid, sel_mask=sel_mask,
+            return_stats=return_stats)
+
+    def _upload_logical(self):
+        c_log, r_log = self.pool.host.logical(self._bt_np())
+        self.pool.pipeline.account_up(c_log.nbytes + r_log.nbytes)
+        return (ops.device_put_accounted(c_log),
+                ops.device_put_accounted(r_log))
+
+    def latents_logical(self) -> Tuple[jax.Array, jax.Array]:
+        return self._upload_logical()
+
+    def prefill_attend(self, q_lat: jax.Array, ctx, *, lora_rank: int,
+                       scale: float) -> jax.Array:
+        ckv_dev, krope_dev = self._upload_logical()
+        return ops.mla_chunk_attention(q_lat, ckv_dev, krope_dev, ctx,
+                                       lora_rank=lora_rank, scale=scale)
+
+    def unwrap(self):
+        return self.pool
+
+
+# ===========================================================================
 # Sequence-sharded view (SP decode shards)
 # ===========================================================================
 @register_dataclass
@@ -403,12 +659,14 @@ class ShardedView:
 # ===========================================================================
 # Coercion helpers — the one place raw caches meet the view API
 # ===========================================================================
-KVView = Union[ContiguousView, PagedView, ShardedView]
-MLAView = Union[ContiguousMLAView, PagedMLAView, ShardedView]
+KVView = Union[ContiguousView, PagedView, OffloadedView, ShardedView]
+MLAView = Union[ContiguousMLAView, PagedMLAView, OffloadedMLAView,
+                ShardedView]
 AnyView = Union[KVView, MLAView]
 
-_VIEW_TYPES = (ContiguousView, PagedView, ContiguousMLAView,
-               PagedMLAView, ShardedView)
+_VIEW_TYPES = (ContiguousView, PagedView, OffloadedView,
+               ContiguousMLAView, PagedMLAView, OffloadedMLAView,
+               ShardedView)
 
 
 def is_view(x) -> bool:
@@ -419,8 +677,8 @@ def as_gqa_view(x) -> KVView:
     """LayerKVCache -> ContiguousView; views pass through."""
     if isinstance(x, LayerKVCache):
         return ContiguousView(x)
-    assert isinstance(x, (ContiguousView, PagedView, ShardedView)), \
-        type(x)
+    assert isinstance(x, (ContiguousView, PagedView, OffloadedView,
+                          ShardedView)), type(x)
     return x
 
 
@@ -429,12 +687,18 @@ def as_mla_view(x) -> MLAView:
     if isinstance(x, MLACache):
         return ContiguousMLAView(x)
     assert isinstance(x, (ContiguousMLAView, PagedMLAView,
-                          ShardedView)), type(x)
+                          OffloadedMLAView, ShardedView)), type(x)
     return x
 
 
 def paged_view(pool, block_table: jax.Array):
-    """Wrap one layer's pool + table in the right paged view family."""
+    """Wrap one layer's pool + table in the right view family — the
+    offloaded pools dispatch here too, so the serving engine's decode/
+    chunk bodies are mode-agnostic (offload just drops the jit)."""
+    if isinstance(pool, offload.OffloadedKVPool):
+        return OffloadedView(pool, block_table)
+    if isinstance(pool, offload.OffloadedMLAPool):
+        return OffloadedMLAView(pool, block_table)
     if isinstance(pool, paged.PagedMLAPool):
         return PagedMLAView(pool, block_table)
     assert isinstance(pool, paged.PagedKVPool), type(pool)

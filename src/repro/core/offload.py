@@ -1,4 +1,4 @@
-"""HATA-off: KV-cache offloading with hash-guided prefetch (paper §5.3,
+"""HATA-off: tiered KV offload with hash-guided prefetch (paper §5.3,
 Table 3; inspired by InfiniGen).
 
 Layout: the *code cache* (rbit/8 bytes/token/kv-head) stays in HBM; the
@@ -7,14 +7,35 @@ K/V rows (2·d·kv_bytes bytes/token) live in host DRAM. A decode step:
   1. score on-device over the resident codes (tiny),
   2. top-k indices -> host,
   3. host gathers the k rows and DMAs them up over PCIe,
-  4. sparse attention on device.
+  4. sparse attention on device over the staged rows.
 
-MagicPIG inverts this: hashing is cheap/random but needs ~1500 bits, and
-its attention runs *on the CPU* — the paper's Table 3 speedups come from
-(a) 128 trained bits vs 1500 random bits and (b) GPU attention + PCIe
-prefetch vs CPU attention. Both effects fall out of the cost model here,
-and the functional simulator executes the same data movement with host
-numpy buffers so tests can verify exactness end-to-end.
+Three tiers of machinery live here:
+
+  * the **cost model** (Table 3 analogue): :func:`hata_off_decode_time`
+    / :func:`hata_resident_decode_time` / :func:`magicpig_decode_time`.
+    ``overlap=True`` models the double-buffered schedule where the PCIe
+    upload of one wave's selection overlaps the previous wave's device
+    work (attention + that layer's weight streaming): the wave interval
+    becomes ``t_score + max(t_pcie, t_device)`` instead of their sum.
+  * the **host tier** used by ``core.cache_view.OffloadedView``:
+    :class:`HostPool` / :class:`HostMLAPool` (numpy page pools under
+    the same page-id space and page/refcount discipline as the device
+    pools — one ``PageAllocator`` governs both tiers), the
+    :class:`OffloadedKVPool` / :class:`OffloadedMLAPool` containers
+    (device codes pool + host row pool), and the
+    :class:`PrefetchPipeline` (A/B staging slots + PCIe accounting).
+  * the seed **functional simulator** :class:`OffloadedKV` — kept as
+    the oracle the view is differential-tested against. Its selection
+    path (batched q encode, masked scores, static clamped budget,
+    ``chunked_topk``) is the same shared pipeline the model stack uses.
+
+MagicPIG inverts the layout: hashing is cheap/random but needs ~1500
+bits, and its attention runs *on the CPU* — the paper's Table 3
+speedups come from (a) 128 trained bits vs 1500 random bits and (b) GPU
+attention + PCIe prefetch vs CPU attention. Both effects fall out of
+the cost model here, and the functional tier executes the same data
+movement with host numpy buffers so tests can verify exactness
+end-to-end.
 """
 from __future__ import annotations
 
@@ -26,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HataConfig
+from repro.core import hash_attention as ha
 from repro.core.topk import chunked_topk
 from repro.kernels import ops
 
@@ -43,15 +65,42 @@ class OffloadPlatform:
 
 
 def hata_off_decode_time(s: int, d: int, n_kv: int, g: int, *,
-                         budget: int, rbit: int,
-                         plat: OffloadPlatform) -> float:
-    """Seconds per layer per decode step, HATA-off."""
+                         budget: int, rbit: int, plat: OffloadPlatform,
+                         kv_bytes: int = 2, layer_bytes: float = 0.0,
+                         overlap: bool = False) -> float:
+    """Seconds per layer per decode step, HATA-off.
+
+    ``layer_bytes`` is the layer's own HBM weight traffic per decode
+    step (projections + FFN — decode is weight-streaming-bound);
+    ``overlap=False`` is the serial schedule (score -> PCIe -> attend),
+    ``overlap=True`` the double-buffered one: while wave *t*'s staged
+    rows are attended (and the layer's weights stream), wave *t+1*'s
+    selection is already crossing PCIe into the other staging buffer,
+    so the steady-state wave interval hides min(t_pcie, t_device).
+    """
     score_bytes = s * n_kv * rbit / 8                 # codes from HBM
-    pcie_bytes = budget * n_kv * 2 * d * 2            # top-k K/V rows up
+    pcie_bytes = budget * n_kv * 2 * d * kv_bytes     # top-k K/V rows up
     attn_flops = 2 * 2 * g * n_kv * budget * d        # qk + pv
-    return (score_bytes / (plat.hbm_gbs * 1e9)
-            + pcie_bytes / (plat.pcie_gbs * 1e9)
-            + attn_flops / plat.dev_flops)
+    t_score = score_bytes / (plat.hbm_gbs * 1e9)
+    t_pcie = pcie_bytes / (plat.pcie_gbs * 1e9)
+    t_dev = (attn_flops / plat.dev_flops
+             + layer_bytes / (plat.hbm_gbs * 1e9))
+    if overlap:
+        return t_score + max(t_pcie, t_dev)
+    return t_score + t_pcie + t_dev
+
+
+def hata_resident_decode_time(s: int, d: int, n_kv: int, g: int, *,
+                              budget: int, rbit: int,
+                              plat: OffloadPlatform, kv_bytes: int = 2,
+                              layer_bytes: float = 0.0) -> float:
+    """All-resident baseline (``PagedView``): same score + selection,
+    but the budget rows are gathered from HBM instead of over PCIe."""
+    score_bytes = s * n_kv * rbit / 8
+    gather_bytes = budget * n_kv * 2 * d * kv_bytes
+    attn_flops = 2 * 2 * g * n_kv * budget * d
+    return ((score_bytes + gather_bytes + layer_bytes)
+            / (plat.hbm_gbs * 1e9) + attn_flops / plat.dev_flops)
 
 
 def magicpig_decode_time(s: int, d: int, n_kv: int, g: int, *,
@@ -68,14 +117,301 @@ def magicpig_decode_time(s: int, d: int, n_kv: int, g: int, *,
     return cpu_time + out_bytes / (plat.pcie_gbs * 1e9)
 
 
+def _require_packable(rbit: int) -> None:
+    if rbit <= 0 or rbit % 32:
+        raise ValueError(
+            f"rbit={rbit} must be a positive multiple of 32: hash codes "
+            "are bit-packed into uint32 words, so a non-multiple would "
+            f"silently drop {rbit % 32} hash bits per code")
+
+
+# ---------------------------------------------------------------------------
+# Host-tier page pools (numpy; same page-id space as the device pools)
+# ---------------------------------------------------------------------------
+def physical_rows_np(block_table: np.ndarray, logical: np.ndarray,
+                     page_size: int) -> np.ndarray:
+    """Host-side twin of ``paged_cache.physical_rows``: translate
+    logical rows (B, ...) to physical pool rows through a (B, T) block
+    table — ``bt[b, l // page] * page + l % page``. Used at the
+    host-gather boundary, where the selected logical indices have
+    already been synced off-device."""
+    b, t = block_table.shape
+    li = logical // page_size
+    bt = block_table.reshape((b,) + (1,) * (logical.ndim - 2) + (t,))
+    pages = np.take_along_axis(
+        np.broadcast_to(bt, logical.shape[:-1] + (t,)), li, axis=-1)
+    return pages * page_size + logical % page_size
+
+
+class HostPool:
+    """One GQA/MHA layer's K/V rows in host memory, paged exactly like
+    the device pools: ``(P, page, H_kv, d)`` numpy buffers addressed by
+    *physical row id* (``page_id * page_size + slot``). Page ids are
+    shared with the layer's device codes pool — one
+    :class:`~repro.core.paged_cache.PageAllocator` (free list +
+    refcounts) governs both tiers, so prefix sharing, preemption and
+    the scratch-page convention apply to host rows unchanged."""
+
+    def __init__(self, num_pages: int, page_size: int, n_kv_heads: int,
+                 head_dim: int, dtype=np.float32):
+        self.k = np.zeros((num_pages, page_size, n_kv_heads, head_dim),
+                          dtype)
+        self.v = np.zeros_like(self.k)
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.k.nbytes + self.v.nbytes
+
+    def _flat(self) -> Tuple[np.ndarray, np.ndarray]:
+        n = self.num_pages * self.page_size
+        return (self.k.reshape((n,) + self.k.shape[2:]),
+                self.v.reshape((n,) + self.v.shape[2:]))
+
+    def scatter_rows(self, k_rows: np.ndarray, v_rows: np.ndarray,
+                     phys: np.ndarray) -> None:
+        """Write rows (N, H_kv, d) at physical ids (N,); ids at or past
+        the pool (the chunk-append drop convention) are skipped."""
+        fk, fv = self._flat()
+        ok = phys < fk.shape[0]
+        fk[phys[ok]] = k_rows[ok].astype(fk.dtype)
+        fv[phys[ok]] = v_rows[ok].astype(fv.dtype)
+
+    def gather_heads(self, phys: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-head compact gather: phys (B, H_kv, k) physical ids ->
+        (kg, vg) each (B, H_kv, k, d) — head h's slice follows its own
+        selected rows, so exactly budget·2·d·kv_bytes bytes per kv head
+        cross PCIe per wave."""
+        fk, fv = self._flat()
+        hi = np.arange(fk.shape[1])[None, :, None]
+        return fk[phys, hi], fv[phys, hi]
+
+    def logical(self, block_table: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded logical view (B, T*page, H_kv, d) — the dense
+        fallback / prefill context read (garbage past the fill, masked
+        by the consumer like ``paged_cache.logical_view``)."""
+        b, t = block_table.shape
+        page = self.page_size
+        logical = np.broadcast_to(np.arange(t * page)[None],
+                                  (b, t * page))
+        phys = physical_rows_np(block_table, logical, page)
+        fk, fv = self._flat()
+        return fk[phys], fv[phys]
+
+
+class HostMLAPool:
+    """MLA twin of :class:`HostPool`: the shared latent stream's
+    (ckv, krope) rows in host page buffers."""
+
+    def __init__(self, num_pages: int, page_size: int, lora_rank: int,
+                 rope_dim: int, dtype=np.float32):
+        self.ckv = np.zeros((num_pages, page_size, lora_rank), dtype)
+        self.krope = np.zeros((num_pages, page_size, rope_dim), dtype)
+
+    @property
+    def num_pages(self) -> int:
+        return self.ckv.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.ckv.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.ckv.nbytes + self.krope.nbytes
+
+    def _flat(self) -> Tuple[np.ndarray, np.ndarray]:
+        n = self.num_pages * self.page_size
+        return (self.ckv.reshape((n,) + self.ckv.shape[2:]),
+                self.krope.reshape((n,) + self.krope.shape[2:]))
+
+    def scatter_rows(self, ckv_rows: np.ndarray, krope_rows: np.ndarray,
+                     phys: np.ndarray) -> None:
+        fc, fr = self._flat()
+        ok = phys < fc.shape[0]
+        fc[phys[ok]] = ckv_rows[ok].astype(fc.dtype)
+        fr[phys[ok]] = krope_rows[ok].astype(fr.dtype)
+
+    def gather_rows(self, phys: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """phys (B, k) -> (ckv (B, k, r), krope (B, k, rd))."""
+        fc, fr = self._flat()
+        return fc[phys], fr[phys]
+
+    def logical(self, block_table: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        b, t = block_table.shape
+        page = self.page_size
+        logical = np.broadcast_to(np.arange(t * page)[None],
+                                  (b, t * page))
+        phys = physical_rows_np(block_table, logical, page)
+        fc, fr = self._flat()
+        return fc[phys], fr[phys]
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered staging + PCIe accounting
+# ---------------------------------------------------------------------------
+class PrefetchPipeline:
+    """A/B staging slots + the PCIe ledger, shared across a model's
+    offloaded layers (one pipeline per engine).
+
+    Each ``stage(name, ...)`` upload lands in the slot of opposite
+    parity to the previous one under the same name, so at most *two*
+    waves' staged rows are device-resident per stream at any time —
+    the in-kernel chunk pipeline's double buffer, one tier up. Wave
+    *t*'s attention reads slot ``t % 2`` while wave *t+1*'s host
+    gather + DMA lands in the other; on hardware with an async DMA
+    engine the two proceed concurrently (the cost model's
+    ``overlap=True`` schedule), and the functional tier preserves the
+    exact same buffer discipline so the device-resident staging bound
+    (``device_staged_bytes() <= 2 waves``) is a tested invariant, not
+    an aspiration.
+
+    The byte ledger is what the benchmarks and the serving stats read:
+    ``bytes_up`` (host -> HBM row uploads), ``bytes_down`` (append
+    spills), ``waves`` (gather waves staged).
+    """
+
+    def __init__(self, plat: Optional[OffloadPlatform] = None):
+        self.plat = plat or OffloadPlatform()
+        self.bytes_up = 0
+        self.bytes_down = 0
+        self.waves = 0
+        self._slots = {}              # name -> [tuple | None, tuple | None]
+        self._parity = {}             # name -> next slot to fill
+
+    @property
+    def bytes_pcie(self) -> int:
+        return self.bytes_up + self.bytes_down
+
+    def stage(self, name: str, *host_arrays: np.ndarray):
+        """Upload host arrays into the next staging slot for ``name``;
+        returns the device arrays (one, or a tuple). Accounts the
+        upload and flips the slot parity."""
+        devs = tuple(ops.device_put_accounted(a) for a in host_arrays)
+        self.bytes_up += sum(a.nbytes for a in host_arrays)
+        par = self._parity.get(name, 0)
+        self._slots.setdefault(name, [None, None])[par] = devs
+        self._parity[name] = par ^ 1
+        self.waves += 1
+        return devs[0] if len(devs) == 1 else devs
+
+    def account_down(self, nbytes: int) -> None:
+        """Append-path spill: fresh K/V rows streaming down to host."""
+        self.bytes_down += int(nbytes)
+
+    def account_up(self, nbytes: int) -> None:
+        """Un-staged upload (dense fallback / prefill context reads)."""
+        self.bytes_up += int(nbytes)
+
+    def device_staged_bytes(self) -> int:
+        """HBM held by staging right now — bounded by two waves' rows
+        per stream (the double-buffer invariant)."""
+        return sum(a.nbytes for slots in self._slots.values()
+                   for devs in slots if devs is not None for a in devs)
+
+
+# ---------------------------------------------------------------------------
+# Offloaded layer pools (device codes + host rows) — what the serving
+# engine holds per layer and core.cache_view.OffloadedView wraps
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class OffloadedKVPool:
+    """One GQA/MHA layer's tiered pool: hash codes resident on device
+    (``(P, page, H_kv, W)`` — the only per-token state HATA needs to
+    *score*), K/V rows on host. NOT a pytree: the host half is plain
+    numpy and the pipeline is a mutable ledger — offloaded waves run
+    eagerly (see ``cache_view.OffloadedView``)."""
+    codes: jax.Array
+    host: HostPool
+    pipeline: PrefetchPipeline
+
+    @property
+    def num_pages(self) -> int:
+        return self.host.num_pages
+
+    @property
+    def page_size(self) -> int:
+        return self.host.page_size
+
+    def hbm_resident_bytes(self) -> int:
+        """Device bytes this layer pins: resident codes + its share of
+        the staging buffers (the pipeline total is engine-wide)."""
+        return int(self.codes.nbytes)
+
+
+@dataclasses.dataclass
+class OffloadedMLAPool:
+    """MLA twin: latent codes (P, page, W) on device, (ckv, krope)
+    rows on host."""
+    codes: jax.Array
+    host: HostMLAPool
+    pipeline: PrefetchPipeline
+
+    @property
+    def num_pages(self) -> int:
+        return self.host.num_pages
+
+    @property
+    def page_size(self) -> int:
+        return self.host.page_size
+
+    def hbm_resident_bytes(self) -> int:
+        return int(self.codes.nbytes)
+
+
+def init_offloaded_kv_pool(num_pages: int, page_size: int,
+                           n_kv_heads: int, head_dim: int, *, rbit: int,
+                           dtype=np.float32,
+                           pipeline: Optional[PrefetchPipeline] = None,
+                           ) -> OffloadedKVPool:
+    _require_packable(rbit)
+    codes = jnp.zeros((num_pages, page_size, n_kv_heads, rbit // 32),
+                      jnp.uint32)
+    host = HostPool(num_pages, page_size, n_kv_heads, head_dim,
+                    dtype=np.dtype(dtype))
+    return OffloadedKVPool(codes, host, pipeline or PrefetchPipeline())
+
+
+def init_offloaded_mla_pool(num_pages: int, page_size: int,
+                            lora_rank: int, rope_dim: int, *, rbit: int,
+                            dtype=np.float32,
+                            pipeline: Optional[PrefetchPipeline] = None,
+                            ) -> OffloadedMLAPool:
+    _require_packable(rbit)
+    codes = jnp.zeros((num_pages, page_size, rbit // 32), jnp.uint32)
+    host = HostMLAPool(num_pages, page_size, lora_rank, rope_dim,
+                       dtype=np.dtype(dtype))
+    return OffloadedMLAPool(codes, host, pipeline or PrefetchPipeline())
+
+
 # ---------------------------------------------------------------------------
 # Functional simulator (host KV + device codes), exact w.r.t. hata_decode
 # ---------------------------------------------------------------------------
 class OffloadedKV:
-    """One layer's offloaded cache: codes on device, K/V on host."""
+    """One layer's offloaded cache: codes on device, K/V on host.
+
+    The seed prefetch simulator, kept as the *oracle* for the tiered
+    :class:`~repro.core.cache_view.OffloadedView`: its selection path
+    is the shared batched pipeline (``ha.aggregate_q_codes`` encode,
+    ``ha.mask_scores`` validity/window masking, the *static*
+    ``ha.clamped_budget`` top-k via ``chunked_topk``), so view and
+    simulator pick bit-identical rows; only the final attend differs
+    (reference einsum here vs the fused gathered kernel there)."""
 
     def __init__(self, batch: int, max_len: int, n_kv: int, d: int,
                  rbit: int, dtype=np.float32):
+        _require_packable(rbit)
         self.k_host = np.zeros((batch, max_len, n_kv, d), dtype)
         self.v_host = np.zeros((batch, max_len, n_kv, d), dtype)
         self.codes = jnp.zeros((batch, max_len, n_kv, rbit // 32),
@@ -97,25 +433,26 @@ class OffloadedKV:
 
     def decode_step(self, q: jax.Array, k_new: np.ndarray,
                     v_new: np.ndarray, w_h: jax.Array,
-                    hcfg: HataConfig) -> jax.Array:
+                    hcfg: HataConfig,
+                    window: Optional[int] = None) -> jax.Array:
         """q: (B, H, d) device; k/v_new: (B, 1, n_kv, d) host."""
         self.append(k_new, v_new, w_h)
         b, h, d = q.shape
         n_kv = self.k_host.shape[2]
-        g = h // n_kv
-        qg = q.reshape(b, n_kv, g, d)
-        q_codes = jax.vmap(
-            lambda x, w: ops.hash_encode(x, w),
-            in_axes=(1, 0), out_axes=1)(qg, w_h)
+        # one encode implementation repo-wide: the shared per-group
+        # batched q encode (models/attention.py's _hata_score_select)
+        q_codes = ha.aggregate_q_codes(q, w_h, n_kv)
         scores = ops.hamming_scores(q_codes, self.codes, rbit=self.rbit)
-        pos_mask = jnp.arange(self.codes.shape[1]) < self.pos
-        scores = jnp.where(pos_mask[None, None], scores, -1)
-        budget = min(hcfg.budget(self.pos), self.pos)
+        scores = ha.mask_scores(scores, self.pos, window=window)
+        # the budget is STATIC — derived from the cache capacity (and
+        # window), exactly like the model stack's clamped_budget call —
+        # so every decode step shares one trace and one selection shape
+        budget = ha.clamped_budget(hcfg, self.codes.shape[1], window)
         # same two-stage on-device top-k as the serving decode path
         # (core/topk.chunked_topk, bit-identical to lax.top_k): the
         # offload simulator's prefetch selection and the on-device
         # pipeline share one implementation.
-        _, idx = chunked_topk(scores, budget)         # (B, n_kv, k)
+        top, idx = chunked_topk(scores, budget)       # (B, n_kv, k)
         idx_np = np.asarray(idx)
         # host gather + PCIe up (the prefetch step)
         bi = np.arange(b)[:, None, None]
@@ -124,8 +461,13 @@ class OffloadedKV:
         vg = self.v_host[bi, idx_np, hi]
         self.bytes_pcie += kg.nbytes + vg.nbytes
         kj, vj = jnp.asarray(kg), jnp.asarray(vg)
+        qg = q.reshape(b, n_kv, h // n_kv, d)
         qf = qg.astype(jnp.float32) * (d ** -0.5)
         logits = jnp.einsum("bhgd,bhkd->bhgk", qf, kj.astype(jnp.float32))
+        # the static budget can exceed the live row count — selections
+        # carrying the -1 mask floor are excluded from the softmax
+        # (same sel_valid convention as the fused gather kernels)
+        logits = jnp.where((top >= 0)[:, :, None, :], logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bhgk,bhkd->bhgd", probs, vj.astype(jnp.float32))
         return out.reshape(b, h, d).astype(q.dtype)

@@ -637,3 +637,101 @@ def mla_gather_decode(q_lat: jax.Array, ckv: jax.Array, krope: jax.Array,
     return _fd.mla_decode_gathered_batched(
         q_lat, ckv, krope, idx, n_valid, sel_mask, lora_rank=lora_rank,
         scale=scale, block_k=block_k, return_stats=return_stats)
+
+
+# ---------------------------------------------------------------------------
+# Offload tier: the host-gather boundary + PCIe accounting hooks
+# ---------------------------------------------------------------------------
+# The tiered OffloadedView (core/cache_view.py) resolves its top-k
+# winners to HOST pages, gathers the compact rows there, and uploads
+# only those. The device-side boundary is the *_staged trio below: the
+# gather already happened on the host, so the index map is the
+# identity over the staging buffer and the same fused kernels run
+# unchanged — bit-identical to the contiguous/paged paths given equal
+# rows. Transfers funnel through device_put_accounted so benchmarks
+# and serving stats can meter PCIe traffic without threading a ledger
+# through every call site.
+_PCIE_LISTENER = None
+
+
+def set_pcie_listener(fn):
+    """Install a callback ``fn(nbytes, direction)`` fired on every
+    accounted host<->device transfer (direction: "up" | "down").
+    Returns the previous listener; pass None to uninstall."""
+    global _PCIE_LISTENER
+    prev = _PCIE_LISTENER
+    _PCIE_LISTENER = fn
+    return prev
+
+
+def account_pcie(nbytes: int, direction: str = "up") -> None:
+    if _PCIE_LISTENER is not None:
+        _PCIE_LISTENER(int(nbytes), direction)
+
+
+def device_put_accounted(host_array, direction: str = "up") -> jax.Array:
+    """Host -> device upload, metered. The one place offload-tier rows
+    cross PCIe upward, so byte accounting can't drift from the data
+    movement it claims to describe."""
+    account_pcie(host_array.nbytes, direction)
+    return jnp.asarray(host_array)
+
+
+def _identity_idx(b: int, h_kv: int, k: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None, None],
+                            (b, h_kv, k))
+
+
+def gather_decode_attention_staged(q: jax.Array, k_stage: jax.Array,
+                                   v_stage: jax.Array, *,
+                                   sel_valid: Optional[jax.Array] = None,
+                                   block_k: Optional[int] = None
+                                   ) -> jax.Array:
+    """Sparse decode over host-gathered, PCIe-staged rows.
+
+    q: (B, H, d); k_stage/v_stage: (B, k, H_kv, d) — slot j of head h
+    holds that head's j-th selected row (per-head host gather), so the
+    identity index map recovers exactly the contiguous fused-gather
+    semantics; sel_valid: optional (B, H_kv, k) prefix mask.
+    """
+    b = q.shape[0]
+    h_kv, k = k_stage.shape[2], k_stage.shape[1]
+    return gather_decode_attention(q, k_stage, v_stage,
+                                   _identity_idx(b, h_kv, k),
+                                   sel_valid=sel_valid, fused=True,
+                                   block_k=block_k)
+
+
+def gather_decode_stats_staged(q: jax.Array, k_stage: jax.Array,
+                               v_stage: jax.Array,
+                               sel_mask: Optional[jax.Array] = None, *,
+                               block_k: Optional[jax.Array] = None
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gathered flash partials over staged rows (arbitrary sel_mask —
+    the SP ownership filter), identity index map."""
+    b = q.shape[0]
+    h_kv, k = k_stage.shape[2], k_stage.shape[1]
+    return gather_decode_stats(q, k_stage, v_stage,
+                               _identity_idx(b, h_kv, k), sel_mask,
+                               block_k=block_k)
+
+
+def mla_gather_decode_staged(q_lat: jax.Array, ckv_stage: jax.Array,
+                             krope_stage: jax.Array, *, lora_rank: int,
+                             scale: float,
+                             n_valid: Optional[jax.Array] = None,
+                             sel_mask: Optional[jax.Array] = None,
+                             return_stats: bool = False,
+                             block_k: Optional[int] = None):
+    """Split-latent MLA decode over staged latent rows.
+
+    ckv_stage: (B, k, r), krope_stage: (B, k, rd) — the host gathered
+    the selected latent rows; the identity index map feeds the same
+    contiguous fused kernel.
+    """
+    b, k = ckv_stage.shape[:2]
+    idx = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None], (b, k))
+    return mla_gather_decode(q_lat, ckv_stage, krope_stage, idx,
+                             lora_rank=lora_rank, scale=scale,
+                             n_valid=n_valid, sel_mask=sel_mask,
+                             return_stats=return_stats, block_k=block_k)

@@ -40,7 +40,17 @@ def main(argv=None):
                     help="serve on the paged scheduler (page pools + "
                          "block tables through the cache-view API)")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--offload", action="store_true",
+                    help="tiered pools on the paged scheduler: HATA "
+                         "layers keep only hash codes in HBM, K/V rows "
+                         "page to host and only the top-k budget "
+                         "crosses PCIe per wave (implies --paged)")
+    ap.add_argument("--hbm-budget-mb", type=float, default=None,
+                    help="with --offload: watermark admission against "
+                         "this HBM-resident budget (codes + staging)")
     args = ap.parse_args(argv)
+    if args.offload:
+        args.paged = True
 
     cfg = (get_reduced(args.arch) if args.reduced
            else get_config(args.arch))
@@ -52,11 +62,14 @@ def main(argv=None):
         # equal, and the HATA budget identical, when page_size divides
         # max_len; rounding down would truncate sooner than dense)
         table_pages = -(-args.max_len // args.page_size)
+        budget = (None if args.hbm_budget_mb is None
+                  else int(args.hbm_budget_mb * 2**20))
         engine = PagedServingEngine(
             model, params,
             num_pages=args.max_batch * table_pages + 1,
             page_size=args.page_size, max_batch=args.max_batch,
-            max_len_pages=table_pages)
+            max_len_pages=table_pages, offload=args.offload,
+            hbm_budget_bytes=budget)
     else:
         engine = ServingEngine(model, params, max_batch=args.max_batch,
                                max_len=args.max_len)
@@ -80,7 +93,8 @@ def main(argv=None):
         print(f"req {r.id:3d} prompt={r.prompt_len:4d} "
               f"out={len(r.output):4d} ttft={ttft:8.1f}ms "
               f"total={total:8.1f}ms")
-    mode = "paged" if args.paged else "dense"
+    mode = ("offload" if args.offload
+            else "paged" if args.paged else "dense")
     print(f"[serve/{mode}] {engine.stats} wall={dt:.2f}s "
           f"tok/s={engine.stats['tokens_out'] / dt:.1f}")
     return done

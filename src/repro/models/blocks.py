@@ -382,6 +382,29 @@ def init_block_pool(cfg: ModelConfig, num_pages: int, page_size: int):
                               cfg.head_dim, rbit=rbit, dtype=dtype)
 
 
+def init_offload_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                      pipeline=None):
+    """One layer's *tiered* pool: hash codes HBM-resident, K/V (or
+    latent) rows in host memory. Requires HATA — without codes to score
+    on-device, every decode would stream the whole cache over PCIe."""
+    from repro.core.offload import (init_offloaded_kv_pool,
+                                    init_offloaded_mla_pool)
+    assert cfg.hata.enabled, \
+        f"{cfg.name}: the offload tier needs HATA hash codes to score " \
+        "on-device (hata.enabled=False would make every decode stream " \
+        "the full cache over PCIe)"
+    dtype = jnp.dtype(cfg.dtype)
+    if _is_mla(cfg):
+        return init_offloaded_mla_pool(num_pages, page_size,
+                                       cfg.mla.kv_lora_rank,
+                                       cfg.mla.qk_rope_dim,
+                                       rbit=cfg.hata.rbit, dtype=dtype,
+                                       pipeline=pipeline)
+    return init_offloaded_kv_pool(num_pages, page_size, cfg.n_kv_heads,
+                                  cfg.head_dim, rbit=cfg.hata.rbit,
+                                  dtype=dtype, pipeline=pipeline)
+
+
 def block_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
                         ctx: jax.Array):
     """One chunk of a chunked prefill through one block, over any cache

@@ -323,6 +323,31 @@ class Model:
         return [blocks.init_block_pool(self.cfg, num_pages, page_size)
                 for _ in range(self.cfg.n_layers)]
 
+    def init_offloaded_pools(self, num_pages: int, page_size: int, *,
+                             pipeline=None):
+        """Tiered pools for the offload serving mode: HATA layers keep
+        only their hash codes in HBM (K/V rows live on host, fetched
+        per wave through one shared
+        :class:`~repro.core.offload.PrefetchPipeline`); the leading
+        dense layers (``li < hata.dense_layers``) attend over the whole
+        context every step, so offloading them would stream the full
+        cache over PCIe — they stay fully HBM-resident. Returns
+        (pools, pipeline)."""
+        assert self.supports_paged, self.cfg.family
+        cfg = self.cfg
+        assert cfg.hata.enabled, (
+            f"{cfg.name}: offload serving requires HATA (the resident "
+            "codes are what makes host K/V affordable)")
+        from repro.core.offload import PrefetchPipeline
+        pipeline = pipeline or PrefetchPipeline()
+        pools = [
+            blocks.init_block_pool(cfg, num_pages, page_size)
+            if li < cfg.hata.dense_layers
+            else blocks.init_offload_pool(cfg, num_pages, page_size,
+                                          pipeline=pipeline)
+            for li in range(cfg.n_layers)]
+        return pools, pipeline
+
     def _flat_layer_params(self, params):
         """(block params, hash weights) per layer, pre + stack — the
         unrolled iteration order the view-typed serving paths use."""

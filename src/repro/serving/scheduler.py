@@ -91,7 +91,9 @@ class PagedServingEngine(EngineBase):
                  prefill_chunk: Optional[int] = None,
                  watermark_pages: int = 0, prefix_sharing: bool = True,
                  sample: str = "greedy", seed: int = 0,
-                 strict_moe_capacity: bool = False):
+                 strict_moe_capacity: bool = False,
+                 offload: bool = False,
+                 hbm_budget_bytes: Optional[int] = None):
         assert model.supports_paged, (
             f"{model.cfg.name}: family {model.cfg.family!r} has no paged "
             "decode path (attention-KV families only)")
@@ -122,7 +124,19 @@ class PagedServingEngine(EngineBase):
 
         self.watermark = watermark_pages
 
-        self.pools = model.init_paged_pools(num_pages, page_size)
+        # Offload mode: HATA layers keep only hash codes in HBM; K/V
+        # rows live in host page pools under the SAME allocator/page-id
+        # space (prefix sharing, preemption and the scratch page apply
+        # to host rows unchanged). The pool arithmetic below is
+        # identical — only what a page *costs in HBM* changes, which is
+        # what the watermark translation handles.
+        self.offload = offload
+        if offload:
+            self.pools, self.pipeline = model.init_offloaded_pools(
+                num_pages, page_size)
+        else:
+            self.pools = model.init_paged_pools(num_pages, page_size)
+            self.pipeline = None
         self.alloc = PageAllocator(num_pages)
         # the scratch page: inactive decode slots write their garbage
         # rows here; never owned by a request, never scored as valid
@@ -147,6 +161,22 @@ class PagedServingEngine(EngineBase):
         self.prefilling: Optional[_PrefillState] = None
         self.stats.update({"prefill_chunks": 0, "preemptions": 0,
                            "prefix_hit_tokens": 0, "peak_pages": 1})
+        if offload:
+            self.stats.update({"bytes_pcie": 0,
+                               "hbm_resident_bytes":
+                               self.hbm_resident_bytes()})
+            if hbm_budget_bytes is not None:
+                # Admission is watermarked against the HBM-RESIDENT
+                # budget: in offload mode a page's host rows are cheap
+                # but its device codes are not, so the number of pages
+                # whose resident share fits the budget caps the usable
+                # pool — pages past that line are treated as below the
+                # watermark and never admitted into.
+                per_page = max(1, self.hbm_resident_bytes() // num_pages)
+                hbm_pages = int(hbm_budget_bytes // per_page)
+                self.watermark = max(self.watermark,
+                                     num_pages - min(hbm_pages,
+                                                     num_pages))
 
         # pools are donated: row scatters stay in place instead of
         # copying every pool per wave (a no-op warning on backends
@@ -166,8 +196,32 @@ class PagedServingEngine(EngineBase):
             logits, views = model.prefill_chunk(p, t, views, ctx, last)
             return logits, [v.unwrap() for v in views]
 
-        self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
-        self._chunk = jax.jit(_chunk_fn, donate_argnums=(2,))
+        if offload:
+            # Offloaded waves cross the host boundary (numpy gathers,
+            # the mutable PCIe ledger), so the SAME bodies run eagerly
+            # — paged_view dispatches per pool type, resident dense
+            # layers and offloaded HATA layers share one wave loop and
+            # the per-op kernels still compile under their own jit.
+            self._decode = _decode_fn
+            self._chunk = _chunk_fn
+        else:
+            self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
+            self._chunk = jax.jit(_chunk_fn, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def hbm_resident_bytes(self) -> int:
+        """Device bytes pinned by the cache tier right now: full pools
+        for resident layers, codes + staged waves for offloaded ones."""
+        total = 0
+        for pool in self.pools:
+            if hasattr(pool, "hbm_resident_bytes"):
+                total += pool.hbm_resident_bytes()
+            else:
+                total += sum(leaf.nbytes
+                             for leaf in jax.tree.leaves(pool))
+        if self.pipeline is not None:
+            total += self.pipeline.device_staged_bytes()
+        return total
 
     # ------------------------------------------------------------------
     def _note_usage(self):
@@ -389,3 +443,6 @@ class PagedServingEngine(EngineBase):
         then run one decode wave."""
         self._prefill_step()
         self._decode_wave()
+        if self.pipeline is not None:
+            self.stats["bytes_pcie"] = self.pipeline.bytes_pcie
+            self.stats["hbm_resident_bytes"] = self.hbm_resident_bytes()

@@ -5,9 +5,11 @@ contract:
 
   1. **Layout transparency** — ``gqa_decode_attend`` / ``mla_decode_attend``
      produce bit-identical outputs whether addressed through a raw
-     cache, a :class:`ContiguousView`, or a :class:`PagedView` holding
+     cache, a :class:`ContiguousView`, a :class:`PagedView`, or a
+     tiered :class:`OffloadedView` (host K/V, resident codes) holding
      the same rows (GQA + MLA, ragged depths, window on/off, xla and
-     pallas-interpret impls).
+     pallas-interpret impls); the offloaded PCIe byte ledger is exact
+     per wave.
   2. **Chunked prefill transparency** — ``Model.prefill_chunk`` over
      ``ContiguousView``s equals the same chunks over ``PagedView``s
      equals the monolithic prefill.
@@ -123,6 +125,30 @@ def _mla_pair(cfg, b=2, t=6, seed=1):
     return cache, pool, jnp.asarray(bt), pos
 
 
+def _offload_twin_gqa(pool):
+    """An ``OffloadedKVPool`` holding the same rows as a PagedKVPool:
+    hash codes stay device-resident verbatim; K/V rows move to host."""
+    from repro.core import offload
+    opool = offload.init_offloaded_kv_pool(
+        pool.num_pages, pool.page_size, pool.k.shape[2],
+        pool.k.shape[3], rbit=pool.codes.shape[-1] * 32)
+    opool = dataclasses.replace(opool, codes=pool.codes)
+    opool.host.k[...] = np.asarray(pool.k)
+    opool.host.v[...] = np.asarray(pool.v)
+    return opool
+
+
+def _offload_twin_mla(pool):
+    from repro.core import offload
+    opool = offload.init_offloaded_mla_pool(
+        pool.num_pages, pool.page_size, pool.ckv.shape[2],
+        pool.krope.shape[2], rbit=pool.codes.shape[-1] * 32)
+    opool = dataclasses.replace(opool, codes=pool.codes)
+    opool.host.ckv[...] = np.asarray(pool.ckv)
+    opool.host.krope[...] = np.asarray(pool.krope)
+    return opool
+
+
 # ===========================================================================
 # 1. layout transparency at the attend entry points
 # ===========================================================================
@@ -144,8 +170,16 @@ def test_gqa_decode_attend_views_bit_exact(impl, window, use_hata):
             cfg, p, w_h, q1, cv.ContiguousView(cache), pos, use_hata)
         paged_ = attn.gqa_decode_attend(
             cfg, p, w_h, q1, cv.PagedView(pool, bt), pos, use_hata)
+        off = attn.gqa_decode_attend(
+            cfg, p, w_h, q1,
+            cv.OffloadedView(_offload_twin_gqa(pool), bt), pos,
+            use_hata)
     assert_array_equal(np.asarray(raw), np.asarray(contig))
     assert_array_equal(np.asarray(contig), np.asarray(paged_))
+    # the tiered pool scores over the same resident codes and attends
+    # over host-gathered rows through the same fused kernel: bit-exact
+    # (use_hata=False exercises the dense kv_logical upload path)
+    assert_array_equal(np.asarray(contig), np.asarray(off))
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
@@ -168,8 +202,13 @@ def test_mla_decode_attend_views_bit_exact(impl, use_hata):
         paged_ = attn.mla_decode_attend(
             cfg, p, w_h, q_lat, cv.PagedMLAView(pool, bt), pos,
             use_hata, jnp.float32)
+        off = attn.mla_decode_attend(
+            cfg, p, w_h, q_lat,
+            cv.OffloadedMLAView(_offload_twin_mla(pool), bt), pos,
+            use_hata, jnp.float32)
     assert_array_equal(np.asarray(raw), np.asarray(contig))
     assert_array_equal(np.asarray(contig), np.asarray(paged_))
+    assert_array_equal(np.asarray(contig), np.asarray(off))
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
@@ -231,8 +270,12 @@ def test_gather_stats_paged_bit_exact(impl):
             q, jnp.asarray(idx), jnp.asarray(mask))
         want = cv.ContiguousView(cache).gather_stats(
             q, jnp.asarray(idx), jnp.asarray(mask))
-    for g_, w_ in zip(got, want):
+        got_off = cv.OffloadedView(_offload_twin_gqa(pool),
+                                   bt).gather_stats(
+            q, jnp.asarray(idx), jnp.asarray(mask))
+    for g_, w_, o_ in zip(got, want, got_off):
         assert_array_equal(np.asarray(g_), np.asarray(w_))
+        assert_array_equal(np.asarray(o_), np.asarray(w_))
 
 
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
@@ -257,8 +300,12 @@ def test_mla_gather_latent_stats_paged_bit_exact(impl):
             q_lat, jnp.asarray(idx), **kw)
         want = cv.ContiguousMLAView(cache).gather_latent(
             q_lat, jnp.asarray(idx), **kw)
-    for g_, w_ in zip(got, want):
+        got_off = cv.OffloadedMLAView(_offload_twin_mla(pool),
+                                      bt).gather_latent(
+            q_lat, jnp.asarray(idx), **kw)
+    for g_, w_, o_ in zip(got, want, got_off):
         assert_array_equal(np.asarray(g_), np.asarray(w_))
+        assert_array_equal(np.asarray(o_), np.asarray(w_))
 
 
 def test_views_are_jit_transparent_pytrees():
@@ -276,6 +323,56 @@ def test_views_are_jit_transparent_pytrees():
     assert isinstance(cv.as_gqa_view(cache), cv.ContiguousView)
     assert cv.unwrap(cv.as_gqa_view(cache)) is cache
     assert isinstance(cv.paged_view(pool, bt), cv.PagedView)
+    # the offloaded pool dispatches through the same coercion — but
+    # the resulting view is host-stateful, NOT a pytree
+    opool = _offload_twin_gqa(pool)
+    oview = cv.paged_view(opool, bt)
+    assert isinstance(oview, cv.OffloadedView)
+    assert cv.is_view(oview) and cv.unwrap(oview) is opool
+    assert oview.capacity == cv.PagedView(pool, bt).capacity
+
+
+def test_offloaded_view_rejects_traced_selection():
+    """Jitting the offloaded gather would bake host state into the
+    trace — the view must refuse with direction, not miscompute."""
+    cfg = _gqa_cfg()
+    _, pool, bt, pos = _gqa_pair(cfg, seed=14)
+    view = cv.OffloadedView(_offload_twin_gqa(pool), bt)
+    rng = np.random.default_rng(14)
+    q = jnp.asarray(rng.standard_normal(
+        (2, cfg.n_heads, cfg.head_dim)), jnp.float32)
+    idx = jnp.zeros((2, cfg.n_kv_heads, 4), jnp.int32)
+    sel = jnp.ones((2, cfg.n_kv_heads, 4), bool)
+    with pytest.raises(TypeError, match="concrete"):
+        jax.jit(lambda i: view.gather_decode(q, i, sel))(idx)
+
+
+def test_offloaded_bytes_pcie_per_wave_property():
+    """The PCIe ledger is exact, not estimated: every gather wave
+    uploads precisely budget·2·d·itemsize bytes per kv head per
+    request (K and V rows for the selected budget — full fetch every
+    wave, no delta caching), and the A/B staging holds at most two
+    waves' rows in HBM."""
+    cfg = _gqa_cfg()
+    _, pool, bt, pos = _gqa_pair(cfg, seed=15)
+    opool = _offload_twin_gqa(pool)
+    view = cv.OffloadedView(opool, bt)
+    rng = np.random.default_rng(15)
+    b, h_kv, d = 2, cfg.n_kv_heads, cfg.head_dim
+    k_sel = 16
+    q = jnp.asarray(rng.standard_normal((b, cfg.n_heads, d)),
+                    jnp.float32)
+    per_wave = 2 * b * h_kv * k_sel * d * 4          # K + V, f32
+    with ops.use_impl("xla"):
+        for wave in range(1, 6):
+            idx = jnp.asarray(rng.integers(
+                0, PAGE, (b, h_kv, k_sel)), jnp.int32)
+            view.gather_decode(q, idx,
+                               jnp.ones((b, h_kv, k_sel), bool))
+            assert opool.pipeline.waves == wave
+            assert opool.pipeline.bytes_up == wave * per_wave
+            assert opool.pipeline.device_staged_bytes() == \
+                min(wave, 2) * per_wave
 
 
 # ===========================================================================
