@@ -1,7 +1,10 @@
 """§Roofline deliverable: turn the dry-run JSONs into the per-(arch x
 shape x mesh) roofline table — three terms in seconds, the dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPS useful-compute ratio, and per-device
-memory. Writes experiments/roofline.md and prints CSV."""
+memory — plus the per-kernel achieved-vs-peak HBM bandwidth table from
+the autotune sweep artifacts (``benchmarks/autotune_sweep.py``), so
+block-size tuning chases a roofline fraction, not a raw wallclock.
+Writes experiments/roofline.md and prints CSV."""
 from __future__ import annotations
 
 import glob
@@ -89,11 +92,69 @@ def to_markdown(rows: List[Dict]) -> str:
     return hdr + "\n".join(lines) + "\n"
 
 
+def load_kernel_sweeps(dirname: str = "experiments/autotune"
+                       ) -> List[Dict]:
+    """Per-kernel measurement rows from the autotune sweep artifacts
+    (one ``sweep_<backend>.json`` per backend that ran
+    ``benchmarks/autotune_sweep.py``)."""
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "sweep_*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        for r in rec.get("results", []):
+            rows.append({**r, "interpret": rec.get("interpret", True)})
+    return rows
+
+
+def kernel_bandwidth_rows(sweeps: List[Dict]) -> List[Dict]:
+    """Achieved-vs-peak HBM bandwidth per kernel: bytes one call must
+    move / best bit-exact wallclock, over the v5e HBM peak. Interpret
+    measurements price the grid walk, not the memory system — the
+    roofline fraction is only meaningful for compiled backends, but
+    the *bytes* column and the tuned-vs-default ratio are backend-free.
+    """
+    out = []
+    for r in sweeps:
+        best_gbps = r["bytes_moved"] / (r["best_us"] * 1e-6) / 1e9
+        base_gbps = (r["bytes_moved"] / (r["baseline_us"] * 1e-6)
+                     / 1e9)
+        out.append({
+            "kernel": r["kernel"], "backend": r["backend"],
+            "interpret": r["interpret"],
+            "bytes_moved": r["bytes_moved"],
+            "baseline_us": r["baseline_us"], "best_us": r["best_us"],
+            "speedup": r["speedup"],
+            "achieved_gbps": best_gbps,
+            "baseline_gbps": base_gbps,
+            "peak_gbps": HBM_BW / 1e9,
+            "peak_frac": best_gbps / (HBM_BW / 1e9),
+        })
+    return out
+
+
+def kernel_bandwidth_markdown(rows: List[Dict]) -> str:
+    hdr = ("| kernel | backend | MB/call | default µs | tuned µs | "
+           "speedup | achieved GB/s | % of peak |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        note = " (interp)" if r["interpret"] else ""
+        lines.append(
+            f"| {r['kernel']} | {r['backend']}{note} "
+            f"| {r['bytes_moved'] / 2**20:.1f} "
+            f"| {r['baseline_us']:.0f} | {r['best_us']:.0f} "
+            f"| {r['speedup']:.2f}x | {r['achieved_gbps']:.2f} "
+            f"| {100 * r['peak_frac']:.2f}% |")
+    return hdr + "\n".join(lines) + "\n"
+
+
 def main(dirname: str = "experiments/dryrun",
-         out_md: str = "experiments/roofline.md"):
+         out_md: str = "experiments/roofline.md",
+         autotune_dir: str = "experiments/autotune"):
     recs = load_records(dirname)
     rows = [analyze_record(r) for r in recs]
     rows = [r for r in rows if r]
+    bw_rows = kernel_bandwidth_rows(load_kernel_sweeps(autotune_dir))
     if out_md:
         os.makedirs(os.path.dirname(out_md), exist_ok=True)
         with open(out_md, "w") as f:
@@ -104,12 +165,28 @@ def main(dirname: str = "experiments/dryrun",
                     f"{ICI_BW/1e9:.0f} GB/s ICI). 'useful' = analytic "
                     "MODEL_FLOPS / parsed HLO FLOPs per device.\n\n")
             f.write(to_markdown(rows))
+            f.write("\n## Per-kernel achieved vs peak HBM bandwidth\n\n"
+                    "From the autotune sweep's best *bit-exact* config "
+                    "per kernel (benchmarks/autotune_sweep.py). "
+                    "Interpret-mode rows price the grid walk, not the "
+                    "memory system — their %-of-peak is a lower bound "
+                    "placeholder until a compiled backend writes its "
+                    "sweep artifact.\n\n")
+            if bw_rows:
+                f.write(kernel_bandwidth_markdown(bw_rows))
+            else:
+                f.write("(no sweep artifacts under "
+                        f"{autotune_dir}/ — run "
+                        "`python -m benchmarks.autotune_sweep`)\n")
     n_fail = sum(1 for r in rows if not r.get("ok"))
     for r in rows:
         if r.get("ok"):
             print(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
                   f"{'' if r['hata'] else '_dense'},0,"
                   f"{r['bound_s']:.3e}")
+    for r in bw_rows:
+        print(f"roofline/kernel_bw/{r['kernel']}_{r['backend']},"
+              f"{r['best_us']:.1f},{r['peak_frac']:.4f}")
     print(f"roofline/cells,{len(rows)},{n_fail} failed")
     return rows
 

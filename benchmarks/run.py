@@ -10,7 +10,9 @@
   offload_model      Table 3
   offload_efficiency beyond-paper: tiered OffloadedView residency curve
   distributed_topk   beyond-paper SP selection quality
-  roofline           §Roofline (reads experiments/dryrun/*.json)
+  autotune_sweep     beyond-paper kernel block-size search
+  roofline           §Roofline (reads experiments/dryrun/*.json and
+                     the autotune sweep artifacts)
 """
 from __future__ import annotations
 
@@ -20,11 +22,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (budget_ablation, decode_efficiency,
-                            distributed_topk, hashbits_ablation,
-                            offload_efficiency, offload_model,
-                            opt_ablation, prefill_efficiency,
-                            recall_accuracy, roofline)
+    from benchmarks import (autotune_sweep, budget_ablation,
+                            decode_efficiency, distributed_topk,
+                            hashbits_ablation, offload_efficiency,
+                            offload_model, opt_ablation,
+                            prefill_efficiency, recall_accuracy,
+                            roofline)
     suites = [
         ("recall_accuracy", recall_accuracy.main),
         ("decode_efficiency", decode_efficiency.main),
@@ -35,6 +38,8 @@ def main() -> None:
         ("offload_model", offload_model.main),
         ("offload_efficiency", offload_efficiency.main),
         ("distributed_topk", distributed_topk.main),
+        # before roofline: roofline reads the sweep artifacts
+        ("autotune_sweep", autotune_sweep.main),
         ("roofline", roofline.main),
     ]
     failures = 0

@@ -45,7 +45,7 @@ wrapping is free — no leaf is copied.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -489,6 +489,13 @@ class OffloadedMLAView:
     pool: offload.OffloadedMLAPool
     block_table: jax.Array
     stream: str = "mla"
+    # wave-batched chunked-prefill state (see stage_mla_ctx_uploads):
+    # staged_ctx — this layer's slice of the one multi-layer logical
+    # upload made at wave start; chunk_dev — the current chunk's own
+    # (ckv, krope) device rows, kept at append_chunk time so
+    # prefill_attend never re-uploads rows the device just computed
+    staged_ctx: Optional[Tuple[jax.Array, jax.Array]] = None
+    chunk_dev: Optional[Tuple[jax.Array, jax.Array]] = None
 
     @property
     def capacity(self) -> int:
@@ -536,7 +543,9 @@ class OffloadedMLAView:
             codes=paged._scatter_rows(self.pool.codes, codes[0], phys))
         self._spill(_concrete(ckv, "append_chunk")[0],
                     np.asarray(krope)[0], np.asarray(phys))
-        return OffloadedMLAView(pool, self.block_table, self.stream)
+        return OffloadedMLAView(pool, self.block_table, self.stream,
+                                staged_ctx=self.staged_ctx,
+                                chunk_dev=(ckv, krope))
 
     def hamming_scores(self, q_codes: jax.Array, n_valid, *, rbit: int,
                        window: Optional[int] = None,
@@ -579,12 +588,69 @@ class OffloadedMLAView:
 
     def prefill_attend(self, q_lat: jax.Array, ctx, *, lora_rank: int,
                        scale: float) -> jax.Array:
-        ckv_dev, krope_dev = self._upload_logical()
+        if self.staged_ctx is not None and self.chunk_dev is not None:
+            # wave-batched path: the context rows (< ctx) rode the one
+            # multi-layer upload at wave start; the chunk's own rows
+            # never left the device. Splicing them at [ctx, ctx+C)
+            # reproduces the per-layer logical upload bit-for-bit —
+            # the host pools are f32, so the spill round-trip the old
+            # path read back was lossless, and rows >= ctx+C are
+            # identical pre/post spill (and masked by causality).
+            ckv_dev, krope_dev = self.staged_ctx
+            ckv_c, krope_c = self.chunk_dev
+            start = jnp.asarray(ctx, jnp.int32)
+            zero = jnp.int32(0)
+            ckv_dev = jax.lax.dynamic_update_slice(
+                ckv_dev, ckv_c.astype(ckv_dev.dtype),
+                (zero, start, zero))
+            krope_dev = jax.lax.dynamic_update_slice(
+                krope_dev, krope_c.astype(krope_dev.dtype),
+                (zero, start, zero))
+        else:
+            ckv_dev, krope_dev = self._upload_logical()
         return ops.mla_chunk_attention(q_lat, ckv_dev, krope_dev, ctx,
                                        lora_rank=lora_rank, scale=scale)
 
     def unwrap(self):
         return self.pool
+
+
+def stage_mla_ctx_uploads(views: Sequence) -> List:
+    """Batch the offloaded MLA layers' chunked-prefill context uploads
+    into ONE stacked host gather + one accounted PCIe transfer per
+    latent stream (the PR-2 leftover: per-layer MLA latent gathers ->
+    one multi-layer dispatch).
+
+    Call once per prefill wave, *before* the layer loop. Every
+    :class:`OffloadedMLAView` in ``views`` used to upload its full
+    logical latent window inside ``prefill_attend`` — L layers x one
+    ``device_put`` pair per chunk. The context part (rows < ctx) is
+    selection-independent and already on the host when the wave
+    starts, so one (L, B, T·page, r) stacked gather moves the same
+    bytes in 2 transfers instead of 2L; each layer's chunk rows stay
+    device-side (``chunk_dev``) and are spliced in at attend time.
+    Layers that are not offloaded MLA pass through untouched, so the
+    call is a no-op for dense/paged/GQA stacks.
+    """
+    off = [(i, v) for i, v in enumerate(views)
+           if isinstance(v, OffloadedMLAView)]
+    if not off:
+        return list(views)
+    c_logs, r_logs = [], []
+    for _, v in off:
+        c_log, r_log = v.pool.host.logical(v._bt_np())
+        c_logs.append(c_log)
+        r_logs.append(r_log)
+    c_st = np.ascontiguousarray(np.stack(c_logs))   # (L, B, cap, r)
+    r_st = np.ascontiguousarray(np.stack(r_logs))
+    off[0][1].pool.pipeline.account_up(c_st.nbytes + r_st.nbytes)
+    ckv_dev = ops.device_put_accounted(c_st)
+    krope_dev = ops.device_put_accounted(r_st)
+    out = list(views)
+    for j, (i, v) in enumerate(off):
+        out[i] = dataclasses.replace(
+            v, staged_ctx=(ckv_dev[j], krope_dev[j]))
+    return out
 
 
 # ===========================================================================

@@ -1,0 +1,371 @@
+"""Measured block-size search for the Pallas kernel stack.
+
+``search_all()`` sweeps each registered kernel family's tunable tile
+parameters (block_s / block_q / block_k — the gather kernels' block_k
+IS their double-buffered DMA chunk — and the pool page size) over a
+per-axis candidate ladder, times every candidate, and **asserts
+bit-exactness against the untuned baseline at every candidate**:
+
+  * Row-partition knobs (hash_encode/hamming block_s, prefill/attn
+    block_q) only re-tile independent output rows — every candidate is
+    bit-identical to the baseline and competes on wallclock.
+  * KV-axis knobs (all block_k, page_size) change the online-softmax
+    accumulation *order*. Unless a candidate collapses to the
+    baseline's effective chunking (``min(block_k, size)`` equal), its
+    output differs in the last ulp — such candidates are REJECTED:
+    measured and reported, but never emitted into a tuning table, so
+    switching tables can never change model outputs.
+
+``emit_table()`` turns the surviving winners into a
+:mod:`repro.kernels.runtime` tuning-table object (bucket = pow-2
+ceiling of the searched size, backend = the machine that measured it)
+ready to serialize to ``REPRO_TUNING_TABLE`` or merge into
+``tuning/default.json``. The benchmark harness front-end is
+``benchmarks/autotune_sweep.py``; the per-kernel achieved-vs-peak HBM
+bandwidth derived from these measurements lands in
+``benchmarks/roofline.py``.
+
+The search runs wherever it's invoked (interpret mode off-TPU —
+wallclock then prices the grid walk, not the memory system, which
+still ranks row-partition tilings usefully; compiled on TPU). Inputs
+are seeded and shapes deliberately moderate so a full CPU sweep stays
+in CI budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import runtime
+
+# package __init__ re-exports kernel *functions* under the submodule
+# names, so attribute imports resolve to PjitFunctions — go through
+# importlib for the modules themselves
+_hash_encode = importlib.import_module("repro.kernels.hash_encode")
+_hamming = importlib.import_module("repro.kernels.hamming_score")
+_fdec = importlib.import_module("repro.kernels.flash_decode")
+_fattn = importlib.import_module("repro.kernels.flash_attention")
+
+Config = Dict[str, int]
+
+
+def _time_us(fn: Callable[[], jax.Array], reps: int = 3) -> float:
+    """Median wall-clock per call in µs; one warmup call compiles."""
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _bit_exact(a, b) -> Tuple[bool, float]:
+    """(exactly equal, max abs diff) over a pytree of arrays."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    exact, maxdiff = True, 0.0
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.dtype != y.dtype or x.shape != y.shape:
+            return False, float("inf")
+        if not np.array_equal(x, y):
+            exact = False
+            maxdiff = max(maxdiff,
+                          float(np.max(np.abs(x.astype(np.float64)
+                                              - y.astype(np.float64)))))
+    return exact, maxdiff
+
+
+@dataclasses.dataclass
+class CandidateResult:
+    config: Config
+    us: float
+    exact: bool
+    maxdiff: float
+
+
+@dataclasses.dataclass
+class SearchResult:
+    kernel: str
+    backend: str
+    dtype: str
+    size: int                    # the registry's bucket-axis value
+    bytes_moved: int             # HBM bytes one call must move
+    baseline: Config
+    baseline_us: float
+    candidates: List[CandidateResult]
+
+    @property
+    def accepted(self) -> List[CandidateResult]:
+        return [c for c in self.candidates if c.exact]
+
+    @property
+    def rejected(self) -> List[CandidateResult]:
+        return [c for c in self.candidates if not c.exact]
+
+    @property
+    def best(self) -> CandidateResult:
+        """Fastest *bit-exact* candidate (baseline always qualifies)."""
+        base = CandidateResult(dict(self.baseline), self.baseline_us,
+                               True, 0.0)
+        return min(self.accepted + [base], key=lambda c: c.us)
+
+    def gbps(self, us: float) -> float:
+        return self.bytes_moved / (us * 1e-6) / 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCase:
+    """One searchable kernel: seeded inputs + a config-parameterized
+    runner. ``sweep`` maps param -> candidate ladder; each axis is
+    swept independently around the registry baseline (single-pass
+    coordinate search — the axes are independent grid dims)."""
+    kernel: str
+    sweep: Dict[str, Sequence[int]]
+    build: Callable[[], Tuple[Callable[[Config], jax.Array], int, int,
+                              str]]
+    # build() -> (run(config), size, bytes_moved, dtype_name)
+
+
+def _baseline_config(kernel: str) -> Config:
+    return {p: spec.default
+            for p, spec in runtime.KERNELS[kernel].params.items()}
+
+
+def _axis_candidates(kernel: str, sweep: Dict[str, Sequence[int]]
+                     ) -> List[Config]:
+    base = _baseline_config(kernel)
+    out: List[Config] = []
+    for param, ladder in sweep.items():
+        for v in ladder:
+            cfg = dict(base)
+            cfg[param] = v
+            if cfg != base and cfg not in out:
+                out.append(cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cases
+# ---------------------------------------------------------------------------
+def _case_hash_encode() -> Tuple[Callable, int, int, str]:
+    s, d, rbit = 4096, 128, 128
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (s, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, rbit),
+                          jnp.float32)
+
+    def run(cfg: Config) -> jax.Array:
+        return _hash_encode.hash_encode(x, w, block_s=cfg["block_s"])
+
+    bytes_moved = x.nbytes + w.nbytes + s * (rbit // 32) * 4
+    return run, s, bytes_moved, "float32"
+
+
+def _case_hamming() -> Tuple[Callable, int, int, str]:
+    b, h_kv, g, s, w = 4, 8, 4, 4096, 4   # rbit = 32 * w
+    key = jax.random.PRNGKey(1)
+    qc = jax.random.bits(key, (b, h_kv, g, w), jnp.uint32)
+    kc = jax.random.bits(jax.random.fold_in(key, 1), (b, s, h_kv, w),
+                         jnp.uint32)
+
+    def run(cfg: Config) -> jax.Array:
+        return _hamming.hamming_score_batched(qc, kc, rbit=32 * w,
+                                              block_s=cfg["block_s"])
+
+    bytes_moved = qc.nbytes + kc.nbytes + b * h_kv * s * 4
+    return run, s, bytes_moved, "uint32"
+
+
+def _case_gather() -> Tuple[Callable, int, int, str]:
+    b, h_kv, g, s, d, k = 4, 8, 4, 4096, 64, 256
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (b, h_kv, g, d), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h_kv, d),
+                           jnp.float32)
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h_kv, d),
+                           jnp.float32)
+    idx = jnp.argsort(
+        jax.random.uniform(jax.random.fold_in(key, 3), (b, h_kv, s)),
+        axis=-1)[..., :k].astype(jnp.int32)
+
+    def run(cfg: Config) -> jax.Array:
+        return _fdec.flash_decode_gathered_batched(
+            q, kc, vc, idx, block_k=cfg["block_k"])
+
+    # the point of the fused gather: HBM traffic is the k selected
+    # row-pairs plus q/idx, not the caches
+    bytes_moved = q.nbytes + idx.nbytes + 2 * b * h_kv * k * d * 4
+    return run, k, bytes_moved, "float32"
+
+
+def _case_flash_decode() -> Tuple[Callable, int, int, str]:
+    g, s, d = 8, 4096, 64
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (g, d), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (s, d),
+                           jnp.float32)
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (s, d),
+                           jnp.float32)
+
+    def run(cfg: Config) -> jax.Array:
+        return _fdec.flash_decode(q, kc, vc, block_k=cfg["block_k"])
+
+    bytes_moved = q.nbytes + kc.nbytes + vc.nbytes + g * d * 4
+    return run, s, bytes_moved, "float32"
+
+
+def _case_prefill() -> Tuple[Callable, int, int, str]:
+    b, sq, sk, h, h_kv, d = 2, 512, 2048, 8, 2, 64
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (b, sq, h, d), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1),
+                           (b, sk, h_kv, d), jnp.float32)
+    vc = jax.random.normal(jax.random.fold_in(key, 2),
+                           (b, sk, h_kv, d), jnp.float32)
+    off = jnp.full((b,), sk - sq, jnp.int32)
+
+    def run(cfg: Config) -> jax.Array:
+        return _fattn.flash_prefill_batched(
+            q, kc, vc, off, block_q=cfg["block_q"],
+            block_k=cfg["block_k"])
+
+    bytes_moved = q.nbytes + kc.nbytes + vc.nbytes + b * sq * h * d * 4
+    return run, sk, bytes_moved, "float32"
+
+
+def _case_attn() -> Tuple[Callable, int, int, str]:
+    s, d = 2048, 64
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (s, d), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (s, d),
+                           jnp.float32)
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (s, d),
+                           jnp.float32)
+
+    def run(cfg: Config) -> jax.Array:
+        return _fattn.flash_attention(q, kc, vc,
+                                      block_q=cfg["block_q"],
+                                      block_k=cfg["block_k"])
+
+    bytes_moved = 2 * (q.nbytes + kc.nbytes + vc.nbytes)  # q-loop reuse
+    return run, s, bytes_moved, "float32"
+
+
+def _case_paged_pool() -> Tuple[Callable, int, int, str]:
+    # pool page size IS the paged-prefill kernel's kv tile: rebuild the
+    # pool per candidate and run one chunk of paged prefill over it
+    b, chunk, s_log, h, h_kv, d = 1, 128, 1024, 8, 2, 64
+    key = jax.random.PRNGKey(6)
+    q = jax.random.normal(key, (b, chunk, h, d), jnp.float32)
+    k_rows = jax.random.normal(jax.random.fold_in(key, 1),
+                               (s_log, h_kv, d), jnp.float32)
+    v_rows = jax.random.normal(jax.random.fold_in(key, 2),
+                               (s_log, h_kv, d), jnp.float32)
+
+    def run(cfg: Config) -> jax.Array:
+        page = cfg["page_size"]
+        assert s_log % page == 0, (s_log, page)
+        n_pages = s_log // page
+        k_pool = k_rows.reshape(n_pages, page, h_kv, d)
+        v_pool = v_rows.reshape(n_pages, page, h_kv, d)
+        table = jnp.arange(n_pages, dtype=jnp.int32)[None, :]
+        return _fattn.flash_prefill_paged(
+            q, k_pool, v_pool, table,
+            jnp.full((b,), s_log - chunk, jnp.int32))
+
+    bytes_moved = (q.nbytes + k_rows.nbytes + v_rows.nbytes
+                   + b * chunk * h * d * 4)
+    return run, 1024, bytes_moved, "float32"
+
+
+CASES: List[KernelCase] = [
+    KernelCase("hash_encode",
+               {"block_s": (128, 256, 1024, 2048, 4096)},
+               _case_hash_encode),
+    KernelCase("hamming_score",
+               {"block_s": (256, 512, 1024, 4096)},
+               _case_hamming),
+    KernelCase("gather_decode",
+               {"block_k": (32, 64, 256)},
+               _case_gather),
+    KernelCase("flash_decode",
+               {"block_k": (256, 512, 2048, 4096)},
+               _case_flash_decode),
+    KernelCase("flash_prefill",
+               {"block_q": (64, 128, 512),
+                "block_k": (256, 1024, 2048)},
+               _case_prefill),
+    KernelCase("flash_attention",
+               {"block_q": (256, 1024, 2048),
+                "block_k": (256, 1024)},
+               _case_attn),
+    KernelCase("paged_pool",
+               {"page_size": (64, 128, 256)},
+               _case_paged_pool),
+]
+
+
+def search(case: KernelCase, reps: int = 3) -> SearchResult:
+    """Sweep one kernel. Every candidate is checked bit-exact against
+    the baseline; failures are kept in the report but excluded from
+    ``accepted``/``best`` (and the exclusion is *asserted* below)."""
+    run, size, bytes_moved, dtype = case.build()
+    baseline = _baseline_config(case.kernel)
+    base_out = run(baseline)
+    base_us = _time_us(lambda: run(baseline), reps)
+    results: List[CandidateResult] = []
+    for cfg in _axis_candidates(case.kernel, case.sweep):
+        out = run(cfg)
+        exact, maxdiff = _bit_exact(out, base_out)
+        us = _time_us(lambda: run(cfg), reps)
+        results.append(CandidateResult(cfg, us, exact, maxdiff))
+    res = SearchResult(case.kernel, jax.default_backend(), dtype, size,
+                       bytes_moved, baseline, base_us, results)
+    # the contract the tuning table rests on: nothing that changes
+    # numerics is ever emitted
+    assert all(c.exact for c in res.accepted), res
+    assert res.best.exact, res
+    return res
+
+
+def search_all(reps: int = 3,
+               kernels: Optional[Sequence[str]] = None
+               ) -> List[SearchResult]:
+    return [search(c, reps) for c in CASES
+            if kernels is None or c.kernel in kernels]
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def emit_table(results: Sequence[SearchResult],
+               min_speedup: float = 1.05) -> Dict:
+    """Winners -> a runtime tuning-table object. Only emits an entry
+    when the best bit-exact candidate beats the baseline by
+    ``min_speedup`` (jitter guard); the emitted object round-trips
+    through :func:`repro.kernels.runtime.parse_table`."""
+    entries = []
+    for r in results:
+        best = r.best
+        if best.config == r.baseline:
+            continue
+        if r.baseline_us / best.us < min_speedup:
+            continue
+        entries.append({
+            "kernel": r.kernel, "backend": r.backend, "dtype": r.dtype,
+            "bucket": _pow2_ceil(r.size),
+            "config": {k: int(v) for k, v in best.config.items()},
+        })
+    table = {"version": 1, "entries": entries}
+    runtime.parse_table(table, "<autotune>")  # validate before handing out
+    return table

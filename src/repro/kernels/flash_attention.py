@@ -133,8 +133,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     "causal", "window", "q_offset", "block_q", "block_k", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
-                    q_offset: int = 0, block_q: int = 512,
-                    block_k: int = 512,
+                    q_offset: int = 0, block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
                     interpret: Optional[bool] = None) -> jax.Array:
     """Single-head flash attention. q: (Sq, d), k: (Sk, d), v: (Sk, dv)
     -> (Sq, dv). dv may differ from d (MLA materialized form)."""
@@ -142,6 +142,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     sq, d = q.shape
     sk = k.shape[0]
     dv = v.shape[-1]
+    block_q = runtime.attn_block_q(block_q, size=sk, dtype=q.dtype)
+    block_k = runtime.attn_block_k(block_k, size=sk, dtype=q.dtype)
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     n_q = pl.cdiv(sq, block_q)
@@ -296,11 +298,11 @@ def flash_prefill_batched(q: jax.Array, k: jax.Array, v: jax.Array,
     ``jnp.repeat`` the K/V cache ``g`` times before dispatch.
     """
     interpret = runtime.resolve_interpret(interpret)
-    block_q = runtime.prefill_block_q(block_q)
-    block_k = runtime.prefill_block_k(block_k)
     b, sq, h, d = q.shape
     b2, sk, h_kv, d2 = k.shape
     assert (b, d) == (b2, d2) and h % h_kv == 0, (q.shape, k.shape)
+    block_q = runtime.prefill_block_q(block_q, size=sk, dtype=q.dtype)
+    block_k = runtime.prefill_block_k(block_k, size=sk, dtype=q.dtype)
     g = h // h_kv
     dv = v.shape[-1]
     q_off = _offset_vec(q_offset, b)
@@ -373,9 +375,10 @@ def flash_prefill_paged(q: jax.Array, k_pool: jax.Array,
     makes the skip bit-exact vs. the full-width walk.
     """
     interpret = runtime.resolve_interpret(interpret)
-    block_q = runtime.prefill_block_q(block_q)
     b, sq, h, d = q.shape
     p, page, h_kv, d2 = k_pool.shape
+    block_q = runtime.prefill_block_q(block_q, size=p * page,
+                                      dtype=q.dtype)
     assert d == d2 and h % h_kv == 0, (q.shape, k_pool.shape)
     g = h // h_kv
     dv = v_pool.shape[-1]
@@ -527,11 +530,13 @@ def mla_prefill_batched(q_lat: jax.Array, ckv: jax.Array,
     Always causal (the chunked-prefill context read).
     """
     interpret = runtime.resolve_interpret(interpret)
-    block_q = runtime.prefill_block_q(block_q)
-    block_k = runtime.prefill_block_k(block_k)
     b, sq, h, qdim = q_lat.shape
     assert qdim > lora_rank, (q_lat.shape, lora_rank)
     b2, sk, r = ckv.shape
+    block_q = runtime.prefill_block_q(block_q, size=sk,
+                                      dtype=q_lat.dtype)
+    block_k = runtime.prefill_block_k(block_k, size=sk,
+                                      dtype=q_lat.dtype)
     assert b == b2 and r == lora_rank, (q_lat.shape, ckv.shape)
     rd = krope.shape[-1]
     q_off = _offset_vec(q_offset, b)
@@ -587,10 +592,11 @@ def mla_prefill_paged(q_lat: jax.Array, ckv_pool: jax.Array,
     (see :func:`flash_prefill_paged`).
     """
     interpret = runtime.resolve_interpret(interpret)
-    block_q = runtime.prefill_block_q(block_q)
     b, sq, h, qdim = q_lat.shape
     assert qdim > lora_rank, (q_lat.shape, lora_rank)
     p, page, r = ckv_pool.shape
+    block_q = runtime.prefill_block_q(block_q, size=p * page,
+                                      dtype=q_lat.dtype)
     assert r == lora_rank, (ckv_pool.shape, lora_rank)
     rd = krope_pool.shape[-1]
     b2, t = block_table.shape

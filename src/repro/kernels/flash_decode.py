@@ -109,7 +109,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  valid_len: Optional[jax.Array] = None, *,
-                 block_k: int = 1024,
+                 block_k: Optional[int] = None,
                  interpret: Optional[bool] = None) -> jax.Array:
     """q: (G, d), k/v: (S, d), valid_len: scalar int32 (default S)."""
     interpret = runtime.resolve_interpret(interpret)
@@ -118,6 +118,7 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     if valid_len is None:
         valid_len = jnp.int32(s)
     valid_len = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    block_k = runtime.decode_block_k(block_k, size=s, dtype=q.dtype)
     block_k = min(block_k, s)
     n_blocks = pl.cdiv(s, block_k)
     from jax.experimental.pallas import tpu as pltpu
@@ -474,7 +475,9 @@ def flash_decode_gathered_batched(q: jax.Array, k_cache: jax.Array,
     valid prefix (same chunk alignment).
     """
     return _gqa_gather_call(q, k_cache, v_cache, idx, n_valid, sel_mask,
-                            block_k=runtime.gather_block_k(block_k),
+                            block_k=runtime.gather_block_k(
+                                block_k, size=idx.shape[-1],
+                                dtype=q.dtype),
                             interpret=interpret, return_stats=False)
 
 
@@ -495,7 +498,9 @@ def flash_decode_gathered_stats_batched(
     nothing-to-contribute convention.
     """
     return _gqa_gather_call(q, k_cache, v_cache, idx, n_valid, sel_mask,
-                            block_k=runtime.gather_block_k(block_k),
+                            block_k=runtime.gather_block_k(
+                                block_k, size=idx.shape[-1],
+                                dtype=q.dtype),
                             interpret=interpret, return_stats=True)
 
 
@@ -521,7 +526,9 @@ def flash_decode_gathered_paged(q: jax.Array, k_pool: jax.Array,
     """
     return _gqa_gather_call(q, k_pool, v_pool, phys_idx, n_valid,
                             sel_mask,
-                            block_k=runtime.gather_block_k(block_k),
+                            block_k=runtime.gather_block_k(
+                                block_k, size=phys_idx.shape[-1],
+                                dtype=q.dtype),
                             interpret=interpret, return_stats=False,
                             shared_pool=True)
 
@@ -546,7 +553,9 @@ def flash_decode_gathered_stats_paged(
     """
     return _gqa_gather_call(q, k_pool, v_pool, phys_idx, n_valid,
                             sel_mask,
-                            block_k=runtime.gather_block_k(block_k),
+                            block_k=runtime.gather_block_k(
+                                block_k, size=phys_idx.shape[-1],
+                                dtype=q.dtype),
                             interpret=interpret, return_stats=True,
                             shared_pool=True)
 
@@ -733,7 +742,9 @@ def mla_decode_gathered_batched(q_lat: jax.Array, ckv: jax.Array,
     """
     return _mla_gather_call(q_lat, ckv, krope, idx, n_valid, sel_mask,
                             lora_rank=lora_rank, scale=scale,
-                            block_k=runtime.gather_block_k(block_k),
+                            block_k=runtime.gather_block_k(
+                                block_k, size=idx.shape[-1],
+                                dtype=q_lat.dtype),
                             interpret=interpret,
                             return_stats=return_stats)
 
@@ -762,7 +773,9 @@ def mla_decode_gathered_paged(q_lat: jax.Array, ckv_pool: jax.Array,
     return _mla_gather_call(q_lat, ckv_pool, krope_pool, phys_idx,
                             n_valid, sel_mask, lora_rank=lora_rank,
                             scale=scale,
-                            block_k=runtime.gather_block_k(block_k),
+                            block_k=runtime.gather_block_k(
+                                block_k, size=phys_idx.shape[-1],
+                                dtype=q_lat.dtype),
                             interpret=interpret,
                             return_stats=return_stats,
                             shared_pool=True)

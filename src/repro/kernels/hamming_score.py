@@ -53,11 +53,12 @@ def hamming_score(q_codes: jax.Array, k_codes: jax.Array, *, rbit: int,
     q_codes: (G, W) uint32, k_codes: (S, W) uint32 -> (S,) int32.
     Batched shapes via ``ops.hamming_score`` (vmap over B, H_kv).
     """
-    block_s = runtime.hamming_block_s(block_s)
     interpret = runtime.resolve_interpret(interpret)
     g, w = q_codes.shape
     s, w2 = k_codes.shape
     assert w == w2, (q_codes.shape, k_codes.shape)
+    block_s = runtime.hamming_block_s(block_s, size=s,
+                                      dtype=k_codes.dtype)
     block_s = min(block_s, s)
     n_blocks = pl.cdiv(s, block_s)
     out = pl.pallas_call(
@@ -91,11 +92,12 @@ def hamming_score_batched(q_codes: jax.Array, k_codes: jax.Array, *,
     (B, H_kv, S, W) copy of the whole code cache before dispatch, which
     doubled the 16-byte/token stream this kernel exists to minimize.
     """
-    block_s = runtime.hamming_block_s(block_s)
     interpret = runtime.resolve_interpret(interpret)
     b, h_kv, g, w = q_codes.shape
     b2, s, h_kv2, w2 = k_codes.shape
     assert (b, h_kv, w) == (b2, h_kv2, w2), (q_codes.shape, k_codes.shape)
+    block_s = runtime.hamming_block_s(block_s, size=s,
+                                      dtype=k_codes.dtype)
     block_s = min(block_s, s)
     n_blocks = pl.cdiv(s, block_s)
     return pl.pallas_call(
@@ -265,11 +267,12 @@ def hamming_score_latent(q_codes: jax.Array, k_codes: jax.Array, *,
     batch's tile a contiguous (B, block_s) slab in the native layout).
     Same 16-byte/token HBM stream, 1/B the dispatch count.
     """
-    block_s = runtime.hamming_block_s(block_s)
     interpret = runtime.resolve_interpret(interpret)
     b, h, w = q_codes.shape
     b2, s, w2 = k_codes.shape
     assert (b, w) == (b2, w2), (q_codes.shape, k_codes.shape)
+    block_s = runtime.hamming_block_s(block_s, size=s,
+                                      dtype=k_codes.dtype)
     block_s = min(block_s, s)
     n_blocks = pl.cdiv(s, block_s)
     return pl.pallas_call(

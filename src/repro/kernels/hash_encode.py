@@ -71,9 +71,9 @@ def hash_encode_heads(x: jax.Array, w_h: jax.Array, *,
     f32 projection / sign / bit-pack as :func:`hash_encode`, so codes
     are bit-identical to the vmapped path and the XLA oracle.
     """
-    block_s = runtime.encode_block_s(block_s)
     interpret = runtime.resolve_interpret(interpret)
     b, s, h, d = x.shape
+    block_s = runtime.encode_block_s(block_s, size=s, dtype=x.dtype)
     h2, d2, rbit = w_h.shape
     assert (h, d) == (h2, d2), (x.shape, w_h.shape)
     assert rbit % WORD_BITS == 0
@@ -103,9 +103,9 @@ def hash_encode(x: jax.Array, w_h: jax.Array, *,
     x: (s, d) float, w_h: (d, rbit) float -> (s, rbit//32) uint32.
     Batched/multi-head shapes are handled by ``ops.hash_encode`` via vmap.
     """
-    block_s = runtime.encode_block_s(block_s)
     interpret = runtime.resolve_interpret(interpret)
     s, d = x.shape
+    block_s = runtime.encode_block_s(block_s, size=s, dtype=x.dtype)
     d2, rbit = w_h.shape
     assert d == d2, (x.shape, w_h.shape)
     assert rbit % WORD_BITS == 0

@@ -735,3 +735,60 @@ def mla_gather_decode_staged(q_lat: jax.Array, ckv_stage: jax.Array,
                              lora_rank=lora_rank, scale=scale,
                              n_valid=n_valid, sel_mask=sel_mask,
                              return_stats=return_stats, block_k=block_k)
+
+
+def mla_gather_decode_multilayer(q_lat: jax.Array, ckv: jax.Array,
+                                 krope: jax.Array, idx: jax.Array, *,
+                                 lora_rank: int, scale: float,
+                                 n_valid: Optional[jax.Array] = None,
+                                 sel_mask: Optional[jax.Array] = None,
+                                 return_stats: bool = False,
+                                 block_k: Optional[int] = None):
+    """Multi-layer split-latent gathered decode in ONE dispatch.
+
+    q_lat: (L, B, H, r+rd) absorbed queries, ckv: (L, B, S, r) /
+    krope: (L, B, S, rd) layer-stacked latent caches, idx: (L, B, k)
+    per-layer selected rows; n_valid (L, B) / sel_mask (L, B, k) as in
+    :func:`mla_gather_decode`. Returns o_lat (L, B, H, r) f32, or the
+    (m, l, o~) flash partials with a leading L when ``return_stats``.
+
+    The gather grid is embarrassingly parallel over (request, layer) —
+    nothing in one lane's chunk walk reads another's — so L per-layer
+    dispatches of grid (B,) fold into ONE dispatch of grid (L·B,) by
+    reshaping the layer axis into the batch (a view on stacked
+    storage). Bit-exact vs the per-layer loop: each folded lane runs
+    the identical chunk walk over the identical rows.
+
+    The serving decode wave can't use this *today* — selection at
+    layer l needs layer l-1's residual output, so its per-layer
+    gathers are inherently sequential (see DESIGN.md §3). It serves
+    the callers whose selections coexist: speculative-verification
+    waves, teacher top-k label extraction over a whole model, and the
+    offload tier's batched multi-layer staging
+    (``mla_gather_decode_staged`` folds the same way — stack the
+    staged (B, k, r) rows over L and fold L into B).
+    """
+    assert n_valid is None or sel_mask is None, \
+        "pass n_valid or sel_mask, not both"
+    l, b, h, qdim = q_lat.shape
+    l2, b2, s, r = ckv.shape
+    assert (l, b) == (l2, b2) and (l, b) == idx.shape[:2], (
+        q_lat.shape, ckv.shape, idx.shape)
+    rd = krope.shape[-1]
+    out = mla_gather_decode(
+        q_lat.reshape(l * b, h, qdim),
+        ckv.reshape(l * b, s, r),
+        krope.reshape(l * b, s, rd),
+        idx.reshape(l * b, -1),
+        lora_rank=lora_rank, scale=scale,
+        n_valid=(None if n_valid is None
+                 else jnp.reshape(jnp.asarray(n_valid), (l * b,))),
+        sel_mask=(None if sel_mask is None
+                  else sel_mask.reshape(l * b, -1)),
+        return_stats=return_stats, block_k=block_k)
+    if return_stats:
+        m, lsum, acc = out
+        return (m.reshape((l, b) + m.shape[1:]),
+                lsum.reshape((l, b) + lsum.shape[1:]),
+                acc.reshape((l, b) + acc.shape[1:]))
+    return out.reshape((l, b) + out.shape[1:])

@@ -1,8 +1,10 @@
-"""Runtime knobs for the Pallas kernel stack.
+"""Autotuner-backed dispatch layer for the Pallas kernel stack.
 
-One switch decides whether every kernel entry point runs compiled
-(Mosaic) or in interpret mode, instead of each entry point hardcoding
-``interpret=True``:
+Two knob classes live here.
+
+**Interpret mode.** One switch decides whether every kernel entry point
+runs compiled (Mosaic) or in interpret mode, instead of each entry
+point hardcoding ``interpret=True``:
 
   * auto (default): ``interpret=False`` iff ``jax.default_backend()``
     is ``"tpu"`` — the kernels compile on real hardware and emulate
@@ -11,10 +13,33 @@ One switch decides whether every kernel entry point runs compiled
     interpret on a TPU host while bisecting a Mosaic lowering issue, or
     assert-compile in a TPU CI job).
 
-Block sizes are the second knob class. Every kernel keeps a tuned
-default but reads it through :func:`block_env`, so a deployment can
-sweep ``REPRO_GATHER_BLOCK_K`` / ``REPRO_HAMMING_BLOCK_S`` / ... without
-touching call sites (see DESIGN.md §3 for what each block controls).
+**Block sizes.** Every kernel family is registered in :data:`KERNELS`
+with its tunable tile parameters, and resolution goes through ONE
+precedence chain (:func:`resolve`)::
+
+    explicit caller arg  >  env knob  >  tuning table  >  builtin
+
+  * *explicit arg* — tests and benchmarks pin tilings to compare
+    kernels at matched blocking; passed through untouched.
+  * *env knob* (``REPRO_GATHER_BLOCK_K`` etc.) — the deployment
+    escape hatch; validated (positive, backend-alignment) with an
+    error naming the knob.
+  * *tuning table* — a persisted JSON table keyed on
+    (kernel, shape-bucket, dtype, backend). Defaults ship in
+    ``kernels/tuning/default.json``; ``REPRO_TUNING_TABLE=<path>``
+    points at a site-specific table (e.g. one emitted by
+    ``repro.kernels.autotune`` / ``benchmarks/autotune_sweep.py``).
+  * *builtin* — the hand-tuned seed defaults, so an empty or missing
+    table is never an error.
+
+The table's **backend** key is ``jax.default_backend()`` (``cpu`` /
+``tpu`` / ``gpu``) or ``"*"``; **dtype** is a jnp dtype name or
+``"*"``; **bucket** is a positive integer — the entry covers every
+size up to it, and lookup picks the *tightest* covering bucket — or
+``"*"`` (any size). The autotuner only ever emits numerics-preserving
+configs (bit-exactness is asserted per candidate), so switching tables
+must never change model outputs; see DESIGN.md §3 "Autotuner &
+dispatch".
 
 Resolution happens at trace time: the kernel wrappers are jitted with
 ``interpret``/``block_*`` as static args, so the first call under a
@@ -23,8 +48,11 @@ the process imports jax, not mid-run.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+import json
 import os
-from typing import Optional
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 
 import jax
 
@@ -58,45 +86,357 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     return use_interpret() if interpret is None else bool(interpret)
 
 
+# ===========================================================================
+# Kernel registry
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One tunable tile parameter of a kernel family."""
+    env: str            # env knob; wins over the table
+    default: int        # builtin fallback (the hand-tuned seed value)
+    tpu_align: int = 8  # required multiple when resolving for TPU
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Registry entry: tunable params + what the bucket axis measures."""
+    params: Mapping[str, ParamSpec]
+    size_axis: str
+
+
+KERNELS: Dict[str, KernelSpec] = {
+    # fused projection+sign+pack; tiles the encoded rows
+    "hash_encode": KernelSpec(
+        {"block_s": ParamSpec("REPRO_ENCODE_BLOCK_S", 512)},
+        "rows encoded per call"),
+    # batched Hamming scoring; tiles the code-cache rows
+    "hamming_score": KernelSpec(
+        {"block_s": ParamSpec("REPRO_HAMMING_BLOCK_S", 2048)},
+        "code-cache rows (S)"),
+    # fused top-k gather+decode; DMA chunk over the selected rows
+    "gather_decode": KernelSpec(
+        {"block_k": ParamSpec("REPRO_GATHER_BLOCK_K", 128)},
+        "selected rows (budget k)"),
+    # dense single-sequence flash decode; tiles the kv cache rows
+    "flash_decode": KernelSpec(
+        {"block_k": ParamSpec("REPRO_DECODE_BLOCK_K", 1024)},
+        "cache rows (S)"),
+    # batched flash prefill; q tile x kv tile (paged twins tile kv at
+    # the pool page size instead — tune that via "paged_pool")
+    "flash_prefill": KernelSpec(
+        {"block_q": ParamSpec("REPRO_PREFILL_BLOCK_Q", 256),
+         "block_k": ParamSpec("REPRO_PREFILL_BLOCK_K", 512)},
+        "kv rows (S_k)"),
+    # single-head training/prefill flash attention
+    "flash_attention": KernelSpec(
+        {"block_q": ParamSpec("REPRO_ATTN_BLOCK_Q", 512),
+         "block_k": ParamSpec("REPRO_ATTN_BLOCK_K", 512)},
+        "sequence rows (S)"),
+    # serving page pools: the paged kernels always tile kv at the pool
+    # page size, so pool construction time IS their block-size decision
+    "paged_pool": KernelSpec(
+        {"page_size": ParamSpec("REPRO_PAGE_SIZE", 8)},
+        "rows per page"),
+}
+
+
+class TuningTableError(ValueError):
+    """A tuning table failed schema validation (hard error — a
+    malformed table must never silently fall back to defaults)."""
+
+
+Bucket = Union[int, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One validated tuning-table entry."""
+    kernel: str
+    backend: str                    # "cpu" | "tpu" | "gpu" | "*"
+    dtype: str                     # jnp dtype name | "*"
+    bucket: Bucket                 # covers sizes <= bucket; "*" = any
+    config: Mapping[str, int]
+
+
+class TuningTable:
+    """Parsed, validated table with (backend, dtype, bucket) lookup."""
+
+    def __init__(self, entries: List[KernelConfig], path: str):
+        self.entries = entries
+        self.path = path
+
+    def lookup(self, kernel: str, *, backend: str,
+               dtype: Optional[str], size: Optional[int]
+               ) -> Optional[Mapping[str, int]]:
+        """Most-specific covering entry: exact backend beats ``"*"``,
+        exact dtype beats ``"*"``, the tightest bucket >= size beats a
+        wildcard bucket. Returns the entry's config dict or None."""
+        best: Optional[KernelConfig] = None
+        best_key: Optional[Tuple] = None
+        for e in self.entries:
+            if e.kernel != kernel:
+                continue
+            if e.backend != "*" and e.backend != backend:
+                continue
+            if e.dtype != "*" and (dtype is None or e.dtype != dtype):
+                continue
+            if e.bucket == "*":
+                bucket_rank: Tuple[int, int] = (1, 0)
+            else:
+                if size is None or int(e.bucket) < size:
+                    continue
+                bucket_rank = (0, int(e.bucket))
+            key = (0 if e.backend != "*" else 1,
+                   0 if e.dtype != "*" else 1,
+                   bucket_rank)
+            if best is None or key < best_key:
+                best, best_key = e, key
+        return None if best is None else best.config
+
+
+def _validate_entry(raw: Any, i: int, path: str) -> KernelConfig:
+    ctx = f"{path}: entries[{i}]"
+    if not isinstance(raw, dict):
+        raise TuningTableError(f"{ctx}: expected an object, got "
+                               f"{type(raw).__name__}")
+    required = {"kernel", "backend", "dtype", "bucket", "config"}
+    extra = set(raw) - required
+    if extra or set(raw) != required:
+        raise TuningTableError(
+            f"{ctx}: keys must be exactly {sorted(required)} "
+            f"(got {sorted(raw)})")
+    kernel = raw["kernel"]
+    if kernel not in KERNELS:
+        raise TuningTableError(
+            f"{ctx}: unknown kernel {kernel!r} — known kernels: "
+            f"{sorted(KERNELS)}")
+    for field in ("backend", "dtype"):
+        if not isinstance(raw[field], str) or not raw[field]:
+            raise TuningTableError(
+                f"{ctx}: {field} must be a non-empty string "
+                f"(got {raw[field]!r})")
+    bucket = raw["bucket"]
+    if bucket != "*":
+        if not isinstance(bucket, int) or isinstance(bucket, bool) \
+                or bucket <= 0:
+            raise TuningTableError(
+                f"{ctx}: bucket must be a positive integer or \"*\" "
+                f"(got {bucket!r})")
+    config = raw["config"]
+    if not isinstance(config, dict) or not config:
+        raise TuningTableError(
+            f"{ctx}: config must be a non-empty object of "
+            f"param -> int (got {config!r})")
+    spec = KERNELS[kernel]
+    for pname, pval in config.items():
+        if pname not in spec.params:
+            raise TuningTableError(
+                f"{ctx}: kernel {kernel!r} has no tunable param "
+                f"{pname!r} — tunable: {sorted(spec.params)}")
+        if not isinstance(pval, int) or isinstance(pval, bool) \
+                or pval <= 0:
+            raise TuningTableError(
+                f"{ctx}: {kernel}.{pname} must be a positive integer "
+                f"(got {pval!r})")
+    return KernelConfig(kernel=kernel, backend=raw["backend"],
+                        dtype=raw["dtype"], bucket=bucket,
+                        config=dict(config))
+
+
+def parse_table(obj: Any, path: str = "<inline>") -> TuningTable:
+    """Validate a decoded JSON table object. Raises
+    :class:`TuningTableError` on any schema violation."""
+    if not isinstance(obj, dict):
+        raise TuningTableError(f"{path}: table must be a JSON object")
+    if obj.get("version") != 1:
+        raise TuningTableError(
+            f"{path}: unsupported table version {obj.get('version')!r} "
+            "(expected 1)")
+    entries = obj.get("entries")
+    if not isinstance(entries, list):
+        raise TuningTableError(f"{path}: \"entries\" must be a list")
+    return TuningTable(
+        [_validate_entry(e, i, path) for i, e in enumerate(entries)],
+        path)
+
+
+_DEFAULT_TABLE_PATH = os.path.join(os.path.dirname(__file__),
+                                   "tuning", "default.json")
+
+
+@functools.lru_cache(maxsize=None)
+def _load_table(path: str) -> TuningTable:
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except FileNotFoundError:
+        raise TuningTableError(
+            f"tuning table not found: {path} (REPRO_TUNING_TABLE must "
+            "point at an existing table; the packaged default lives at "
+            f"{_DEFAULT_TABLE_PATH})")
+    except json.JSONDecodeError as e:
+        raise TuningTableError(f"{path}: not valid JSON ({e})")
+    return parse_table(obj, path)
+
+
+def active_table() -> TuningTable:
+    """The table in effect: ``REPRO_TUNING_TABLE`` or the packaged
+    default. Parsed once per path (lru-cached)."""
+    return _load_table(os.environ.get("REPRO_TUNING_TABLE")
+                       or _DEFAULT_TABLE_PATH)
+
+
+def clear_table_cache() -> None:
+    """Drop parsed-table caches (tests that rewrite a table in place)."""
+    _load_table.cache_clear()
+
+
+# ===========================================================================
+# Resolution
+# ===========================================================================
 def block_env(name: str, default: int) -> int:
-    """Env-tunable block size (``None``-default resolution helper)."""
+    """Env-tunable block size. Unset -> ``default``; set -> validated
+    positive integer (a 0/negative/garbage knob used to crash deep
+    inside the kernel trace with no pointer back to the knob)."""
     val = os.environ.get(name)
-    return default if val is None else int(val)
+    if val is None:
+        return default
+    try:
+        ival = int(val)
+    except ValueError:
+        raise ValueError(
+            f"{name}={val!r}: expected a positive integer block size")
+    if ival <= 0:
+        raise ValueError(
+            f"{name}={ival}: block sizes must be positive (the knob "
+            "counts rows per kernel tile)")
+    return ival
 
 
-def gather_block_k(block_k: Optional[int] = None) -> int:
-    """Rows per DMA chunk of the paged fused-gather kernels."""
-    if block_k is not None:
-        return block_k
-    return block_env("REPRO_GATHER_BLOCK_K", 128)
+def _check_aligned(kernel: str, param: str, value: int, spec: ParamSpec,
+                   backend: str, source: str) -> int:
+    where = f"{source}; override knob: {spec.env}" \
+        if spec.env not in source else source
+    if value <= 0:
+        raise ValueError(
+            f"{kernel}.{param}={value} (from {where}): block sizes "
+            "must be positive")
+    if backend == "tpu" and spec.tpu_align > 1 \
+            and value % spec.tpu_align != 0:
+        raise ValueError(
+            f"{kernel}.{param}={value} (from {where}): must be a "
+            f"multiple of {spec.tpu_align} on the tpu backend "
+            "(f32 sublane tiling — see DESIGN.md §3 "
+            "'Autotuner & dispatch')")
+    return value
 
 
-def hamming_block_s(block_s: Optional[int] = None) -> int:
+def _dtype_key(dtype) -> Optional[str]:
+    if dtype is None:
+        return None
+    import jax.numpy as jnp
+    return jnp.dtype(dtype).name
+
+
+def resolve(kernel: str, param: str, explicit: Optional[int] = None, *,
+            size: Optional[int] = None, dtype=None,
+            backend: Optional[str] = None) -> int:
+    """Resolve one tile parameter: explicit > env > table > builtin.
+
+    ``size`` is the kernel's bucket axis (see the registry's
+    ``size_axis``); ``dtype`` the stream dtype; both optional hints —
+    without them only wildcard table entries match. Explicit caller
+    args bypass validation (kernel tests pin arbitrary tilings);
+    env- and table-sourced values are validated against the backend's
+    alignment with an error naming the knob.
+    """
+    spec = KERNELS[kernel].params[param]
+    if explicit is not None:
+        return int(explicit)
+    backend = backend or jax.default_backend()
+    if os.environ.get(spec.env) is not None:
+        return _check_aligned(kernel, param,
+                              block_env(spec.env, spec.default), spec,
+                              backend, f"env {spec.env}")
+    cfg = active_table().lookup(kernel, backend=backend,
+                                dtype=_dtype_key(dtype), size=size)
+    if cfg is not None and param in cfg:
+        return _check_aligned(kernel, param, cfg[param], spec, backend,
+                              f"tuning table {active_table().path}")
+    return spec.default
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel getters (the dispatch surface the kernel wrappers call).
+# Signatures stay compatible with the old flat-env getters; ``size`` /
+# ``dtype`` hints opt a call site into shape-bucketed table entries.
+# ---------------------------------------------------------------------------
+def gather_block_k(block_k: Optional[int] = None, *,
+                   size: Optional[int] = None, dtype=None) -> int:
+    """Rows per DMA chunk of the paged fused-gather kernels
+    (bucket axis: the selection budget k)."""
+    return resolve("gather_decode", "block_k", block_k, size=size,
+                   dtype=dtype)
+
+
+def hamming_block_s(block_s: Optional[int] = None, *,
+                    size: Optional[int] = None, dtype=None) -> int:
     """Code-cache rows per tile of the batched Hamming kernels."""
-    if block_s is not None:
-        return block_s
-    return block_env("REPRO_HAMMING_BLOCK_S", 2048)
+    return resolve("hamming_score", "block_s", block_s, size=size,
+                   dtype=dtype)
 
 
-def encode_block_s(block_s: Optional[int] = None) -> int:
+def encode_block_s(block_s: Optional[int] = None, *,
+                   size: Optional[int] = None, dtype=None) -> int:
     """Sequence rows per tile of the fused hash-encode kernel."""
-    if block_s is not None:
-        return block_s
-    return block_env("REPRO_ENCODE_BLOCK_S", 512)
+    return resolve("hash_encode", "block_s", block_s, size=size,
+                   dtype=dtype)
 
 
-def prefill_block_q(block_q: Optional[int] = None) -> int:
+def decode_block_k(block_k: Optional[int] = None, *,
+                   size: Optional[int] = None, dtype=None) -> int:
+    """KV rows per tile of the dense flash-decode kernel."""
+    return resolve("flash_decode", "block_k", block_k, size=size,
+                   dtype=dtype)
+
+
+def prefill_block_q(block_q: Optional[int] = None, *,
+                    size: Optional[int] = None, dtype=None) -> int:
     """Query rows per tile of the batched flash-prefill kernels. The
     GQA group (or all H heads for MLA) is folded into the tile, so the
     folded row count is ``block_q * g`` — size it with that in mind."""
-    if block_q is not None:
-        return block_q
-    return block_env("REPRO_PREFILL_BLOCK_Q", 256)
+    return resolve("flash_prefill", "block_q", block_q, size=size,
+                   dtype=dtype)
 
 
-def prefill_block_k(block_k: Optional[int] = None) -> int:
+def prefill_block_k(block_k: Optional[int] = None, *,
+                    size: Optional[int] = None, dtype=None) -> int:
     """KV rows per tile of the batched flash-prefill kernels (the paged
     variants always tile at the pool's page size instead)."""
-    if block_k is not None:
-        return block_k
-    return block_env("REPRO_PREFILL_BLOCK_K", 512)
+    return resolve("flash_prefill", "block_k", block_k, size=size,
+                   dtype=dtype)
+
+
+def attn_block_q(block_q: Optional[int] = None, *,
+                 size: Optional[int] = None, dtype=None) -> int:
+    """Query rows per tile of the single-head flash attention."""
+    return resolve("flash_attention", "block_q", block_q, size=size,
+                   dtype=dtype)
+
+
+def attn_block_k(block_k: Optional[int] = None, *,
+                 size: Optional[int] = None, dtype=None) -> int:
+    """KV rows per tile of the single-head flash attention."""
+    return resolve("flash_attention", "block_k", block_k, size=size,
+                   dtype=dtype)
+
+
+def pool_page_size(page_size: Optional[int] = None, *,
+                   dtype=None) -> int:
+    """Rows per page of the serving page pools. The paged score /
+    prefill / gather kernels all tile kv at the pool page size, so
+    this is THEIR block-size decision, made once at
+    ``init_paged_pools`` / ``init_offloaded_pools`` time (the table's
+    tpu entry carries the >=128-row pages the MXU wants; CPU keeps the
+    small pages the allocator-granularity tests assume)."""
+    return resolve("paged_pool", "page_size", page_size, dtype=dtype)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import runtime
 from repro.models import blocks
 from repro.models.layers import chunked_ce_loss, init_linear, rms_norm
 
@@ -316,14 +317,20 @@ class Model:
         return (cfg.family in ("dense", "moe") and cfg.n_heads > 0
                 and cfg.meta_tokens == 0)
 
-    def init_paged_pools(self, num_pages: int, page_size: int):
+    def init_paged_pools(self, num_pages: int,
+                         page_size: Optional[int] = None):
         """One shared (num_pages, page_size, ...) pool per layer —
-        K/V and hash codes paged together."""
+        K/V and hash codes paged together. ``page_size=None`` consults
+        the kernel tuning table (``runtime.pool_page_size``): the paged
+        kernels tile kv at the pool page size, so pool construction is
+        their block-size decision."""
         assert self.supports_paged, self.cfg.family
+        page_size = runtime.pool_page_size(page_size)
         return [blocks.init_block_pool(self.cfg, num_pages, page_size)
                 for _ in range(self.cfg.n_layers)]
 
-    def init_offloaded_pools(self, num_pages: int, page_size: int, *,
+    def init_offloaded_pools(self, num_pages: int,
+                             page_size: Optional[int] = None, *,
                              pipeline=None):
         """Tiered pools for the offload serving mode: HATA layers keep
         only their hash codes in HBM (K/V rows live on host, fetched
@@ -339,6 +346,7 @@ class Model:
             f"{cfg.name}: offload serving requires HATA (the resident "
             "codes are what makes host K/V affordable)")
         from repro.core.offload import PrefetchPipeline
+        page_size = runtime.pool_page_size(page_size)
         pipeline = pipeline or PrefetchPipeline()
         pools = [
             blocks.init_block_pool(cfg, num_pages, page_size)
@@ -386,6 +394,11 @@ class Model:
         ``ctx``/``last`` being traced means one compiled shape serves
         every chunk of every prompt."""
         cfg = self.cfg
+        from repro.core import cache_view as cv
+        # one stacked context upload for ALL offloaded MLA layers
+        # instead of a per-layer logical upload inside each attend
+        # (no-op for non-offloaded view stacks)
+        views = cv.stage_mla_ctx_uploads(views)
         x = self.embed(params, tokens)
         new_views = []
         for li, (bp, w_h) in enumerate(self._flat_layer_params(params)):

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core import cache_view as cache_view_mod
 from repro.core.paged_cache import PageAllocator, PrefixCache
+from repro.kernels import runtime
 from repro.models import Model
 from repro.serving.base import EngineBase
 from repro.serving.request import Request
@@ -86,7 +87,7 @@ class PagedServingEngine(EngineBase):
     """Continuous batching over a paged KV+code cache."""
 
     def __init__(self, model: Model, params, *, num_pages: int = 64,
-                 page_size: int = 8, max_batch: int = 4,
+                 page_size: Optional[int] = None, max_batch: int = 4,
                  max_len_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  watermark_pages: int = 0, prefix_sharing: bool = True,
@@ -119,6 +120,12 @@ class PagedServingEngine(EngineBase):
             warnings.warn(msg, stacklevel=2)
         super().__init__(model, params, max_batch=max_batch,
                          sample=sample, seed=seed)
+        # page_size=None consults the tuning table (REPRO_PAGE_SIZE /
+        # REPRO_TUNING_TABLE win): every paged kernel tiles kv at the
+        # pool page size, so pool construction is their block-size
+        # decision — the tpu table entry carries the >=128-row pages
+        # the MXU wants, CPU keeps 8-row test-scale pages.
+        page_size = runtime.pool_page_size(page_size)
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk or 2 * page_size
 

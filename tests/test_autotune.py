@@ -1,0 +1,410 @@
+"""Autotuner dispatch layer (kernels/runtime.py + kernels/autotune.py).
+
+Covers the three contracts the tuning-table refactor added:
+
+  1. Schema validation — a malformed table is a hard
+     :class:`~repro.kernels.runtime.TuningTableError`, never a silent
+     fall-through to defaults.
+  2. Resolution precedence — explicit caller arg > env knob > tuning
+     table > builtin, with validation errors that *name the knob*.
+  3. Bit-exactness — switching tuning tables (including the
+     deliberately weird committed table in ``tests/data/``) must never
+     change kernel outputs, because the autotuner only emits
+     numerics-invariant axes (see DESIGN.md §3).
+
+Plus the PR's multi-layer dispatch satellites: the stacked MLA gather
+op and the offload tier's batched chunked-prefill context uploads.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core import cache_view as cv
+from repro.core import offload
+from repro.kernels import ops, runtime
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_prefill_batched)
+from repro.kernels.flash_decode import flash_decode_gathered_batched
+from repro.kernels.hamming_score import hamming_score
+from repro.kernels.hash_encode import hash_encode
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+WEIRD_TABLE = os.path.join(DATA, "tuning_weird.json")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tables(monkeypatch):
+    """Each test starts from the packaged default table (the suite may
+    itself be running under REPRO_TUNING_TABLE in the CI tuning-table
+    job — these tests manage the env var explicitly)."""
+    monkeypatch.delenv("REPRO_TUNING_TABLE", raising=False)
+    runtime.clear_table_cache()
+    yield
+    runtime.clear_table_cache()
+
+
+def _table(entries):
+    return {"version": 1, "entries": entries}
+
+
+def _entry(**kw):
+    e = {"kernel": "hash_encode", "backend": "*", "dtype": "*",
+         "bucket": "*", "config": {"block_s": 64}}
+    e.update(kw)
+    return e
+
+
+# ===========================================================================
+# 1. table schema validation
+# ===========================================================================
+def test_parse_ok_and_default_table_loads():
+    t = runtime.parse_table(_table([_entry()]))
+    assert t.entries[0].config == {"block_s": 64}
+    # the packaged default must always parse
+    assert runtime.active_table().entries
+
+
+def test_unknown_kernel_is_hard_error():
+    with pytest.raises(runtime.TuningTableError, match="unknown kernel"):
+        runtime.parse_table(_table([_entry(kernel="warp_drive")]))
+
+
+@pytest.mark.parametrize("bucket", [0, -3, True, "big", 2.5, None])
+def test_malformed_bucket_is_hard_error(bucket):
+    with pytest.raises(runtime.TuningTableError, match="bucket"):
+        runtime.parse_table(_table([_entry(bucket=bucket)]))
+
+
+@pytest.mark.parametrize("obj", [
+    [],                                       # not an object
+    {"entries": []},                          # missing version
+    {"version": 2, "entries": []},            # wrong version
+    {"version": 1},                           # missing entries
+    {"version": 1, "entries": {"a": 1}},      # entries not a list
+])
+def test_malformed_toplevel_is_hard_error(obj):
+    with pytest.raises(runtime.TuningTableError):
+        runtime.parse_table(obj)
+
+
+def test_unknown_param_is_hard_error():
+    with pytest.raises(runtime.TuningTableError, match="no tunable param"):
+        runtime.parse_table(_table([_entry(config={"block_q": 64})]))
+
+
+@pytest.mark.parametrize("val", [0, -1, True, "64", 1.5, None])
+def test_bad_param_value_is_hard_error(val):
+    with pytest.raises(runtime.TuningTableError, match="positive integer"):
+        runtime.parse_table(_table([_entry(config={"block_s": val})]))
+
+
+def test_extra_or_missing_entry_keys_are_hard_errors():
+    with pytest.raises(runtime.TuningTableError, match="keys"):
+        runtime.parse_table(_table([_entry(note="searched on ci-host")]))
+    short = _entry()
+    del short["backend"]
+    with pytest.raises(runtime.TuningTableError, match="keys"):
+        runtime.parse_table(_table([short]))
+
+
+def test_missing_table_file_is_hard_error(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(tmp_path / "nope.json"))
+    runtime.clear_table_cache()
+    with pytest.raises(runtime.TuningTableError, match="not found"):
+        runtime.active_table()
+
+
+def test_invalid_json_is_hard_error(monkeypatch, tmp_path):
+    p = tmp_path / "broken.json"
+    p.write_text("{")
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(p))
+    runtime.clear_table_cache()
+    with pytest.raises(runtime.TuningTableError, match="not valid JSON"):
+        runtime.active_table()
+
+
+# ===========================================================================
+# 2. lookup + resolution precedence
+# ===========================================================================
+def test_lookup_specificity_order():
+    t = runtime.parse_table(_table([
+        _entry(config={"block_s": 100}),
+        _entry(bucket=4096, config={"block_s": 200}),
+        _entry(bucket=1024, config={"block_s": 300}),
+        _entry(backend="cpu", config={"block_s": 400}),
+        _entry(backend="cpu", dtype="float32", config={"block_s": 500}),
+    ]))
+
+    def look(**kw):
+        return t.lookup("hash_encode", **kw)["block_s"]
+
+    assert look(backend="tpu", dtype=None, size=512) == 300    # tightest
+    assert look(backend="tpu", dtype=None, size=2048) == 200
+    assert look(backend="tpu", dtype=None, size=8192) == 100   # wildcard
+    assert look(backend="tpu", dtype=None, size=None) == 100
+    # exact backend beats any wildcard-backend bucket specificity
+    assert look(backend="cpu", dtype="bfloat16", size=512) == 400
+    assert look(backend="cpu", dtype="float32", size=512) == 500
+    assert t.lookup("flash_decode", backend="cpu", dtype=None,
+                    size=None) is None
+
+
+def test_resolve_precedence_chain(monkeypatch, tmp_path):
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps(_table(
+        [_entry(kernel="gather_decode", config={"block_k": 48})])))
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(p))
+    runtime.clear_table_cache()
+    # table > builtin
+    assert runtime.resolve("gather_decode", "block_k") == 48
+    # kernel absent from table -> builtin
+    assert runtime.resolve("flash_decode", "block_k") == \
+        runtime.KERNELS["flash_decode"].params["block_k"].default
+    # env > table
+    monkeypatch.setenv("REPRO_GATHER_BLOCK_K", "24")
+    assert runtime.resolve("gather_decode", "block_k") == 24
+    # explicit > env
+    assert runtime.resolve("gather_decode", "block_k", 16) == 16
+
+
+@pytest.mark.parametrize("bad", ["0", "-8", "2.5", "banana"])
+def test_env_knob_errors_name_the_knob(monkeypatch, bad):
+    monkeypatch.setenv("REPRO_GATHER_BLOCK_K", bad)
+    with pytest.raises(ValueError, match="REPRO_GATHER_BLOCK_K"):
+        runtime.resolve("gather_decode", "block_k")
+
+
+def test_block_env_default_and_validation(monkeypatch):
+    monkeypatch.delenv("REPRO_HAMMING_BLOCK_S", raising=False)
+    assert runtime.block_env("REPRO_HAMMING_BLOCK_S", 2048) == 2048
+    monkeypatch.setenv("REPRO_HAMMING_BLOCK_S", "96")
+    assert runtime.block_env("REPRO_HAMMING_BLOCK_S", 2048) == 96
+    for bad in ("0", "-4", "x"):
+        monkeypatch.setenv("REPRO_HAMMING_BLOCK_S", bad)
+        with pytest.raises(ValueError, match="REPRO_HAMMING_BLOCK_S"):
+            runtime.block_env("REPRO_HAMMING_BLOCK_S", 2048)
+
+
+def test_tpu_alignment_enforced_for_env_and_table(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_GATHER_BLOCK_K", "7")
+    with pytest.raises(ValueError, match="multiple of 8"):
+        runtime.resolve("gather_decode", "block_k", backend="tpu")
+    # same value is fine off-TPU
+    assert runtime.resolve("gather_decode", "block_k",
+                           backend="cpu") == 7
+    monkeypatch.delenv("REPRO_GATHER_BLOCK_K")
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps(_table(
+        [_entry(kernel="gather_decode", config={"block_k": 12})])))
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(p))
+    runtime.clear_table_cache()
+    # table-sourced misalignment names the override knob
+    with pytest.raises(ValueError, match="REPRO_GATHER_BLOCK_K"):
+        runtime.resolve("gather_decode", "block_k", backend="tpu")
+    # explicit caller args bypass validation (tests pin odd tilings)
+    assert runtime.resolve("gather_decode", "block_k", 7,
+                           backend="tpu") == 7
+
+
+# ===========================================================================
+# 3. bit-exactness across tuning tables
+# ===========================================================================
+def _matrix_case(kernel):
+    """Zero-arg runner over fixed inputs, dispatching through the
+    table (no explicit block args)."""
+    rng = np.random.default_rng(7)
+    if kernel == "hash_encode":
+        x = jnp.asarray(rng.standard_normal((200, 64)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+        return lambda: hash_encode(x, w)
+    if kernel == "hamming_score":
+        q = jnp.asarray(rng.integers(0, 2 ** 16, (4, 2)), jnp.uint32)
+        k = jnp.asarray(rng.integers(0, 2 ** 16, (700, 2)), jnp.uint32)
+        return lambda: hamming_score(q, k, rbit=64)
+    if kernel == "flash_attention":
+        q = jnp.asarray(rng.standard_normal((512, 32)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((512, 32)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((512, 32)), jnp.float32)
+        return lambda: flash_attention(q, k, v, causal=True)
+    if kernel == "flash_prefill":
+        q = jnp.asarray(rng.standard_normal((2, 256, 4, 32)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((2, 256, 2, 32)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, 256, 2, 32)), jnp.float32)
+        return lambda: flash_prefill_batched(q, k, v)
+    if kernel == "gather_decode":
+        b, h_kv, g, d, s, ksel = 2, 2, 4, 32, 256, 64
+        q = jnp.asarray(rng.standard_normal((b, h_kv, g, d)), jnp.float32)
+        kc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+        vc = jnp.asarray(rng.standard_normal((b, s, h_kv, d)), jnp.float32)
+        idx = jnp.asarray(np.stack(
+            [[rng.permutation(s)[:ksel] for _ in range(h_kv)]
+             for _ in range(b)]), jnp.int32)
+        return lambda: flash_decode_gathered_batched(q, kc, vc, idx)
+    raise AssertionError(kernel)
+
+
+_MATRIX = [
+    # (kernel, param, value the weird table resolves to)
+    ("hash_encode", "block_s", 96),
+    ("hamming_score", "block_s", 321),
+    ("flash_attention", "block_q", 320),
+    ("flash_prefill", "block_q", 96),
+    # collapses via min(block_k, k): the chunk walk is identical, the
+    # table plumbing is still exercised end to end
+    ("gather_decode", "block_k", 65536),
+]
+
+
+@pytest.mark.parametrize("kernel,param,weird_val", _MATRIX)
+def test_weird_table_outputs_bit_exact(kernel, param, weird_val,
+                                       monkeypatch):
+    """The committed non-default table must change resolved configs
+    without changing a single output bit (resolution happens at trace
+    time, so the jit caches are dropped around the switch)."""
+    run = _matrix_case(kernel)
+    assert runtime.resolve(kernel, param) != weird_val  # non-vacuous
+    jax.clear_caches()
+    base = jax.tree_util.tree_map(np.asarray, run())
+
+    monkeypatch.setenv("REPRO_TUNING_TABLE", WEIRD_TABLE)
+    runtime.clear_table_cache()
+    jax.clear_caches()
+    assert runtime.resolve(kernel, param) == weird_val
+    got = jax.tree_util.tree_map(np.asarray, run())
+    jax.tree_util.tree_map(assert_array_equal, base, got)
+
+
+def test_weird_table_bucketed_entry_dispatches_on_size(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNING_TABLE", WEIRD_TABLE)
+    runtime.clear_table_cache()
+    # cpu/float32 bucket-48 entry: sizes <= 48 take it, larger sizes
+    # fall through to the wildcard row
+    assert runtime.resolve("hash_encode", "block_s", size=32,
+                           dtype=jnp.float32, backend="cpu") == 11
+    assert runtime.resolve("hash_encode", "block_s", size=64,
+                           dtype=jnp.float32, backend="cpu") == 96
+
+
+# ===========================================================================
+# 4. multi-layer MLA gather dispatch
+# ===========================================================================
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("return_stats", [False, True])
+def test_mla_multilayer_matches_per_layer_loop(impl, return_stats):
+    L, B, H, S, r, rd, k = 3, 2, 4, 96, 16, 8, 24
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((L, B, H, r + rd)), jnp.float32)
+    ckv = jnp.asarray(rng.standard_normal((L, B, S, r)), jnp.float32)
+    krope = jnp.asarray(rng.standard_normal((L, B, S, rd)), jnp.float32)
+    idx = jnp.asarray(np.stack(
+        [[rng.permutation(S)[:k] for _ in range(B)] for _ in range(L)]),
+        jnp.int32)
+    n_valid = jnp.asarray(rng.integers(1, k + 1, (L, B)), jnp.int32)
+    scale = (r + rd) ** -0.5
+    with ops.use_impl(impl):
+        got = ops.mla_gather_decode_multilayer(
+            q, ckv, krope, idx, lora_rank=r, scale=scale,
+            n_valid=n_valid, return_stats=return_stats)
+        want = [ops.mla_gather_decode(
+            q[l], ckv[l], krope[l], idx[l], lora_rank=r, scale=scale,
+            n_valid=n_valid[l], return_stats=return_stats)
+            for l in range(L)]
+    if return_stats:
+        for j in range(3):
+            assert_array_equal(
+                np.asarray(got[j]),
+                np.stack([np.asarray(w[j]) for w in want]))
+    else:
+        assert_array_equal(np.asarray(got),
+                           np.stack([np.asarray(w) for w in want]))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mla_multilayer_sel_mask(impl):
+    L, B, H, S, r, rd, k = 2, 2, 2, 64, 16, 8, 16
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.standard_normal((L, B, H, r + rd)), jnp.float32)
+    ckv = jnp.asarray(rng.standard_normal((L, B, S, r)), jnp.float32)
+    krope = jnp.asarray(rng.standard_normal((L, B, S, rd)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, S, (L, B, k)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (L, B, k)) > 0)
+    # keep at least one valid selection per (layer, request) lane
+    mask = mask.at[:, :, 0].set(True)
+    scale = (r + rd) ** -0.5
+    with ops.use_impl(impl):
+        got = ops.mla_gather_decode_multilayer(
+            q, ckv, krope, idx, lora_rank=r, scale=scale, sel_mask=mask)
+        want = [ops.mla_gather_decode(
+            q[l], ckv[l], krope[l], idx[l], lora_rank=r, scale=scale,
+            sel_mask=mask[l]) for l in range(L)]
+    assert_array_equal(np.asarray(got),
+                       np.stack([np.asarray(w) for w in want]))
+
+
+# ===========================================================================
+# 5. batched chunked-prefill context uploads (offload tier)
+# ===========================================================================
+def _offloaded_mla_layer(rng, T, page, r, rd, rbit):
+    pool = offload.init_offloaded_mla_pool(T + 1, page, r, rd,
+                                           rbit=rbit)
+    pool.host.ckv[...] = rng.standard_normal(
+        pool.host.ckv.shape).astype(np.float32)
+    pool.host.krope[...] = rng.standard_normal(
+        pool.host.krope.shape).astype(np.float32)
+    bt = jnp.asarray(np.arange(1, T + 1, dtype=np.int32)[None])
+    return cv.OffloadedMLAView(pool, bt)
+
+
+def test_stage_mla_ctx_uploads_bit_exact_and_batched():
+    """One stacked upload pair per wave serves every offloaded layer,
+    and the staged prefill_attend is bit-identical to the per-layer
+    logical-upload path it replaced."""
+    L, T, page, r, rd, rbit, C, ctx, H = 3, 4, 8, 16, 8, 32, 8, 16, 4
+    rng = np.random.default_rng(5)
+    scale = (r + rd) ** -0.5
+    events = []
+    prev = ops.set_pcie_listener(lambda n, d: events.append(d))
+    try:
+        views = []
+        for _ in range(L):
+            v = _offloaded_mla_layer(rng, T, page, r, rd, rbit)
+            ckv_c = jnp.asarray(rng.standard_normal((1, C, r)),
+                                jnp.float32)
+            krope_c = jnp.asarray(rng.standard_normal((1, C, rd)),
+                                  jnp.float32)
+            codes_c = jnp.asarray(
+                rng.integers(0, 2 ** 16, (1, C, rbit // 32)),
+                jnp.uint32)
+            views.append(v.append_chunk(ckv_c, krope_c, codes_c,
+                                        jnp.int32(ctx)))
+        n0 = events.count("up")
+        staged = cv.stage_mla_ctx_uploads(views)
+        assert events.count("up") - n0 == 2, \
+            "one stacked (ckv, krope) upload pair for ALL layers"
+        for v in staged:
+            assert v.staged_ctx is not None and v.chunk_dev is not None
+            q_lat = jnp.asarray(rng.standard_normal((1, C, H, r + rd)),
+                                jnp.float32)
+            n1 = events.count("up")
+            fast = v.prefill_attend(q_lat, jnp.int32(ctx), lora_rank=r,
+                                    scale=scale)
+            assert events.count("up") == n1, \
+                "staged path must not re-upload"
+            slow = dataclasses.replace(v, staged_ctx=None).prefill_attend(
+                q_lat, jnp.int32(ctx), lora_rank=r, scale=scale)
+            assert events.count("up") - n1 == 2, \
+                "fallback path uploads per layer"
+            assert_array_equal(np.asarray(fast), np.asarray(slow))
+    finally:
+        ops.set_pcie_listener(prev)
+
+
+def test_stage_mla_ctx_uploads_passthrough():
+    sentinel = ["not-a-view", 42]
+    assert cv.stage_mla_ctx_uploads(sentinel) == sentinel
