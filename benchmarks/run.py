@@ -2,6 +2,7 @@
 """Benchmark orchestrator — one module per paper artifact:
 
   recall_accuracy    Tables 1/2 (selection-recall proxy)
+  recall_budget_curve hash-subsystem frontier + weekly recall gate
   decode_efficiency  Figs. 4/5 (HBM byte model + CPU wall-clock)
   prefill_efficiency beyond-paper: paged flash-prefill kernel vs gather
   budget_ablation    Fig. 7
@@ -27,9 +28,10 @@ def main() -> None:
                             hashbits_ablation, offload_efficiency,
                             offload_model, opt_ablation,
                             prefill_efficiency, recall_accuracy,
-                            roofline)
+                            recall_budget_curve, roofline)
     suites = [
         ("recall_accuracy", recall_accuracy.main),
+        ("recall_budget_curve", recall_budget_curve.main),
         ("decode_efficiency", decode_efficiency.main),
         ("prefill_efficiency", prefill_efficiency.main),
         ("budget_ablation", budget_ablation.main),

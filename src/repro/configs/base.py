@@ -24,6 +24,10 @@ class HataConfig:
     budget_min: int = 512           # floor (paper: 512 @ LongBench)
     budget_max: int = 8192
     dense_layers: int = 2           # first-N layers stay dense (paper §5.1)
+    # 0 = linear projection (paper Eq. 9); >0 = hidden width of a
+    # 2-layer MLP before sign (Spotlight-style non-linear hash — one
+    # extra fused matmul in hash_encode)
+    hash_hidden: int = 0
     # learning-to-hash hyper-parameters (paper Table 11)
     sigma: float = 0.1
     epsilon: float = 0.01
@@ -43,6 +47,10 @@ class HataConfig:
                 f"HataConfig.rbit={self.rbit} must be a positive "
                 "multiple of 32 (codes are bit-packed into uint32 "
                 f"words; {self.rbit % 32} bits would be dropped)")
+        if self.hash_hidden < 0:
+            raise ValueError(
+                f"HataConfig.hash_hidden={self.hash_hidden} must be >= 0 "
+                "(0 = linear hash, >0 = MLP hidden width)")
 
     def budget(self, context_len: int) -> int:
         k = int(context_len * self.budget_frac)

@@ -1,0 +1,245 @@
+"""Recall-calibrated per-layer top-k budgets behind ONE resolver.
+
+The paper uses a single global budget (``HataConfig.budget``: a clamped
+fraction of the context). The native-top-k literature — and our own
+calibration sweeps (`repro.training.calibrate`) — show sparsity
+tolerance varies sharply per layer, so this module adds a persisted
+per-layer budget table with the same schema discipline as the kernel
+tuning tables (``kernels/runtime.py``): JSON with an explicit version,
+exact-key-set validation, and *hard errors* on anything malformed — a
+bad table must never silently fall back to the global budget.
+
+Resolution order for the budget of (layer, context):
+
+    installed table entry for the layer  >  ``HataConfig.budget``
+
+``resolve_budget`` is the ONE sanctioned ``hcfg.budget(...)`` call site
+outside the calibrator (CI grep-guards this). Paths without a concrete
+layer index — scanned layer stacks and the sequence-parallel strategy
+hooks, where the budget must be shape-static across layers — pass
+``layer=None`` and get the global budget.
+
+Tables install either explicitly (``set_budget_table`` /
+``use_budget_table`` — the serving engines take a ``budget_table=``
+argument) or via the ``REPRO_BUDGET_TABLE`` env path. Budgets stay
+static under jit: the table is read at trace time with python-int
+layers.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import HataConfig
+
+ENV_TABLE = "REPRO_BUDGET_TABLE"
+
+_REQUIRED_ENTRY_KEYS = {"layer", "budget_frac", "budget_min", "budget_max"}
+_OPTIONAL_ENTRY_KEYS = {"head_recall"}
+
+
+class BudgetTableError(ValueError):
+    """A budget table failed validation.
+
+    Raised for schema violations (missing/unknown keys, bad version),
+    unknown layer or head indices, and malformed values. This is a hard
+    error by design — a malformed table must never silently fall back
+    to the global budget.
+    """
+
+
+def _is_int(v) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
+def _validate_entry(entry, n_layers: int, n_kv_heads: Optional[int],
+                    seen: set, where: str) -> None:
+    if not isinstance(entry, dict):
+        raise BudgetTableError(f"{where}: entry must be an object, "
+                               f"got {type(entry).__name__}")
+    keys = set(entry)
+    missing = _REQUIRED_ENTRY_KEYS - keys
+    unknown = keys - _REQUIRED_ENTRY_KEYS - _OPTIONAL_ENTRY_KEYS
+    if missing:
+        raise BudgetTableError(f"{where}: missing keys {sorted(missing)}")
+    if unknown:
+        raise BudgetTableError(f"{where}: unknown keys {sorted(unknown)}")
+    layer = entry["layer"]
+    if not _is_int(layer) or not 0 <= layer < n_layers:
+        raise BudgetTableError(
+            f"{where}: unknown layer {layer!r} (table declares "
+            f"n_layers={n_layers})")
+    if layer in seen:
+        raise BudgetTableError(f"{where}: duplicate entry for layer {layer}")
+    seen.add(layer)
+    frac = entry["budget_frac"]
+    if not isinstance(frac, (int, float)) or isinstance(frac, bool) \
+            or not 0.0 < float(frac) <= 1.0:
+        raise BudgetTableError(
+            f"{where}: budget_frac must be in (0, 1], got {frac!r}")
+    bmin, bmax = entry["budget_min"], entry["budget_max"]
+    for name, v in (("budget_min", bmin), ("budget_max", bmax)):
+        if not _is_int(v) or v <= 0:
+            raise BudgetTableError(
+                f"{where}: {name} must be a positive int, got {v!r}")
+    if bmin > bmax:
+        raise BudgetTableError(
+            f"{where}: budget_min={bmin} > budget_max={bmax}")
+    hr = entry.get("head_recall")
+    if hr is None:
+        return
+    if not isinstance(hr, dict):
+        raise BudgetTableError(f"{where}: head_recall must be an object")
+    for hk, hv in hr.items():
+        if not (isinstance(hk, str) and hk.isdigit()):
+            raise BudgetTableError(
+                f"{where}: head_recall key {hk!r} is not a head index")
+        head = int(hk)
+        if n_kv_heads is not None and head >= n_kv_heads:
+            raise BudgetTableError(
+                f"{where}: unknown head {head} (table declares "
+                f"n_kv_heads={n_kv_heads})")
+        if not isinstance(hv, (int, float)) or isinstance(hv, bool) \
+                or not 0.0 <= float(hv) <= 1.0:
+            raise BudgetTableError(
+                f"{where}: head_recall[{hk}]={hv!r} not a recall in [0, 1]")
+
+
+@dataclass(frozen=True)
+class BudgetTable:
+    """Validated per-layer budget overrides.
+
+    ``entries`` maps layer index -> (budget_frac, budget_min,
+    budget_max). Layers without an entry fall back to the global
+    ``HataConfig.budget``.
+    """
+    n_layers: int
+    entries: tuple                  # ((layer, frac, bmin, bmax), ...)
+    model: Optional[str] = None
+
+    @functools.cached_property
+    def _by_layer(self) -> Dict[int, tuple]:
+        return {e[0]: e for e in self.entries}
+
+    def layers(self):
+        return sorted(self._by_layer)
+
+    def budget(self, layer: int, hcfg: HataConfig, context_len: int) -> int:
+        """The clamped budget for ``layer`` at ``context_len`` — same
+        clamp semantics as ``HataConfig.budget`` with per-layer
+        parameters."""
+        e = self._by_layer.get(layer)
+        if e is None:
+            return hcfg.budget(context_len)
+        _, frac, bmin, bmax = e
+        k = int(context_len * frac)
+        k = max(bmin, min(k, bmax))
+        return min(k, context_len)
+
+
+def parse_budget_table(obj, *, source: str = "<table>") -> BudgetTable:
+    """Validate a decoded budget-table JSON object. Hard-errors on any
+    schema violation (``BudgetTableError``)."""
+    if not isinstance(obj, dict):
+        raise BudgetTableError(f"{source}: table must be an object")
+    if obj.get("version") != 1:
+        raise BudgetTableError(
+            f"{source}: unsupported version {obj.get('version')!r} "
+            "(expected 1)")
+    known = {"version", "model", "n_layers", "n_kv_heads", "layers"}
+    unknown = set(obj) - known
+    if unknown:
+        raise BudgetTableError(f"{source}: unknown keys {sorted(unknown)}")
+    n_layers = obj.get("n_layers")
+    if not _is_int(n_layers) or n_layers <= 0:
+        raise BudgetTableError(
+            f"{source}: n_layers must be a positive int, got {n_layers!r}")
+    n_kv_heads = obj.get("n_kv_heads")
+    if n_kv_heads is not None and (not _is_int(n_kv_heads)
+                                   or n_kv_heads <= 0):
+        raise BudgetTableError(
+            f"{source}: n_kv_heads must be a positive int, "
+            f"got {n_kv_heads!r}")
+    layers = obj.get("layers")
+    if not isinstance(layers, list):
+        raise BudgetTableError(f"{source}: layers must be a list")
+    seen: set = set()
+    entries = []
+    for i, entry in enumerate(layers):
+        _validate_entry(entry, n_layers, n_kv_heads, seen,
+                        f"{source}: layers[{i}]")
+        entries.append((entry["layer"], float(entry["budget_frac"]),
+                        entry["budget_min"], entry["budget_max"]))
+    return BudgetTable(n_layers=n_layers, entries=tuple(entries),
+                       model=obj.get("model"))
+
+
+@functools.lru_cache(maxsize=None)
+def load_budget_table(path: str) -> BudgetTable:
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except FileNotFoundError as e:
+        raise BudgetTableError(f"budget table not found: {path}") from e
+    except json.JSONDecodeError as e:
+        raise BudgetTableError(f"{path}: invalid JSON: {e}") from e
+    return parse_budget_table(obj, source=path)
+
+
+def clear_table_cache() -> None:
+    load_budget_table.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Installation + the one resolver
+# ---------------------------------------------------------------------------
+_ACTIVE: Optional[BudgetTable] = None
+
+
+def set_budget_table(table: Optional[BudgetTable]) -> None:
+    global _ACTIVE
+    assert table is None or isinstance(table, BudgetTable), table
+    _ACTIVE = table
+
+
+def get_budget_table() -> Optional[BudgetTable]:
+    """The active table: explicit install wins over the env path."""
+    if _ACTIVE is not None:
+        return _ACTIVE
+    path = os.environ.get(ENV_TABLE)
+    if path:
+        return load_budget_table(path)
+    return None
+
+
+@contextlib.contextmanager
+def use_budget_table(table: Optional[BudgetTable]):
+    prev = _ACTIVE
+    set_budget_table(table)
+    try:
+        yield
+    finally:
+        set_budget_table(prev)
+
+
+def resolve_budget(hcfg: HataConfig, s_max: int, *,
+                   layer: Optional[int] = None,
+                   window: Optional[int] = None) -> int:
+    """The ONE budget resolution chain: table[layer] > hcfg.budget.
+
+    ``layer=None`` (scanned stacks, SP strategies, analytic estimators)
+    always resolves the global budget. A sliding window caps the number
+    of attendable rows, and the budget can never exceed the cache.
+    """
+    table = get_budget_table()
+    if table is not None and layer is not None:
+        k = table.budget(layer, hcfg, s_max)
+    else:
+        k = hcfg.budget(s_max)
+    if window is not None:
+        k = min(k, window)
+    return min(k, s_max)

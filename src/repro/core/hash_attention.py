@@ -20,7 +20,8 @@ two Pallas dispatches per decode wave (batched Hamming kernel, batched
 fused-gather kernel), no per-head vmap.
 
 Static-shape policy: ``k`` (the token budget) must be static under jit.
-We take ``k = hcfg.budget(max_len)`` and make selection exact for short
+We take ``k = resolve_budget(hcfg, max_len, layer=...)`` (per-layer
+budget tables apply — core/budgets.py) and make selection exact for short
 caches by (a) masking invalid rows' scores to -1 — below the score floor
 of 0 ≤ valid match scores — and (b) masking selections with score < 0
 out of the softmax *inside the fused kernel* (they contribute zero
@@ -44,6 +45,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import HataConfig
+from repro.core import budgets as _budgets
+from repro.core import hash_weights as hw
 from repro.core import paged_cache as paged
 from repro.core.kvcache import LayerKVCache, append_kv
 from repro.core.topk import chunked_topk
@@ -76,11 +79,13 @@ def hata_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
     return out, cache
 
 
-def aggregate_q_codes(q: jax.Array, w_h: jax.Array,
+def aggregate_q_codes(q: jax.Array, w_h,
                       n_kv_heads: int) -> jax.Array:
     """Encode q per-head with its kv-group's hash weights.
 
-    q: (B, H, d), w_h: (H_kv, d, rbit) -> (B, H_kv, G, W) uint32.
+    q: (B, H, d), w_h: (H_kv, d, rbit) linear — or the MLP dict form
+    (core/hash_weights.py); vmap maps over the leading head axis of
+    every leaf either way -> (B, H_kv, G, W) uint32.
     """
     b, h, d = q.shape
     g = h // n_kv_heads
@@ -91,18 +96,21 @@ def aggregate_q_codes(q: jax.Array, w_h: jax.Array,
 
 
 def clamped_budget(hcfg: HataConfig, s_max: int,
-                   window: Optional[int] = None) -> int:
+                   window: Optional[int] = None, *,
+                   layer: Optional[int] = None) -> int:
     """Static top-k budget for a cache of capacity ``s_max``.
 
     A sliding window caps the number of attendable rows, and the budget
     can never exceed the cache itself. Shared by the single-device,
     model-stack and sequence-parallel decode paths so their selection
-    shapes agree.
+    shapes agree. Resolution goes through ``core.budgets.resolve_budget``
+    — when a calibrated per-layer budget table is installed and the
+    caller passes a concrete ``layer`` (the unrolled decode paths do),
+    that layer's calibrated budget replaces the global one; scanned
+    stacks and SP strategies pass ``layer=None`` and keep the global
+    budget (their selection shape must be layer-invariant).
     """
-    budget = hcfg.budget(s_max)
-    if window is not None:
-        budget = min(budget, window)
-    return min(budget, s_max)
+    return _budgets.resolve_budget(hcfg, s_max, layer=layer, window=window)
 
 
 def mask_scores(scores: jax.Array, n_valid: jax.Array, *,
@@ -161,9 +169,10 @@ def hata_attend(q: jax.Array, cache: LayerKVCache, idx: jax.Array,
 
 
 def hata_decode_batched(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
-                        w_h: jax.Array, cache: LayerKVCache, *,
+                        w_h, cache: LayerKVCache, *,
                         hcfg: HataConfig, pos: jax.Array,
                         window: Optional[int] = None,
+                        layer: Optional[int] = None,
                         fused_gather: bool = True) -> HataDecodeOut:
     """Alg. 3, batched over requests at arbitrary depths.
 
@@ -179,7 +188,7 @@ def hata_decode_batched(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
     """
     h_kv = k_new.shape[2]
     s_max = cache.max_len
-    rbit = w_h.shape[-1]
+    rbit = hw.rbit_of(w_h)
 
     # --- Encode & cache update (Alg. 3 lines 3-9) ---
     k_codes = ops.hash_encode_heads(k_new, w_h)      # (B, 1, H_kv, W)
@@ -187,7 +196,7 @@ def hata_decode_batched(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
 
     # --- Score + select (lines 10-15), per-row validity ---
     n_valid = jnp.asarray(pos) + 1                   # scalar or (B,)
-    budget = clamped_budget(hcfg, s_max, window)
+    budget = clamped_budget(hcfg, s_max, window, layer=layer)
     top_scores, idx, scores = hata_score_select(
         q, w_h, cache.codes, rbit=rbit, budget=budget, n_valid=n_valid,
         window=window)
@@ -238,9 +247,10 @@ def hata_score_select_paged(q: jax.Array, w_h: jax.Array,
 
 
 def hata_decode_paged(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
-                      w_h: jax.Array, pool: paged.PagedKVPool,
+                      w_h, pool: paged.PagedKVPool,
                       block_table: jax.Array, *, hcfg: HataConfig,
                       pos: jax.Array, window: Optional[int] = None,
+                      layer: Optional[int] = None,
                       ) -> Tuple[jax.Array, paged.PagedKVPool,
                                  jax.Array, jax.Array]:
     """Alg. 3 over a paged cache: the serving decode wave's per-layer
@@ -254,7 +264,7 @@ def hata_decode_paged(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
     Returns (out (B, H, d), pool, idx (B, H_kv, k) logical, scores).
     """
     psz = pool.page_size
-    rbit = w_h.shape[-1]
+    rbit = hw.rbit_of(w_h)
     s_log = block_table.shape[1] * psz
 
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (q.shape[0],))
@@ -263,7 +273,7 @@ def hata_decode_paged(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
     pool = paged.append_rows_kv(pool, k_new, v_new, k_codes, phys_new)
 
     n_valid = jnp.asarray(pos) + 1
-    budget = clamped_budget(hcfg, s_log, window)
+    budget = clamped_budget(hcfg, s_log, window, layer=layer)
     top_scores, idx, scores = hata_score_select_paged(
         q, w_h, pool.codes, block_table, rbit=rbit, budget=budget,
         n_valid=n_valid, window=window)

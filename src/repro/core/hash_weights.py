@@ -1,0 +1,57 @@
+"""Dual-form hash weights: linear array vs non-linear MLP dict.
+
+The hash projection is either the paper's linear ``W_H`` — a plain
+``(H_kv, d, rbit)`` array — or the trained non-linear variant (a small
+2-layer MLP before sign, Spotlight-style): a dict pytree
+
+    {"w1": (H_kv, d, hidden), "b1": (H_kv, hidden),
+     "w2": (H_kv, hidden, rbit)}
+
+Both forms flow through every entry point (dense, paged, offloaded,
+MLA, sequence-parallel) because everything that touches them — stacking
+into ``params["hash_stack"]``, per-layer slicing, vmapping over heads,
+checkpointing — is pytree-generic. The helpers here replace the two raw
+accesses that were not: ``w_h.shape[-1]`` (rbit) and ``w_h[0]`` (the
+MLA single-head slice).
+"""
+from __future__ import annotations
+
+from typing import Any, Union
+
+import jax
+
+HashWeights = Union[jax.Array, dict]
+
+
+def is_mlp(w_h: HashWeights) -> bool:
+    """True for the MLP dict form, False for the linear array."""
+    return isinstance(w_h, dict)
+
+
+def rbit_of(w_h: HashWeights) -> int:
+    """Number of hash bits produced by either weight form."""
+    if isinstance(w_h, dict):
+        return w_h["w2"].shape[-1]
+    return w_h.shape[-1]
+
+
+def head_slice(w_h: HashWeights, i: int) -> HashWeights:
+    """Per-head weights: drops the leading H_kv axis of every leaf."""
+    return jax.tree.map(lambda t: t[i], w_h)
+
+
+def head0(w_h: HashWeights) -> HashWeights:
+    """The MLA single-stream slice (``w_h[0]`` for the linear form)."""
+    return head_slice(w_h, 0)
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    """Structural + bit-exact value equality of two hash-weight trees."""
+    import numpy as np
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    return all(x.shape == y.shape and x.dtype == y.dtype
+               and bool(np.array_equal(np.asarray(x), np.asarray(y)))
+               for x, y in zip(la, lb))

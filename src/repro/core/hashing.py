@@ -18,7 +18,7 @@ Optimizer: SGD, lr 0.1, momentum 0.9, weight decay 1e-6 (Table 11).
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -116,6 +116,139 @@ def train_hash_weights_per_head(key: jax.Array, q: jax.Array, k: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Non-linear (MLP) hash training — Spotlight-style 2-layer MLP before
+# sign. Same Eq. 9 loss with the relaxed sign applied to the MLP output;
+# the uncorrelation term regularizes the output projection w2 (the layer
+# that determines bit correlation). Weight form: the dict pytree of
+# core/hash_weights.py without the leading head axis.
+# ---------------------------------------------------------------------------
+def mlp_hash_init(key: jax.Array, d: int, hidden: int, rbit: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d, hidden), jnp.float32)
+        / jnp.sqrt(d),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, rbit), jnp.float32)
+        / jnp.sqrt(hidden),
+    }
+
+
+def mlp_warm_start(w_lin: jax.Array) -> dict:
+    """Embed a linear hash (d, rbit) exactly into the MLP form.
+
+    With hidden = 2·rbit, ``relu(x[W, −W]) @ [I; −I] = xW`` — the MLP
+    starts bit-identical to the linear hash, so fine-tuning can only
+    move off a known-good point (the trainer keeps the better of the
+    two on a validation split).
+    """
+    rbit = w_lin.shape[-1]
+    eye = jnp.eye(rbit, dtype=jnp.float32)
+    return {
+        "w1": jnp.concatenate([w_lin, -w_lin], axis=-1),
+        "b1": jnp.zeros((2 * rbit,), jnp.float32),
+        "w2": jnp.concatenate([eye, -eye], axis=0),
+    }
+
+
+def relaxed_hash_mlp(x: jax.Array, w: dict, sigma: float) -> jax.Array:
+    """Differentiable surrogate of sign(relu(xW1 + b1) W2)."""
+    hid = jax.nn.relu(x @ w["w1"] + w["b1"])
+    return 2.0 * jax.nn.sigmoid(sigma * (hid @ w["w2"])) - 1.0
+
+
+def mlp_hash_loss(w: dict, q: jax.Array, k: jax.Array, s: jax.Array,
+                  hcfg: HataConfig) -> jax.Array:
+    """Eq. 9 with the MLP relaxation. Shapes as :func:`hash_loss`."""
+    rbit = w["w2"].shape[-1]
+    hq = relaxed_hash_mlp(q.astype(jnp.float32), w, hcfg.sigma)
+    hk = relaxed_hash_mlp(k.astype(jnp.float32), w, hcfg.sigma)
+    d2 = jnp.sum((hq[:, None, :] - hk) ** 2, axis=-1)
+    sim_term = jnp.sum(s * d2)
+    bal_term = jnp.sum(jnp.sum(hk, axis=1) ** 2)
+    gram = w["w2"].T @ w["w2"] - jnp.eye(rbit, dtype=w["w2"].dtype)
+    unc_term = jnp.linalg.norm(gram)
+    n = q.shape[0] * k.shape[1]
+    return (hcfg.epsilon * sim_term + hcfg.eta * bal_term) / n \
+        + hcfg.lam * unc_term
+
+
+class MLPHashTrainState(NamedTuple):
+    w: dict
+    opt: SGDState
+    step: jax.Array
+
+
+def mlp_hash_train_init(key: jax.Array, d: int, hidden: int,
+                        rbit: int) -> MLPHashTrainState:
+    w = mlp_hash_init(key, d, hidden, rbit)
+    return MLPHashTrainState(w=w, opt=sgd_init(w),
+                             step=jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("hcfg", "lr", "momentum",
+                                              "weight_decay"))
+def mlp_hash_train_step(state: MLPHashTrainState, q: jax.Array,
+                        k: jax.Array, s: jax.Array, *, hcfg: HataConfig,
+                        lr: float = 0.1, momentum: float = 0.9,
+                        weight_decay: float = 1e-6,
+                        ) -> Tuple[MLPHashTrainState, jax.Array]:
+    loss, grad = jax.value_and_grad(mlp_hash_loss)(state.w, q, k, s, hcfg)
+    w, opt = sgd_update(state.w, grad, state.opt, lr=lr,
+                        momentum=momentum, weight_decay=weight_decay)
+    return MLPHashTrainState(w, opt, state.step + 1), loss
+
+
+def train_mlp_hash_weights(key: jax.Array, q: jax.Array, k: jax.Array,
+                           s: jax.Array, *, rbit: int, hidden: int,
+                           hcfg: HataConfig, epochs: int = 15,
+                           iters: int = 20, batch: int = 256,
+                           lr: float = 0.1,
+                           init: Optional[dict] = None) -> dict:
+    """MLP analogue of :func:`train_hash_weights`. Returns the trained
+    weight dict {"w1", "b1", "w2"} (no leading head axis). ``init``
+    (e.g. :func:`mlp_warm_start` of a trained linear hash) replaces the
+    random initialization."""
+    n, d = q.shape
+    key, init_key = jax.random.split(key)
+    if init is not None:
+        state = MLPHashTrainState(w=init, opt=sgd_init(init),
+                                  step=jnp.zeros((), jnp.int32))
+    else:
+        state = mlp_hash_train_init(init_key, d, hidden, rbit)
+    steps = epochs * iters
+    batch = min(batch, n)
+
+    def body(carry, i):
+        state, key = carry
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (batch,), 0, n)
+        state, loss = mlp_hash_train_step(state, q[idx], k[idx], s[idx],
+                                          hcfg=hcfg, lr=lr)
+        return (state, key), loss
+
+    (state, _), _ = jax.lax.scan(body, (state, key), jnp.arange(steps))
+    return state.w
+
+
+def train_mlp_hash_weights_per_head(key: jax.Array, q: jax.Array,
+                                    k: jax.Array, s: jax.Array, *,
+                                    rbit: int, hidden: int,
+                                    hcfg: HataConfig,
+                                    init: Optional[dict] = None,
+                                    **kw) -> dict:
+    """vmapped multi-head MLP training. q: (H, N, d), k: (H, N, M, d),
+    s: (H, N, M) -> dict with leading H axis on every leaf. ``init``
+    carries a leading H axis too."""
+    keys = jax.random.split(key, q.shape[0])
+    fn = functools.partial(train_mlp_hash_weights, rbit=rbit,
+                           hidden=hidden, hcfg=hcfg, **kw)
+    if init is None:
+        return jax.vmap(fn)(keys, q, k, s)
+    return jax.vmap(lambda ky, qh, kh, sh, w0:
+                    fn(ky, qh, kh, sh, init=w0))(keys, q, k, s, init)
+
+
+# ---------------------------------------------------------------------------
 # Quality metrics + LSH baseline
 # ---------------------------------------------------------------------------
 def random_projection_lsh(key: jax.Array, d: int, rbit: int) -> jax.Array:
@@ -124,11 +257,13 @@ def random_projection_lsh(key: jax.Array, d: int, rbit: int) -> jax.Array:
     return jax.random.normal(key, (d, rbit), jnp.float32)
 
 
-def hash_topk_recall(q: jax.Array, keys: jax.Array, w_h: jax.Array,
+def hash_topk_recall(q: jax.Array, keys: jax.Array, w_h,
                      budget: int, *, rbit: int) -> jax.Array:
     """Recall of hash-selected top-k vs exact qk top-k.
 
-    q: (Nq, d) held-out queries, keys: (S, d). Returns (Nq,) recall.
+    q: (Nq, d) held-out queries, keys: (S, d); w_h: (d, rbit) linear
+    weights or the per-head MLP dict (core/hash_weights.py, no leading
+    head axis). Returns (Nq,) recall.
     """
     true_scores = q.astype(jnp.float32) @ keys.astype(jnp.float32).T
     qc = ops.hash_encode(q, w_h)                      # (Nq, W)

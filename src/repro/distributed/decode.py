@@ -54,6 +54,7 @@ from jax.experimental.shard_map import shard_map
 from repro.configs.base import ModelConfig
 from repro.core import cache_view as cv
 from repro.core import hash_attention as ha
+from repro.core import hash_weights as hw
 from repro.core import paged_cache as paged
 from repro.core.kvcache import LayerKVCache, MLACache
 from repro.distributed.collectives import (distributed_topk,
@@ -412,7 +413,7 @@ class SPDecode:
                 logits, jnp.broadcast_to(valid, (b, s_local)), ckv_loc)
 
         def hata():
-            q_codes = ops.hash_encode(q_lat, w_h[0])       # (B, H, W)
+            q_codes = ops.hash_encode(q_lat, hw.head0(w_h))  # (B, H, W)
             scores = sv.hamming_scores(q_codes, n_valid,
                                        rbit=cfg.hata.rbit,
                                        window=cfg.sliding_window)

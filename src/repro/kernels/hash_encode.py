@@ -41,6 +41,43 @@ def _hash_encode_kernel(x_ref, w_ref, out_ref, *, rbit: int):
     out_ref[...] = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
 
 
+def _pack_bits(proj: jax.Array) -> jax.Array:
+    """sign + bit-pack a (rows, rbit) f32 projection to (rows, rbit//32)."""
+    bits = (proj >= 0).astype(jnp.uint32)
+    rows, rbit = bits.shape
+    bits = bits.reshape(rows, rbit // WORD_BITS, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _hash_encode_mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, out_ref):
+    # Non-linear variant (Spotlight-style 2-layer MLP before sign): the
+    # hidden activation lives only in VMEM — exactly the fusion argument
+    # of the linear kernel, one extra MXU matmul.
+    x = x_ref[...].astype(jnp.float32)            # (block_s, d)
+    w1 = w1_ref[...].astype(jnp.float32)          # (d, hidden)
+    b1 = b1_ref[...].astype(jnp.float32)          # (1, hidden)
+    w2 = w2_ref[...].astype(jnp.float32)          # (hidden, rbit)
+    hid = jnp.maximum(
+        jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1, 0.0)
+    proj = jnp.dot(hid, w2, preferred_element_type=jnp.float32)
+    out_ref[...] = _pack_bits(proj)
+
+
+def _hash_encode_heads_mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, out_ref):
+    x = x_ref[...]                                # (B, block_s, 1, d)
+    w1 = w1_ref[0].astype(jnp.float32)            # (d, hidden)
+    b1 = b1_ref[...].reshape(1, -1).astype(jnp.float32)   # (1, hidden)
+    w2 = w2_ref[0].astype(jnp.float32)            # (hidden, rbit)
+    b, blk = x.shape[0], x.shape[1]
+    xf = x[:, :, 0, :].reshape(b * blk, -1).astype(jnp.float32)
+    hid = jnp.maximum(
+        jnp.dot(xf, w1, preferred_element_type=jnp.float32) + b1, 0.0)
+    proj = jnp.dot(hid, w2, preferred_element_type=jnp.float32)
+    packed = _pack_bits(proj)
+    out_ref[...] = packed.reshape(b, blk, 1, packed.shape[-1])
+
+
 def _hash_encode_heads_kernel(x_ref, w_ref, out_ref, *, rbit: int):
     x = x_ref[...]                                # (B, block_s, 1, d)
     w = w_ref[0]                                  # (d, rbit)
@@ -122,3 +159,77 @@ def hash_encode(x: jax.Array, w_h: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((s, rbit // WORD_BITS), jnp.uint32),
         interpret=interpret,
     )(x, w_h)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def hash_encode_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                    w2: jax.Array, *, block_s: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Fused non-linear hash encode (2-layer MLP before sign).
+
+    x: (s, d), w1: (d, hidden), b1: (hidden,), w2: (hidden, rbit)
+    -> (s, rbit//32) uint32. Same grid/tiling as :func:`hash_encode`
+    with the full MLP weights resident in VMEM; the (block_s, hidden)
+    activation never round-trips to HBM.
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    s, d = x.shape
+    block_s = runtime.encode_block_s(block_s, size=s, dtype=x.dtype)
+    d2, hidden = w1.shape
+    hidden2, rbit = w2.shape
+    assert d == d2 and hidden == hidden2 and b1.shape == (hidden,), (
+        x.shape, w1.shape, b1.shape, w2.shape)
+    assert rbit % WORD_BITS == 0
+    block_s = min(block_s, s)
+    n_blocks = pl.cdiv(s, block_s)
+    return pl.pallas_call(
+        _hash_encode_mlp_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_s, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, hidden), lambda i: (0, 0)),
+            pl.BlockSpec((1, hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden, rbit), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, rbit // WORD_BITS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, rbit // WORD_BITS), jnp.uint32),
+        interpret=interpret,
+    )(x, w1, b1.reshape(1, hidden), w2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def hash_encode_heads_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                          w2: jax.Array, *, block_s: Optional[int] = None,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """Per-head fused MLP hash encode in ONE grid dispatch.
+
+    x: (B, S, H, d); w1: (H, d, hidden), b1: (H, hidden),
+    w2: (H, hidden, rbit) -> (B, S, H, rbit//32) uint32. Grid and batch
+    folding mirror :func:`hash_encode_heads`.
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    b, s, h, d = x.shape
+    block_s = runtime.encode_block_s(block_s, size=s, dtype=x.dtype)
+    h2, d2, hidden = w1.shape
+    h3, hidden2, rbit = w2.shape
+    assert (h, d) == (h2, d2) and (h, hidden) == (h3, hidden2), (
+        x.shape, w1.shape, w2.shape)
+    assert b1.shape == (h, hidden), b1.shape
+    assert rbit % WORD_BITS == 0
+    block_s = min(block_s, s)
+    n_blocks = pl.cdiv(s, block_s)
+    return pl.pallas_call(
+        _hash_encode_heads_mlp_kernel,
+        grid=(h, n_blocks),
+        in_specs=[
+            pl.BlockSpec((b, block_s, 1, d), lambda hi, si: (0, si, hi, 0)),
+            pl.BlockSpec((1, d, hidden), lambda hi, si: (hi, 0, 0)),
+            pl.BlockSpec((1, hidden), lambda hi, si: (hi, 0)),
+            pl.BlockSpec((1, hidden, rbit), lambda hi, si: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_s, 1, rbit // WORD_BITS),
+                               lambda hi, si: (0, si, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, rbit // WORD_BITS),
+                                       jnp.uint32),
+        interpret=interpret,
+    )(x, w1, b1, w2)

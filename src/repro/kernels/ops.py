@@ -62,13 +62,29 @@ def use_impl(impl: str):
 # ---------------------------------------------------------------------------
 # HashEncode
 # ---------------------------------------------------------------------------
-def hash_encode(x: jax.Array, w_h: jax.Array) -> jax.Array:
-    """x: (..., s, d), w_h: (d, rbit) -> (..., s, rbit//32) uint32.
+# Hash weights come in two forms everywhere in the repo: a plain array
+# (linear projection, paper Eq. 9) or a dict {"w1", "b1", "w2"} (the
+# trained non-linear variant — a 2-layer MLP before sign). The wrappers
+# below dispatch on the form so every caller (dense, paged, offloaded,
+# MLA, SP) carries either transparently.
 
+def hash_encode(x: jax.Array, w_h) -> jax.Array:
+    """x: (..., s, d) -> (..., s, rbit//32) uint32.
+
+    w_h: (d, rbit) linear weights, or {"w1": (d, hidden),
+    "b1": (hidden,), "w2": (hidden, rbit)} MLP weights.
     The encode is row-independent under one shared weight, so batch
     dims fold into rows: one Pallas dispatch regardless of rank, where
     a vmap would emit a kernel call per leading-dim lane.
     """
+    if isinstance(w_h, dict):
+        if get_impl() == "xla":
+            return ref.hash_encode_mlp_ref(x, w_h["w1"], w_h["b1"],
+                                           w_h["w2"])
+        lead = x.shape[:-1]
+        out = _he.hash_encode_mlp(x.reshape(-1, x.shape[-1]),
+                                  w_h["w1"], w_h["b1"], w_h["w2"])
+        return out.reshape(*lead, out.shape[-1])
     if get_impl() == "xla":
         return ref.hash_encode_ref(x, w_h)
     lead = x.shape[:-1]
@@ -76,14 +92,27 @@ def hash_encode(x: jax.Array, w_h: jax.Array) -> jax.Array:
     return out.reshape(*lead, out.shape[-1])
 
 
-def hash_encode_heads(x: jax.Array, w_h: jax.Array) -> jax.Array:
-    """Per-head weights. x: (B, S, H, d), w_h: (H, d, rbit)
+def hash_encode_heads(x: jax.Array, w_h) -> jax.Array:
+    """Per-head weights. x: (B, S, H, d), w_h: (H, d, rbit) or
+    {"w1": (H, d, hidden), "b1": (H, hidden), "w2": (H, hidden, rbit)}
     -> (B, S, H, rbit//32).
 
     Pallas impl: one (H, S-blocks) grid dispatch with the batch folded
     into the tile (``hash_encode.hash_encode_heads``) — the former
-    per-(batch, head) vmap launched B*H kernels.
+    per-(batch, head) vmap launched B*H kernels. The MLP form adds one
+    fused MXU matmul per grid step (``hash_encode_heads_mlp``).
     """
+    if isinstance(w_h, dict):
+        if get_impl() == "xla":
+            hid = jax.nn.relu(
+                jnp.einsum("bshd,hdm->bshm", x.astype(jnp.float32),
+                           w_h["w1"].astype(jnp.float32))
+                + w_h["b1"].astype(jnp.float32)[None, None])
+            proj = jnp.einsum("bshm,hmr->bshr", hid,
+                              w_h["w2"].astype(jnp.float32))
+            return ref.bitpack_ref((proj >= 0).astype(jnp.uint32))
+        return _he.hash_encode_heads_mlp(x, w_h["w1"], w_h["b1"],
+                                         w_h["w2"])
     if get_impl() == "xla":
         proj = jnp.einsum("bshd,hdr->bshr", x.astype(jnp.float32),
                           w_h.astype(jnp.float32))

@@ -66,6 +66,22 @@ def hash_encode_ref(x: jax.Array, w_h: jax.Array) -> jax.Array:
     return bitpack_ref((proj >= 0).astype(jnp.uint32))
 
 
+def hash_encode_mlp_ref(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                        w2: jax.Array) -> jax.Array:
+    """Non-linear (Spotlight-style) hash encode oracle.
+
+    x: (..., d), w1: (d, hidden), b1: (hidden,), w2: (hidden, rbit)
+    ->  (..., rbit//32) uint32: sign(relu(x@w1 + b1) @ w2), bit-packed.
+    All matmuls in f32 for the same sign-stability reason as
+    :func:`hash_encode_ref`.
+    """
+    hid = jax.nn.relu(jnp.einsum("...d,dh->...h", x.astype(jnp.float32),
+                                 w1.astype(jnp.float32))
+                      + b1.astype(jnp.float32))
+    proj = jnp.einsum("...h,hr->...r", hid, w2.astype(jnp.float32))
+    return bitpack_ref((proj >= 0).astype(jnp.uint32))
+
+
 # ---------------------------------------------------------------------------
 # Hamming score (paper Alg. 3 lines 10-11, + GQA aggregation)
 # ---------------------------------------------------------------------------

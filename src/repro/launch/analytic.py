@@ -15,6 +15,7 @@ from __future__ import annotations
 from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.budgets import resolve_budget
 
 # v5e-class hardware constants (per chip)
 PEAK_FLOPS = 197e12          # bf16
@@ -68,7 +69,7 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, float]:
         return {"model_flops": dense + attn + ssm, "six_nd": dense}
     # decode: one token per sequence
     dense = 2.0 * n_active * b
-    budget = min(cfg.hata.budget(s), s) if cfg.hata.enabled else s
+    budget = resolve_budget(cfg.hata, s) if cfg.hata.enabled else s
     if cfg.attention_free:
         attn = b * cfg.n_layers * (4.0 * cfg.ssm.d_inner(cfg.d_model)
                                    * cfg.ssm.d_state)
@@ -102,7 +103,7 @@ def model_bytes(cfg: ModelConfig, shape: ShapeConfig,
                                     * 4) * 2
         return p_bytes + state
     row = _kv_row_bytes(cfg)
-    budget = min(cfg.hata.budget(s), s)
+    budget = resolve_budget(cfg.hata, s)
     nl, ndl = cfg.n_layers, cfg.hata.dense_layers
     if not (hata and cfg.hata.enabled):
         return p_bytes + nl * b * s * row

@@ -1,70 +1,81 @@
-"""Hash-weight training driver (paper §3.1 + App. B).
+"""Hash-weight training driver (paper §3.1 + App. B) — thin CLI.
 
-Pipeline: train (or load) a model -> harvest per-layer/per-head (q, k)
-from prefill runs over sampled sequences (App. B.1) -> build labeled
-triplets -> train W_H per head with the Eq. 9 objective (SGD lr 0.1,
-momentum 0.9, wd 1e-6; 15 epochs x 20 iters) -> report held-out top-k
-recall vs exact attention and vs random-projection LSH at equal bits ->
-write the weights into the params tree (hash_stack / hash_pre).
+All the heavy lifting lives in :mod:`repro.training`: one-pass
+harvesting (``harvest.build_datasets``), the per-head trainers
+(``trainer.train_layer`` — linear Eq. 9 or the 2-layer-MLP-before-sign
+variant via ``--hidden``), held-out recall over ALL query heads of
+every kv group, install into the params tree, and the recall-vs-budget
+calibrator (``--calibrate`` writes the core/budgets.py table plus the
+CI baseline JSON). This file only parses flags and prints metrics.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_reduced
-from repro.core import hashing
-from repro.data.hash_dataset import build_triplets_per_head, harvest_qk
 from repro.data.synthetic import SyntheticLM
 from repro.models import Model
+from repro.training import (calibrate_budget_table, train_model_hashes,
+                            write_json)
 
 
 def train_layer_hash(model: Model, params, batches, layer: int, *,
                      rbit: int, epochs: int = 15, iters: int = 20,
                      seed: int = 0):
-    """Returns (w (H_kv, d_hash, rbit), recall_hata, recall_lsh)."""
+    """Back-compat single-layer entry (examples/train_lm.py).
+
+    Returns (w (H_kv, d_hash, rbit), recall_hata, recall_lsh), with the
+    held-out recall averaged over all G query heads per kv group and
+    all rows of the held-out batch (the old in-file trainer scored only
+    head ``hi*g`` of batch 0).
+    """
+    from repro.core import hashing
+    from repro.training import harvest, trainer
     cfg = model.cfg
     hcfg = dataclasses.replace(cfg.hata, rbit=rbit)
-    q, k, s = build_triplets_per_head(model, params, batches, layer,
-                                      hcfg, seed=seed)
-    key = jax.random.PRNGKey(seed)
-    w = hashing.train_hash_weights_per_head(
-        key, jnp.asarray(q), jnp.asarray(k), jnp.asarray(s),
-        rbit=rbit, hcfg=hcfg, epochs=epochs, iters=iters)
-    # held-out recall on a fresh batch
-    qh, kh = harvest_qk(model, params, batches[-1], layer)
-    b, ss, h, d = qh.shape
-    h_kv = kh.shape[2]
-    g = h // h_kv
-    budget = max(4, int(0.1 * ss))
-    recs, recs_lsh = [], []
-    w_lsh = hashing.random_projection_lsh(key, d, rbit)
-    for hi in range(h_kv):
-        qs = jnp.asarray(qh[0, ss // 2:, hi * g])
-        ks = jnp.asarray(kh[0, :, hi])
-        recs.append(hashing.hash_topk_recall(qs, ks, w[hi], budget,
-                                             rbit=rbit).mean())
-        recs_lsh.append(hashing.hash_topk_recall(qs, ks, w_lsh, budget,
-                                                 rbit=rbit).mean())
-    return w, float(jnp.mean(jnp.stack(recs))), \
-        float(jnp.mean(jnp.stack(recs_lsh)))
+    datasets = harvest.build_datasets(model, params, batches[:-1],
+                                      [layer], hcfg, seed=seed)
+    w = trainer.train_layer(datasets[layer], rbit=rbit, hcfg=hcfg,
+                            epochs=epochs, iters=iters, seed=seed)
+    qh, kh = harvest.harvest_all_layers(model, params, batches[-1],
+                                        layers=[layer])[layer]
+    budget = max(4, int(0.1 * qh.shape[1]))
+    rec = trainer.heldout_recall(qh, kh, w, budget, rbit=rbit)
+    d = qh.shape[-1]
+    w_lsh = jnp.broadcast_to(
+        hashing.random_projection_lsh(jax.random.PRNGKey(seed), d, rbit),
+        (kh.shape[2], d, rbit))
+    rec_lsh = trainer.heldout_recall(qh, kh, w_lsh, budget, rbit=rbit)
+    return w, rec, rec_lsh
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction gives --reduced/--no-reduced; the old
+    # `action="store_true", default=True` made full configs unreachable
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--rbit", type=int, default=64)
-    ap.add_argument("--layers", default="all")
+    ap.add_argument("--hidden", type=int, default=0,
+                    help="MLP hidden width (0 = linear Eq. 9 hash; "
+                         "2*rbit warm-starts from the linear hash)")
+    ap.add_argument("--layers", default="all",
+                    help="'all' = every selecting self-attention layer")
     ap.add_argument("--sequences", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=96)
     ap.add_argument("--epochs", type=int, default=15)
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--calibrate", default=None, metavar="DIR",
+                    help="sweep recall-vs-budget on the held-out batch "
+                         "and write DIR/budget_table.json + "
+                         "DIR/recall_baseline.json")
     args = ap.parse_args(argv)
 
     cfg = (get_reduced(args.arch) if args.reduced
@@ -73,27 +84,29 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
     src = SyntheticLM(cfg.vocab_size, args.seq_len, 1, seed=args.seed)
     batches = [{"tokens": jnp.asarray(src.batch_at(i))}
-               for i in range(args.sequences)]
-    layers = (range(cfg.n_layers) if args.layers == "all"
+               for i in range(max(2, args.sequences))]
+    layers = (None if args.layers == "all"
               else [int(x) for x in args.layers.split(",")])
-    trained = {}
-    for layer in layers:
-        w, rec, rec_lsh = train_layer_hash(
-            model, params, batches, layer, rbit=args.rbit,
-            epochs=args.epochs, iters=args.iters, seed=args.seed)
-        trained[layer] = w
-        print(f"layer {layer:3d} recall@10%: hata={rec:.3f} "
-              f"lsh={rec_lsh:.3f}", flush=True)
-    # write into params
-    if "hash_stack" in params and params["hash_stack"] is not None:
-        hs = params["hash_stack"]
-        for layer, w in trained.items():
-            j = layer - model.n_pre
-            if 0 <= j < model.n_stack:
-                hs = hs.at[j].set(w)
-            elif layer < model.n_pre:
-                params["hash_pre"][layer] = w
-        params["hash_stack"] = hs
+    params, trained, metrics = train_model_hashes(
+        model, params, batches, layers=layers, rbit=args.rbit,
+        hidden=args.hidden, epochs=args.epochs, iters=args.iters,
+        seed=args.seed)
+    for m in metrics:
+        print(f"layer {m.layer:3d} recall@{m.budget}: "
+              f"trained={m.recall_trained:.3f} seed={m.recall_seed:.3f} "
+              f"lsh={m.recall_lsh:.3f}", flush=True)
+    if args.calibrate:
+        table, baseline = calibrate_budget_table(
+            model, params, batches[-1],
+            layers=sorted(trained), weights=trained)
+        write_json(os.path.join(args.calibrate, "budget_table.json"),
+                   table)
+        write_json(os.path.join(args.calibrate, "recall_baseline.json"),
+                   baseline)
+        print(f"[hash_train] budget table -> {args.calibrate} "
+              f"(mean budget {baseline['mean_budget']} vs global "
+              f"{baseline['global_budget']}, "
+              f"mean recall {baseline['mean_recall']})", flush=True)
     print("[hash_train] done")
     return params, trained
 

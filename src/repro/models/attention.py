@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import cache_view as cv
 from repro.core import hash_attention as ha
+from repro.core import hash_weights as hw
 from repro.core.kvcache import LayerKVCache, MLACache, append_kv, append_mla
 from repro.core.topk import chunked_topk
 from repro.distributed.strategy import get_decode_strategy
@@ -55,9 +56,25 @@ def gqa_init(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
     return p
 
 
-def gqa_hash_init(cfg: ModelConfig, key) -> Optional[jax.Array]:
+def _mlp_hash_init(key, n_heads: int, d: int, hidden: int,
+                   rbit: int) -> dict:
+    """Seed MLP hash weights (core/hash_weights.py dict form)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (n_heads, d, hidden), jnp.float32)
+        / jnp.sqrt(d),
+        "b1": jnp.zeros((n_heads, hidden), jnp.float32),
+        "w2": jax.random.normal(k2, (n_heads, hidden, rbit), jnp.float32)
+        / jnp.sqrt(hidden),
+    }
+
+
+def gqa_hash_init(cfg: ModelConfig, key):
     if not cfg.hata.enabled:
         return None
+    if cfg.hata.hash_hidden:
+        return _mlp_hash_init(key, cfg.n_kv_heads, cfg.head_dim,
+                              cfg.hata.hash_hidden, cfg.hata.rbit)
     w = jax.random.normal(key, (cfg.n_kv_heads, cfg.head_dim,
                                 cfg.hata.rbit), jnp.float32)
     return w / jnp.sqrt(cfg.head_dim)
@@ -142,7 +159,7 @@ def _dense_decode(cfg: ModelConfig, q, k: jax.Array, v: jax.Array,
 
 
 def _hata_score_select(cfg: ModelConfig, q, w_h, view: cv.KVView,
-                       n_valid):
+                       n_valid, layer: Optional[int] = None):
     """Alg. 3 lines 6,10-17 via the shared batched pipeline over any
     cache view: encode q, batched Hamming scores (the view routes the
     contiguous or block-table score kernel), top-k, fused masked gather
@@ -150,9 +167,12 @@ def _hata_score_select(cfg: ModelConfig, q, w_h, view: cv.KVView,
     decode wave advances slots sitting at different depths in one call.
     Selection math is identical across layouts: a :class:`PagedView`
     only changes the score kernel's page fetch and translates the
-    winners to physical rows at the gather boundary."""
+    winners to physical rows at the gather boundary. ``layer`` (a
+    python int on the unrolled decode paths, None in scanned stacks)
+    routes the budget through the per-layer table when one is
+    installed."""
     budget = ha.clamped_budget(cfg.hata, view.capacity,
-                               cfg.sliding_window)
+                               cfg.sliding_window, layer=layer)
     q_codes = ha.aggregate_q_codes(q, w_h, cfg.n_kv_heads)
     scores = view.hamming_scores(q_codes, n_valid, rbit=cfg.hata.rbit,
                                  window=cfg.sliding_window)
@@ -195,11 +215,15 @@ def gqa_decode_project(cfg: ModelConfig, p, w_h, x: jax.Array,
 
 
 def gqa_decode_attend(cfg: ModelConfig, p, w_h, q1: jax.Array,
-                      view, pos: jax.Array, use_hata) -> jax.Array:
+                      view, pos: jax.Array, use_hata,
+                      layer: Optional[int] = None) -> jax.Array:
     """Alg. 3 lines 10-17 over ANY cache view — contiguous, paged, or
     sequence-sharded (a raw ``LayerKVCache`` coerces to
     ``ContiguousView`` for free). Returns the block output (B, 1, D)
-    (Wo applied)."""
+    (Wo applied). ``layer``: concrete layer index on the unrolled
+    decode paths (enables the calibrated per-layer budget table); None
+    inside scanned stacks and the SP strategies, whose selection shape
+    must be layer-invariant."""
     view = cv.as_gqa_view(view)
     b = q1.shape[0]
     n_valid = pos + 1
@@ -219,18 +243,20 @@ def gqa_decode_attend(cfg: ModelConfig, p, w_h, q1: jax.Array,
         elif isinstance(use_hata, bool):
             # static layer split (segmented scan): only one branch is
             # lowered — the dry-run sees steady-state HATA cost
-            out = (_hata_score_select(cfg, q1, w_h, view, n_valid)
+            out = (_hata_score_select(cfg, q1, w_h, view, n_valid, layer)
                    if use_hata else dense_path())
         else:
             out = jax.lax.cond(
                 use_hata,
-                lambda: _hata_score_select(cfg, q1, w_h, view, n_valid),
+                lambda: _hata_score_select(cfg, q1, w_h, view, n_valid,
+                                           layer),
                 dense_path)
     return out.reshape(b, 1, -1) @ p["wo"]
 
 
 def gqa_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
-               pos: jax.Array, use_hata):
+               pos: jax.Array, use_hata,
+               layer: Optional[int] = None):
     """One decode step over any view (or raw cache). x: (B, 1, D) one
     new token; pos: scalar cache fill, or (B,) per-slot fills (the
     paged engine's decode wave — inactive slots' block-table rows point
@@ -241,7 +267,7 @@ def gqa_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
     if not view.has_codes:
         codes = None
     view = view.append(k, v, codes, pos)
-    out = gqa_decode_attend(cfg, p, w_h, q1, view, pos, use_hata)
+    out = gqa_decode_attend(cfg, p, w_h, q1, view, pos, use_hata, layer)
     return out, (view if cv.is_view(cache) else view.unwrap())
 
 
@@ -291,13 +317,16 @@ def mla_init(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
     }
 
 
-def mla_hash_init(cfg: ModelConfig, key) -> Optional[jax.Array]:
+def mla_hash_init(cfg: ModelConfig, key):
     if not cfg.hata.enabled:
         return None
     m = cfg.mla
     dim = m.kv_lora_rank + m.qk_rope_dim
     # one shared latent stream per layer -> one weight (leading axis 1
     # keeps the (H_kv, d, rbit) convention)
+    if cfg.hata.hash_hidden:
+        return _mlp_hash_init(key, 1, dim, cfg.hata.hash_hidden,
+                              cfg.hata.rbit)
     w = jax.random.normal(key, (1, dim, cfg.hata.rbit), jnp.float32)
     return w / jnp.sqrt(dim)
 
@@ -345,7 +374,7 @@ def mla_prefill_parts(cfg: ModelConfig, p, w_h, x: jax.Array,
     codes = None
     if w_h is not None and cfg.hata.enabled:
         latent = jnp.concatenate([ckv, krope], axis=-1)  # (B, S, r+rd)
-        codes = ops.hash_encode(latent, w_h[0])
+        codes = ops.hash_encode(latent, hw.head0(w_h))
     h = cfg.n_heads
     k_nope = (ckv @ p["wuk"]).reshape(b, s, h, m.qk_nope_dim)
     v = (ckv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
@@ -425,13 +454,14 @@ def mla_decode_project(cfg: ModelConfig, p, w_h, x: jax.Array,
     codes = None
     if w_h is not None and cfg.hata.enabled:
         latent = jnp.concatenate([ckv, krope], axis=-1)
-        codes = ops.hash_encode(latent, w_h[0])
+        codes = ops.hash_encode(latent, hw.head0(w_h))
     q_lat = _mla_latent_q(cfg, p, q_nope[:, 0], q_rope[:, 0])
     return q_lat, ckv, krope, codes
 
 
 def _hata_mla_select(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
-                     view: cv.MLAView, n_valid) -> jax.Array:
+                     view: cv.MLAView, n_valid,
+                     layer: Optional[int] = None) -> jax.Array:
     """The same batched score -> select -> gather pipeline as the GQA
     decode, over the single shared latent stream (G = all H heads):
     one batched Hamming dispatch (contiguous or block-table, routed by
@@ -440,11 +470,11 @@ def _hata_mla_select(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
     kernels/flash_decode.mla_decode_gathered_batched and its paged twin.
     """
     m = cfg.mla
-    q_codes = ops.hash_encode(q_lat, w_h[0])           # (B, H, W)
+    q_codes = ops.hash_encode(q_lat, hw.head0(w_h))    # (B, H, W)
     scores = view.hamming_scores(q_codes, n_valid, rbit=cfg.hata.rbit,
                                  window=cfg.sliding_window)  # (B, S_log)
     budget = ha.clamped_budget(cfg.hata, view.capacity,
-                               cfg.sliding_window)
+                               cfg.sliding_window, layer=layer)
     top_scores, idx = chunked_topk(scores, budget)     # (B, k)
     o_lat = view.gather_latent(
         q_lat, idx, lora_rank=m.kv_lora_rank,
@@ -455,7 +485,7 @@ def _hata_mla_select(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
 
 def mla_decode_attend(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
                       view, pos: jax.Array, use_hata,
-                      x_dtype) -> jax.Array:
+                      x_dtype, layer: Optional[int] = None) -> jax.Array:
     """MLA decode attention over ANY latent view (raw ``MLACache``
     coerces to ``ContiguousMLAView``)."""
     view = cv.as_mla_view(view)
@@ -479,19 +509,21 @@ def mla_decode_attend(cfg: ModelConfig, p, w_h, q_lat: jax.Array,
         if not hata_on:
             o = dense_path()
         elif isinstance(use_hata, bool):
-            o = (_hata_mla_select(cfg, p, w_h, q_lat, view, n_valid)
+            o = (_hata_mla_select(cfg, p, w_h, q_lat, view, n_valid,
+                                  layer)
                  if use_hata else dense_path())
         else:
             o = jax.lax.cond(
                 use_hata,
                 lambda: _hata_mla_select(cfg, p, w_h, q_lat, view,
-                                         n_valid),
+                                         n_valid, layer),
                 dense_path)
     return o.reshape(b, 1, -1).astype(x_dtype) @ p["wo"]
 
 
 def mla_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
-               pos: jax.Array, use_hata):
+               pos: jax.Array, use_hata,
+               layer: Optional[int] = None):
     """One MLA decode step over any view (or raw cache); pos scalar or
     (B,). Returns (y, view-or-cache) matching the input container."""
     view = cv.as_mla_view(cache)
@@ -500,7 +532,7 @@ def mla_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
         codes = None
     view = view.append(ckv, krope, codes, pos)
     out = mla_decode_attend(cfg, p, w_h, q_lat, view, pos, use_hata,
-                            x.dtype)
+                            x.dtype, layer)
     return out, (view if cv.is_view(cache) else view.unwrap())
 
 
@@ -520,7 +552,7 @@ def mla_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
     codes = None
     if w_h is not None and cfg.hata.enabled and view.has_codes:
         latent = jnp.concatenate([ckv, krope], axis=-1)
-        codes = ops.hash_encode(latent, w_h[0])
+        codes = ops.hash_encode(latent, hw.head0(w_h))
     view = view.append_chunk(ckv, krope, codes, ctx)
     q_lat = _mla_latent_q(cfg, p, q_nope, q_rope)       # (1, C, H, r+rd)
     o_lat = view.prefill_attend(

@@ -113,10 +113,11 @@ def _attn_prefill(cfg, p, w_h, x, cache, pos):
     return attn.gqa_prefill(cfg, p, w_h, x, cache, pos)
 
 
-def _attn_decode(cfg, p, w_h, x, cache, pos, use_hata):
+def _attn_decode(cfg, p, w_h, x, cache, pos, use_hata, layer=None):
     if _is_mla(cfg):
-        return attn.mla_decode(cfg, p, w_h, x, cache, pos, use_hata)
-    return attn.gqa_decode(cfg, p, w_h, x, cache, pos, use_hata)
+        return attn.mla_decode(cfg, p, w_h, x, cache, pos, use_hata,
+                               layer)
+    return attn.gqa_decode(cfg, p, w_h, x, cache, pos, use_hata, layer)
 
 
 # ---------------------------------------------------------------------------
@@ -436,7 +437,8 @@ def block_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
 # ---------------------------------------------------------------------------
 def block_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
                  kind: str, pos, use_hata, *,
-                 cross_kv: Optional[Tuple] = None):
+                 cross_kv: Optional[Tuple] = None,
+                 layer: Optional[int] = None):
     if kind == "ssm":
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
         y, state = ssm_mod.ssm_decode(cfg, p["ssm"], h, cache)
@@ -451,7 +453,8 @@ def block_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if kind == "hybrid":
         kv, sstate = cache
-        a, kv = _attn_decode(cfg, p["attn"], w_h, h, kv, pos, use_hata)
+        a, kv = _attn_decode(cfg, p["attn"], w_h, h, kv, pos, use_hata,
+                             layer)
         s, sstate = ssm_mod.ssm_decode(cfg, p["ssm"], h, sstate)
         mix = 0.5 * (p["beta_attn"] * rms_norm(a, jnp.ones_like(
             p["beta_attn"]), cfg.norm_eps) + p["beta_ssm"] * rms_norm(
@@ -460,7 +463,7 @@ def block_decode(cfg: ModelConfig, p, w_h, x: jax.Array, cache,
         cache = (kv, sstate)
     else:
         a, cache = _attn_decode(cfg, p["attn"], w_h, h, cache, pos,
-                                use_hata)
+                                use_hata, layer)
         x = x + a
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     if "moe" in p:

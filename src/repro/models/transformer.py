@@ -377,8 +377,10 @@ class Model:
         new_views = []
         for li, (bp, w_h) in enumerate(self._flat_layer_params(params)):
             flag = hata_on and li >= cfg.hata.dense_layers
+            # li is a python int -> the calibrated per-layer budget
+            # table (core/budgets.py) applies on this unrolled path
             x, view = blocks.block_decode(cfg, bp, w_h, x, views[li],
-                                          self.kind, pos, flag)
+                                          self.kind, pos, flag, layer=li)
             new_views.append(view)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         return self._head_last(params, x[:, 0]), new_views
@@ -530,7 +532,8 @@ class Model:
                 w_h = params["hash_pre"][i]
                 x, c = blocks.block_decode(cfg, bp, w_h, x, c, self.kind,
                                            pos,
-                                           bool(i >= cfg.hata.dense_layers))
+                                           bool(i >= cfg.hata.dense_layers),
+                                           layer=i)
                 new_pre.append(c)
             caches = dict(caches, pre=new_pre)
 
@@ -663,7 +666,7 @@ class Model:
                     flag = hata_on and li >= cfg.hata.dense_layers
                     x, c = blocks.block_decode(
                         cfg, bp, whi, x, caches["stack"][g][i], "dense",
-                        pos, flag)
+                        pos, flag, layer=li)
                     group_caches.append(c)
                 cp = jax.tree.map(lambda t: t[g], params["cross_stack"])
                 ckv = (caches["cross"][g]
@@ -682,7 +685,8 @@ class Model:
                 w_h = jax.tree.map(lambda t: t[j], params["hash_stack"])
                 flag = hata_on and li >= cfg.hata.dense_layers
                 x, c = blocks.block_decode(cfg, bp, w_h, x, c,
-                                           self.kind, pos, flag)
+                                           self.kind, pos, flag,
+                                           layer=li)
                 new_list.append(c)
             caches = dict(caches, stack=new_list)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)

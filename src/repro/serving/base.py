@@ -22,11 +22,12 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Union
 
 import jax
 import numpy as np
 
+from repro.core import budgets as budgets_mod
 from repro.models import Model
 from repro.serving.request import Request
 from repro.serving.sampling import pick_tokens
@@ -36,11 +37,20 @@ class EngineBase:
     """Queue + slots + RNG + retirement; subclasses add the waves."""
 
     def __init__(self, model: Model, params, *, max_batch: int,
-                 sample: str = "greedy", seed: int = 0):
+                 sample: str = "greedy", seed: int = 0,
+                 budget_table: Union[budgets_mod.BudgetTable, str,
+                                     None] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.sample = sample
+        # Per-layer HATA budget overrides (core/budgets.py). A path is
+        # loaded+validated eagerly so a malformed table fails at
+        # construction, not mid-serve. None inherits the ambient table
+        # (set_budget_table / REPRO_BUDGET_TABLE), if any.
+        if isinstance(budget_table, str):
+            budget_table = budgets_mod.load_budget_table(budget_table)
+        self.budget_table = budget_table
         # one base key, never split or advanced by engine-global events:
         # sampled picks derive a per-request stream from it (see _pick),
         # so a request's tokens are a pure function of (seed, request
@@ -53,6 +63,23 @@ class EngineBase:
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_out": 0, "truncated": 0}
         self._done_this_step: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def _with_table(self, fn):
+        """Run ``fn`` with this engine's budget table installed.
+
+        Budgets are resolved at trace time (python-int layers under
+        jit), so the table must be active whenever a wave traces — and
+        on every call for the eager offload path. No-op when the engine
+        has no table of its own (ambient table still applies).
+        """
+        if self.budget_table is None:
+            return fn
+
+        def wrapped(*a, **k):
+            with budgets_mod.use_budget_table(self.budget_table):
+                return fn(*a, **k)
+        return wrapped
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):

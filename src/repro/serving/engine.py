@@ -39,9 +39,10 @@ from repro.serving.base import EngineBase
 class ServingEngine(EngineBase):
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_len: int = 256, sample: str = "greedy",
-                 seed: int = 0):
+                 seed: int = 0, budget_table=None):
         super().__init__(model, params, max_batch=max_batch,
-                         sample=sample, seed=seed)
+                         sample=sample, seed=seed,
+                         budget_table=budget_table)
         self.max_len = max_len
         cfg = model.cfg
         self.meta = cfg.meta_tokens
@@ -54,10 +55,10 @@ class ServingEngine(EngineBase):
         # pos is the per-slot (B,) depth vector, not one shared scalar:
         # decode_step threads it through to hata_decode_batched's
         # per-row validity masks so ragged slots stay exact.
-        self._decode = jax.jit(
-            lambda p, t, c, pos: model.decode_step(p, t, c, pos))
-        self._prefill = jax.jit(
-            lambda p, b, c: model.prefill(p, b, c, jnp.int32(0)))
+        self._decode = self._with_table(jax.jit(
+            lambda p, t, c, pos: model.decode_step(p, t, c, pos)))
+        self._prefill = self._with_table(jax.jit(
+            lambda p, b, c: model.prefill(p, b, c, jnp.int32(0))))
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
 
     # ------------------------------------------------------------------

@@ -94,7 +94,8 @@ class PagedServingEngine(EngineBase):
                  sample: str = "greedy", seed: int = 0,
                  strict_moe_capacity: bool = False,
                  offload: bool = False,
-                 hbm_budget_bytes: Optional[int] = None):
+                 hbm_budget_bytes: Optional[int] = None,
+                 budget_table=None):
         assert model.supports_paged, (
             f"{model.cfg.name}: family {model.cfg.family!r} has no paged "
             "decode path (attention-KV families only)")
@@ -119,7 +120,8 @@ class PagedServingEngine(EngineBase):
                 raise ValueError(msg)
             warnings.warn(msg, stacklevel=2)
         super().__init__(model, params, max_batch=max_batch,
-                         sample=sample, seed=seed)
+                         sample=sample, seed=seed,
+                         budget_table=budget_table)
         # page_size=None consults the tuning table (REPRO_PAGE_SIZE /
         # REPRO_TUNING_TABLE win): every paged kernel tiles kv at the
         # pool page size, so pool construction is their block-size
@@ -209,11 +211,13 @@ class PagedServingEngine(EngineBase):
             # — paged_view dispatches per pool type, resident dense
             # layers and offloaded HATA layers share one wave loop and
             # the per-op kernels still compile under their own jit.
-            self._decode = _decode_fn
-            self._chunk = _chunk_fn
+            self._decode = self._with_table(_decode_fn)
+            self._chunk = self._with_table(_chunk_fn)
         else:
-            self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
-            self._chunk = jax.jit(_chunk_fn, donate_argnums=(2,))
+            self._decode = self._with_table(
+                jax.jit(_decode_fn, donate_argnums=(2,)))
+            self._chunk = self._with_table(
+                jax.jit(_chunk_fn, donate_argnums=(2,)))
 
     # ------------------------------------------------------------------
     def hbm_resident_bytes(self) -> int:

@@ -1,0 +1,35 @@
+"""Hash quality subsystem: harvest -> train -> calibrate -> gate.
+
+Closes the quality loop the paper's "T" (trainable) stands for:
+
+- :mod:`repro.training.harvest` — streams per-layer/per-head
+  (q, k, exact-top-k) teacher triplets from prefill runs, ONE forward
+  pass per batch for all layers (the old ``data.hash_dataset.harvest_qk``
+  re-ran the stack per layer: O(L^2) blocks per batch).
+- :mod:`repro.training.trainer` — jit-compiled, per-head-vmapped
+  training of the linear Eq. 9 hash and the non-linear MLP variant,
+  held-out recall over ALL query heads, and installation of trained
+  weights into the params tree.
+- :mod:`repro.training.calibrate` — recall-vs-budget sweeps per
+  layer/head on held-out data, emitting the persisted budget table
+  (``core/budgets.py``) and the committed recall baseline the weekly CI
+  gate checks against.
+
+``launch/hash_train.py`` is a thin CLI driver over this package;
+``benchmarks/recall_budget_curve.py`` renders the frontier and gates.
+"""
+from repro.training.harvest import (build_datasets, harvest_all_layers,
+                                    self_attention_layers)
+from repro.training.trainer import (LayerMetrics, heldout_recall,
+                                    install_hash_weights,
+                                    layer_hash_weights, train_layer,
+                                    train_model_hashes)
+from repro.training.calibrate import (calibrate_budget_table,
+                                      recall_vs_budget, write_json)
+
+__all__ = [
+    "build_datasets", "harvest_all_layers", "self_attention_layers",
+    "LayerMetrics", "heldout_recall", "install_hash_weights",
+    "layer_hash_weights", "train_layer", "train_model_hashes",
+    "calibrate_budget_table", "recall_vs_budget", "write_json",
+]

@@ -1,0 +1,257 @@
+"""Recall-vs-budget calibration on held-out harvests.
+
+Sweeps hash-selection recall per (layer, kv-head) over a ladder of
+candidate budgets, then emits the persisted per-layer budget table
+(:mod:`repro.core.budgets` schema, version 1) plus the recall baseline
+JSON the weekly CI gate compares against.
+
+Budget choice is a JOINT allocation across layers, not a per-layer
+threshold: minimize the total budget subject to the summed recall
+staying >= the all-layers-at-global-k baseline (greedy marginal-recall
+ascent from the ladder floor, then down-step / pairwise-exchange
+mop-up). By construction the emitted table's mean recall is >= the
+global-k mean recall at a mean budget <= the global k — strictly lower
+whenever the layers' recall-vs-budget slopes differ enough for an
+improving exchange. With ``target_recall`` given, the old independent
+per-layer semantics apply instead (smallest budget reaching the bar).
+This module is — with ``core/budgets.py`` — one of the two sanctioned
+``hcfg.budget(...)`` call sites (CI grep-guards the rest of the tree).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hash_weights as hwt
+from repro.core.topk import selection_recall
+from repro.kernels import ops
+from repro.models.transformer import Model
+from repro.training import harvest, trainer
+
+
+def _head_recall_curve(qh, kh, w_h, hi: int, budgets: Sequence[int],
+                       rbit: int) -> list:
+    """Mean recall at each budget for one kv head, all batch rows.
+
+    Codes and exact scores are computed once; only the top-k cutoff
+    varies across the sweep.
+    """
+    b, s, h, d = qh.shape
+    g = h // kh.shape[2]
+    w = hwt.head_slice(w_h, hi)
+    per_budget = [[] for _ in budgets]
+    for bi in range(b):
+        qs = jnp.asarray(qh[bi, s // 2:, hi * g:(hi + 1) * g])
+        qs = qs.reshape(-1, d).astype(jnp.float32)
+        ks = jnp.asarray(kh[bi, :, hi]).astype(jnp.float32)
+        true = qs @ ks.T
+        qc = ops.hash_encode(qs, w)
+        kc = ops.hash_encode(ks, w)
+        x = jnp.bitwise_xor(qc[:, None, :], kc[None, :, :])
+        est = rbit - jnp.sum(
+            jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+        est = est.astype(jnp.float32)
+        for j, k in enumerate(budgets):
+            per_budget[j].append(
+                float(selection_recall(est, true, k).mean()))
+    return [sum(v) / len(v) for v in per_budget]
+
+
+def recall_vs_budget(model: Model, params, batch: Dict,
+                     budgets: Sequence[int], *,
+                     layers: Optional[Sequence[int]] = None,
+                     weights: Optional[Dict[int, object]] = None,
+                     ) -> Dict[int, Dict]:
+    """{layer: {"budgets", "mean", "min_head", "head": {hi: [...]}}}.
+
+    ``weights`` overrides the params tree's hash weights per layer
+    (e.g. freshly trained, not yet installed).
+    """
+    cfg = model.cfg
+    if layers is None:
+        layers = [l for l in harvest.self_attention_layers(model)
+                  if l >= cfg.hata.dense_layers]
+    held = harvest.harvest_all_layers(model, params, batch, layers=layers)
+    out: Dict[int, Dict] = {}
+    for l in layers:
+        qh, kh = held[l]
+        w = (weights or {}).get(l)
+        if w is None:
+            w = trainer.layer_hash_weights(model, params, l)
+        if w is None:
+            continue
+        rbit = hwt.rbit_of(w)
+        h_kv = kh.shape[2]
+        head = {hi: _head_recall_curve(qh, kh, w, hi, budgets, rbit)
+                for hi in range(h_kv)}
+        mean = [sum(head[hi][j] for hi in head) / len(head)
+                for j in range(len(budgets))]
+        min_head = [min(head[hi][j] for hi in head)
+                    for j in range(len(budgets))]
+        out[l] = {"budgets": list(budgets), "mean": mean,
+                  "min_head": min_head, "head": head}
+    return out
+
+
+def _candidate_budgets(global_k: int, ctx: int) -> list:
+    ks = {max(2, global_k // 8), max(2, global_k // 4),
+          max(2, global_k // 2), max(2, (3 * global_k) // 4),
+          global_k, min(ctx, 2 * global_k)}
+    # unit steps around the global k: that's where exchanges happen
+    ks |= {k for k in range(max(2, global_k - 8), global_k + 9)
+           if k <= ctx}
+    return sorted(k for k in ks if 0 < k <= ctx)
+
+
+def _allocate(layer_recs: Dict[int, list], budgets: Sequence[int],
+              gi: int) -> Dict[int, int]:
+    """Joint allocation: per-layer ladder indices minimizing total
+    budget s.t. sum of recalls >= sum of recalls at ``budgets[gi]``.
+
+    Greedy marginal-(recall gain / budget cost) ascent from the ladder
+    floor, then mop-up down-steps and pairwise up/down exchanges that
+    shed budget without dropping the summed recall below the baseline.
+    Falls back to all-global (always feasible) if ascent stalls short.
+    """
+    layers = sorted(layer_recs)
+    target = sum(layer_recs[l][gi] for l in layers)
+    idx = {l: 0 for l in layers}
+
+    def total_recall():
+        return sum(layer_recs[l][idx[l]] for l in layers)
+
+    def total_budget():
+        return sum(budgets[idx[l]] for l in layers)
+
+    while total_recall() < target - 1e-12:
+        best, best_ratio = None, 0.0
+        for l in layers:
+            i = idx[l]
+            for j in range(i + 1, len(budgets)):
+                gain = layer_recs[l][j] - layer_recs[l][i]
+                cost = budgets[j] - budgets[i]
+                if gain > 0 and gain / cost > best_ratio:
+                    best, best_ratio = (l, j), gain / cost
+        if best is None:
+            idx = {l: gi for l in layers}     # always feasible
+            break
+        idx[best[0]] = best[1]
+    # mop-up: single down-steps, then budget-shedding exchanges
+    improved = True
+    while improved:
+        improved = False
+        for l in layers:
+            while idx[l] > 0:
+                trial = {**idx, l: idx[l] - 1}
+                if sum(layer_recs[m][trial[m]] for m in layers) \
+                        >= target - 1e-12:
+                    idx = trial
+                    improved = True
+                else:
+                    break
+        for lu in layers:
+            for ld in layers:
+                if lu == ld or idx[lu] + 1 >= len(budgets) or idx[ld] == 0:
+                    continue
+                trial = {**idx, lu: idx[lu] + 1, ld: idx[ld] - 1}
+                tb = sum(budgets[trial[m]] for m in layers)
+                tr = sum(layer_recs[m][trial[m]] for m in layers)
+                if tr < target - 1e-12:
+                    continue
+                # accept budget-shedding moves, or equal-budget moves
+                # that bank recall for a later down-step
+                if tb < total_budget() or (tb == total_budget()
+                                           and tr > total_recall() + 1e-12):
+                    idx = trial
+                    improved = True
+    if total_budget() > len(layers) * budgets[gi]:
+        idx = {l: gi for l in layers}         # never exceed global
+    return idx
+
+
+def calibrate_budget_table(model: Model, params, batch: Dict, *,
+                           layers: Optional[Sequence[int]] = None,
+                           budgets: Optional[Sequence[int]] = None,
+                           weights: Optional[Dict[int, object]] = None,
+                           target_recall: Optional[float] = None,
+                           ) -> tuple:
+    """Sweep -> choose per-layer budgets -> (table_obj, baseline_obj).
+
+    ``table_obj`` is a version-1 ``core.budgets`` table: each entry
+    carries ``budget_min = k`` (the chosen budget — the floor pins it
+    at the calibration context) and ``budget_frac = k/ctx`` so it
+    scales to longer contexts. Dense layers are never emitted.
+    ``baseline_obj`` records the mean recall/budget the weekly CI gate
+    checks regressions against.
+    """
+    cfg = model.cfg
+    hcfg = cfg.hata
+    ctx = int(batch["tokens"].shape[1])
+    global_k = hcfg.budget(ctx)      # sanctioned: this IS the calibrator
+    if budgets is None:
+        budgets = _candidate_budgets(global_k, ctx)
+    budgets = sorted(set(int(k) for k in budgets) | {min(global_k, ctx)})
+    curves = recall_vs_budget(model, params, batch, budgets,
+                              layers=layers, weights=weights)
+    gi = budgets.index(min(global_k, ctx))
+    if target_recall is None:
+        alloc = _allocate({l: curves[l]["mean"] for l in curves},
+                          budgets, gi)
+    else:
+        alloc = {}
+        for l, c in curves.items():
+            chosen = gi
+            for j in range(len(budgets)):
+                if c["mean"][j] >= target_recall - 1e-9:
+                    chosen = j
+                    break
+            alloc[l] = chosen
+    entries = []
+    baseline_layers = {}
+    for l in sorted(curves):
+        c = curves[l]
+        chosen = alloc[l]
+        k = budgets[chosen]
+        hr = {str(hi): round(min(1.0, max(0.0, c["head"][hi][chosen])), 6)
+              for hi in c["head"]}
+        entries.append({
+            "layer": l,
+            "budget_frac": round(min(1.0, max(k / ctx, 1e-6)), 6),
+            "budget_min": k,
+            "budget_max": max(k, hcfg.budget_max),
+            "head_recall": hr,
+        })
+        baseline_layers[str(l)] = {"budget": k,
+                                   "recall": round(c["mean"][chosen], 6)}
+    n_kv_heads = 1 if cfg.mla is not None else cfg.n_kv_heads
+    table = {
+        "version": 1,
+        "model": cfg.name,
+        "n_layers": cfg.n_layers,
+        "n_kv_heads": n_kv_heads,
+        "layers": entries,
+    }
+    n = max(1, len(baseline_layers))
+    baseline = {
+        "context_len": ctx,
+        "global_budget": global_k,
+        "mean_budget": round(sum(v["budget"]
+                                 for v in baseline_layers.values()) / n, 3),
+        "mean_recall": round(sum(v["recall"]
+                                 for v in baseline_layers.values()) / n, 6),
+        "layers": baseline_layers,
+    }
+    return table, baseline
+
+
+def write_json(path: str, obj) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=False)
+        f.write("\n")

@@ -1,0 +1,155 @@
+"""Scalable teacher-label harvester (paper App. B.1).
+
+One forward pass per batch captures the (q, k) pairs of EVERY
+self-attention layer — the capture happens right before each block
+consumes its pre-norm input, so advancing the residual stream and
+harvesting share the same block evaluations. The old
+``data.hash_dataset.harvest_qk`` re-ran blocks ``0..layer-1`` for each
+layer, i.e. O(L^2) block evaluations per batch; this module does O(L)
+and is bit-exact with it per layer (tests/test_hash_training.py).
+
+Teacher labels (exact-top-k structure) come from
+``data.hash_dataset.build_triplets``: for each sampled query the causal
+keys are scored exactly, the top-10% become linearly decayed positives.
+For MLA the captured pair is the *latent-space* (absorbed q, [c_kv ;
+k_rope]) — exactly what HashEncode sees at inference.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HataConfig
+from repro.data.hash_dataset import build_triplets
+from repro.models import attention as attn_mod
+from repro.models import blocks as blocks_mod
+from repro.models.layers import rms_norm
+from repro.models.transformer import Model
+
+
+def _layer_params(model: Model, params, i: int):
+    """(block params, kind) of layer ``i`` — the unrolled order."""
+    cfg = model.cfg
+    if i < model.n_pre:
+        return params["pre"][i], "main"
+    j = i - model.n_pre
+    if cfg.family == "vlm":
+        ce = cfg.vlm.cross_every
+        g, r = divmod(j, ce)
+        if r == ce - 1:
+            return jax.tree.map(lambda t: t[g],
+                                params["cross_stack"]), "cross"
+        return jax.tree.map(lambda t: t[g][r], params["stack"]), "main"
+    return jax.tree.map(lambda t: t[j], params["stack"]), "main"
+
+
+def self_attention_layers(model: Model) -> List[int]:
+    """Indices of the layers that hash-select (the harvest targets)."""
+    if model.cfg.attention_free:
+        return []
+    return [i for i in range(model.cfg.n_layers)
+            if _layer_kind(model, i) == "main"]
+
+
+def _layer_kind(model: Model, i: int) -> str:
+    cfg = model.cfg
+    if i < model.n_pre:
+        return "main"
+    if cfg.family == "vlm":
+        ce = cfg.vlm.cross_every
+        if (i - model.n_pre) % ce == ce - 1:
+            return "cross"
+    return "main"
+
+
+def _capture_qk(model: Model, bp, x: jax.Array
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """The projection capture at one layer's pre-norm input."""
+    cfg = model.cfg
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    positions = jnp.arange(h.shape[1])
+    if cfg.mla is not None:
+        q_nope, q_rope, ckv, krope = attn_mod._mla_qkv(
+            cfg, bp["attn"], h, positions)
+        q_lat = jax.vmap(lambda qn, qr: attn_mod._mla_latent_q(
+            cfg, bp["attn"], qn, qr), in_axes=1, out_axes=1)(
+            q_nope, q_rope)                          # (B, S, H, r+rd)
+        k_lat = jnp.concatenate([ckv, krope], -1)[:, :, None, :]
+        return (np.asarray(q_lat, np.float32),
+                np.asarray(k_lat, np.float32))
+    q, k, _ = attn_mod._project_qkv(cfg, bp["attn"], h, positions)
+    return np.asarray(q, np.float32), np.asarray(k, np.float32)
+
+
+def harvest_all_layers(model: Model, params, batch: Dict, *,
+                       layers: Optional[Sequence[int]] = None,
+                       ) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+    """One forward pass -> {layer: (q (B,S,H,d), k (B,S,H_kv,d))}.
+
+    ``layers`` restricts the capture set (default: every
+    self-attention layer). Bit-exact per layer with the per-layer
+    ``harvest_qk`` because the residual stream is advanced by the same
+    ``block_train`` evaluations in the same order.
+    """
+    cfg = model.cfg
+    want = set(self_attention_layers(model) if layers is None else layers)
+    x = model.embed(params, batch["tokens"])
+    img = batch.get("image_embeds")
+    if img is not None:
+        img = img.astype(x.dtype) @ params["img_proj"]
+    out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+    last = max(want) if want else -1
+    for i in range(cfg.n_layers):
+        if i > last:
+            break
+        bp, kind = _layer_params(model, params, i)
+        if kind == "main" and i in want:
+            out[i] = _capture_qk(model, bp, x)
+        kind_name = "cross" if kind == "cross" else model.kind
+        x, _ = blocks_mod.block_train(cfg, bp, None, x, kind_name,
+                                      img=img)
+    missing = want - set(out)
+    if missing:
+        raise ValueError(f"layers {sorted(missing)} are not "
+                         "self-attention layers")
+    return out
+
+
+def build_datasets(model: Model, params, batches: Iterable[Dict],
+                   layers: Sequence[int], hcfg: HataConfig, *,
+                   n_queries: int = 64, m_keys: int = 64, seed: int = 0,
+                   ) -> Dict[int, Tuple[np.ndarray, np.ndarray,
+                                        np.ndarray]]:
+    """Streaming dataset build: per batch, ONE forward pass harvests
+    every requested layer, then per-head exact-top-k triplets
+    accumulate. Returns {layer: (q (H_kv,N,d), k (H_kv,N,M,d),
+    s (H_kv,N,M))} — the shape the per-head-vmapped trainer consumes.
+    """
+    acc: Dict[int, Dict[int, list]] = {l: {} for l in layers}
+    for bi, batch in enumerate(batches):
+        caps = harvest_all_layers(model, params, batch, layers=layers)
+        for l in layers:
+            q, k = caps[l]
+            b, s, h, d = q.shape
+            h_kv = k.shape[2]
+            g = h // h_kv
+            qg = q.reshape(b, s, h_kv, g, d)
+            for hi in range(h_kv):
+                acc[l].setdefault(hi, []).append(
+                    build_triplets(qg[:, :, hi], k[:, :, hi], hcfg,
+                                   n_queries=n_queries, m_keys=m_keys,
+                                   seed=seed + 7919 * bi + hi))
+    out = {}
+    for l in layers:
+        heads = sorted(acc[l])
+        qs = np.stack([np.concatenate([t[0] for t in acc[l][hi]])
+                       for hi in heads])
+        ks = np.stack([np.concatenate([t[1] for t in acc[l][hi]])
+                       for hi in heads])
+        ls = np.stack([np.concatenate([t[2] for t in acc[l][hi]])
+                       for hi in heads])
+        out[l] = (qs, ks, ls)
+    return out

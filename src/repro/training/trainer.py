@@ -1,0 +1,248 @@
+"""Per-head-vmapped hash trainers + held-out recall + params install.
+
+Both hash forms train against the same exact-top-k teacher triplets
+(:mod:`repro.training.harvest`):
+
+- linear (paper Eq. 9): ``core.hashing.train_hash_weights_per_head`` —
+  a jitted scan of SGD steps, vmapped over kv heads.
+- non-linear (Spotlight-style 2-layer MLP before sign):
+  ``core.hashing.train_mlp_hash_weights_per_head`` — same harness over
+  the dict pytree of core/hash_weights.py.
+
+Held-out recall averages over ALL G query heads of every kv group and
+every batch row (the old driver scored only head ``hi*g`` of batch 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HataConfig
+from repro.core import hash_weights as hwt
+from repro.core import hashing
+from repro.models.transformer import Model
+from repro.training import harvest
+
+
+@dataclasses.dataclass
+class LayerMetrics:
+    layer: int
+    recall_trained: float
+    recall_seed: float
+    recall_lsh: float
+    budget: int
+    rbit: int
+
+
+def heldout_recall(qh: np.ndarray, kh: np.ndarray, w_h, budget: int, *,
+                   rbit: int) -> float:
+    """Mean hash-top-k recall over ALL heads/rows of a held-out batch.
+
+    qh: (B, S, H, d), kh: (B, S, H_kv, d); w_h: stacked per-head
+    weights — (H_kv, d, rbit) or the MLP dict with leading H_kv axis.
+    Queries are the second-half positions of each row, scored against
+    that row's own causal key set, for every query head in the kv
+    group (not just the group's first head).
+    """
+    per_head = heldout_recall_per_head(qh, kh, w_h, budget, rbit=rbit)
+    return float(np.mean(per_head))
+
+
+def heldout_recall_per_head(qh: np.ndarray, kh: np.ndarray, w_h,
+                            budget: int, *, rbit: int) -> List[float]:
+    """Per-kv-head mean recall; see :func:`heldout_recall`."""
+    b, s, h, d = qh.shape
+    h_kv = kh.shape[2]
+    g = h // h_kv
+    out = []
+    for hi in range(h_kv):
+        w = hwt.head_slice(w_h, hi)
+        recs = []
+        for bi in range(b):
+            qs = jnp.asarray(qh[bi, s // 2:, hi * g:(hi + 1) * g])
+            qs = qs.reshape(-1, d)                   # all G heads
+            ks = jnp.asarray(kh[bi, :, hi])
+            recs.append(hashing.hash_topk_recall(qs, ks, w, budget,
+                                                 rbit=rbit).mean())
+        out.append(float(jnp.mean(jnp.stack(recs))))
+    return out
+
+
+def layer_hash_weights(model: Model, params, layer: int):
+    """The params tree's (seed or trained) hash weights of one layer."""
+    if layer < model.n_pre:
+        return params["hash_pre"][layer]
+    j = layer - model.n_pre
+    hs = params.get("hash_stack")
+    if hs is None:
+        return None
+    return jax.tree.map(lambda t: t[j], hs)
+
+
+def install_hash_weights(model: Model, params,
+                         trained: Dict[int, object]):
+    """Write trained per-layer weights into hash_stack / hash_pre.
+
+    Works for both weight forms: ``jax.tree.map`` pairs the stacked
+    leaves with the per-layer leaves (a plain array is a single leaf).
+    Returns the updated params dict (hash_stack replaced functionally;
+    hash_pre entries replaced in a copied list).
+    """
+    params = dict(params)
+    if "hash_pre" in params:
+        params["hash_pre"] = list(params["hash_pre"])
+    hs = params.get("hash_stack")
+    for layer, w in trained.items():
+        if layer < model.n_pre:
+            params["hash_pre"][layer] = w
+            continue
+        j = layer - model.n_pre
+        if hs is None or not 0 <= j < model.n_stack:
+            continue
+        hs = jax.tree.map(lambda stk, wl: stk.at[j].set(wl), hs, w)
+    params["hash_stack"] = hs
+    return params
+
+
+def _triplet_recall(w, q: jax.Array, k: jax.Array, rbit: int) -> float:
+    """Selection recall on triplets: hash-top-k of each query's key set
+    vs exact-top-k. q: (N, d), k: (N, M, d)."""
+    from repro.core.topk import selection_recall
+    from repro.kernels import ops
+    n, m, d = k.shape
+    qc = ops.hash_encode(q, w)
+    kc = ops.hash_encode(k.reshape(n * m, d), w).reshape(n, m, -1)
+    x = jax.lax.population_count(jnp.bitwise_xor(qc[:, None, :], kc))
+    est = (rbit - jnp.sum(x.astype(jnp.int32), -1)).astype(jnp.float32)
+    true = jnp.einsum("nd,nmd->nm", q.astype(jnp.float32),
+                      k.astype(jnp.float32))
+    budget = max(1, m // 4)
+    return float(selection_recall(est, true, budget).mean())
+
+
+def train_layer(dataset: Tuple[np.ndarray, np.ndarray, np.ndarray], *,
+                rbit: int, hcfg: HataConfig, hidden: int = 0,
+                epochs: int = 15, iters: int = 20, seed: int = 0,
+                heldout: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+    """Train one layer's per-head hash weights on harvested triplets.
+
+    dataset: (q (H_kv,N,d), k (H_kv,N,M,d), s (H_kv,N,M)).
+    hidden=0 -> linear Eq. 9 weights (H_kv, d, rbit); hidden>0 -> the
+    MLP dict form. With ``hidden == 2*rbit`` the MLP warm-starts as an
+    exact embedding of the linear hash trained with the SAME key (so
+    it starts bit-identical to what the linear run would produce —
+    :func:`repro.core.hashing.mlp_warm_start`), fine-tunes at a low
+    lr, and keeps — per head — whichever of {warm start, fine-tuned}
+    selects better. Selection uses ``heldout`` (the calibration
+    harvest ``(q (B,S,H,d), k (B,S,H_kv,d))``) when given, else a 1/4
+    validation split of the triplets; ties keep the warm start, so the
+    MLP never regresses below the linear hash it embeds.
+    """
+    q, k, s = (jnp.asarray(a) for a in dataset)
+    key = jax.random.PRNGKey(seed)
+    if not hidden:
+        return hashing.train_hash_weights_per_head(
+            key, q, k, s, rbit=rbit, hcfg=hcfg, epochs=epochs,
+            iters=iters)
+    if hidden != 2 * rbit:
+        return hashing.train_mlp_hash_weights_per_head(
+            key, q, k, s, rbit=rbit, hidden=hidden, hcfg=hcfg,
+            epochs=epochs, iters=iters)
+    # same key as the linear path: warm == the linear run, bit-exact
+    w_lin = hashing.train_hash_weights_per_head(
+        key, q, k, s, rbit=rbit, hcfg=hcfg, epochs=epochs, iters=iters)
+    warm = jax.vmap(hashing.mlp_warm_start)(w_lin)
+    ft_key = jax.random.fold_in(key, 1)
+    n = q.shape[1]
+    n_fit = n if heldout is not None else max(1, (3 * n) // 4)
+    tuned = hashing.train_mlp_hash_weights_per_head(
+        ft_key, q[:, :n_fit], k[:, :n_fit], s[:, :n_fit], rbit=rbit,
+        hidden=hidden, hcfg=hcfg, init=warm, epochs=epochs,
+        iters=iters, lr=0.01)
+
+    if heldout is not None:
+        qh, kh = heldout
+        budget = max(4, qh.shape[1] // 10)
+        rec_w = heldout_recall_per_head(qh, kh, warm, budget, rbit=rbit)
+        rec_t = heldout_recall_per_head(qh, kh, tuned, budget, rbit=rbit)
+        better = [t > w for w, t in zip(rec_w, rec_t)]
+    else:
+        better = []
+        for hi in range(q.shape[0]):
+            qv, kv = q[hi, n_fit:], k[hi, n_fit:]
+            w_w = hwt.head_slice(warm, hi)
+            w_t = hwt.head_slice(tuned, hi)
+            better.append(_triplet_recall(w_t, qv, kv, rbit)
+                          > _triplet_recall(w_w, qv, kv, rbit))
+    picked = [hwt.head_slice(tuned if b else warm, hi)
+              for hi, b in enumerate(better)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *picked)
+
+
+def train_model_hashes(model: Model, params, batches: Sequence[Dict], *,
+                       layers: Optional[Sequence[int]] = None,
+                       rbit: Optional[int] = None, hidden: int = 0,
+                       epochs: int = 15, iters: int = 20,
+                       n_queries: int = 64, m_keys: int = 64,
+                       budget_frac: float = 0.1, seed: int = 0,
+                       install: Optional[bool] = None,
+                       ) -> Tuple[Dict, Dict[int, object],
+                                  List[LayerMetrics]]:
+    """End-to-end harvest -> train -> evaluate for a set of layers.
+
+    ``batches[:-1]`` are the training prompts, ``batches[-1]`` is held
+    out for recall. Returns (params (with trained weights installed
+    when the trained rbit matches the config), {layer: weights},
+    [LayerMetrics]). The selecting layers (>= hcfg.dense_layers) are
+    trained by default.
+    """
+    cfg = model.cfg
+    rbit = cfg.hata.rbit if rbit is None else rbit
+    hcfg = dataclasses.replace(cfg.hata, rbit=rbit)
+    if layers is None:
+        layers = [l for l in harvest.self_attention_layers(model)
+                  if l >= cfg.hata.dense_layers]
+    assert len(batches) >= 2, "need >= 2 batches (last one is held out"
+    datasets = harvest.build_datasets(
+        model, params, batches[:-1], layers, hcfg,
+        n_queries=n_queries, m_keys=m_keys, seed=seed)
+    held = harvest.harvest_all_layers(model, params, batches[-1],
+                                      layers=layers)
+    trained: Dict[int, object] = {}
+    metrics: List[LayerMetrics] = []
+    lsh_key = jax.random.PRNGKey(seed + 1)
+    for l in layers:
+        # the held-out harvest doubles as the calibration set for the
+        # MLP's per-head keep-warm-or-tuned selection
+        w = train_layer(datasets[l], rbit=rbit, hcfg=hcfg,
+                        hidden=hidden, epochs=epochs, iters=iters,
+                        seed=seed + l, heldout=held[l])
+        trained[l] = w
+        qh, kh = held[l]
+        s_len = qh.shape[1]
+        budget = max(4, int(budget_frac * s_len))
+        rec = heldout_recall(qh, kh, w, budget, rbit=rbit)
+        w_seed = layer_hash_weights(model, params, l)
+        rec_seed = (heldout_recall(qh, kh, w_seed, budget, rbit=rbit)
+                    if w_seed is not None
+                    and hwt.rbit_of(w_seed) == rbit else float("nan"))
+        d = qh.shape[-1]
+        w_lsh = jnp.broadcast_to(
+            hashing.random_projection_lsh(lsh_key, d, rbit),
+            (kh.shape[2], d, rbit))
+        rec_lsh = heldout_recall(qh, kh, w_lsh, budget, rbit=rbit)
+        metrics.append(LayerMetrics(layer=l, recall_trained=rec,
+                                    recall_seed=rec_seed,
+                                    recall_lsh=rec_lsh, budget=budget,
+                                    rbit=rbit))
+    do_install = install
+    if do_install is None:
+        do_install = (rbit == cfg.hata.rbit
+                      and bool(hidden) == bool(cfg.hata.hash_hidden))
+    if do_install:
+        params = install_hash_weights(model, params, trained)
+    return params, trained, metrics

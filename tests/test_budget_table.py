@@ -1,0 +1,225 @@
+"""Budget-table schema discipline + the one resolver + engine parity.
+
+A malformed table must hard-error (``BudgetTableError``) — never fall
+back silently to the global budget. A table whose entries reproduce the
+config's own clamp must be a bit-exact no-op through a full serving
+decode (the engine installs the table at trace time).
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import budgets
+from repro.core.budgets import BudgetTable, BudgetTableError
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.training.calibrate import _allocate
+
+
+def _tbl(**over):
+    obj = {
+        "version": 1,
+        "model": "x",
+        "n_layers": 4,
+        "n_kv_heads": 2,
+        "layers": [
+            {"layer": 1, "budget_frac": 0.1, "budget_min": 8,
+             "budget_max": 64, "head_recall": {"0": 0.5, "1": 0.75}},
+            {"layer": 2, "budget_frac": 0.25, "budget_min": 4,
+             "budget_max": 32},
+        ],
+    }
+    obj.update(over)
+    return obj
+
+
+def _entry(**over):
+    e = {"layer": 3, "budget_frac": 0.1, "budget_min": 8,
+         "budget_max": 64}
+    e.update(over)
+    return e
+
+
+def test_valid_table_parses():
+    t = budgets.parse_budget_table(_tbl())
+    assert t.n_layers == 4 and t.layers() == [1, 2]
+
+
+@pytest.mark.parametrize("obj", [
+    [],                                        # not an object
+    _tbl(version=2),                           # bad version
+    _tbl(version="1"),                         # stringly version
+    _tbl(extra=1),                             # unknown top-level key
+    _tbl(n_layers=0),                          # non-positive n_layers
+    _tbl(n_layers=True),                       # bool masquerading as int
+    _tbl(n_kv_heads=0),
+    _tbl(layers={}),                           # layers not a list
+    _tbl(layers=[[]]),                         # entry not an object
+    _tbl(layers=[_entry(layer=4)]),            # layer out of range
+    _tbl(layers=[_entry(), _entry()]),         # duplicate layer
+    _tbl(layers=[_entry(layer=True)]),
+    _tbl(layers=[{"layer": 1}]),               # missing keys
+    _tbl(layers=[_entry(oops=1)]),             # unknown entry key
+    _tbl(layers=[_entry(budget_frac=0.0)]),
+    _tbl(layers=[_entry(budget_frac=1.5)]),
+    _tbl(layers=[_entry(budget_frac=True)]),
+    _tbl(layers=[_entry(budget_min=0)]),
+    _tbl(layers=[_entry(budget_min=2.5)]),
+    _tbl(layers=[_entry(budget_min=32, budget_max=16)]),
+    _tbl(layers=[_entry(head_recall=[0.5])]),  # not an object
+    _tbl(layers=[_entry(head_recall={"x": 0.5})]),
+    _tbl(layers=[_entry(head_recall={"2": 0.5})]),  # head >= n_kv_heads
+    _tbl(layers=[_entry(head_recall={"0": 1.5})]),
+    _tbl(layers=[_entry(head_recall={"0": True})]),
+])
+def test_malformed_tables_hard_error(obj):
+    with pytest.raises(BudgetTableError):
+        budgets.parse_budget_table(obj)
+
+
+def test_load_errors_are_budget_table_errors(tmp_path):
+    with pytest.raises(BudgetTableError, match="not found"):
+        budgets.load_budget_table(str(tmp_path / "missing.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text("{nope")
+    with pytest.raises(BudgetTableError, match="invalid JSON"):
+        budgets.load_budget_table(str(bad))
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_tbl()))
+    assert budgets.load_budget_table(str(good)).layers() == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# the one resolver
+# ---------------------------------------------------------------------------
+def _hcfg():
+    return get_reduced("qwen1.5-0.5b").hata
+
+
+def test_resolver_without_table_is_global():
+    hcfg = _hcfg()
+    for s in (8, 64, 512, 4096):
+        assert budgets.resolve_budget(hcfg, s) == min(hcfg.budget(s), s)
+
+
+def test_uniform_table_matches_global_budget():
+    """Entries restating the config clamp resolve identically."""
+    hcfg = _hcfg()
+    obj = {"version": 1, "n_layers": 2, "layers": [
+        {"layer": l, "budget_frac": hcfg.budget_frac,
+         "budget_min": hcfg.budget_min, "budget_max": hcfg.budget_max}
+        for l in range(2)]}
+    with budgets.use_budget_table(budgets.parse_budget_table(obj)):
+        for l in range(2):
+            for s in (8, 64, 512, 4096):
+                assert budgets.resolve_budget(hcfg, s, layer=l) \
+                    == budgets.resolve_budget(hcfg, s)
+
+
+def test_table_overrides_per_layer_and_none_falls_back():
+    hcfg = _hcfg()
+    obj = {"version": 1, "n_layers": 3, "layers": [
+        {"layer": 1, "budget_frac": 0.5, "budget_min": 4,
+         "budget_max": 8}]}
+    with budgets.use_budget_table(budgets.parse_budget_table(obj)):
+        assert budgets.resolve_budget(hcfg, 64, layer=1) == 8
+        # unlisted layer and layer=None (scanned/SP paths) -> global
+        assert budgets.resolve_budget(hcfg, 64, layer=0) \
+            == hcfg.budget(64)
+        assert budgets.resolve_budget(hcfg, 64) == hcfg.budget(64)
+        # window still caps
+        assert budgets.resolve_budget(hcfg, 64, layer=1, window=5) == 5
+    assert budgets.get_budget_table() is None
+
+
+def test_env_table_applies_and_explicit_wins(tmp_path, monkeypatch):
+    hcfg = _hcfg()
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps({"version": 1, "n_layers": 2, "layers": [
+        {"layer": 0, "budget_frac": 0.5, "budget_min": 2,
+         "budget_max": 4}]}))
+    monkeypatch.setenv(budgets.ENV_TABLE, str(p))
+    budgets.clear_table_cache()
+    try:
+        assert budgets.resolve_budget(hcfg, 64, layer=0) == 4
+        explicit = BudgetTable(n_layers=2, entries=((0, 0.5, 6, 6),))
+        with budgets.use_budget_table(explicit):
+            assert budgets.resolve_budget(hcfg, 64, layer=0) == 6
+        assert budgets.resolve_budget(hcfg, 64, layer=0) == 4
+    finally:
+        monkeypatch.delenv(budgets.ENV_TABLE)
+        budgets.clear_table_cache()
+
+
+# ---------------------------------------------------------------------------
+# engine parity: uniform table == no table, bit-exact decode
+# ---------------------------------------------------------------------------
+def test_engine_decode_bit_exact_with_uniform_table():
+    cfg = get_reduced("qwen1.5-0.5b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    hcfg = cfg.hata
+    obj = {"version": 1, "model": cfg.name, "n_layers": cfg.n_layers,
+           "layers": [
+               {"layer": l, "budget_frac": hcfg.budget_frac,
+                "budget_min": hcfg.budget_min,
+                "budget_max": hcfg.budget_max}
+               for l in range(cfg.n_layers)]}
+    table = budgets.parse_budget_table(obj)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(3)]
+
+    def run(budget_table):
+        # fresh engine per run: budgets resolve at trace time
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            budget_table=budget_table)
+        done = eng.run([Request(prompt=p, max_new_tokens=6)
+                        for p in prompts])
+        return {r.prompt.tobytes(): r.output for r in done}
+
+    assert run(None) == run(table)
+
+
+def test_engine_rejects_malformed_table_path(tmp_path):
+    cfg = get_reduced("qwen1.5-0.5b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"version": 7}))
+    with pytest.raises(BudgetTableError):
+        ServingEngine(model, params, max_batch=1, max_len=32,
+                      budget_table=str(bad))
+
+
+# ---------------------------------------------------------------------------
+# the joint allocator
+# ---------------------------------------------------------------------------
+def test_allocate_finds_strictly_lower_budget():
+    """Heterogeneous slopes: a saturated layer sheds budget that a
+    steep layer only partly re-spends."""
+    ladder = [8, 12, 16, 20]
+    curves = {0: [0.80, 0.90, 0.905, 0.91],
+              1: [0.20, 0.50, 0.80, 0.95]}
+    gi = ladder.index(16)
+    idx = _allocate(curves, ladder, gi)
+    total = sum(ladder[idx[l]] for l in curves)
+    recall = sum(curves[l][idx[l]] for l in curves)
+    target = sum(curves[l][gi] for l in curves)
+    assert recall >= target - 1e-12
+    assert total < 2 * 16
+
+
+def test_allocate_homogeneous_never_exceeds_global():
+    ladder = [8, 12, 16, 20]
+    curves = {l: [0.5, 0.6, 0.7, 0.8] for l in range(3)}
+    gi = ladder.index(16)
+    idx = _allocate(curves, ladder, gi)
+    assert sum(ladder[idx[l]] for l in curves) <= 3 * 16
+    assert sum(curves[l][idx[l]] for l in curves) \
+        >= sum(curves[l][gi] for l in curves) - 1e-12
