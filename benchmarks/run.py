@@ -11,6 +11,8 @@
   offload_model      Table 3
   offload_efficiency beyond-paper: tiered OffloadedView residency curve
   distributed_topk   beyond-paper SP selection quality
+  serving_load       beyond-paper serving-plane load test (TTFT/ITL
+                     percentiles, async-vs-sync tokens/s)
   autotune_sweep     beyond-paper kernel block-size search
   roofline           §Roofline (reads experiments/dryrun/*.json and
                      the autotune sweep artifacts)
@@ -28,7 +30,8 @@ def main() -> None:
                             hashbits_ablation, offload_efficiency,
                             offload_model, opt_ablation,
                             prefill_efficiency, recall_accuracy,
-                            recall_budget_curve, roofline)
+                            recall_budget_curve, roofline,
+                            serving_load)
     suites = [
         ("recall_accuracy", recall_accuracy.main),
         ("recall_budget_curve", recall_budget_curve.main),
@@ -40,6 +43,9 @@ def main() -> None:
         ("offload_model", offload_model.main),
         ("offload_efficiency", offload_efficiency.main),
         ("distributed_topk", distributed_topk.main),
+        # explicit empty argv: the orchestrator's own argv must not
+        # leak into the suite's argparse
+        ("serving_load", lambda: serving_load.main([])),
         # before roofline: roofline reads the sweep artifacts
         ("autotune_sweep", autotune_sweep.main),
         ("roofline", roofline.main),

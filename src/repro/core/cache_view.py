@@ -771,6 +771,14 @@ def paged_view(pool, block_table: jax.Array):
     return PagedView(pool, block_table)
 
 
+def paged_views(pools, block_table: jax.Array) -> List:
+    """One per-layer view around a shared block table — the serving
+    plane's workers (serving/plane.py) build their decode/chunk bodies
+    on this, so dense-resident, paged and offloaded layers all flow
+    through :func:`paged_view`'s per-pool dispatch in one place."""
+    return [paged_view(pool, block_table) for pool in pools]
+
+
 def unwrap(view_or_cache):
     """Return the wrapped storage (cache or pool); raw caches pass
     through — the inverse of the ``as_*``/``paged_view`` coercions."""

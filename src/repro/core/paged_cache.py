@@ -43,6 +43,7 @@ below zero raise; ``free + held == num_pages`` at all times.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -322,6 +323,155 @@ class PageAllocator:
         assert len(self._free) == len(free), "duplicate free-list entries"
         assert held | free == set(range(self.num_pages)), "page leaked"
         assert all(r >= 1 for r in self._ref.values()), self._ref
+
+
+class ShardedPageAllocator:
+    """Per-shard free lists over ONE global page-id space.
+
+    The sharded-pool paged engine shards a pool's page axis over the
+    mesh's sequence axis: shard ``s`` physically holds global pages
+    ``[s * pps, (s+1) * pps)`` with ``pps = num_pages // n_shards``.
+    Block-table columns are sharded the same way, so the page backing
+    column ``c`` must be OWNED by ``c``'s shard — allocation is
+    therefore by shard (:meth:`alloc_shards`), while refcounting stays
+    id-addressed (``retain``/``release`` route to the owner), which is
+    exactly the :class:`PageAllocator` surface :class:`PrefixCache`
+    needs: prefix pages sit at fixed column positions (column =
+    logical_row // page_size), so a cached prefix page is always
+    re-adopted into the same shard it lives on.
+
+    Page-id convention (DESIGN.md §8): engine/transfer-layer tables
+    carry GLOBAL ids; ``SPDecode(global_page_ids=True)`` derives each
+    shard's local ids inside shard_map by subtracting the shard base.
+    """
+
+    def __init__(self, num_pages: int, n_shards: int):
+        assert num_pages % n_shards == 0, (num_pages, n_shards)
+        self.num_pages = num_pages
+        self.n_shards = n_shards
+        self.pages_per_shard = num_pages // n_shards
+        pps = self.pages_per_shard
+        # pop() from the end -> ascending ids first, per shard
+        self._free: List[List[int]] = [
+            list(range((s + 1) * pps - 1, s * pps - 1, -1))
+            for s in range(n_shards)]
+        self._ref: Dict[int, int] = {}
+
+    def shard_of(self, page: int) -> int:
+        return page // self.pages_per_shard
+
+    # ------------------------------------------------------------------
+    def free_count(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def shard_free_count(self, shard: int) -> int:
+        return len(self._free[shard])
+
+    def used_count(self) -> int:
+        return self.num_pages - self.free_count()
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    # ------------------------------------------------------------------
+    def alloc_shards(self, shards: Sequence[int]) -> Optional[List[int]]:
+        """One page from each listed shard (repeats allowed), atomic:
+        if ANY shard is dry nothing is allocated and None returns."""
+        demand: Dict[int, int] = {}
+        for s in shards:
+            demand[s] = demand.get(s, 0) + 1
+        if any(len(self._free[s]) < n for s, n in demand.items()):
+            return None
+        pages = [self._free[s].pop() for s in shards]
+        for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Shard-agnostic allocation (round-robin from the freest
+        shards) — for callers that don't care about column placement,
+        e.g. per-shard scratch reservation goes through
+        :meth:`alloc_shards` instead."""
+        if n > self.free_count():
+            return None
+        pages: List[int] = []
+        for _ in range(n):
+            s = max(range(self.n_shards),
+                    key=lambda i: len(self._free[i]))
+            pages.append(self._free[s].pop())
+        for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def retain(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if self._ref.get(p, 0) <= 0:
+                raise ValueError(f"retain of unallocated page {p}")
+            self._ref[p] += 1
+
+    def release(self, pages: Sequence[int]) -> int:
+        freed = 0
+        for p in pages:
+            ref = self._ref.get(p, 0)
+            if ref <= 0:
+                raise ValueError(f"double free of page {p}")
+            if ref == 1:
+                del self._ref[p]
+                self._free[self.shard_of(p)].append(p)
+                freed += 1
+            else:
+                self._ref[p] = ref - 1
+        return freed
+
+    # ------------------------------------------------------------------
+    def check(self) -> None:
+        held = set(self._ref)
+        free = set(p for f in self._free for p in f)
+        assert not (held & free), f"pages both held and free: {held & free}"
+        assert sum(len(f) for f in self._free) == len(free), \
+            "duplicate free-list entries"
+        assert held | free == set(range(self.num_pages)), "page leaked"
+        assert all(r >= 1 for r in self._ref.values()), self._ref
+        for s in range(self.n_shards):
+            lo, hi = s * self.pages_per_shard, (s + 1) * self.pages_per_shard
+            assert all(lo <= p < hi for p in self._free[s]), \
+                f"shard {s} free list holds foreign pages"
+
+
+# ---------------------------------------------------------------------------
+# Page shipping (disaggregated prefill -> decode transfer)
+# ---------------------------------------------------------------------------
+@jax.jit
+def _gather_pages(leaf: jax.Array, ids: jax.Array) -> jax.Array:
+    return leaf[ids]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_pages(dst_leaf: jax.Array, ids: jax.Array,
+                   rows: jax.Array) -> jax.Array:
+    return dst_leaf.at[ids].set(rows.astype(dst_leaf.dtype))
+
+
+def copy_pages(src_pool, dst_pool, src_ids, dst_ids, device=None):
+    """Copy whole pages between two pools of the same layout.
+
+    The disaggregated serving plane's ``Transfer`` boundary: gather the
+    shipped pages from the prefill pool, (optionally) move them to the
+    decode pool's device, scatter them at the remapped ids. Src pages
+    are read in place (no donation); dst leaves are donated so the
+    scatter stays a true in-place write. Returns the new dst pool.
+    """
+    src_leaves, treedef = jax.tree_util.tree_flatten(src_pool)
+    dst_leaves = jax.tree_util.tree_leaves(dst_pool)
+    si = jnp.asarray(src_ids, jnp.int32)
+    di = jnp.asarray(dst_ids, jnp.int32)
+    out = []
+    for s, d in zip(src_leaves, dst_leaves):
+        rows = _gather_pages(s, si)
+        if device is not None:
+            rows = jax.device_put(rows, device)
+        out.append(_scatter_pages(d, di, rows))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # ---------------------------------------------------------------------------

@@ -78,3 +78,59 @@ def hierarchical_psum(x: jax.Array, pod_axis: str, inner_axis: str,
     """psum factored as inner-pod reduce then cross-pod reduce: XLA lowers
     each stage onto its own link class (ICI in-pod, DCI across)."""
     return jax.lax.psum(jax.lax.psum(x, inner_axis), pod_axis)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective-count regression guards (alpa-style)
+# ---------------------------------------------------------------------------
+# A scheduler/strategy refactor can silently double the all-reduces —
+# nothing in a bit-exactness test notices, the step just gets slower.
+# The guard counts collective ops in the COMPILED HLO text of the
+# serving plane's decode/prefill steps and pins them against a
+# committed baseline (tests/data/hlo_collectives.json); alpa does the
+# same to keep its pipeshard stages honest. Counting is literal
+# substring matching on the optimized module — crude but stable for a
+# fixed jax version, and a version bump that shifts the lowering shows
+# up as an explicit baseline regen, not a silent perf cliff.
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "all-to-all",
+                  "collective-permute", "reduce-scatter")
+
+
+def collective_counts(hlo_text: str) -> dict:
+    """Count collective instructions in (compiled) HLO text.
+
+    Matches both plain (``all-reduce(``) and async-pair
+    (``all-reduce-start(``) forms; the async ``-done`` halves are not
+    counted (one logical collective = one count).
+    """
+    counts = {}
+    for op in COLLECTIVE_OPS:
+        n = hlo_text.count(f" {op}(") + hlo_text.count(f" {op}-start(")
+        if n:
+            counts[op] = n
+    return counts
+
+
+def compiled_collective_counts(jitted, *args, **kwargs) -> dict:
+    """Lower + compile a jitted callable on example args (nothing is
+    executed) and return its collective counts."""
+    compiled = jitted.lower(*args, **kwargs).compile()
+    return collective_counts(compiled.as_text())
+
+
+def assert_collective_counts(got: dict, expected: dict,
+                             label: str) -> None:
+    """Raise if ``got`` differs from ``expected`` on ANY collective op
+    — extra collectives are a perf regression, missing ones mean the
+    step silently changed shape (stale baseline either way)."""
+    keys = sorted(set(got) | set(expected))
+    drift = {k: (expected.get(k, 0), got.get(k, 0))
+             for k in keys if expected.get(k, 0) != got.get(k, 0)}
+    if drift:
+        lines = "; ".join(f"{k}: expected {e}, got {g}"
+                          for k, (e, g) in drift.items())
+        raise AssertionError(
+            f"[hlo-guard] {label}: collective counts drifted — {lines}. "
+            "If the change is intentional, regenerate the baseline "
+            "(python -m repro.distributed.hlo_guard --write).")

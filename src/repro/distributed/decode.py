@@ -33,7 +33,9 @@ Cache layouts come in through :mod:`repro.core.cache_view`:
 plain cache) *or* a ``PagedView``/``PagedMLAView`` — a page pool whose
 page axis is sharded over the sequence axes plus a block table whose
 column axis is sharded the same way, each shard's table naming *local*
-pages. Inside shard_map both layouts collapse to one
+pages (or GLOBAL ids with ``global_page_ids=True`` — the serving
+plane's convention, localized by subtracting the shard base; see
+DESIGN.md §8). Inside shard_map both layouts collapse to one
 :class:`~repro.core.cache_view.ShardedView` (local slice + absolute
 offset), so the two_stage/local_split local math is written once:
 physical-row translation (the paged inner view) composes with the
@@ -98,12 +100,22 @@ class SPDecode:
 
     def __init__(self, mesh: Mesh, *, seq_axes: Tuple[str, ...] = ("model",),
                  batch_axes: Optional[Tuple[str, ...]] = None,
-                 mode: str = "two_stage"):
+                 mode: str = "two_stage", global_page_ids: bool = False):
         assert mode in ("naive", "two_stage", "local_split"), mode
         self.mesh = mesh
         self.seq_axes = tuple(seq_axes)
         self.batch_axes = tuple(batch_axes or ())
         self.mode = mode
+        # Paged-view block-table address convention. Default (False):
+        # each shard's table column slice names LOCAL page ids of its
+        # pool slice (the PR-5 layout, used by the slow SP sweeps).
+        # True: tables carry GLOBAL page ids — the serving plane's
+        # sharded-pool engine needs this because appends and prefill
+        # run on the GSPMD path OUTSIDE shard_map (physical_rows must
+        # see global ids there), and the engine's ShardedPageAllocator
+        # guarantees column c's page is owned by c's shard, so inside
+        # shard_map the local id is just global - shard_base.
+        self.global_page_ids = global_page_ids
         self.n_seq_shards = int(math.prod(
             mesh.shape[a] for a in self.seq_axes))
 
@@ -218,6 +230,13 @@ class SPDecode:
         def rebuild(*loc):
             if is_paged:
                 *vals, bt = loc
+                if self.global_page_ids:
+                    # global -> local ids: this shard's column slice
+                    # only ever names pages it owns (allocator
+                    # invariant), so subtracting the shard base maps
+                    # every entry into [0, pages_per_shard)
+                    bt = bt - _flat_axis_index(self.seq_axes) \
+                        * vals[0].shape[0]
             else:
                 vals, bt = list(loc), None
             if not has_codes:
@@ -292,10 +311,14 @@ class SPDecode:
         g = h // h_kv
         s_local = sv.s_local
         abs_pos = sv.positions()
-        valid = abs_pos[None, None, :] < n_valid          # (1,1,S_l)
+        # n_valid may be scalar (offline SP decode) or (B,) — serving
+        # waves run slots at different depths, so the validity mask is
+        # per row
+        nv = jnp.reshape(jnp.asarray(n_valid, jnp.int32), (-1, 1, 1))
+        valid = abs_pos[None, None, :] < nv               # (1|B,1,S_l)
         if cfg.sliding_window is not None:
             valid = valid & (abs_pos[None, None, :]
-                             > n_valid - 1 - cfg.sliding_window)
+                             > nv - 1 - cfg.sliding_window)
         qg = q.reshape(b, h_kv, g, d)
         scale = d ** -0.5
 
@@ -404,7 +427,9 @@ class SPDecode:
         b, h, _ = q_lat.shape
         s_local = sv.s_local
         abs_pos = sv.positions()
-        valid = abs_pos[None] < n_valid                    # (1, S_l)
+        # scalar or (B,) n_valid — per-row masks for serving waves
+        nv = jnp.reshape(jnp.asarray(n_valid, jnp.int32), (-1, 1))
+        valid = abs_pos[None] < nv                         # (1|B, S_l)
 
         def dense():
             ckv_loc, kr_loc = sv.latents_logical()

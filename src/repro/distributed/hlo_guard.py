@@ -1,0 +1,163 @@
+"""HLO collective-count regression guards for the serving plane.
+
+GSPMD/shard_map partitioning regressions rarely fail tests — they show
+up as *extra collectives* in the compiled step (an accidental
+all-gather of a sharded pool, a resharding all-to-all from a changed
+in_spec), which silently multiply the interconnect traffic per decode
+step. The guard compiles the serving workers' actual step functions,
+counts the collective ops in the optimized HLO text (alpa-style
+``" op("`` counting, ``distributed/collectives.py``), and compares the
+counts EXACTLY against a committed baseline
+(``tests/data/hlo_collectives.json``):
+
+  * ``colocated_paged`` (single device): decode + prefill-chunk steps
+    of the default engine must contain ZERO collectives — a nonzero
+    count means something dragged a collective into the single-host
+    path;
+  * ``sharded_pool_p<N>``: the sharded-pool engine's SPDecode
+    (two_stage, global page ids) decode step and its GSPMD prefill
+    chunk at N host devices — the counts pin the communication
+    schedule of the sequence-parallel wave (partial-softmax merge
+    all-reduces, distributed top-k all-gathers).
+
+Regenerate after an INTENDED schedule change:
+
+    python -m repro.distributed.hlo_guard --write
+
+(sets ``--xla_force_host_platform_device_count`` before first jax use,
+so run it from a fresh process). Tier-1 runs the single-device case
+in-process and the sharded case in a subprocess
+(tests/test_hlo_guard.py), including an injected-regression check that
+patches an extra psum into the merge and asserts the guard trips.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Dict
+
+_REPO = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                     "..", "..", ".."))
+BASELINE_PATH = os.path.join(_REPO, "tests", "data",
+                             "hlo_collectives.json")
+
+
+def load_baseline(path: str = BASELINE_PATH) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# case builders (lazy imports: --write must set XLA_FLAGS pre-jax)
+# ---------------------------------------------------------------------------
+def _setup(arch: str = "qwen1.5-0.5b"):
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import Model
+    cfg = get_reduced(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _engine_counts(eng) -> Dict[str, Dict[str, int]]:
+    """Compile the engine's OWN worker step fns on representative
+    shapes and count collectives in the optimized HLO."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.distributed.collectives import compiled_collective_counts
+    decode_args = (eng._decode_params, eng._tok_feed,
+                   eng.decode_group.pools, jnp.asarray(eng.bt),
+                   jnp.asarray(eng.pos), jnp.asarray(eng._ids),
+                   jnp.asarray(eng._steps))
+    chunk = np.zeros((1, eng.prefill_chunk), np.int32)
+    bt_row = eng.prefill_group.scratch_cols[None].copy()
+    chunk_args = (eng._prefill_params, jnp.asarray(chunk),
+                  eng.prefill_group.pools, jnp.asarray(bt_row),
+                  jnp.int32(0), jnp.int32(eng.prefill_chunk - 1))
+    return {
+        "decode": compiled_collective_counts(eng.decode.step_jit,
+                                             *decode_args),
+        "prefill_chunk": compiled_collective_counts(eng.prefill.step_jit,
+                                                    *chunk_args),
+    }
+
+
+def colocated_case() -> Dict[str, Dict[str, int]]:
+    from repro.serving import PagedServingEngine
+    model, params = _setup()
+    eng = PagedServingEngine(model, params, num_pages=16, page_size=8,
+                             max_batch=2, prefill_chunk=8)
+    return _engine_counts(eng)
+
+
+def sharded_case(n_shards: int = 4) -> Dict[str, Dict[str, int]]:
+    from repro.launch.mesh import make_mesh
+    from repro.serving import PagedServingEngine
+    model, params = _setup()
+    mesh = make_mesh((n_shards,), ("model",))
+    eng = PagedServingEngine(model, params, num_pages=16, page_size=8,
+                             max_batch=2, prefill_chunk=8, mesh=mesh,
+                             sp_mode="two_stage")
+    return _engine_counts(eng)
+
+
+def build_cases(n_shards: int = 4) -> Dict:
+    import jax
+    cases = {"colocated_paged": colocated_case()}
+    if jax.device_count() >= n_shards:
+        cases[f"sharded_pool_p{n_shards}"] = sharded_case(n_shards)
+    return cases
+
+
+def check_against_baseline(cases: Dict, baseline: Dict) -> None:
+    """Exact comparison, guard-style error messages."""
+    from repro.distributed.collectives import assert_collective_counts
+    for name, steps in baseline["cases"].items():
+        assert name in cases, f"hlo_guard: case {name!r} was not built"
+        for step, expected in steps.items():
+            assert_collective_counts(cases[name][step], expected,
+                                     label=f"{name}/{step}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the committed baseline")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="host device count for the sharded case")
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    args = ap.parse_args()
+    # the device count locks at first jax/XLA touch, which the
+    # package imports already triggered — re-exec with the flag set
+    if "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        import subprocess
+        import sys
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            " --xla_force_host_platform_device_count="
+                            f"{args.devices}").strip()
+        raise SystemExit(subprocess.call(
+            [sys.executable, "-m", "repro.distributed.hlo_guard"]
+            + sys.argv[1:], env=env))
+    cases = build_cases(args.devices)
+    if args.write:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump({"arch": "qwen1.5-0.5b", "cases": cases}, f,
+                      indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.baseline}")
+    else:
+        check_against_baseline(cases, load_baseline(args.baseline))
+        print("hlo_guard: all collective counts match the baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -275,3 +275,40 @@ class ShardingPolicy:
             lines.append(f"{p:70s} {str(leaf.shape):24s} "
                          f"{self.param_spec(p, leaf)}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel paged pools (the sharded-pool serving engine)
+# ---------------------------------------------------------------------------
+# ``ShardingPolicy.pool_spec`` above is the GSPMD layout (pages
+# replicated, kv-heads over ``model``). The sharded-pool engine instead
+# runs SP decode waves: the pool's PAGE axis and the block table's
+# COLUMN axis shard together over the sequence axis, with GLOBAL page
+# ids in the tables (SPDecode(global_page_ids=True) localizes them
+# inside shard_map; per-shard page ownership is the
+# ``ShardedPageAllocator``'s invariant). These helpers are the one
+# place that layout is spelled.
+
+def seq_pool_spec(leaf, seq_axis: str = "model") -> P:
+    """(P, page, ...) pool leaf: page axis over the sequence axis."""
+    return P(seq_axis, *([None] * (leaf.ndim - 1)))
+
+
+def shard_paged_pools(mesh: Mesh, pools, seq_axis: str = "model"):
+    """Device_put a list of per-layer page pools with the page axis
+    sharded over ``seq_axis`` (every other dim replicated)."""
+    return jax.tree.map(
+        lambda leaf: jax.device_put(
+            leaf, NamedSharding(mesh, seq_pool_spec(leaf, seq_axis))),
+        pools)
+
+
+def block_table_sharding(mesh: Mesh,
+                         seq_axis: str = "model") -> NamedSharding:
+    """(B, T) block table: columns follow the pool's page axis."""
+    return NamedSharding(mesh, P(None, seq_axis))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Small per-wave operands (tokens, pos, ids, steps)."""
+    return NamedSharding(mesh, P())

@@ -11,6 +11,15 @@ per layer, chunked prefill interleaved with decode waves, prefix
 sharing, preemption — the model is driven through the same view-typed
 ``decode_step``/``prefill_chunk`` as the dense engine (the pools +
 block table are wrapped in ``core.cache_view.PagedView``s per wave).
+
+Serving-plane knobs (DESIGN.md §8): ``--async-waves`` double-buffers
+decode waves (launch n+1 before harvesting n; outputs stay bit-exact),
+``--lookahead N`` lets admission consider the first N+1 queued requests
+(first-fit within the window — relieves head-of-line blocking behind an
+oversized prompt), ``--disaggregate`` splits prefill and decode into
+separate page pools (implies --paged; with ``--prefill-devices`` /
+``--decode-devices`` each side runs on its own device and finished
+prefills ship their pages across the transfer boundary).
 """
 from __future__ import annotations
 
@@ -48,8 +57,23 @@ def main(argv=None):
     ap.add_argument("--hbm-budget-mb", type=float, default=None,
                     help="with --offload: watermark admission against "
                          "this HBM-resident budget (codes + staging)")
+    ap.add_argument("--async-waves", action="store_true",
+                    help="double-buffered decode waves: launch wave "
+                         "n+1 before harvesting wave n (bit-exact)")
+    ap.add_argument("--lookahead", type=int, default=0,
+                    help="admission lookahead window; 0 = strict FCFS")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split prefill/decode page pools; finished "
+                         "prefills ship pages across the transfer "
+                         "boundary (implies --paged)")
+    ap.add_argument("--prefill-devices", type=int, default=0,
+                    help="with --disaggregate: host the prefill pool "
+                         "on device 0 of this many reserved devices")
+    ap.add_argument("--decode-devices", type=int, default=0,
+                    help="with --disaggregate: host the decode pool on "
+                         "the first device after the prefill reserve")
     args = ap.parse_args(argv)
-    if args.offload:
+    if args.offload or args.disaggregate:
         args.paged = True
 
     cfg = (get_reduced(args.arch) if args.reduced
@@ -64,15 +88,33 @@ def main(argv=None):
         table_pages = -(-args.max_len // args.page_size)
         budget = (None if args.hbm_budget_mb is None
                   else int(args.hbm_budget_mb * 2**20))
+        prefill_dev = decode_dev = None
+        if args.disaggregate and (args.prefill_devices
+                                  or args.decode_devices):
+            devs = jax.devices()
+            need = max(args.prefill_devices, 1) + \
+                max(args.decode_devices, 1)
+            assert len(devs) >= need, (
+                f"{len(devs)} devices available, "
+                f"--prefill-devices + --decode-devices need {need} "
+                "(use XLA_FLAGS=--xla_force_host_platform_device_count"
+                "=N on CPU)")
+            prefill_dev = devs[0]
+            decode_dev = devs[max(args.prefill_devices, 1)]
         engine = PagedServingEngine(
             model, params,
             num_pages=args.max_batch * table_pages + 1,
             page_size=args.page_size, max_batch=args.max_batch,
             max_len_pages=table_pages, offload=args.offload,
-            hbm_budget_bytes=budget)
+            hbm_budget_bytes=budget, lookahead=args.lookahead,
+            async_waves=args.async_waves,
+            disaggregate=args.disaggregate,
+            prefill_device=prefill_dev, decode_device=decode_dev)
     else:
         engine = ServingEngine(model, params, max_batch=args.max_batch,
-                               max_len=args.max_len)
+                               max_len=args.max_len,
+                               lookahead=args.lookahead,
+                               async_waves=args.async_waves)
     rng = np.random.default_rng(args.seed)
     nb = cfg.audio.n_codebooks if cfg.family == "audio" else 0
     reqs = []
@@ -94,7 +136,10 @@ def main(argv=None):
               f"out={len(r.output):4d} ttft={ttft:8.1f}ms "
               f"total={total:8.1f}ms")
     mode = ("offload" if args.offload
+            else "disagg" if args.disaggregate
             else "paged" if args.paged else "dense")
+    if args.async_waves:
+        mode += "+async"
     print(f"[serve/{mode}] {engine.stats} wall={dt:.2f}s "
           f"tok/s={engine.stats['tokens_out'] / dt:.1f}")
     return done

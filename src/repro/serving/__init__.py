@@ -1,7 +1,15 @@
 from repro.serving.base import EngineBase
 from repro.serving.engine import ServingEngine
+from repro.serving.plane import (ADMIT, DEFER, TRUNCATE,
+                                 AdmissionController, DecodeWorker,
+                                 PageShipper, PoolGroup, PrefillTask,
+                                 PrefillWorker, Transfer, Wave,
+                                 make_pool_group)
 from repro.serving.request import Request
 from repro.serving.scheduler import PagedServingEngine
 
 __all__ = ["EngineBase", "ServingEngine", "Request",
-           "PagedServingEngine"]
+           "PagedServingEngine", "AdmissionController", "DecodeWorker",
+           "PrefillWorker", "PrefillTask", "PoolGroup", "Transfer",
+           "PageShipper", "Wave", "make_pool_group",
+           "ADMIT", "DEFER", "TRUNCATE"]

@@ -1,45 +1,64 @@
 """Shared continuous-batching engine machinery.
 
 :class:`EngineBase` owns everything that is policy-free and identical
-across engines: the request queue, the static slot table, per-request
-RNG sampling, the step/run driver loop, and — crucially — the ONE
-retirement path that stamps a :class:`~repro.serving.request.Request`'s
-terminal fields. The dense :class:`~repro.serving.engine.ServingEngine`
-and the paged :class:`~repro.serving.scheduler.PagedServingEngine`
-subclass it with only admission and capacity/eviction policy local
-(which is exactly what *should* differ between a static-slab cache and
-a page pool).
+across engines: the admission controller (queue + lookahead, see
+serving/plane.py), the static slot table, per-request RNG sampling,
+the step/run driver loop, and — crucially — the ONE token-emission
+path and the ONE retirement path that stamp a
+:class:`~repro.serving.request.Request`'s timing/terminal fields. The
+dense :class:`~repro.serving.engine.ServingEngine` and the paged
+:class:`~repro.serving.scheduler.PagedServingEngine` subclass it with
+only admission and capacity/eviction policy local (which is exactly
+what *should* differ between a static-slab cache and a page pool).
 
-Why the retirement path is centralized: the two engines' finish logic
-had drifted — the dense engine stamped ``truncated``/``t_done`` inline
-at admission and at the cache wall (and never counted truncations),
-the paged one via its own ``_finish_truncated`` (which did). Every
-terminal transition now goes through :meth:`EngineBase._finish`, so
-``truncated``, ``t_done`` and ``stats["truncated"]`` are set
-identically whichever engine retires the request.
+Why emission/retirement are centralized: the two engines' finish logic
+had drifted once before (inline ``truncated``/``t_done`` stamping vs a
+private ``_finish_truncated``), and per-token timing would have drifted
+the same way — the dense engine stamped ``t_first_token`` in two
+places and the paged one in two others, and neither kept per-token
+stamps at all. Every emitted token now goes through
+:meth:`EngineBase._record_token` (output append + ``t_tokens`` stamp +
+``t_first_token`` + stats + the ``on_token`` callback) and every
+terminal transition through :meth:`EngineBase._finish`, so TTFT/ITL
+measurements mean the same thing whichever engine — or whichever
+sync/async tick — produced them.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
-from typing import Deque, List, Optional, Union
+from typing import Callable, List, Optional, Union
 
 import jax
 import numpy as np
 
 from repro.core import budgets as budgets_mod
 from repro.models import Model
+from repro.serving.plane import AdmissionController
 from repro.serving.request import Request
 from repro.serving.sampling import pick_tokens
 
 
 class EngineBase:
-    """Queue + slots + RNG + retirement; subclasses add the waves."""
+    """Admission + slots + RNG + emission/retirement; subclasses add
+    the waves.
+
+    ``async_waves=True`` switches the subclass tick to the
+    double-buffered wave loop (launch wave *n+1* before harvesting
+    wave *n* — see serving/plane.py); outputs are bit-exact vs the
+    synchronous tick because tokens are pure functions of
+    (seed, id, step). ``on_token(req, tok)`` fires from
+    :meth:`_record_token` for every emitted token — the streaming/
+    detokenize hook whose host cost the async tick hides under the
+    next wave.
+    """
 
     def __init__(self, model: Model, params, *, max_batch: int,
                  sample: str = "greedy", seed: int = 0,
                  budget_table: Union[budgets_mod.BudgetTable, str,
-                                     None] = None):
+                                     None] = None,
+                 lookahead: int = 0, async_waves: bool = False,
+                 on_token: Optional[Callable[[Request, int],
+                                             None]] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -57,12 +76,26 @@ class EngineBase:
         # id, step) — independent of which other requests happen to be
         # co-scheduled, and bit-exact under preemption replay.
         self._base_key = jax.random.PRNGKey(seed)
-        self.queue: Deque[Request] = deque()
+        self.admission = AdmissionController(lookahead)
+        self.async_waves = async_waves
+        self.on_token = on_token
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)
+        # per-slot (id, step) mirrors feeding the fused device-side
+        # pick: step = len(req.output) at wave LAUNCH (the sampled
+        # stream index of the token the wave will emit)
+        self._ids = np.zeros(max_batch, np.int32)
+        self._steps = np.zeros(max_batch, np.int32)
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_out": 0, "truncated": 0}
         self._done_this_step: List[Request] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def queue(self):
+        """The admission controller's deque (compat view — tests and
+        callers inspect/seed it directly)."""
+        return self.admission.queue
 
     # ------------------------------------------------------------------
     def _with_table(self, fn):
@@ -83,18 +116,43 @@ class EngineBase:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        # restamp at hand-off: a frontend may construct requests long
+        # before submitting them (closed-loop follow-ups), and queueing
+        # time = t_admitted - t_submit must start here. Preemption
+        # requeues bypass submit(), keeping the original stamp.
+        req.t_submit = time.monotonic()
+        self.admission.submit(req)
 
     def _pick(self, logits, reqs):
         """Next-token pick for each logits row; ``reqs`` aligns a
         Request (or None) with every row — per-request (id, step) RNG
-        streams, see serving/sampling.py."""
+        streams, see serving/sampling.py. (Decode waves fuse this into
+        the worker jit via ``pick_tokens_device``; this eager entry is
+        for prefill logits at admission.)"""
         return pick_tokens(self._base_key, logits, reqs, self.sample)
 
     @staticmethod
     def _to_py(tok):
         a = np.asarray(tok)
         return int(a) if a.ndim == 0 else a.tolist()
+
+    # ------------------------------------------------------------------
+    # unified token emission — the one place tokens + stamps land
+    # ------------------------------------------------------------------
+    def _record_token(self, req: Request, tok) -> None:
+        """Append one emitted token to ``req`` and stamp its wall-clock
+        time. EVERY token any engine emits (admission pick, sync wave,
+        async harvest) lands here, so ``t_tokens``/``t_first_token``/
+        ``tokens_out`` and the ``on_token`` streaming hook cannot drift
+        between paths."""
+        req.output.append(tok)
+        now = time.monotonic()
+        if req.t_first_token is None:
+            req.t_first_token = now
+        req.t_tokens.append(now)
+        self.stats["tokens_out"] += 1
+        if self.on_token is not None:
+            self.on_token(req, tok)
 
     # ------------------------------------------------------------------
     # unified retirement — the one place terminal fields are stamped
@@ -122,6 +180,14 @@ class EngineBase:
         """One engine tick past admission (prefill chunks and/or the
         decode wave)."""
         raise NotImplementedError
+
+    def _drain(self):
+        """Block on any in-flight async wave and apply its tokens.
+        Synchronous engines have nothing in flight; async subclasses
+        override. MUST be called before preempting/evicting or
+        wall-truncating a live slot (the victim's in-flight token has
+        to land before its state is torn down, or resume replay would
+        drop a token the sync engine emitted)."""
 
     # ------------------------------------------------------------------
     def step(self) -> List[Request]:

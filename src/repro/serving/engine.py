@@ -18,116 +18,174 @@ Slot model (static shapes, jit-friendly — the TPU serving pattern):
     results, overwritten at next admission) — the standard price of
     static shapes.
 
+The wave itself is owned by serving-plane workers (serving/plane.py):
+the decode step fn FUSES the next-token pick, so the wave's tokens
+stay device-resident and feed the next wave directly. With
+``async_waves=True`` each tick launches wave *n+1* before blocking on
+wave *n*'s tokens (double-buffered; host retirement/streaming work
+overlaps device execution), and the per-request RNG streams plus the
+drain-before-truncation rule keep outputs bit-exact vs the
+synchronous tick.
+
 The engine is model-agnostic: any family with a decode path works
-(GQA/MLA/hybrid; HATA on or off per config). Queue, sampling and the
-unified retirement path live in :class:`~repro.serving.base.EngineBase`;
-only the slab admission + the max_len wall are local here.
+(GQA/MLA/hybrid; HATA on or off per config). Queue, sampling,
+token-emission and the unified retirement path live in
+:class:`~repro.serving.base.EngineBase`; only the slab admission + the
+max_len wall are local here.
 """
 from __future__ import annotations
 
-import time
-from typing import List
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.serving import plane
 from repro.serving.base import EngineBase
+from repro.serving.plane import ADMIT, TRUNCATE, Wave
+from repro.serving.request import Request
 
 
 class ServingEngine(EngineBase):
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_len: int = 256, sample: str = "greedy",
-                 seed: int = 0, budget_table=None):
+                 seed: int = 0, budget_table=None, lookahead: int = 0,
+                 async_waves: bool = False, on_token=None):
         super().__init__(model, params, max_batch=max_batch,
                          sample=sample, seed=seed,
-                         budget_table=budget_table)
+                         budget_table=budget_table, lookahead=lookahead,
+                         async_waves=async_waves, on_token=on_token)
         self.max_len = max_len
         cfg = model.cfg
         self.meta = cfg.meta_tokens
         self.caches = model.init_caches(max_batch, max_len,
                                         layout="list")
-        self.last_tok = np.zeros(
-            (max_batch, cfg.audio.n_codebooks) if cfg.family == "audio"
-            else (max_batch,), np.int32)
-
-        # pos is the per-slot (B,) depth vector, not one shared scalar:
-        # decode_step threads it through to hata_decode_batched's
-        # per-row validity masks so ragged slots stay exact.
-        self._decode = self._with_table(jax.jit(
-            lambda p, t, c, pos: model.decode_step(p, t, c, pos)))
-        self._prefill = self._with_table(jax.jit(
-            lambda p, b, c: model.prefill(p, b, c, jnp.int32(0))))
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        # the device-resident token feed: wave n's fused-pick output is
+        # wave n+1's input without a host round-trip; admission patches
+        # its slot in (a handle-level .at[].set, ordered after any
+        # in-flight wave by data dependence)
+        self._tok_feed = jnp.zeros(
+            (max_batch, cfg.audio.n_codebooks)
+            if cfg.family == "audio" else (max_batch,), jnp.int32)
+        self.decode = plane.dense_decode_worker(
+            model, sample=sample, base_key=self._base_key,
+            wrap=self._with_table)
+        self.prefill = plane.dense_prefill_worker(
+            model, wrap=self._with_table)
 
     # ------------------------------------------------------------------
-    def _insert_impl(self, caches, single, slot):
-        """Copy a B=1 cache tree into slot ``slot`` of the engine cache."""
-        def ins(dst, src):
-            idx = (slot,) + (0,) * (dst.ndim - 1)
-            return jax.lax.dynamic_update_slice(
-                dst, src.astype(dst.dtype), idx)
-        return jax.tree.map(ins, caches, single)
+    # admission
+    # ------------------------------------------------------------------
+    def _probe(self, req: Request) -> str:
+        # the prompt alone overflowing the cache is a shape error at
+        # prefill — truncate at admission; the slab has no other
+        # admission resource (slot availability gates the loop), so the
+        # dense probe never defers and lookahead is first-fit = FCFS
+        return TRUNCATE if req.prompt_len > self.max_len else ADMIT
 
     def _admit(self):
-        while self.queue and None in self.slots:
-            req = self.queue.popleft()
-            if req.prompt_len > self.max_len:
-                # the prompt alone overflows the cache — truncate at
-                # admission (prefilling it would be a shape error)
+        while None in self.slots:
+            sel = self.admission.select(self._probe)
+            if sel is None:
+                return
+            req, verdict = sel
+            if verdict == TRUNCATE:
                 self._finish(req, truncated=True)
                 continue
-            slot = self.slots.index(None)
-            req.slot = slot
-            single = self.model.init_caches(1, self.max_len,
-                                            layout="list")
-            batch = {"tokens": jnp.asarray(req.prompt[None])}
-            logits, single = self._prefill(self.params, batch, single)
-            self.caches = self._insert(self.caches, single,
-                                       jnp.int32(slot))
-            tok = self._pick(logits, [req])[0]
-            req.output.append(self._to_py(tok))
-            req.t_first_token = time.monotonic()
-            self.stats["prefills"] += 1
-            self.stats["tokens_out"] += 1
-            if req.done:
-                # a zero/one-new-token request retires at admission —
-                # same rule as the paged engine's _finish_prefill
-                self._finish(req)
+            self._admit_one(req)
+
+    def _admit_one(self, req: Request):
+        slot = self.slots.index(None)
+        req.slot = slot
+        single = self.model.init_caches(1, self.max_len, layout="list")
+        batch = {"tokens": jnp.asarray(req.prompt[None])}
+        logits, single = self.prefill.extra["prefill"](
+            self.params, batch, single)
+        self.caches = self.prefill.extra["insert"](
+            self.caches, single, jnp.int32(slot))
+        tok = self._pick(logits, [req])[0]
+        self._record_token(req, self._to_py(tok))
+        self.stats["prefills"] += 1
+        if req.done:
+            # a zero/one-new-token request retires at admission —
+            # same rule as the paged engine's _finish_prefill
+            self._finish(req)
+            return
+        self._tok_feed = self._tok_feed.at[slot].set(
+            jnp.asarray(tok, jnp.int32))
+        self.pos[slot] = req.prompt_len + self.meta
+        self._ids[slot] = req.id
+        self._steps[slot] = len(req.output)
+        self.slots[slot] = req
+
+    # ------------------------------------------------------------------
+    # waves
+    # ------------------------------------------------------------------
+    def _drain(self):
+        self._apply_wave(self.decode.take())
+
+    def _launch_wave(self) -> Optional[Wave]:
+        """Launch the next wave; returns the PREVIOUS in-flight wave
+        (taken, not yet applied) so the caller harvests it after the
+        new launch."""
+        prev = self.decode.take()
+        if not any(s is not None for s in self.slots):
+            return prev
+        snapshot = list(self.slots)
+        # .copy(): device_put of a host array may alias its buffer
+        # zero-copy, and pos/_steps are mutated below while the wave is
+        # still in flight — the wave must read the launch-time values
+        toks, self.caches = self.decode.step(
+            self.params, self._tok_feed, self.caches,
+            jnp.asarray(self.pos.copy()), jnp.asarray(self._ids.copy()),
+            jnp.asarray(self._steps.copy()))
+        self._tok_feed = toks
+        self.stats["decode_steps"] += 1
+        for slot, req in enumerate(snapshot):
+            if req is not None:
+                # pos/_steps count the LAUNCHED wave: pos = rows written
+                # including in flight, _steps = the stream index of the
+                # next token to be picked
+                self.pos[slot] += 1
+                self._steps[slot] += 1
+        self.decode.put(Wave(toks=toks, reqs=snapshot))
+        return prev
+
+    def _apply_wave(self, wave: Optional[Wave]):
+        """Harvest one wave: block on its tokens, record them against
+        the LAUNCH-time snapshot. Slots that retired or turned over
+        since launch discard their speculative token."""
+        if wave is None:
+            return
+        toks_np = np.asarray(wave.toks)       # blocks on the device
+        for slot, req in enumerate(wave.reqs):
+            if req is None or req.done or self.slots[slot] is not req:
                 continue
-            self.last_tok[slot] = np.asarray(tok)
-            self.pos[slot] = req.prompt_len + self.meta
-            self.slots[slot] = req
+            self._record_token(req, self._to_py(toks_np[slot]))
+            if req.done:
+                self._finish(req)
+                self.slots[slot] = None
 
     # ------------------------------------------------------------------
     def _advance(self):
-        """Truncate out-of-cache slots, then run one decode wave."""
+        """Truncate out-of-cache slots, then run one decode wave
+        (async: launch wave n+1 before harvesting wave n)."""
         # out-of-cache: a slot whose next decode would write at or past
         # max_len is terminated NOW with an explicit ``truncated`` flag
         # and its slot freed — decoding on would clamp the cache append
-        # onto the last row and emit garbage tokens.
+        # onto the last row and emit garbage tokens. pos counts the
+        # in-flight wave, so the victim's last token is still in flight:
+        # drain first (the drain rule), then truncate whoever is left.
         for slot, req in enumerate(self.slots):
             if req is not None and \
                     self.pos[slot] >= self.max_len + self.meta:
+                self._drain()
+                if self.slots[slot] is not req:
+                    continue                   # retired at drain
                 self._finish(req, truncated=True)
                 self.slots[slot] = None
-        active = [s is not None for s in self.slots]
-        if not any(active):
-            return
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(self.last_tok), self.caches,
-            jnp.asarray(self.pos))
-        toks = self._pick(logits, self.slots)
-        self.stats["decode_steps"] += 1
-        toks_np = np.asarray(toks)
-        for slot, req in enumerate(self.slots):
-            if req is None:
-                continue
-            self.pos[slot] += 1
-            req.output.append(self._to_py(toks_np[slot]))
-            self.last_tok[slot] = toks_np[slot]
-            self.stats["tokens_out"] += 1
-            if req.done:
-                self._finish(req)
-                self.slots[slot] = None
+        prev = self._launch_wave()
+        self._apply_wave(prev)             # wave n (None in sync steady
+        if not self.async_waves:           # state: applied last tick)
+            self._apply_wave(self.decode.take())

@@ -1,0 +1,404 @@
+"""The serving plane: explicit roles behind both engines (DESIGN.md §8).
+
+The engines used to be two monoliths: one Python loop owning the
+queue, the compiled step fns, the page pool AND the device wave, all
+synchronous. This module splits that into composable roles so the
+colocated synchronous configuration, the async double-buffered tick,
+and the disaggregated prefill/decode split are *configurations* of one
+machine rather than three engines:
+
+``AdmissionController``
+    The queue + bounded-lookahead admission. Policy-free: the engine
+    supplies a ``probe(req) -> ADMIT | DEFER | TRUNCATE`` closure
+    (watermarks, capacity walls); the controller scans the first
+    ``lookahead + 1`` entries and pops the first non-DEFER — so
+    ``lookahead=0`` is exactly the old strict-FCFS "only queue[0]"
+    behavior, and ``lookahead>0`` is first-fit within the window
+    (FCFS otherwise), which unblocks small admissible prompts stuck
+    behind one oversized head-of-line prompt.
+
+``PrefillWorker`` / ``DecodeWorker``
+    Each owns its compiled step fns, its device/mesh placement (via
+    the :class:`PoolGroup` it is bound to) and its in-flight work:
+    the worker layer is the ONLY place ``Model.decode_step`` /
+    ``Model.prefill_chunk`` / ``Model.prefill`` are called from
+    serving code (CI grep-guards this), so a future remote worker is
+    a drop-in. The decode step fns FUSE the next-token pick
+    (``sampling.pick_tokens_device``): a wave's tokens never leave
+    the device between waves.
+
+``Transfer``
+    The prefill->decode page boundary. Colocated: both workers share
+    one :class:`PoolGroup` and ``ship`` is the identity (bit-exact
+    with the pre-plane engines by construction). Disaggregated
+    (:class:`PageShipper`): decode-side pages are allocated through
+    the decode group's allocator (page-id remapping), the page bytes
+    are copied pool-to-pool (``paged_cache.copy_pages``, optionally
+    crossing devices), and the prefill-side pages are released — the
+    prefix cache keeps its own refs on the prefill side, so sharing
+    keeps skipping prefill compute.
+
+``Wave``
+    One in-flight decode wave: the device token handle plus the slot
+    snapshot taken at launch. The async tick (engines' ``_advance``)
+    launches wave *n+1* — feeding wave *n*'s device token handle
+    straight back in — BEFORE blocking on wave *n*'s tokens, so host
+    work (retirement, timing stamps, detokenize callbacks) overlaps
+    device execution. Per-request RNG streams make the reordering
+    invisible in the outputs (a token is a pure function of
+    (seed, id, step)); the engines drain the in-flight wave before
+    any preemption/eviction-of-a-live-slot or wall truncation, which
+    keeps replay exactly as synchronous. Speculative tokens for slots
+    that retire at harvest are discarded against the snapshot.
+
+Page-id convention: tables at this layer always carry GLOBAL page ids
+— for sharded pool groups (page axis + block-table columns sharded
+together over the mesh's sequence axis) the per-shard
+``ShardedPageAllocator`` guarantees column c's page is owned by c's
+shard, and ``SPDecode(global_page_ids=True)`` localizes ids inside
+shard_map. Appends/prefill therefore run unmodified on the GSPMD path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Deque, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache_view as cache_view_mod
+from repro.core import paged_cache as paged
+from repro.core.paged_cache import (PageAllocator, PrefixCache,
+                                    ShardedPageAllocator)
+from repro.distributed import strategy as strategy_mod
+from repro.serving.request import Request
+from repro.serving.sampling import pick_tokens_device
+
+# admission verdicts
+ADMIT = "admit"
+DEFER = "defer"
+TRUNCATE = "truncate"
+
+
+class AdmissionController:
+    """Queue + watermark-probed admission with bounded lookahead."""
+
+    def __init__(self, lookahead: int = 0):
+        assert lookahead >= 0, lookahead
+        self.queue: Deque[Request] = deque()
+        self.lookahead = int(lookahead)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def __bool__(self) -> bool:
+        return bool(self.queue)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def requeue(self, req: Request) -> None:
+        """Preempted requests go back to the FRONT (LIFO victims keep
+        the oldest requests' latency bounds)."""
+        self.queue.appendleft(req)
+
+    def select(self, probe: Callable[[Request], str]
+               ) -> Optional[Tuple[Request, str]]:
+        """Pop and return the first non-DEFER request within the
+        lookahead window (first-fit in window, FCFS otherwise).
+
+        ``probe`` must be side-effect free — a DEFERred request is
+        re-probed every tick and must not churn caches/refcounts.
+        ``t_admitted`` is stamped here, the one place requests leave
+        the queue (TRUNCATE verdicts count as leaving too: the engine
+        retires them immediately).
+        """
+        window = min(len(self.queue), self.lookahead + 1)
+        for i in range(window):
+            req = self.queue[i]
+            verdict = probe(req)
+            if verdict == DEFER:
+                continue
+            assert verdict in (ADMIT, TRUNCATE), verdict
+            del self.queue[i]
+            req.t_admitted = time.monotonic()
+            return req, verdict
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Pool groups: pools + allocator + scratch + prefix cache, per side
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PoolGroup:
+    """Everything one worker side owns about its paged cache tier."""
+    pools: List[Any]
+    alloc: Any                        # PageAllocator | ShardedPageAllocator
+    scratch_cols: np.ndarray          # (table_pages,) column -> parking page
+    prefix: Optional[PrefixCache]
+    pipeline: Optional[Any] = None    # offload PCIe pipeline, if tiered
+    col_shard: Optional[np.ndarray] = None   # (T,) column -> shard, or None
+    device: Optional[Any] = None      # explicit placement (disaggregation)
+
+    def alloc_cols(self, cols) -> Optional[List[int]]:
+        """Allocate one page per block-table column — shard-routed when
+        the pool's page axis is sharded (column c's page must be owned
+        by c's shard), plain otherwise."""
+        if self.col_shard is None:
+            return self.alloc.alloc(len(list(cols)))
+        return self.alloc.alloc_shards(
+            [int(self.col_shard[c]) for c in cols])
+
+    def free_count(self) -> int:
+        return self.alloc.free_count()
+
+    def used_count(self) -> int:
+        return self.alloc.used_count()
+
+
+def make_pool_group(model, *, num_pages: int, page_size: int,
+                    table_pages: int, offload: bool = False,
+                    prefix_sharing: bool = True, mesh=None,
+                    seq_axis: str = "model", device=None) -> PoolGroup:
+    """Build one side's pools + allocator + scratch reservation.
+
+    ``mesh`` switches the group to the sharded-pool layout: page axis
+    and block-table columns sharded together over ``seq_axis``, one
+    scratch page per shard (a parked column must point at a page its
+    OWN shard holds), per-shard free lists in the allocator.
+    """
+    if offload:
+        pools, pipeline = model.init_offloaded_pools(num_pages, page_size)
+    else:
+        pools = model.init_paged_pools(num_pages, page_size)
+        pipeline = None
+    col_shard = None
+    if mesh is not None:
+        from repro.distributed.sharding import shard_paged_pools
+        n_shards = int(mesh.shape[seq_axis])
+        assert num_pages % n_shards == 0, \
+            f"num_pages={num_pages} must divide over {n_shards} shards"
+        assert table_pages % n_shards == 0, \
+            f"table_pages={table_pages} must divide over {n_shards} shards"
+        pools = shard_paged_pools(mesh, pools, seq_axis)
+        alloc = ShardedPageAllocator(num_pages, n_shards)
+        scratch = alloc.alloc_shards(list(range(n_shards)))
+        cps = table_pages // n_shards
+        col_shard = np.arange(table_pages) // cps
+        scratch_cols = np.asarray([scratch[s] for s in col_shard],
+                                  np.int32)
+    else:
+        if device is not None:
+            pools = jax.device_put(pools, device)
+        alloc = PageAllocator(num_pages)
+        scratch_cols = np.full(table_pages, alloc.alloc(1)[0], np.int32)
+    prefix = PrefixCache(alloc, page_size) if prefix_sharing else None
+    return PoolGroup(pools=pools, alloc=alloc, scratch_cols=scratch_cols,
+                     prefix=prefix, pipeline=pipeline,
+                     col_shard=col_shard, device=device)
+
+
+# ---------------------------------------------------------------------------
+# Workers: own the compiled step fns + in-flight work
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Wave:
+    """An in-flight decode wave: device tokens + launch-time snapshot."""
+    toks: Any                          # (B,) [audio: (B, nb)] device handle
+    reqs: List[Optional[Request]]      # slot -> request at launch
+
+
+@dataclasses.dataclass
+class PrefillTask:
+    """A request mid-prefill (chunked; possibly resumed after
+    preemption)."""
+    req: Request
+    tokens: np.ndarray              # prompt (+ replayed output on resume)
+    ctx: int                        # rows already in the cache
+    pages: List[int]                # pages owned (incl. adopted prefix)
+    resume: bool                    # True -> suppress the emitted token
+
+
+class DecodeWorker:
+    """Owns the decode-side step fn, its pool group and the in-flight
+    wave. ``step`` is ``(params, toks, <cache state...>, pos, ids,
+    steps) -> (next_toks, new cache state)`` with the pick fused."""
+
+    def __init__(self, step: Callable, group: Optional[PoolGroup] = None,
+                 step_jit=None):
+        self.step = step
+        self.group = group
+        self.step_jit = step_jit       # unwrapped jit, for HLO guards
+        self.inflight: Optional[Wave] = None
+
+    @property
+    def busy(self) -> bool:
+        return self.inflight is not None
+
+    def put(self, wave: Wave) -> None:
+        assert self.inflight is None, "double-buffered depth is 1"
+        self.inflight = wave
+
+    def take(self) -> Optional[Wave]:
+        wave, self.inflight = self.inflight, None
+        return wave
+
+
+class PrefillWorker:
+    """Owns the prefill-side step fn(s), its pool group and the
+    in-flight :class:`PrefillTask` (paged engines prefill one request
+    at a time, chunked)."""
+
+    def __init__(self, chunk: Callable, group: Optional[PoolGroup] = None,
+                 chunk_size: int = 0, step_jit=None, extra=None):
+        self.chunk = chunk
+        self.group = group
+        self.chunk_size = chunk_size
+        self.step_jit = step_jit
+        self.extra = extra or {}       # dense: {"prefill":, "insert":}
+        self.inflight: Optional[PrefillTask] = None
+
+    @property
+    def busy(self) -> bool:
+        return self.inflight is not None
+
+
+def _with_strategy(fn, strat):
+    """Per-call strategy install (read at trace time — and on every
+    call for the eager offload path)."""
+    if strat is None:
+        return fn
+
+    def wrapped(*a, **k):
+        prev = strategy_mod.get_decode_strategy()
+        strategy_mod.set_decode_strategy(strat)
+        try:
+            return fn(*a, **k)
+        finally:
+            strategy_mod.set_decode_strategy(prev)
+    return wrapped
+
+
+def paged_decode_worker(model, group: PoolGroup, *, sample: str,
+                        base_key, wrap, offload: bool = False,
+                        strat=None, donate: bool = True) -> DecodeWorker:
+    """Build the paged decode step: per-layer views around the shared
+    block table, ``Model.decode_step``, fused pick. Pools are donated
+    (row scatters stay in place); offload drops the jit (host gathers
+    + the mutable PCIe ledger cross the jit boundary).
+
+    ``donate=False`` is for async double-buffered waves on the CPU
+    PJRT client: dispatching with a donated input whose buffer is still
+    pending BLOCKS the calling thread until the producer finishes, so a
+    donated pools chain serializes launch *n+1* behind wave *n* and the
+    async tick degenerates to synchronous. Undonated pools keep the
+    dispatch async at the cost of a pool copy per wave."""
+
+    def _step(p, t, pools, bt, pos, ids, steps):
+        views = cache_view_mod.paged_views(pools, bt)
+        logits, views = model.decode_step(p, t, views, pos)
+        toks = pick_tokens_device(base_key, logits, ids, steps, sample)
+        return toks, [v.unwrap() for v in views]
+
+    if offload:
+        return DecodeWorker(wrap(_with_strategy(_step, strat)), group)
+    jitted = jax.jit(_with_strategy(_step, strat),
+                     donate_argnums=(2,) if donate else ())
+    return DecodeWorker(wrap(jitted), group, step_jit=jitted)
+
+
+def paged_prefill_worker(model, group: PoolGroup, *, chunk_size: int,
+                         wrap, offload: bool = False,
+                         strat=None) -> PrefillWorker:
+    def _chunk(p, t, pools, bt, ctx, last):
+        views = cache_view_mod.paged_views(pools, bt)
+        logits, views = model.prefill_chunk(p, t, views, ctx, last)
+        return logits, [v.unwrap() for v in views]
+
+    if offload:
+        return PrefillWorker(wrap(_with_strategy(_chunk, strat)), group,
+                             chunk_size)
+    jitted = jax.jit(_with_strategy(_chunk, strat), donate_argnums=(2,))
+    return PrefillWorker(wrap(jitted), group, chunk_size,
+                         step_jit=jitted)
+
+
+def dense_decode_worker(model, *, sample: str, base_key,
+                        wrap) -> DecodeWorker:
+    """Dense-slab decode step with the fused pick (caches stay
+    undonated, matching the pre-plane engine)."""
+
+    def _step(p, t, caches, pos, ids, steps):
+        logits, caches = model.decode_step(p, t, caches, pos)
+        toks = pick_tokens_device(base_key, logits, ids, steps, sample)
+        return toks, caches
+
+    jitted = jax.jit(_step)
+    return DecodeWorker(wrap(jitted), step_jit=jitted)
+
+
+def dense_prefill_worker(model, *, wrap) -> PrefillWorker:
+    """Dense admission path: monolithic B=1 prefill + slot insert."""
+
+    def _insert(caches, single, slot):
+        def ins(dst, src):
+            idx = (slot,) + (0,) * (dst.ndim - 1)
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), idx)
+        return jax.tree.map(ins, caches, single)
+
+    prefill = wrap(jax.jit(
+        lambda p, b, c: model.prefill(p, b, c, jnp.int32(0))))
+    insert = jax.jit(_insert, donate_argnums=(0,))
+    return PrefillWorker(chunk=None, extra={"prefill": prefill,
+                                            "insert": insert})
+
+
+# ---------------------------------------------------------------------------
+# Transfer boundary: prefill pages -> decode pages
+# ---------------------------------------------------------------------------
+class Transfer:
+    """Colocated: prefill and decode share one :class:`PoolGroup`, a
+    finished prefill's pages ARE the decode pages — identity ship,
+    bit-exact with the pre-plane engines by construction."""
+
+    remote = False
+
+    def __init__(self):
+        self.stats = {"pages_shipped": 0}
+
+    def ship(self, engine, pages: List[int]) -> Optional[List[int]]:
+        return pages
+
+
+class PageShipper(Transfer):
+    """Disaggregated: remap page ids through the decode group's
+    allocator and copy the page bytes pool-to-pool (optionally across
+    devices). Ship failure (decode pool can't fit the prompt even
+    after eviction/preemption) returns None — the engine truncates,
+    same rule as a colocated pool that can't fit a prompt."""
+
+    remote = True
+
+    def __init__(self, src: PoolGroup, dst: PoolGroup):
+        super().__init__()
+        self.src = src
+        self.dst = dst
+
+    def ship(self, engine, pages: List[int]) -> Optional[List[int]]:
+        if not pages:
+            return []
+        # decode-side pages for columns 0..n-1 — through the engine's
+        # acquire path so eviction/drain/preemption policy applies
+        dst_pages = engine._acquire(self.dst, list(range(len(pages))))
+        if dst_pages is None:
+            return None
+        for li in range(len(self.dst.pools)):
+            self.dst.pools[li] = paged.copy_pages(
+                self.src.pools[li], self.dst.pools[li], pages, dst_pages,
+                device=self.dst.device)
+        self.stats["pages_shipped"] += len(pages)
+        return dst_pages

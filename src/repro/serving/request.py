@@ -21,7 +21,15 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     t_submit: float = dataclasses.field(default_factory=time.monotonic)
+    # stamped by AdmissionController.select the moment the request
+    # leaves the queue (admitted OR truncated) — queueing delay is
+    # t_admitted - t_submit, measured in exactly one place
+    t_admitted: Optional[float] = None
     t_first_token: Optional[float] = None
+    # one wall-clock stamp per emitted token, appended by
+    # EngineBase._record_token (the one token-emission path) — TTFT is
+    # t_tokens[0] - t_submit, ITL percentiles come from np.diff(t_tokens)
+    t_tokens: List[float] = dataclasses.field(default_factory=list)
     t_done: Optional[float] = None
     # terminated early because the engine ran out of cache capacity
     # (dense engine: the max_len wall; paged engine: the pool itself

@@ -10,10 +10,15 @@ draws from ``fold_in(fold_in(base_key, req.id), step)`` with
     independent of co-scheduled traffic and engine history;
   * a preempted request's replay regenerates the exact keys at the
     exact steps, so sampled preemption replay is bit-exact
-    (tests/test_prefill_kernels.py).
+    (tests/test_prefill_kernels.py);
+  * the pick can be FUSED into the decode-step jit
+    (:func:`pick_tokens_device`): ids/steps enter as arrays, so the
+    wave's next tokens never leave the device between waves — the
+    serving plane's async tick feeds wave *n*'s device token handle
+    straight into wave *n+1* without a host round-trip.
 
-The whole pick is one jitted call per wave (ids/steps enter as arrays
-and the fold_ins run inside jit) — deriving keys eagerly per slot
+The eager entry point (:func:`pick_tokens`, used for prefill logits at
+admission) is one jitted call per wave — deriving keys eagerly per slot
 would put O(B) host dispatches on the decode hot path.
 """
 from __future__ import annotations
@@ -26,13 +31,28 @@ import jax.numpy as jnp
 from repro.serving.request import Request
 
 
-@jax.jit
-def _categorical_rows(base_key, ids, steps, logits):
+def _categorical_rows_impl(base_key, ids, steps, logits):
     def one(req_id, step, row):
         key = jax.random.fold_in(jax.random.fold_in(base_key, req_id),
                                  step)
         return jax.random.categorical(key, row, axis=-1)
     return jax.vmap(one)(ids, steps, logits).astype(jnp.int32)
+
+
+_categorical_rows = jax.jit(_categorical_rows_impl)
+
+
+def pick_tokens_device(base_key, logits, ids, steps,
+                       sample: str) -> jax.Array:
+    """Jit-safe pick: ``ids``/``steps`` are (B,) int32 arrays.
+
+    Called *inside* the workers' decode-step jits (plane.py) so wave
+    tokens stay device-resident; identical math to :func:`pick_tokens`
+    — greedy argmax or the per-row (id, step) categorical streams.
+    """
+    if sample == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return _categorical_rows_impl(base_key, ids, steps, logits)
 
 
 def pick_tokens(base_key, logits, reqs: List[Optional[Request]],

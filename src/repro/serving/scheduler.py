@@ -19,7 +19,9 @@ engine replaces all three with the paged subsystem
     adopts the donor's pages and skips their prefill compute;
   * **admission by free-page watermark** — a prompt is admitted only
     when its prefill fits above the watermark, keeping slack for the
-    running requests' decode growth;
+    running requests' decode growth; ``lookahead > 0`` lets a small
+    admissible prompt bypass an oversized head-of-line one (first-fit
+    within the window, FCFS otherwise — serving/plane.py);
   * **preemption by eviction** — when the pool runs dry mid-flight the
     youngest running request is evicted (pages freed, request requeued)
     after the prefix cache has been squeezed first; replay is exact for
@@ -27,36 +29,57 @@ engine replaces all three with the paged subsystem
     persisted (id, step) RNG stream — see ``EngineBase._pick``);
   * **growth past max_len** — decode appends pages on demand; a request
     is only ``truncated`` when the *pool itself* can't be made to fit
-    it (dense engines truncate at a static wall), or when it outgrows
-    the per-request logical capacity ``max_len_pages`` (the block-table
-    width — defaults to the whole pool; pass
-    ``max_len // page_size`` to reproduce the dense engine's budget
-    semantics exactly, since the static HATA budget derives from
+    it, or when it outgrows the per-request logical capacity
+    ``max_len_pages`` (the block-table width — defaults to the whole
+    pool; pass ``max_len // page_size`` to reproduce the dense engine's
+    budget semantics exactly, since the static HATA budget derives from
     ``table_pages * page_size`` the way the dense one derives from
     ``max_len``).
 
-Slot model: decode waves still run at a static ``max_batch`` width (the
-jit-friendly TPU pattern); inactive slots decode garbage into the
-reserved *scratch page* (page 0), which no request ever owns, so they
-can't corrupt live pages.
+Serving-plane configurations (serving/plane.py, DESIGN.md §8) — all of
+them drive the SAME admission/preemption policy above:
 
-The model is driven through the view API: each jit'd wave wraps the
-per-layer pools + the block table in ``core.cache_view.paged_view`` and
-calls the same ``Model.decode_step`` / ``Model.prefill_chunk`` the
-dense stack uses — there is no paged twin of the model surface. Queue,
-sampling and the unified retirement path come from
-:class:`~repro.serving.base.EngineBase`; everything local here is page
-accounting (admission watermark, prefix adoption, preemption,
-truncation walls).
+  * **colocated synchronous** (default): one :class:`PoolGroup`, the
+    identity :class:`~repro.serving.plane.Transfer`, one wave per tick
+    — bit-exact with the pre-plane engine;
+  * **async double-buffered waves** (``async_waves=True``): each tick
+    launches wave *n+1* (fed wave *n*'s device-resident fused-pick
+    tokens) before blocking on wave *n*; host work overlaps device
+    execution, and the drain rule (harvest the in-flight wave before
+    any preemption/eviction of a live slot or wall truncation) plus
+    per-request RNG streams keep outputs bit-exact vs synchronous;
+  * **disaggregated** (``disaggregate=True``): prefill and decode own
+    separate pools/allocators (optionally separate devices + their own
+    params replica); a finished prefill's pages cross the
+    :class:`~repro.serving.plane.PageShipper` boundary — decode-side
+    ids allocated through the decode allocator, bytes copied
+    pool-to-pool — and prefill-side pages are released (the prefill
+    side's prefix cache keeps its refs, so sharing still skips
+    prefill compute);
+  * **sharded-pool** (``mesh=``): page axis + block-table columns
+    sharded together over the mesh's sequence axis,
+    :class:`~repro.core.paged_cache.ShardedPageAllocator` keeping
+    column c's page on c's shard, decode waves routed through
+    ``SPDecode(global_page_ids=True)`` sequence-parallel attention.
 
-Differential guarantee (tests/test_paged.py): greedy outputs equal the
-offline/dense engine's per request; prefix-shared prefills produce the
-same logits as cold ones.
+The model is driven through the serving-plane workers: each worker jit
+wraps the per-layer pools + the shared block table in
+``core.cache_view.paged_view`` and calls the same ``Model.decode_step``
+/ ``Model.prefill_chunk`` the dense stack uses — there is no paged
+twin of the model surface, and the workers are the ONLY call sites
+(CI-guarded). Queue, sampling, token emission and the unified
+retirement path come from :class:`~repro.serving.base.EngineBase`;
+everything local here is page accounting (admission watermark, prefix
+adoption, preemption, truncation walls).
+
+Differential guarantee (tests/test_paged.py, tests/test_serving_plane.py):
+greedy outputs equal the offline/dense engine's per request;
+prefix-shared prefills produce the same logits as cold ones; every
+plane configuration above emits byte-identical outputs to colocated
+synchronous.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 import warnings
 from typing import List, Optional
 
@@ -64,23 +87,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cache_view as cache_view_mod
-from repro.core.paged_cache import PageAllocator, PrefixCache
 from repro.kernels import runtime
 from repro.models import Model
+from repro.serving import plane
 from repro.serving.base import EngineBase
+from repro.serving.plane import (ADMIT, DEFER, TRUNCATE, PoolGroup,
+                                 PrefillTask, Wave)
 from repro.serving.request import Request
-
-
-@dataclasses.dataclass
-class _PrefillState:
-    """A request mid-prefill (chunked; possibly resumed after
-    preemption)."""
-    req: Request
-    tokens: np.ndarray              # prompt (+ replayed output on resume)
-    ctx: int                        # rows already in the cache
-    pages: List[int]                # pages owned (incl. adopted prefix)
-    resume: bool                    # True -> suppress the emitted token
 
 
 class PagedServingEngine(EngineBase):
@@ -95,10 +108,24 @@ class PagedServingEngine(EngineBase):
                  strict_moe_capacity: bool = False,
                  offload: bool = False,
                  hbm_budget_bytes: Optional[int] = None,
-                 budget_table=None):
+                 budget_table=None, lookahead: int = 0,
+                 async_waves: bool = False, on_token=None,
+                 disaggregate: bool = False,
+                 prefill_pages: Optional[int] = None,
+                 prefill_device=None, decode_device=None,
+                 mesh=None, seq_axis: str = "model",
+                 sp_mode: str = "two_stage"):
         assert model.supports_paged, (
             f"{model.cfg.name}: family {model.cfg.family!r} has no paged "
             "decode path (attention-KV families only)")
+        # offload waves are eager and host-mediated; they are neither
+        # shippable across pools nor shardable over a mesh
+        assert not (offload and disaggregate), \
+            "offload engines are colocated (host tier IS the far pool)"
+        assert not (offload and mesh is not None), \
+            "offload + sharded pools is not supported"
+        assert not (disaggregate and mesh is not None), \
+            "disaggregate a replicated engine or shard a colocated one"
         e = model.cfg.moe
         if e is not None and e.capacity_factor * e.top_k < e.n_experts:
             # Chunked prefill routes experts per chunk-sized group while
@@ -121,7 +148,8 @@ class PagedServingEngine(EngineBase):
             warnings.warn(msg, stacklevel=2)
         super().__init__(model, params, max_batch=max_batch,
                          sample=sample, seed=seed,
-                         budget_table=budget_table)
+                         budget_table=budget_table, lookahead=lookahead,
+                         async_waves=async_waves, on_token=on_token)
         # page_size=None consults the tuning table (REPRO_PAGE_SIZE /
         # REPRO_TUNING_TABLE win): every paged kernel tiles kv at the
         # pool page size, so pool construction is their block-size
@@ -130,96 +158,126 @@ class PagedServingEngine(EngineBase):
         page_size = runtime.pool_page_size(page_size)
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk or 2 * page_size
-
         self.watermark = watermark_pages
-
-        # Offload mode: HATA layers keep only hash codes in HBM; K/V
-        # rows live in host page pools under the SAME allocator/page-id
-        # space (prefix sharing, preemption and the scratch page apply
-        # to host rows unchanged). The pool arithmetic below is
-        # identical — only what a page *costs in HBM* changes, which is
-        # what the watermark translation handles.
         self.offload = offload
-        if offload:
-            self.pools, self.pipeline = model.init_offloaded_pools(
-                num_pages, page_size)
-        else:
-            self.pools = model.init_paged_pools(num_pages, page_size)
-            self.pipeline = None
-        self.alloc = PageAllocator(num_pages)
-        # the scratch page: inactive decode slots write their garbage
-        # rows here; never owned by a request, never scored as valid
-        self.scratch = self.alloc.alloc(1)[0]
-        self.prefix: Optional[PrefixCache] = (
-            PrefixCache(self.alloc, page_size) if prefix_sharing else None)
-
+        self.mesh = mesh
         self.num_pages = num_pages
+
         # Per-request logical capacity = block-table width, decoupled
         # from the pool: the paged score grid, the dense-path logical
         # view and the (static) HATA budget all scale with
-        # table_pages * page_size, and the contiguous engine's budget
-        # semantics are recovered by passing max_len_pages =
-        # max_len // page_size. Default: the whole pool (one request
-        # may grow into every free page).
-        self.table_pages = min(max_len_pages or num_pages, num_pages)
-        self.bt = np.full((max_batch, self.table_pages), self.scratch,
-                          np.int32)
-        self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
-        self._slot_order: List[int] = []      # admission order (slot ids)
-        self.last_tok = np.zeros(max_batch, np.int32)
-        self.prefilling: Optional[_PrefillState] = None
-        self.stats.update({"prefill_chunks": 0, "preemptions": 0,
-                           "prefix_hit_tokens": 0, "peak_pages": 1})
+        # table_pages * page_size. Default: the whole pool. Sharded
+        # pools round the width UP to a multiple of the shard count
+        # (columns are sharded with the page axis).
+        table_pages = min(max_len_pages or num_pages, num_pages)
+        if mesh is not None:
+            n_sh = int(mesh.shape[seq_axis])
+            table_pages = min(-(-table_pages // n_sh) * n_sh, num_pages)
+        self.table_pages = table_pages
+
+        # --- pool groups + transfer boundary -------------------------
+        strat = None
+        if mesh is not None:
+            from repro.distributed.decode import SPDecode
+            strat = SPDecode(mesh, seq_axes=(seq_axis,), mode=sp_mode,
+                             global_page_ids=True)
+        self.decode_group = plane.make_pool_group(
+            model, num_pages=num_pages, page_size=page_size,
+            table_pages=table_pages, offload=offload,
+            prefix_sharing=prefix_sharing and not disaggregate,
+            mesh=mesh, seq_axis=seq_axis, device=decode_device)
+        if disaggregate:
+            self.prefill_group = plane.make_pool_group(
+                model, num_pages=prefill_pages or num_pages,
+                page_size=page_size, table_pages=table_pages,
+                prefix_sharing=prefix_sharing, device=prefill_device)
+            self.transfer = plane.PageShipper(self.prefill_group,
+                                              self.decode_group)
+            # each side holds its own params replica when split across
+            # devices (that's the point of disaggregation: prefill
+            # compute never contends with decode compute or memory)
+            self._prefill_params = (
+                jax.device_put(params, prefill_device)
+                if prefill_device is not None else params)
+            self._decode_params = (
+                jax.device_put(params, decode_device)
+                if decode_device is not None else params)
+        else:
+            self.prefill_group = self.decode_group
+            self.transfer = plane.Transfer()
+            self._prefill_params = self._decode_params = params
+        self._groups = ([self.decode_group] if not disaggregate
+                        else [self.prefill_group, self.decode_group])
+
+        # compat views (tests/benchmarks reach for these)
+        self.alloc = self.decode_group.alloc
+        self.prefix = self.prefill_group.prefix
+        self.pipeline = self.decode_group.pipeline
+        self.scratch = int(self.decode_group.scratch_cols[0])
+
+        # a prompt that can never fit — per-request width, or either
+        # pool minus its scratch reservation — is truncated AT ADMISSION
+        self._hard_cap = min(
+            [table_pages] +
+            [g.alloc.num_pages - len(np.unique(g.scratch_cols))
+             for g in self._groups])
+
         if offload:
+            # Offload mode: HATA layers keep only hash codes in HBM; K/V
+            # rows live in host page pools under the SAME allocator/
+            # page-id space. Admission is watermarked against the
+            # HBM-RESIDENT budget: a page's host rows are cheap but its
+            # device codes are not, so the number of pages whose
+            # resident share fits the budget caps the usable pool.
             self.stats.update({"bytes_pcie": 0,
                                "hbm_resident_bytes":
                                self.hbm_resident_bytes()})
             if hbm_budget_bytes is not None:
-                # Admission is watermarked against the HBM-RESIDENT
-                # budget: in offload mode a page's host rows are cheap
-                # but its device codes are not, so the number of pages
-                # whose resident share fits the budget caps the usable
-                # pool — pages past that line are treated as below the
-                # watermark and never admitted into.
                 per_page = max(1, self.hbm_resident_bytes() // num_pages)
                 hbm_pages = int(hbm_budget_bytes // per_page)
                 self.watermark = max(self.watermark,
                                      num_pages - min(hbm_pages,
                                                      num_pages))
 
-        # pools are donated: row scatters stay in place instead of
-        # copying every pool per wave (a no-op warning on backends
-        # without donation support, e.g. CPU tests). The views are
-        # built inside the jit'd fn — one PagedView per layer around
-        # the donated pool + the shared block table — and unwrapped on
-        # the way out, so the engine's host state stays (pools, bt).
-        def _decode_fn(p, t, pools, bt, pos):
-            views = [cache_view_mod.paged_view(pool, bt)
-                     for pool in pools]
-            logits, views = model.decode_step(p, t, views, pos)
-            return logits, [v.unwrap() for v in views]
+        # --- workers -------------------------------------------------
+        # CPU PJRT blocks dispatch when a donated input is still
+        # pending, which would serialize async wave n+1 behind wave n —
+        # keep donation (in-place pool scatters) everywhere except the
+        # async-on-CPU combination (there a pool copy per wave is the
+        # price of real overlap; accelerator clients enqueue donated
+        # dispatches asynchronously, so they keep donation)
+        donate = not (async_waves
+                      and jax.default_backend() == "cpu")
+        self.decode = plane.paged_decode_worker(
+            model, self.decode_group, sample=sample,
+            base_key=self._base_key, wrap=self._with_table,
+            offload=offload, strat=strat, donate=donate)
+        self.prefill = plane.paged_prefill_worker(
+            model, self.prefill_group, chunk_size=self.prefill_chunk,
+            wrap=self._with_table, offload=offload,
+            strat=None if mesh is None else strat)
+        # compat aliases (compile-cache assertions poke these)
+        self._decode = self.decode.step
+        self._chunk = self.prefill.chunk
 
-        def _chunk_fn(p, t, pools, bt, ctx, last):
-            views = [cache_view_mod.paged_view(pool, bt)
-                     for pool in pools]
-            logits, views = model.prefill_chunk(p, t, views, ctx, last)
-            return logits, [v.unwrap() for v in views]
-
-        if offload:
-            # Offloaded waves cross the host boundary (numpy gathers,
-            # the mutable PCIe ledger), so the SAME bodies run eagerly
-            # — paged_view dispatches per pool type, resident dense
-            # layers and offloaded HATA layers share one wave loop and
-            # the per-op kernels still compile under their own jit.
-            self._decode = self._with_table(_decode_fn)
-            self._chunk = self._with_table(_chunk_fn)
-        else:
-            self._decode = self._with_table(
-                jax.jit(_decode_fn, donate_argnums=(2,)))
-            self._chunk = self._with_table(
-                jax.jit(_chunk_fn, donate_argnums=(2,)))
+        self.bt = np.tile(self.decode_group.scratch_cols[None],
+                          (max_batch, 1))
+        self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        self._slot_order: List[int] = []      # admission order (slot ids)
+        # device-resident token feed: wave n's fused-pick output is
+        # wave n+1's input (no host round-trip); _finish_prefill patches
+        # its slot in at the handle level
+        self._tok_feed = jnp.zeros(max_batch, jnp.int32)
+        self.stats.update({"prefill_chunks": 0, "preemptions": 0,
+                           "prefix_hit_tokens": 0, "peak_pages": 1})
+        if self.transfer.remote:
+            self.stats["pages_shipped"] = 0
 
     # ------------------------------------------------------------------
+    @property
+    def pools(self):
+        return self.decode_group.pools
+
     def hbm_resident_bytes(self) -> int:
         """Device bytes pinned by the cache tier right now: full pools
         for resident layers, codes + staged waves for offloaded ones."""
@@ -236,30 +294,48 @@ class PagedServingEngine(EngineBase):
 
     # ------------------------------------------------------------------
     def _note_usage(self):
-        self.stats["peak_pages"] = max(self.stats["peak_pages"],
-                                       self.alloc.used_count())
+        used = sum(g.used_count() for g in self._groups)
+        self.stats["peak_pages"] = max(self.stats["peak_pages"], used)
 
     # ------------------------------------------------------------------
-    # page acquisition: evict prefix cache, then preempt, then give up
+    # page acquisition: evict prefix cache, drain, preempt, give up
     # ------------------------------------------------------------------
-    def _acquire(self, n: int, protect_slot: int = -1
-                 ) -> Optional[List[int]]:
+    def _acquire(self, group: PoolGroup, cols: List[int],
+                 protect_slot: int = -1) -> Optional[List[int]]:
+        """Allocate one page per block-table column from ``group``
+        (shard-routed when its pool is sharded). Pressure ladder:
+        squeeze the group's prefix cache, then — decode side only —
+        drain the in-flight wave (retirement may free pages) and
+        preempt the youngest running request. A disaggregated prefill
+        group has no victims to preempt: exhaustion there means
+        truncation, same as a pool that can't fit a prompt alone."""
+        drained = False
         while True:
-            pages = self.alloc.alloc(n)
+            pages = group.alloc_cols(cols)
             if pages is not None:
                 self._note_usage()
                 return pages
-            short = n - self.alloc.free_count()
-            if self.prefix is not None and self.prefix.evict(short):
+            short = len(cols) - group.free_count()
+            if group.prefix is not None and \
+                    group.prefix.evict(max(short, 1)):
                 continue
-            if not self._preempt_one(protect_slot):
-                return None
+            if group is self.decode_group:
+                if not drained and self.decode.busy:
+                    drained = True
+                    self._drain()        # retirements may free pages
+                    continue
+                if self._preempt_one(protect_slot):
+                    continue
+            return None
 
     def _preempt_one(self, protect_slot: int) -> bool:
         """Evict the youngest running request (LIFO keeps the oldest
         requests' latency bounds intact) and requeue it for a resumed
         prefill. Replay emits the identical tokens under greedy and
-        sampled decoding alike (per-request RNG streams)."""
+        sampled decoding alike (per-request RNG streams); the caller
+        has already drained any in-flight wave, so the victim's last
+        token has landed and resume replay matches synchronous."""
+        assert not self.decode.busy, "preempting with a wave in flight"
         victims = [s for s in reversed(self._slot_order)
                    if s != protect_slot and self.slots[s] is not None]
         if not victims:
@@ -269,16 +345,18 @@ class PagedServingEngine(EngineBase):
         self._free_slot(slot)
         req.preemptions += 1
         self.stats["preemptions"] += 1
-        self.queue.appendleft(req)
+        self.admission.requeue(req)
         return True
 
     def _free_slot(self, slot: int):
         """Tear a slot down: release its pages, park its block table on
-        the scratch page, clear ordering state."""
-        self.alloc.release(self._slot_pages[slot])
+        the scratch page(s), clear ordering state."""
+        self.decode_group.alloc.release(self._slot_pages[slot])
         self._slot_pages[slot] = []
-        self.bt[slot] = self.scratch
+        self.bt[slot] = self.decode_group.scratch_cols
         self.pos[slot] = 0
+        self._ids[slot] = 0
+        self._steps[slot] = 0
         self.slots[slot] = None
         if slot in self._slot_order:
             self._slot_order.remove(slot)
@@ -289,82 +367,93 @@ class PagedServingEngine(EngineBase):
     def _pages_for(self, rows: int) -> int:
         return -(-rows // self.page_size)
 
-    def _admit(self):
-        """Start prefilling the next queued request if a slot is free
-        and its prompt fits above the free-page watermark."""
-        if self.prefilling is not None or not self.queue:
-            return
-        if None not in self.slots:
-            return
-        req = self.queue[0]
-        # a prompt that can never fit the per-request logical capacity
-        # (block-table width) or the pool is truncated AT ADMISSION —
-        # prefilling it to the wall first would burn chunks across all
-        # layers and possibly preempt live requests for nothing
-        if self._pages_for(req.prompt_len) > min(self.table_pages,
-                                                 self.num_pages - 1):
-            self.queue.popleft()
-            self._finish_truncated(req, [])
-            return
-        resume = len(req.output) > 0
-        # resumed requests replay prompt + emitted tokens (minus the
-        # last, which becomes last_tok of the next decode step)
-        tokens = np.concatenate([
-            np.asarray(req.prompt, np.int32),
-            np.asarray(req.output[:-1], np.int32)]) if resume \
-            else np.asarray(req.prompt, np.int32)
-        # watermark check with a side-effect-free probe: a request that
-        # keeps waiting here must not churn refcounts / LRU / hit stats
-        n_hit = self.prefix.peek(tokens) if self.prefix is not None else 0
+    def _resume_tokens(self, req: Request) -> np.ndarray:
+        """Prefill token stream: resumed requests replay prompt +
+        emitted tokens (minus the last, which becomes the feed of the
+        next decode step)."""
+        if req.output:
+            return np.concatenate([
+                np.asarray(req.prompt, np.int32),
+                np.asarray(req.output[:-1], np.int32)])
+        return np.asarray(req.prompt, np.int32)
+
+    def _probe(self, req: Request) -> str:
+        """Admission verdict — side-effect free (a DEFERred request is
+        re-probed every tick and must not churn refcounts / LRU / hit
+        stats, hence ``peek``)."""
+        if self._pages_for(req.prompt_len) > self._hard_cap:
+            # prefilling it to the wall first would burn chunks across
+            # all layers and possibly preempt live requests for nothing
+            return TRUNCATE
+        tokens = self._resume_tokens(req)
+        n_hit = (self.prefill_group.prefix.peek(tokens)
+                 if self.prefill_group.prefix is not None else 0)
         need = self._pages_for(len(tokens)) - n_hit
-        if self.alloc.free_count() - need < self.watermark \
+        if self.prefill_group.free_count() - need < self.watermark \
                 and len(self.slots) - self.slots.count(None) > 0:
-            return                     # pool too tight while others run
+            return DEFER               # pool too tight while others run
+        return ADMIT
+
+    def _admit(self):
+        """Start prefilling the next admissible queued request (within
+        the lookahead window) if a slot is free."""
+        if self.prefill.busy or None not in self.slots:
+            return
+        sel = self.admission.select(self._probe)
+        if sel is None:
+            return
+        req, verdict = sel
+        if verdict == TRUNCATE:
+            self._finish(req, truncated=True)
+            return
+        tokens = self._resume_tokens(req)
         prefix_pages: List[int] = []
-        if self.prefix is not None:
-            prefix_pages = self.prefix.lookup(tokens)
+        if self.prefill_group.prefix is not None:
+            prefix_pages = self.prefill_group.prefix.lookup(tokens)
         ctx = len(prefix_pages) * self.page_size
-        self.queue.popleft()
         self.stats["prefix_hit_tokens"] += ctx
-        self.prefilling = _PrefillState(req=req, tokens=tokens, ctx=ctx,
-                                        pages=prefix_pages, resume=resume)
+        self.prefill.inflight = PrefillTask(
+            req=req, tokens=tokens, ctx=ctx, pages=prefix_pages,
+            resume=len(req.output) > 0)
 
     def _prefill_step(self):
         """Run one chunk of the in-flight prefill (if any)."""
-        st = self.prefilling
+        st = self.prefill.inflight
         if st is None:
             return
         n_tok = len(st.tokens)
         end = min(st.ctx + self.prefill_chunk, n_tok)
-        need = self._pages_for(end) - len(st.pages)
         if self._pages_for(end) > self.table_pages:
             # past the per-request logical capacity (block-table width)
-            self._finish_truncated(st.req, st.pages)
-            self.prefilling = None
+            self._finish_truncated(st.req, st.pages, self.prefill_group)
+            self.prefill.inflight = None
             return
+        need = self._pages_for(end) - len(st.pages)
         if need > 0:
-            got = self._acquire(need)
+            cols = list(range(len(st.pages), len(st.pages) + need))
+            got = self._acquire(self.prefill_group, cols)
             if got is None:
                 # the pool can't hold even this prompt alone: truncate
-                self._finish_truncated(st.req, st.pages)
-                self.prefilling = None
+                self._finish_truncated(st.req, st.pages,
+                                       self.prefill_group)
+                self.prefill.inflight = None
                 return
             st.pages.extend(got)
-        bt_row = np.full((1, self.table_pages), self.scratch, np.int32)
+        bt_row = self.prefill_group.scratch_cols[None].copy()
         bt_row[0, :len(st.pages)] = st.pages
         chunk = np.zeros(self.prefill_chunk, np.int32)
         chunk[:end - st.ctx] = st.tokens[st.ctx:end]
-        logits, self.pools = self._chunk(
-            self.params, jnp.asarray(chunk[None]), self.pools,
-            jnp.asarray(bt_row), jnp.int32(st.ctx),
-            jnp.int32(end - st.ctx - 1))
+        logits, self.prefill_group.pools = self.prefill.chunk(
+            self._prefill_params, jnp.asarray(chunk[None]),
+            self.prefill_group.pools, jnp.asarray(bt_row),
+            jnp.int32(st.ctx), jnp.int32(end - st.ctx - 1))
         self.stats["prefill_chunks"] += 1
         st.ctx = end
         if end == n_tok:
             self._finish_prefill(st, logits)
-            self.prefilling = None
+            self.prefill.inflight = None
 
-    def _finish_prefill(self, st: _PrefillState, logits):
+    def _finish_prefill(self, st: PrefillTask, logits):
         req = st.req
         slot = self.slots.index(None)
         req.slot = slot
@@ -373,74 +462,130 @@ class PagedServingEngine(EngineBase):
             tok = int(req.output[-1])
         else:
             tok = self._to_py(self._pick(logits, [req])[0])
-            req.output.append(tok)
-            req.t_first_token = time.monotonic()
-            self.stats["tokens_out"] += 1
-        self.last_tok[slot] = tok
+            self._record_token(req, tok)
+        self.stats["prefills"] += 1
+        # register with the PREFILL side's prefix cache before the
+        # pages cross the transfer boundary: disaggregated prefix hits
+        # must keep skipping prefill compute
+        if self.prefill_group.prefix is not None:
+            self.prefill_group.prefix.register(
+                np.asarray(req.prompt, np.int32), st.pages)
+        pages = self.transfer.ship(self, st.pages)
+        if self.transfer.remote:
+            # decode side now owns its copies; the prefix cache keeps
+            # its own refs on the prefill side
+            self.prefill_group.alloc.release(st.pages)
+        if pages is None:
+            # decode pool can't take the request even after eviction +
+            # preemption — same terminal rule as an unfittable prompt
+            self._finish(req, truncated=True)
+            return
         self.pos[slot] = len(st.tokens)
-        self.bt[slot] = self.scratch
-        self.bt[slot, :len(st.pages)] = st.pages
-        self._slot_pages[slot] = st.pages
+        self.bt[slot] = self.decode_group.scratch_cols
+        self.bt[slot, :len(pages)] = pages
+        self._slot_pages[slot] = list(pages)
+        self._ids[slot] = req.id
+        self._steps[slot] = len(req.output)
+        self._tok_feed = self._tok_feed.at[slot].set(tok)
         self.slots[slot] = req
         self._slot_order.append(slot)
-        self.stats["prefills"] += 1
-        if self.prefix is not None:
-            self.prefix.register(np.asarray(req.prompt, np.int32),
-                                 st.pages)
         # a zero-new-token request is already done
         if req.done:
             self._retire(slot, req)
 
-    def _finish_truncated(self, req: Request, pages: List[int]):
-        self.alloc.release(pages)
+    def _finish_truncated(self, req: Request, pages: List[int],
+                          group: Optional[PoolGroup] = None):
+        (group or self.decode_group).alloc.release(pages)
         self._finish(req, truncated=True)
 
     # ------------------------------------------------------------------
-    # decode wave
+    # decode waves
     # ------------------------------------------------------------------
     def _ensure_decode_pages(self) -> List[int]:
-        """Grow each active slot's block table to cover its next row;
-        slots the pool cannot serve are truncated. Returns live slots."""
+        """Grow each active slot's block table to cover the next row the
+        wave ABOUT TO LAUNCH will write; slots the pool cannot serve are
+        truncated (in-flight wave drained first — the drain rule).
+        Returns live slots."""
         live = []
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
             rows = int(self.pos[slot]) + 1
-            need = self._pages_for(rows) - len(self._slot_pages[slot])
             if self._pages_for(rows) > self.table_pages:
-                self._free_slot(slot)              # logical-capacity wall
-                self._finish_truncated(req, [])
+                self._drain()              # land the in-flight token
+                if self.slots[slot] is not req:
+                    continue               # retired at drain
+                self._free_slot(slot)      # logical-capacity wall
+                self._finish(req, truncated=True)
                 continue
+            base = len(self._slot_pages[slot])
+            need = self._pages_for(rows) - base
             if need > 0:
-                got = self._acquire(need, protect_slot=slot)
+                cols = list(range(base, base + need))
+                got = self._acquire(self.decode_group, cols,
+                                    protect_slot=slot)
+                if self.slots[slot] is not req:
+                    # the drain inside _acquire retired it; put any
+                    # pages straight back
+                    if got is not None:
+                        self.decode_group.alloc.release(got)
+                    continue
                 if got is None:
                     self._free_slot(slot)
-                    self._finish_truncated(req, [])
+                    self._finish(req, truncated=True)
                     continue
-                base = len(self._slot_pages[slot])
                 self.bt[slot, base:base + len(got)] = got
                 self._slot_pages[slot].extend(got)
             live.append(slot)
-        # _acquire may have preempted a slot already collected above
+        # _acquire may have preempted/retired a slot collected above
         return [s for s in live if self.slots[s] is not None]
 
-    def _decode_wave(self):
+    def _drain(self):
+        self._apply_wave(self.decode.take())
+
+    def _launch_wave(self) -> Optional[Wave]:
+        """Grow tables, then launch the next wave; returns the PREVIOUS
+        in-flight wave (taken but not yet applied) so the caller
+        harvests it AFTER the new launch. The take happens after
+        ``_ensure_decode_pages`` — drains triggered by walls/preemption
+        in there must still see the wave in the worker."""
         live = self._ensure_decode_pages()
+        prev = self.decode.take()
         if not live:
-            return
-        logits, self.pools = self._decode(
-            self.params, jnp.asarray(self.last_tok), self.pools,
-            jnp.asarray(self.bt), jnp.asarray(self.pos))
-        toks = np.asarray(self._pick(logits, self.slots))
+            return prev
+        snapshot = list(self.slots)
+        # .copy(): device_put of a host array may alias its buffer
+        # zero-copy, and bt/pos/_steps are mutated (growth, walls,
+        # admission) while the wave is still in flight — the wave must
+        # read the launch-time values
+        toks, self.decode_group.pools = self.decode.step(
+            self._decode_params, self._tok_feed,
+            self.decode_group.pools, jnp.asarray(self.bt.copy()),
+            jnp.asarray(self.pos.copy()), jnp.asarray(self._ids.copy()),
+            jnp.asarray(self._steps.copy()))
+        self._tok_feed = toks
         self.stats["decode_steps"] += 1
-        for slot in live:
-            req = self.slots[slot]
-            self.pos[slot] += 1
-            req.output.append(self._to_py(toks[slot]))
-            self.last_tok[slot] = toks[slot]
-            self.stats["tokens_out"] += 1
-            if req.t_first_token is None:
-                req.t_first_token = time.monotonic()
+        for slot, req in enumerate(snapshot):
+            if req is not None:
+                # pos/_steps count the LAUNCHED wave: pos = rows
+                # written including in flight, _steps = stream index
+                # of the next token to pick
+                self.pos[slot] += 1
+                self._steps[slot] += 1
+        self.decode.put(Wave(toks=toks, reqs=snapshot))
+        return prev
+
+    def _apply_wave(self, wave: Optional[Wave]):
+        """Harvest one wave against its launch-time snapshot; slots
+        that retired or turned over since launch (preemption, wall)
+        discard their speculative token."""
+        if wave is None:
+            return
+        toks_np = np.asarray(wave.toks)       # blocks on the device
+        for slot, req in enumerate(wave.reqs):
+            if req is None or req.done or self.slots[slot] is not req:
+                continue
+            self._record_token(req, self._to_py(toks_np[slot]))
             if req.done:
                 self._retire(slot, req)
 
@@ -451,9 +596,16 @@ class PagedServingEngine(EngineBase):
     # ------------------------------------------------------------------
     def _advance(self):
         """One engine tick: advance the in-flight prefill by a chunk,
-        then run one decode wave."""
+        then one decode wave (async: launch wave n+1 before harvesting
+        wave n, so the harvest's host work overlaps the device)."""
         self._prefill_step()
-        self._decode_wave()
+        prev = self._launch_wave()
+        self._apply_wave(prev)             # wave n (None in sync steady
+        if not self.async_waves:           # state: applied last tick)
+            self._apply_wave(self.decode.take())
+        if self.transfer.remote:
+            self.stats["pages_shipped"] = \
+                self.transfer.stats["pages_shipped"]
         if self.pipeline is not None:
             self.stats["bytes_pcie"] = self.pipeline.bytes_pcie
             self.stats["hbm_resident_bytes"] = self.hbm_resident_bytes()

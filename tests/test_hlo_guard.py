@@ -1,0 +1,58 @@
+"""HLO collective-count guards (distributed/hlo_guard.py).
+
+Compiles the serving workers' step fns and pins the collective ops in
+the optimized HLO against tests/data/hlo_collectives.json — plus the
+negative control: an injected extra psum in the partial-softmax merge
+MUST trip the guard, otherwise the guard guards nothing.
+"""
+import pytest
+
+from repro.distributed.collectives import assert_collective_counts
+from repro.distributed.hlo_guard import colocated_case, load_baseline
+from tests.conftest import run_subprocess
+
+
+def test_colocated_engine_has_zero_collectives():
+    baseline = load_baseline()
+    got = colocated_case()
+    for step, expected in baseline["cases"]["colocated_paged"].items():
+        assert_collective_counts(got[step], expected,
+                                 label=f"colocated_paged/{step}")
+        # belt and braces: the single-host path must be collective-free
+        assert got[step] == {}, got[step]
+
+
+def test_sharded_engine_matches_baseline_subprocess():
+    run_subprocess("""
+from repro.distributed.hlo_guard import (build_cases,
+                                         check_against_baseline,
+                                         load_baseline)
+check_against_baseline(build_cases(4), load_baseline())
+print("OK")
+""", n_devices=4)
+
+
+def test_injected_extra_collective_trips_guard_subprocess():
+    run_subprocess("""
+import jax
+import repro.distributed.decode as ddec
+
+orig = ddec.merge_partial_softmax
+def leaky_merge(m, l, o, axis_name):
+    # regression stand-in: one extra all-reduce of the merged output
+    return jax.lax.psum(orig(m, l, o, axis_name), axis_name)
+ddec.merge_partial_softmax = leaky_merge
+
+from repro.distributed.hlo_guard import (load_baseline, sharded_case)
+from repro.distributed.collectives import assert_collective_counts
+got = sharded_case(4)
+expected = load_baseline()["cases"]["sharded_pool_p4"]
+try:
+    assert_collective_counts(got["decode"], expected["decode"],
+                             label="injected")
+except AssertionError as e:
+    assert "drifted" in str(e), e
+    print("OK")
+else:
+    raise SystemExit("guard did not trip on an injected collective")
+""", n_devices=4)

@@ -1,0 +1,309 @@
+"""Serving plane (DESIGN.md §8): admission lookahead, async waves,
+disaggregated transfer, centralized timing.
+
+The plane's contract is that scheduling NEVER changes tokens: every
+configuration (async double-buffering, lookahead admission,
+disaggregated pools, preemption storms) must be bit-exact against the
+colocated synchronous engine, which in turn matches offline decode.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import Model
+from repro.serving import (ADMIT, DEFER, TRUNCATE, AdmissionController,
+                           PagedServingEngine, Request, ServingEngine)
+from tests.conftest import run_subprocess
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = dataclasses.replace(get_reduced("qwen1.5-0.5b"),
+                              dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, seed, n, *, plen_lo=6, plen_hi=16, new_tokens=6):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(
+                        0, cfg.vocab_size,
+                        int(rng.integers(plen_lo, plen_hi))
+                    ).astype(np.int32),
+                    max_new_tokens=new_tokens, id=i) for i in range(n)]
+
+
+def _outputs(done):
+    return {r.id: (list(r.output), r.truncated)
+            for r in done}
+
+
+def _offline(model, params, prompt, n_new, max_len=96):
+    caches = model.init_caches(1, max_len, layout="list")
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, caches,
+        jnp.int32(0))
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt) + model.cfg.meta_tokens
+    for _ in range(n_new - 1):
+        logits, caches = model.decode_step(
+            params, jnp.asarray([out[-1]], jnp.int32), caches,
+            jnp.int32(pos))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController unit tests
+# ---------------------------------------------------------------------------
+def _fake_req(rid):
+    return Request(prompt=np.zeros(4, np.int32), max_new_tokens=1,
+                   id=rid)
+
+
+def test_admission_fcfs_at_zero_lookahead():
+    ac = AdmissionController(lookahead=0)
+    a, b = _fake_req(0), _fake_req(1)
+    ac.submit(a), ac.submit(b)
+    # head defers -> nothing admits, even though b would
+    assert ac.select(lambda r: DEFER if r is a else ADMIT) is None
+    assert list(ac.queue) == [a, b]
+    req, verdict = ac.select(lambda r: ADMIT)
+    assert req is a and verdict == ADMIT
+    assert a.t_admitted is not None
+
+
+def test_admission_lookahead_first_fit_in_window():
+    ac = AdmissionController(lookahead=1)
+    a, b, c = _fake_req(0), _fake_req(1), _fake_req(2)
+    for r in (a, b, c):
+        ac.submit(r)
+    # head defers, window reaches b: first-fit admits b, a stays first
+    req, verdict = ac.select(lambda r: DEFER if r is a else ADMIT)
+    assert req is b and verdict == ADMIT
+    assert list(ac.queue) == [a, c]
+    # c sits OUTSIDE the window of 2 when a and b both defer
+    ac.requeue(b)
+    assert ac.select(lambda r: ADMIT if r is c else DEFER) is None
+    assert list(ac.queue) == [b, a, c]    # requeue goes to the front
+
+
+def test_admission_truncate_pops_like_admit():
+    ac = AdmissionController(lookahead=2)
+    a, b = _fake_req(0), _fake_req(1)
+    ac.submit(a), ac.submit(b)
+    req, verdict = ac.select(
+        lambda r: TRUNCATE if r is a else ADMIT)
+    assert req is a and verdict == TRUNCATE
+    assert list(ac.queue) == [b]
+
+
+# ---------------------------------------------------------------------------
+# async waves == sync, every engine flavor
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sample", ["greedy", "top_p"])
+def test_dense_async_matches_sync(qwen, sample):
+    cfg, model, params = qwen
+    ref = ServingEngine(model, params, max_batch=2, max_len=48,
+                        sample=sample).run(_reqs(cfg, 3, 5))
+    got = ServingEngine(model, params, max_batch=2, max_len=48,
+                        sample=sample,
+                        async_waves=True).run(_reqs(cfg, 3, 5))
+    assert _outputs(got) == _outputs(ref)
+
+
+@pytest.mark.parametrize("sample", ["greedy", "top_p"])
+def test_paged_async_matches_sync(qwen, sample):
+    cfg, model, params = qwen
+    kw = dict(num_pages=32, page_size=8, max_batch=2, prefill_chunk=8,
+              sample=sample)
+    ref = PagedServingEngine(model, params, **kw).run(_reqs(cfg, 4, 6))
+    eng = PagedServingEngine(model, params, async_waves=True, **kw)
+    got = eng.run(_reqs(cfg, 4, 6))
+    assert _outputs(got) == _outputs(ref)
+    eng.alloc.check()
+
+
+def test_offload_async_matches_sync(qwen):
+    cfg, model, params = qwen
+    kw = dict(num_pages=32, page_size=8, max_batch=2, prefill_chunk=8,
+              offload=True)
+    ref = PagedServingEngine(model, params, **kw).run(_reqs(cfg, 5, 4))
+    got = PagedServingEngine(model, params, async_waves=True,
+                             **kw).run(_reqs(cfg, 5, 4))
+    assert _outputs(got) == _outputs(ref)
+
+
+# ---------------------------------------------------------------------------
+# preemption storms under open-loop arrivals
+# ---------------------------------------------------------------------------
+def _storm(model, cfg, params, *, async_waves, sample):
+    """Tight pool + staggered submits: admissions race decode growth,
+    forcing preempt/replay while waves may be in flight."""
+    eng = PagedServingEngine(model, params, num_pages=9, page_size=8,
+                             max_batch=3, prefill_chunk=8,
+                             prefix_sharing=False, sample=sample,
+                             async_waves=async_waves)
+    reqs = _reqs(cfg, 15, 6, plen_lo=10, plen_hi=14, new_tokens=16)
+    done = []
+    for i, r in enumerate(reqs):       # open-loop: one submit per tick
+        eng.submit(r)
+        done.extend(eng.step())
+    guard = 0
+    while len(done) < len(reqs):
+        done.extend(eng.step())
+        guard += 1
+        assert guard < 10_000
+    eng.alloc.check()
+    return eng, done
+
+
+@pytest.mark.parametrize("sample", ["greedy", "top_p"])
+def test_preemption_storm_async_matches_sync(qwen, sample):
+    cfg, model, params = qwen
+    ref_eng, ref = _storm(model, cfg, params, async_waves=False,
+                          sample=sample)
+    got_eng, got = _storm(model, cfg, params, async_waves=True,
+                          sample=sample)
+    assert ref_eng.stats["preemptions"] >= 1, "storm did not storm"
+    assert got_eng.stats["preemptions"] >= 1
+    assert _outputs(got) == _outputs(ref)
+    if sample == "greedy":             # and the tokens are REAL ones
+        for r in ref:
+            assert r.output == _offline(model, params, r.prompt,
+                                        16), r.id
+
+
+# ---------------------------------------------------------------------------
+# lookahead relieves head-of-line blocking
+# ---------------------------------------------------------------------------
+def _hol_run(model, cfg, params, lookahead):
+    eng = PagedServingEngine(model, params, num_pages=12, page_size=8,
+                             max_batch=2, max_len_pages=10,
+                             prefill_chunk=8, prefix_sharing=False,
+                             lookahead=lookahead)
+    rng = np.random.default_rng(21)
+    long_r = Request(prompt=rng.integers(0, cfg.vocab_size, 24,
+                                         dtype=np.int32),
+                     max_new_tokens=24, id=0)
+    # 66 tokens -> 9 pages: MORE than the 8 free while long_r lives
+    # (always DEFER), exactly fitting once long_r drains — and small
+    # enough that nobody is ever preempted (preemption would restamp
+    # t_admitted at re-admission and break the order assertions)
+    big = Request(prompt=rng.integers(0, cfg.vocab_size, 66,
+                                      dtype=np.int32),
+                  max_new_tokens=4, id=1)
+    small = Request(prompt=rng.integers(0, cfg.vocab_size, 8,
+                                        dtype=np.int32),
+                    max_new_tokens=4, id=2)
+    eng.submit(long_r)
+    done = []
+    while long_r.slot < 0:             # long_r live before the others
+        done.extend(eng.step())        # join the queue
+    eng.submit(big)
+    eng.submit(small)
+    guard = 0
+    while len(done) < 3:
+        done.extend(eng.step())
+        guard += 1
+        assert guard < 10_000
+    eng.alloc.check()
+    for r in done:
+        assert r.output == _offline(model, params, r.prompt,
+                                    r.max_new_tokens), r.id
+        assert not r.truncated
+        assert r.preemptions == 0      # t_admitted must be single-stamp
+    by_id = {r.id: r for r in done}
+    return by_id
+
+
+def test_lookahead_bypasses_head_of_line(qwen):
+    cfg, model, params = qwen
+    fcfs = _hol_run(model, cfg, params, lookahead=0)
+    # strict FCFS: the oversized prompt (DEFERred while long_r holds
+    # the pool) blocks the small admissible one behind it
+    assert fcfs[1].t_admitted < fcfs[2].t_admitted
+    la = _hol_run(model, cfg, params, lookahead=1)
+    # first-fit window: small admits while big keeps deferring, and
+    # big still completes once the pool frees (no starvation)
+    assert la[2].t_admitted < la[1].t_admitted
+    assert la[2].t_done < la[1].t_done
+    # lookahead never changes tokens, only admission order
+    for rid in (0, 1, 2):
+        assert la[rid].output == fcfs[rid].output
+
+
+# ---------------------------------------------------------------------------
+# disaggregated prefill/decode == colocated
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("async_waves", [False, True])
+def test_disaggregated_matches_colocated(qwen, async_waves):
+    cfg, model, params = qwen
+    kw = dict(num_pages=32, page_size=8, max_batch=2, prefill_chunk=8)
+    ref = PagedServingEngine(model, params, **kw).run(_reqs(cfg, 6, 5))
+    eng = PagedServingEngine(model, params, disaggregate=True,
+                             prefill_pages=24,
+                             async_waves=async_waves, **kw)
+    got = eng.run(_reqs(cfg, 6, 5))
+    assert _outputs(got) == _outputs(ref)
+    assert eng.stats["pages_shipped"] > 0
+    eng.decode_group.alloc.check()
+    eng.prefill_group.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# centralized timing stamps
+# ---------------------------------------------------------------------------
+def test_request_timing_stamped_once(qwen):
+    cfg, model, params = qwen
+    eng = PagedServingEngine(model, params, num_pages=32, page_size=8,
+                             max_batch=2, prefill_chunk=8)
+    done = eng.run(_reqs(cfg, 7, 4, new_tokens=5))
+    for r in done:
+        assert len(r.t_tokens) == len(r.output)
+        assert r.t_first_token == r.t_tokens[0]
+        assert r.t_submit <= r.t_admitted <= r.t_tokens[0]
+        assert all(a <= b for a, b in zip(r.t_tokens, r.t_tokens[1:]))
+        assert r.t_tokens[-1] <= r.t_done
+
+
+# ---------------------------------------------------------------------------
+# sharded-pool decode waves (multi-device, subprocess)
+# ---------------------------------------------------------------------------
+def test_sharded_pool_engine_matches_colocated_subprocess():
+    run_subprocess("""
+import dataclasses
+import jax, numpy as np
+from repro.configs import get_reduced
+from repro.launch.mesh import make_mesh
+from repro.models import Model
+from repro.serving import PagedServingEngine, Request
+
+cfg = dataclasses.replace(get_reduced("qwen1.5-0.5b"),
+                          dtype="float32")
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(9)
+def reqs():
+    rng = np.random.default_rng(9)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, 14,
+                                        dtype=np.int32),
+                    max_new_tokens=6, id=i) for i in range(4)]
+kw = dict(num_pages=32, page_size=8, max_batch=2, prefill_chunk=8)
+ref = PagedServingEngine(model, params, **kw).run(reqs())
+mesh = make_mesh((4,), ("model",))
+eng = PagedServingEngine(model, params, mesh=mesh,
+                         sp_mode="two_stage", **kw)
+got = eng.run(reqs())
+r = {q.id: list(q.output) for q in ref}
+g = {q.id: list(q.output) for q in got}
+assert g == r, (g, r)
+eng.alloc.check()
+print("OK")
+""", n_devices=4)
