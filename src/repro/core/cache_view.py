@@ -124,6 +124,21 @@ class ContiguousView:
         XLA reference paths). Free for contiguous caches."""
         return self.cache.k, self.cache.v
 
+    def tile_rows(self, n: int) -> "ContiguousView":
+        """READ-ONLY batch tiling for the speculative verify wave:
+        request row b becomes rows [b*n, (b+1)*n), one per verify
+        position, so all C positions of every slot run as ONE batched
+        decode attend — same kernels and dispatch count as a plain
+        wave instead of C sequential attends. Appends through a tiled
+        view are undefined (each copy would scatter); contiguous
+        caches pay a real O(n) copy, the paged views tile only the
+        block table."""
+        r = lambda a: jnp.repeat(a, n, axis=0)
+        return ContiguousView(dataclasses.replace(
+            self.cache, k=r(self.cache.k), v=r(self.cache.v),
+            codes=(None if self.cache.codes is None
+                   else r(self.cache.codes))))
+
     def prefill_attend(self, q: jax.Array, ctx, *,
                        window: Optional[int] = None) -> jax.Array:
         """Chunk queries (B, C, H, d) at absolute positions
@@ -199,6 +214,12 @@ class PagedView:
         return (paged.logical_view(self.pool.k, self.block_table),
                 paged.logical_view(self.pool.v, self.block_table))
 
+    def tile_rows(self, n: int) -> "PagedView":
+        """Read-only batch tiling (see ``ContiguousView.tile_rows``):
+        the shared pool is untouched, only the block table repeats."""
+        return PagedView(self.pool,
+                         jnp.repeat(self.block_table, n, axis=0))
+
     def prefill_attend(self, q: jax.Array, ctx, *,
                        window: Optional[int] = None) -> jax.Array:
         return ops.chunk_attention_paged(q, self.pool.k, self.pool.v,
@@ -255,6 +276,15 @@ class ContiguousMLAView:
 
     def latents_logical(self) -> Tuple[jax.Array, jax.Array]:
         return self.cache.ckv, self.cache.krope
+
+    def tile_rows(self, n: int) -> "ContiguousMLAView":
+        """Read-only batch tiling (see ``ContiguousView.tile_rows``)."""
+        r = lambda a: jnp.repeat(a, n, axis=0)
+        return ContiguousMLAView(dataclasses.replace(
+            self.cache, ckv=r(self.cache.ckv),
+            krope=r(self.cache.krope),
+            codes=(None if self.cache.codes is None
+                   else r(self.cache.codes))))
 
     def prefill_attend(self, q_lat: jax.Array, ctx, *, lora_rank: int,
                        scale: float) -> jax.Array:
@@ -322,6 +352,11 @@ class PagedMLAView:
     def latents_logical(self) -> Tuple[jax.Array, jax.Array]:
         return (paged.logical_view(self.pool.ckv, self.block_table),
                 paged.logical_view(self.pool.krope, self.block_table))
+
+    def tile_rows(self, n: int) -> "PagedMLAView":
+        """Read-only batch tiling (see ``ContiguousView.tile_rows``)."""
+        return PagedMLAView(self.pool,
+                            jnp.repeat(self.block_table, n, axis=0))
 
     def prefill_attend(self, q_lat: jax.Array, ctx, *, lora_rank: int,
                        scale: float) -> jax.Array:
@@ -411,6 +446,22 @@ class OffloadedView:
 
     def append_chunk(self, k: jax.Array, v: jax.Array,
                      codes: Optional[jax.Array], ctx) -> "OffloadedView":
+        if jnp.ndim(ctx) == 1:
+            # speculative verify: one chunk per slot at per-row starts
+            b, c = k.shape[:2]
+            phys = paged._chunk_phys_rows(
+                self.block_table, ctx, c, self.pool.page_size,
+                self.pool.num_pages).reshape(b * c)
+            pool = dataclasses.replace(
+                self.pool,
+                codes=paged._scatter_rows(
+                    self.pool.codes,
+                    codes.reshape((b * c,) + codes.shape[2:]), phys))
+            k_np = _concrete(k, "append_chunk")
+            self._spill(k_np.reshape((b * c,) + k_np.shape[2:]),
+                        np.asarray(v).reshape((b * c,) + v.shape[2:]),
+                        np.asarray(phys))
+            return OffloadedView(pool, self.block_table, self.stream)
         phys = paged._chunk_phys(self.block_table, ctx, k.shape[1],
                                  self.pool.page_size,
                                  self.pool.num_pages)
@@ -478,6 +529,14 @@ class OffloadedView:
         return ops.chunk_attention(q, k_dev, v_dev, q_offset=ctx,
                                    window=window)
 
+    def tile_rows(self, n: int) -> "OffloadedView":
+        """Read-only batch tiling (see ``ContiguousView.tile_rows``):
+        pool + host tier shared, block table repeats — one batched
+        score/stage/gather serves all verify positions."""
+        return OffloadedView(self.pool,
+                             jnp.repeat(self.block_table, n, axis=0),
+                             self.stream)
+
     def unwrap(self):
         return self.pool
 
@@ -535,6 +594,27 @@ class OffloadedMLAView:
     def append_chunk(self, ckv: jax.Array, krope: jax.Array,
                      codes: Optional[jax.Array], ctx
                      ) -> "OffloadedMLAView":
+        if jnp.ndim(ctx) == 1:
+            # speculative verify: per-row starts; no chunk_dev splice
+            # (the per-row attend takes the logical-upload path — the
+            # staged_ctx DUS splice is scalar-ctx only)
+            b, c = ckv.shape[:2]
+            phys = paged._chunk_phys_rows(
+                self.block_table, ctx, c, self.pool.page_size,
+                self.pool.num_pages).reshape(b * c)
+            pool = dataclasses.replace(
+                self.pool,
+                codes=paged._scatter_rows(
+                    self.pool.codes,
+                    codes.reshape((b * c,) + codes.shape[2:]), phys))
+            ckv_np = _concrete(ckv, "append_chunk")
+            self._spill(ckv_np.reshape((b * c,) + ckv_np.shape[2:]),
+                        np.asarray(krope).reshape(
+                            (b * c,) + krope.shape[2:]),
+                        np.asarray(phys))
+            return OffloadedMLAView(pool, self.block_table, self.stream,
+                                    staged_ctx=self.staged_ctx,
+                                    chunk_dev=None)
         phys = paged._chunk_phys(self.block_table, ctx, ckv.shape[1],
                                  self.pool.page_size,
                                  self.pool.num_pages)
@@ -610,6 +690,14 @@ class OffloadedMLAView:
             ckv_dev, krope_dev = self._upload_logical()
         return ops.mla_chunk_attention(q_lat, ckv_dev, krope_dev, ctx,
                                        lora_rank=lora_rank, scale=scale)
+
+    def tile_rows(self, n: int) -> "OffloadedMLAView":
+        """Read-only batch tiling (see ``ContiguousView.tile_rows``).
+        The prefill staging state is dropped — a tiled view only ever
+        serves decode-path attends."""
+        return OffloadedMLAView(self.pool,
+                                jnp.repeat(self.block_table, n, axis=0),
+                                self.stream)
 
     def unwrap(self):
         return self.pool

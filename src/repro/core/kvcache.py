@@ -97,6 +97,21 @@ def _upd(buf: jax.Array, val: jax.Array, pos: jax.Array) -> jax.Array:
     select.
     """
     if jnp.ndim(pos) == 1:
+        if val.shape[1] > 1:
+            # per-slot CHUNK write (speculative verify): DUS would
+            # *clamp* a start near the wall and shift the window onto
+            # committed rows, so multi-row per-slot writes go through a
+            # scatter whose out-of-capacity rows are routed one past
+            # the buffer and dropped — the contiguous twin of
+            # paged_cache._chunk_phys_rows' drop convention.
+            s_max = buf.shape[1]
+            rows = pos[:, None] + jnp.arange(val.shape[1])[None]
+            rows = jnp.where(rows < s_max, rows, s_max)
+
+            def scatter_one(b_row, v_rows, r):
+                return b_row.at[r].set(v_rows.astype(b_row.dtype))
+            return jax.vmap(scatter_one)(buf, val, rows)
+
         # per-slot row write: vmap the DUS over the batch dim
         def one(b_row, v_row, p):
             idx = (p,) + (0,) * (b_row.ndim - 1)

@@ -203,11 +203,44 @@ def _chunk_phys(block_table: jax.Array, ctx: jax.Array, c: int,
     return jnp.where(logical < capacity, phys, num_pages * page_size)
 
 
+def _chunk_phys_rows(block_table: jax.Array, ctx: jax.Array, c: int,
+                     page_size: int, num_pages: int) -> jax.Array:
+    """Per-row-ctx batched :func:`_chunk_phys`: ctx (B,) -> phys (B, C).
+
+    The speculative verify wave writes a C-row chunk per *slot*, each
+    starting at that slot's own committed length, so every row gets its
+    own [ctx_b, ctx_b + C) window. Rows past the table's logical
+    capacity route to one-past-the-pool exactly like the B=1 variant
+    (scatter drops them) — a slot speculating into the capacity wall
+    silently loses only the rows the engine will clamp away host-side.
+    """
+    capacity = block_table.shape[1] * page_size
+    logical = ctx[:, None] + jnp.arange(c)[None, :]
+    safe = jnp.minimum(logical, capacity - 1)
+    phys = physical_rows(block_table, safe, page_size)
+    return jnp.where(logical < capacity, phys, num_pages * page_size)
+
+
 def append_chunk_kv(pool: PagedKVPool, k: jax.Array, v: jax.Array,
                     codes: Optional[jax.Array], block_table: jax.Array,
                     ctx: jax.Array) -> PagedKVPool:
-    """Chunked-prefill append (B=1): k/v (1, C, H_kv, d) at logical
-    rows [ctx, ctx + C); rows past the table capacity are dropped."""
+    """Chunked-prefill append: k/v (B, C, H_kv, d) at logical rows
+    [ctx, ctx + C); rows past the table capacity are dropped. ``ctx``
+    is a scalar (B=1 prefill chunk) or (B,) per-row starts (the
+    speculative verify wave appends one chunk per slot)."""
+    if jnp.ndim(ctx) == 1:
+        b, c = k.shape[:2]
+        phys = _chunk_phys_rows(block_table, ctx, c, pool.page_size,
+                                pool.num_pages).reshape(b * c)
+        return PagedKVPool(
+            k=_scatter_rows(pool.k, k.reshape((b * c,) + k.shape[2:]),
+                            phys),
+            v=_scatter_rows(pool.v, v.reshape((b * c,) + v.shape[2:]),
+                            phys),
+            codes=None if pool.codes is None
+            else _scatter_rows(pool.codes,
+                               codes.reshape((b * c,) + codes.shape[2:]),
+                               phys))
     phys = _chunk_phys(block_table, ctx, k.shape[1], pool.page_size,
                        pool.num_pages)
     return PagedKVPool(
@@ -220,6 +253,20 @@ def append_chunk_kv(pool: PagedKVPool, k: jax.Array, v: jax.Array,
 def append_chunk_mla(pool: PagedMLAPool, ckv: jax.Array, krope: jax.Array,
                      codes: Optional[jax.Array], block_table: jax.Array,
                      ctx: jax.Array) -> PagedMLAPool:
+    if jnp.ndim(ctx) == 1:
+        b, c = ckv.shape[:2]
+        phys = _chunk_phys_rows(block_table, ctx, c, pool.page_size,
+                                pool.num_pages).reshape(b * c)
+        return PagedMLAPool(
+            ckv=_scatter_rows(pool.ckv,
+                              ckv.reshape((b * c,) + ckv.shape[2:]), phys),
+            krope=_scatter_rows(
+                pool.krope, krope.reshape((b * c,) + krope.shape[2:]),
+                phys),
+            codes=None if pool.codes is None
+            else _scatter_rows(pool.codes,
+                               codes.reshape((b * c,) + codes.shape[2:]),
+                               phys))
     phys = _chunk_phys(block_table, ctx, ckv.shape[1], pool.page_size,
                        pool.num_pages)
     return PagedMLAPool(

@@ -31,7 +31,9 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.models import Model
-from repro.serving import PagedServingEngine, Request, ServingEngine
+from repro.serving import (BudgetDraft, LayerSubsetDraft,
+                           PagedServingEngine, Request, ServingEngine,
+                           SpeculationController)
 
 
 def main(argv=None):
@@ -62,6 +64,19 @@ def main(argv=None):
                          "n+1 before harvesting wave n (bit-exact)")
     ap.add_argument("--lookahead", type=int, default=0,
                     help="admission lookahead window; 0 = strict FCFS")
+    ap.add_argument("--speculate-depth", type=int, default=0,
+                    help="speculative decoding: draft this many tokens "
+                         "per slot per round and verify them in ONE "
+                         "batched wave (0 = off; outputs stay "
+                         "bit-exact with non-speculative serving)")
+    ap.add_argument("--draft-budget", type=int, default=8,
+                    help="with --speculate-depth: self-draft under a "
+                         "uniform per-layer HATA budget of this many "
+                         "rows (the hash-aware draft)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="with --speculate-depth: draft through only "
+                         "the first N layers instead of the budget "
+                         "draft (0 = use --draft-budget)")
     ap.add_argument("--disaggregate", action="store_true",
                     help="split prefill/decode page pools; finished "
                          "prefills ship pages across the transfer "
@@ -80,6 +95,13 @@ def main(argv=None):
            else get_config(args.arch))
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    speculate = None
+    if args.speculate_depth > 0:
+        draft = (LayerSubsetDraft(args.draft_layers)
+                 if args.draft_layers > 0
+                 else BudgetDraft(args.draft_budget))
+        speculate = SpeculationController(depth=args.speculate_depth,
+                                          draft=draft)
     if args.paged:
         # pool sized to the dense engine's row budget; max_len_pages
         # covers its per-request capacity (rounded UP to whole pages —
@@ -109,12 +131,14 @@ def main(argv=None):
             hbm_budget_bytes=budget, lookahead=args.lookahead,
             async_waves=args.async_waves,
             disaggregate=args.disaggregate,
-            prefill_device=prefill_dev, decode_device=decode_dev)
+            prefill_device=prefill_dev, decode_device=decode_dev,
+            speculate=speculate)
     else:
         engine = ServingEngine(model, params, max_batch=args.max_batch,
                                max_len=args.max_len,
                                lookahead=args.lookahead,
-                               async_waves=args.async_waves)
+                               async_waves=args.async_waves,
+                               speculate=speculate)
     rng = np.random.default_rng(args.seed)
     nb = cfg.audio.n_codebooks if cfg.family == "audio" else 0
     reqs = []
@@ -140,6 +164,14 @@ def main(argv=None):
             else "paged" if args.paged else "dense")
     if args.async_waves:
         mode += "+async"
+    if speculate is not None:
+        mode += f"+{speculate.describe()}"
+        drafted = max(engine.stats["spec_drafted"], 1)
+        hits = (engine.stats["spec_accepted"]
+                - sum(engine.stats["spec_acc_hist"]))
+        print(f"[serve/spec] rounds={engine.stats['spec_rounds']} "
+              f"accept={max(hits, 0) / drafted:.3f} "
+              f"hist={engine.stats['spec_acc_hist']}")
     print(f"[serve/{mode}] {engine.stats} wall={dt:.2f}s "
           f"tok/s={engine.stats['tokens_out'] / dt:.1f}")
     return done

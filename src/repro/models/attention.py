@@ -281,18 +281,63 @@ def gqa_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
     *in place* (the block-table flash-prefill kernel on a
     ``PagedView``; rows past ctx + C are garbage, excluded by
     causality). ``ctx`` is traced: one compiled chunk shape serves
-    every chunk of every prompt.
+    every chunk of every prompt. ``ctx`` may also be (B,) per-row
+    starts — the speculative verify wave scores one d+1-token chunk
+    per *slot*, each at its own committed length (x is then (B, C, D)
+    and every row appends + attends at its own offset).
     """
     view = cv.as_gqa_view(view)
     b, c, _ = x.shape
-    positions = jnp.arange(c) + ctx
-    q, k, v = _project_qkv(cfg, p, x, positions)
+    if jnp.ndim(ctx) == 1:
+        positions = ctx[:, None] + jnp.arange(c)[None]       # (B, C)
+        q, k, v = jax.vmap(
+            lambda xr, pr: _project_qkv(cfg, p, xr[None], pr))(
+                x, positions)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    else:
+        positions = jnp.arange(c) + ctx
+        q, k, v = _project_qkv(cfg, p, x, positions)
     codes = None
     if w_h is not None and cfg.hata.enabled and view.has_codes:
         codes = ops.hash_encode_heads(k, w_h)
     view = view.append_chunk(k, v, codes, ctx)
     a = view.prefill_attend(q, ctx, window=cfg.sliding_window)
     return a.reshape(b, c, -1) @ p["wo"], view
+
+
+def gqa_verify_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
+                     ctx: jax.Array, use_hata,
+                     layer: Optional[int] = None):
+    """Speculative verify through one GQA layer: append the (B, C)
+    chunk like the per-row branch of :func:`gqa_prefill_chunk`, then
+    attend every position through the DECODE path
+    (:func:`gqa_decode_attend`) — position j of row b runs with
+    pos = ctx_b + j under the layer's HATA flag, so a hash-aware layer
+    scores/selects the same top-k rows as the sequential decode the
+    wave replaces. A dense ``prefill_attend`` here would silently
+    diverge from decode the moment the context outgrows the layer
+    budget (verify attending ALL rows, decode only top-k), breaking
+    the spec ≡ non-spec guarantee. The C positions fold into the BATCH
+    (``view.tile_rows``: slot b's position j reads as batch row
+    b*C + j at pos ctx_b + j), so the whole verify wave is ONE batched
+    score→select→gather per layer — the same dispatch count as a
+    plain decode wave, and per-row math identical to it bit-for-bit.
+    """
+    view = cv.as_gqa_view(view)
+    b, c, _ = x.shape
+    positions = ctx[:, None] + jnp.arange(c)[None]           # (B, C)
+    q, k, v = jax.vmap(
+        lambda xr, pr: _project_qkv(cfg, p, xr[None], pr))(x, positions)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    codes = None
+    if w_h is not None and cfg.hata.enabled and view.has_codes:
+        codes = ops.hash_encode_heads(k, w_h)
+    view = view.append_chunk(k, v, codes, ctx)
+    a = gqa_decode_attend(cfg, p, w_h,
+                          q.reshape((b * c,) + q.shape[2:]),
+                          view.tile_rows(c), positions.reshape(b * c),
+                          use_hata, layer)              # (B*C, 1, D)
+    return a.reshape(b, c, -1), view
 
 
 # ===========================================================================
@@ -547,8 +592,17 @@ def mla_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
     view = cv.as_mla_view(view)
     m = cfg.mla
     b, c, _ = x.shape
-    positions = jnp.arange(c) + ctx
-    q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
+    if jnp.ndim(ctx) == 1:
+        # per-row chunk starts (speculative verify wave): vmap the
+        # projection so each slot ropes at its own absolute positions
+        positions = ctx[:, None] + jnp.arange(c)[None]       # (B, C)
+        qn, qr, cl, kr = jax.vmap(
+            lambda xr, pr: _mla_qkv(cfg, p, xr[None], pr))(x, positions)
+        q_nope, q_rope = qn[:, 0], qr[:, 0]
+        ckv, krope = cl[:, 0], kr[:, 0]
+    else:
+        positions = jnp.arange(c) + ctx
+        q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
     codes = None
     if w_h is not None and cfg.hata.enabled and view.has_codes:
         latent = jnp.concatenate([ckv, krope], axis=-1)
@@ -561,6 +615,34 @@ def mla_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
     wuv = p["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
     a = jnp.einsum("bchr,rhd->bchd", o_lat, wuv.astype(jnp.float32))
     return a.reshape(b, c, -1).astype(x.dtype) @ p["wo"], view
+
+
+def mla_verify_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
+                     ctx: jax.Array, use_hata,
+                     layer: Optional[int] = None):
+    """MLA twin of :func:`gqa_verify_chunk`: per-row chunk append, then
+    ONE position-folded batched DECODE-path attend
+    (:func:`mla_decode_attend` over ``view.tile_rows``) so hash-aware
+    layers run the same latent top-k selection as the sequential
+    decode the verify wave replaces."""
+    view = cv.as_mla_view(view)
+    b, c, _ = x.shape
+    positions = ctx[:, None] + jnp.arange(c)[None]           # (B, C)
+    qn, qr, cl, kr = jax.vmap(
+        lambda xr, pr: _mla_qkv(cfg, p, xr[None], pr))(x, positions)
+    q_nope, q_rope = qn[:, 0], qr[:, 0]
+    ckv, krope = cl[:, 0], kr[:, 0]
+    codes = None
+    if w_h is not None and cfg.hata.enabled and view.has_codes:
+        latent = jnp.concatenate([ckv, krope], axis=-1)
+        codes = ops.hash_encode(latent, hw.head0(w_h))
+    view = view.append_chunk(ckv, krope, codes, ctx)
+    q_lat = _mla_latent_q(cfg, p, q_nope, q_rope)       # (B, C, H, ·)
+    a = mla_decode_attend(cfg, p, w_h,
+                          q_lat.reshape((b * c,) + q_lat.shape[2:]),
+                          view.tile_rows(c), positions.reshape(b * c),
+                          use_hata, x.dtype, layer)     # (B*C, 1, D)
+    return a.reshape(b, c, -1), view
 
 
 # ===========================================================================

@@ -432,6 +432,32 @@ def block_prefill_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
     return x, view
 
 
+def block_verify_chunk(cfg: ModelConfig, p, w_h, x: jax.Array, view,
+                       ctx: jax.Array, use_hata, *,
+                       layer: Optional[int] = None):
+    """Speculative verify through one block: chunk-shaped projections +
+    per-row appends (as :func:`block_prefill_chunk`'s per-row branch),
+    but DECODE-path attention per position — dense or hash top-k per
+    the layer's HATA flag — so verify logits are bit-identical to the
+    sequential decode the wave replaces. x: (B, C, D) at per-row
+    absolute positions [ctx_b, ctx_b + C)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if _is_mla(cfg):
+        a, view = attn.mla_verify_chunk(cfg, p["attn"], w_h, h, view,
+                                        ctx, use_hata, layer)
+    else:
+        a, view = attn.gqa_verify_chunk(cfg, p["attn"], w_h, h, view,
+                                        ctx, use_hata, layer)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_mod.moe_ffn(cfg, p["moe"], h)
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], h)
+    return x, view
+
+
 # ---------------------------------------------------------------------------
 # decode (one token; Alg. 3)
 # ---------------------------------------------------------------------------

@@ -366,16 +366,23 @@ class Model:
                    jax.tree.map(lambda t: t[j], params["hash_stack"]))
 
     def _decode_views(self, params, tokens: jax.Array, views,
-                      pos: jax.Array):
+                      pos: jax.Array, layer_limit: Optional[int] = None):
         """One decode wave over per-layer cache views. tokens: (B,);
         pos: scalar or (B,) per-request fill (a ``PagedView``'s
         inactive slots point at the scratch page). Returns
-        (logits (B, V), views)."""
+        (logits (B, V), views). ``layer_limit`` runs only the first N
+        layers straight into the head — the layer-subset draft of the
+        speculative plane (skipped layers' views pass through
+        untouched; their stale rows are rewritten by the verify wave
+        before anything reads them)."""
         cfg = self.cfg
         x = self.embed_decode(params, tokens)
         hata_on = cfg.hata.enabled
         new_views = []
         for li, (bp, w_h) in enumerate(self._flat_layer_params(params)):
+            if layer_limit is not None and li >= layer_limit:
+                new_views.append(views[li])
+                continue
             flag = hata_on and li >= cfg.hata.dense_layers
             # li is a python int -> the calibrated per-layer budget
             # table (core/budgets.py) applies on this unrolled path
@@ -411,6 +418,43 @@ class Model:
         x_last = jax.lax.dynamic_index_in_dim(x, last, axis=1,
                                               keepdims=False)
         return self._head_last(params, x_last), new_views
+
+    def verify_chunk(self, params, tokens: jax.Array, views,
+                     ctx: jax.Array):
+        """Speculative verify wave: score a (B, C) token block in one
+        chunked-prefill-shaped pass, each row at its OWN committed
+        context length ``ctx`` (B,), and return logits at ALL C
+        positions — position j of row b runs the DECODE attention path
+        at pos = ctx_b + j (dense or hash top-k per the layer's HATA
+        flag), exactly what the non-speculative decode would compute
+        after committing j more tokens; attending the chunk densely
+        (``prefill_attend``) would diverge from decode the moment a
+        hash-aware layer's context outgrows its budget. The chunk's
+        exact K/V rows overwrite whatever the draft waves appended at
+        [ctx_b, ctx_b + C) before any query reads them (append before
+        attend inside every ``*_verify_chunk``). Differences from
+        :meth:`prefill_chunk`: per-row ``ctx``, every position's
+        logits, and no offloaded-MLA staged-context splice (that splice
+        is a scalar-ctx ``dynamic_update_slice``; the per-row path
+        takes the plain logical upload). Returns
+        (logits (B, C, V) f32, views)."""
+        cfg = self.cfg
+        assert cfg.family != "audio" and not cfg.meta_tokens, (
+            f"{cfg.name}: speculative verify supports token-embedding "
+            "families without meta rows")
+        x = self.embed(params, tokens)
+        hata_on = cfg.hata.enabled
+        new_views = []
+        for li, (bp, w_h) in enumerate(self._flat_layer_params(params)):
+            flag = hata_on and li >= cfg.hata.dense_layers
+            x, view = blocks.block_verify_chunk(cfg, bp, w_h, x,
+                                                views[li], ctx, flag,
+                                                layer=li)
+            new_views.append(view)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x.astype(jnp.float32) @ self.head_weight(
+            params).astype(jnp.float32)
+        return logits[..., :cfg.vocab_size], new_views
 
     # -- deprecation shims (the pools+block_table twin surface) --------
     def decode_step_paged(self, params, tokens: jax.Array, pools,
@@ -511,18 +555,24 @@ class Model:
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
-    def decode_step(self, params, tokens: jax.Array, caches, pos
+    def decode_step(self, params, tokens: jax.Array, caches, pos, *,
+                    layer_limit: Optional[int] = None
                     ) -> Tuple[jax.Array, Any]:
         """tokens: (B,) [audio: (B, nb)] the last generated token;
         pos: scalar count of tokens already in the cache (incl. meta),
         or (B,) per-slot fills when ``caches`` is a per-layer list of
         cache *views* (``core.cache_view`` — the serving engines'
         continuous-batching waves; contiguous and paged layouts route
-        through the same step)."""
+        through the same step). ``layer_limit``: run only the first N
+        layers (speculative layer-subset draft; view-list path only)."""
         from repro.core import cache_view as cv
         if isinstance(caches, (list, tuple)) and caches \
                 and cv.is_view(caches[0]):
-            return self._decode_views(params, tokens, list(caches), pos)
+            return self._decode_views(params, tokens, list(caches), pos,
+                                      layer_limit=layer_limit)
+        assert layer_limit is None, (
+            "layer_limit drafting needs the per-layer view-list decode "
+            "path (serving engines) — not the dict-cache entry")
         cfg = self.cfg
         x = self.embed_decode(params, tokens)
         if self.n_pre:

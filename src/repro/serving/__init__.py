@@ -4,12 +4,20 @@ from repro.serving.plane import (ADMIT, DEFER, TRUNCATE,
                                  AdmissionController, DecodeWorker,
                                  PageShipper, PoolGroup, PrefillTask,
                                  PrefillWorker, Transfer, Wave,
-                                 make_pool_group)
+                                 donation_overlaps, make_pool_group)
 from repro.serving.request import Request
 from repro.serving.scheduler import PagedServingEngine
+from repro.serving.speculative import (BudgetDraft, ConstantDraft,
+                                       DraftSource, LayerSubsetDraft,
+                                       SpeculationController, SpecWave,
+                                       rollback_slot)
 
 __all__ = ["EngineBase", "ServingEngine", "Request",
            "PagedServingEngine", "AdmissionController", "DecodeWorker",
            "PrefillWorker", "PrefillTask", "PoolGroup", "Transfer",
            "PageShipper", "Wave", "make_pool_group",
+           "donation_overlaps",
+           "DraftSource", "BudgetDraft", "LayerSubsetDraft",
+           "ConstantDraft", "SpeculationController", "SpecWave",
+           "rollback_slot",
            "ADMIT", "DEFER", "TRUNCATE"]

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import budgets as budgets_mod
 from repro.models import Model
+from repro.serving import speculative as spec_mod
 from repro.serving.plane import AdmissionController
 from repro.serving.request import Request
 from repro.serving.sampling import pick_tokens
@@ -58,7 +59,9 @@ class EngineBase:
                                      None] = None,
                  lookahead: int = 0, async_waves: bool = False,
                  on_token: Optional[Callable[[Request, int],
-                                             None]] = None):
+                                             None]] = None,
+                 speculate: Optional[
+                     spec_mod.SpeculationController] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -88,6 +91,20 @@ class EngineBase:
         self._steps = np.zeros(max_batch, np.int32)
         self.stats = {"decode_steps": 0, "prefills": 0,
                       "tokens_out": 0, "truncated": 0}
+        # speculative decoding (serving/speculative.py): the decode
+        # wave becomes a draft->verify ROUND committing 1..depth+1
+        # tokens per slot per dispatch
+        self.spec = speculate
+        if speculate is not None:
+            assert model.supports_paged, (
+                f"{model.cfg.name}: speculative decoding needs the "
+                "verify-chunk families (dense/moe attention KV, no "
+                "meta rows) — even on the dense engine")
+            self.stats.update(
+                spec_rounds=0, spec_drafted=0, spec_accepted=0,
+                # rounds by accepted count: index a-1 holds rounds that
+                # committed a tokens (a-1 draft hits + the verify pick)
+                spec_acc_hist=[0] * (speculate.depth + 1))
         self._done_this_step: List[Request] = []
 
     # ------------------------------------------------------------------
@@ -170,6 +187,71 @@ class EngineBase:
         self._done_this_step.append(req)
 
     # ------------------------------------------------------------------
+    # speculative waves (shared: both engines launch SpecWaves when
+    # self.spec is set; see serving/speculative.py for the round math)
+    # ------------------------------------------------------------------
+    def _settle_spec(self, wave: spec_mod.SpecWave) -> np.ndarray:
+        """Block on a speculative wave's acceptance counts and COMMIT
+        them: each live slot's pos/step mirrors advance by its count
+        and (paged) surplus lookahead pages are returned — through the
+        ONE rollback helper (``speculative.rollback_slot``). Idempotent
+        (the wave caches ``acc_np``): the launch path settles the
+        in-flight wave IN PLACE before page planning (plans need the
+        true positions, but drains inside the planning ladder must
+        still find the wave in the worker), the drain path settles
+        again before harvesting. Token recording is NOT done here —
+        settling is the part round n+1 needs; harvesting
+        (:meth:`_apply_spec_wave`) can hide under its device time."""
+        if wave.acc_np is None:
+            wave.acc_np = np.asarray(wave.acc)
+            for slot, req in enumerate(wave.reqs):
+                if req is None or self.slots[slot] is not req:
+                    continue
+                acc = int(wave.acc_np[slot])
+                spec_mod.rollback_slot(self, slot,
+                                       int(wave.pos0[slot]) + acc)
+                self._steps[slot] = int(wave.steps0[slot]) + acc
+        return wave.acc_np
+
+    def _apply_spec_wave(self,
+                         wave: Optional[spec_mod.SpecWave]) -> None:
+        """Harvest a speculative wave: record each slot's committed
+        tokens (the TARGET picks — an accepted draft token and the
+        target's own pick for that stream index are the same token by
+        construction) and retire finished requests. Slots that turned
+        over since launch discard their tokens against the snapshot,
+        the same rule as plain waves."""
+        if wave is None:
+            return
+        acc = self._settle_spec(wave)
+        toks = np.asarray(wave.toks)           # blocks on the device
+        depth = toks.shape[1] - 1
+        self.stats["spec_rounds"] += 1
+        for slot, req in enumerate(wave.reqs):
+            if req is None or req.done or self.slots[slot] is not req:
+                continue
+            self.stats["spec_drafted"] += depth
+            self.stats["spec_acc_hist"][int(acc[slot]) - 1] += 1
+            st = req.stats
+            st["spec_rounds"] = st.get("spec_rounds", 0) + 1
+            st["spec_drafted"] = st.get("spec_drafted", 0) + depth
+            emitted = 0
+            for j in range(int(acc[slot])):
+                self._record_token(req, self._to_py(toks[slot, j]))
+                emitted += 1
+                if req.done:
+                    break
+            self.stats["spec_accepted"] += emitted
+            st["spec_accepted"] = st.get("spec_accepted", 0) + emitted
+            if req.done:
+                self._retire(slot, req)
+
+    def _retire(self, slot: int, req: Request):
+        """Free ``slot`` and finish its request (engine-specific slot
+        teardown; subclasses override)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
     # engine-specific hooks
     # ------------------------------------------------------------------
     def _admit(self):
@@ -198,13 +280,33 @@ class EngineBase:
         return self._done_this_step
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Submit all, run to completion, return in completion order."""
+        """Submit all, run to completion, return in completion order.
+
+        The livelock guard counts consecutive ticks WITHOUT PROGRESS
+        (progress = any change to the tokens/prefill/truncation
+        counters or a completed request), not raw ticks: a tick-count
+        guard miscounts work that legitimately spans many ticks — a
+        speculative round that rejects every draft token still commits
+        the verify wave's own pick (tokens_out moved — that is
+        progress), while an engine spinning on DEFERred admission
+        moves nothing and should trip fast. A far looser absolute
+        cap stays as the runaway backstop.
+        """
         for r in requests:
             self.submit(r)
         done: List[Request] = []
-        guard = 0
+        guard = idle = 0
+        sig = None
         while len(done) < len(requests):
             done.extend(self.step())
             guard += 1
-            assert guard < 100000, "engine livelock"
+            assert guard < 10_000_000, "engine runaway"
+            now = (self.stats["tokens_out"], self.stats["prefills"],
+                   self.stats["truncated"],
+                   self.stats.get("prefill_chunks", 0), len(done))
+            idle = idle + 1 if now == sig else 0
+            sig = now
+            assert idle < 1000, (
+                f"engine livelock: 1000 ticks with no progress "
+                f"(tokens_out/prefills/truncated/chunks/done = {now})")
         return done

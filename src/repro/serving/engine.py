@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.models import Model
 from repro.serving import plane
+from repro.serving import speculative as spec_mod
 from repro.serving.base import EngineBase
 from repro.serving.plane import ADMIT, TRUNCATE, Wave
 from repro.serving.request import Request
@@ -51,11 +52,14 @@ class ServingEngine(EngineBase):
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_len: int = 256, sample: str = "greedy",
                  seed: int = 0, budget_table=None, lookahead: int = 0,
-                 async_waves: bool = False, on_token=None):
+                 async_waves: bool = False, on_token=None,
+                 speculate: Optional[
+                     spec_mod.SpeculationController] = None):
         super().__init__(model, params, max_batch=max_batch,
                          sample=sample, seed=seed,
                          budget_table=budget_table, lookahead=lookahead,
-                         async_waves=async_waves, on_token=on_token)
+                         async_waves=async_waves, on_token=on_token,
+                         speculate=speculate)
         self.max_len = max_len
         cfg = model.cfg
         self.meta = cfg.meta_tokens
@@ -70,7 +74,7 @@ class ServingEngine(EngineBase):
             if cfg.family == "audio" else (max_batch,), jnp.int32)
         self.decode = plane.dense_decode_worker(
             model, sample=sample, base_key=self._base_key,
-            wrap=self._with_table)
+            wrap=self._with_table, speculate=speculate)
         self.prefill = plane.dense_prefill_worker(
             model, wrap=self._with_table)
 
@@ -123,7 +127,10 @@ class ServingEngine(EngineBase):
     # waves
     # ------------------------------------------------------------------
     def _drain(self):
-        self._apply_wave(self.decode.take())
+        if self.spec is not None:
+            self._apply_spec_wave(self.decode.take())
+        else:
+            self._apply_wave(self.decode.take())
 
     def _launch_wave(self) -> Optional[Wave]:
         """Launch the next wave; returns the PREVIOUS in-flight wave
@@ -167,10 +174,65 @@ class ServingEngine(EngineBase):
                 self._finish(req)
                 self.slots[slot] = None
 
+    def _retire(self, slot: int, req: Request):
+        spec_mod.rollback_slot(self, slot, 0)   # dense: rewind only
+        self.slots[slot] = None
+        self._finish(req)
+
+    # ------------------------------------------------------------------
+    # speculative rounds (self.spec set; round fn built by
+    # plane.dense_decode_worker, math in serving/speculative.py)
+    # ------------------------------------------------------------------
+    def _launch_spec_round(self) -> Optional[spec_mod.SpecWave]:
+        """Dense twin of the paged spec launch. Settle the in-flight
+        round IN PLACE first: the wall check below needs the SETTLED
+        positions (on stale launch-time mirrors a slot already at the
+        wall would launch a round with no writable row and commit a
+        garbage token), and unlike plain waves pos only advances at
+        settle — by the acceptance count. Coverage is the slab itself:
+        every slot owns max_len rows, so cov just encodes the wall."""
+        if self.decode.inflight is not None:
+            self._settle_spec(self.decode.inflight)
+        wall = self.max_len + self.meta
+        for slot, req in enumerate(self.slots):
+            if req is not None and self.pos[slot] >= wall:
+                self._drain()                  # land in-flight tokens
+                if self.slots[slot] is not req:
+                    continue                   # retired at drain
+                self._finish(req, truncated=True)
+                self.slots[slot] = None
+        prev = self.decode.take()
+        if not any(s is not None for s in self.slots):
+            return prev
+        snapshot = list(self.slots)
+        pos0 = self.pos.copy()
+        steps0 = self._steps.copy()
+        cov = np.minimum(pos0 + self.spec.depth + 1,
+                         wall).astype(np.int32)
+        feed, targets, acc, self.caches = self.decode.step(
+            self.params, self._tok_feed, self.caches,
+            jnp.asarray(pos0), jnp.asarray(self._ids.copy()),
+            jnp.asarray(steps0), jnp.asarray(cov))
+        self._tok_feed = feed
+        self.stats["decode_steps"] += 1
+        self.decode.put(spec_mod.SpecWave(
+            toks=targets, acc=acc, reqs=snapshot,
+            pos0=pos0, steps0=steps0))
+        return prev
+
     # ------------------------------------------------------------------
     def _advance(self):
         """Truncate out-of-cache slots, then run one decode wave
         (async: launch wave n+1 before harvesting wave n)."""
+        if self.spec is not None:
+            # the wall check lives INSIDE the spec launch — it must run
+            # on settled positions, which only exist after the in-flight
+            # round is settled there
+            prev = self._launch_spec_round()
+            self._apply_spec_wave(prev)    # round n (async overlap)
+            if not self.async_waves:
+                self._apply_spec_wave(self.decode.take())
+            return
         # out-of-cache: a slot whose next decode would write at or past
         # max_len is terminated NOW with an explicit ``truncated`` flag
         # and its slot freed — decoding on would clamp the cache append

@@ -61,6 +61,7 @@ shard_map. Appends/prefill therefore run unmodified on the GSPMD path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Any, Callable, Deque, List, Optional, Tuple
@@ -71,9 +72,11 @@ import numpy as np
 
 from repro.core import cache_view as cache_view_mod
 from repro.core import paged_cache as paged
+from repro.core.kvcache import MLACache
 from repro.core.paged_cache import (PageAllocator, PrefixCache,
                                     ShardedPageAllocator)
 from repro.distributed import strategy as strategy_mod
+from repro.serving import speculative as spec_mod
 from repro.serving.request import Request
 from repro.serving.sampling import pick_tokens_device
 
@@ -228,10 +231,12 @@ class DecodeWorker:
     steps) -> (next_toks, new cache state)`` with the pick fused."""
 
     def __init__(self, step: Callable, group: Optional[PoolGroup] = None,
-                 step_jit=None):
+                 step_jit=None,
+                 speculate: Optional[spec_mod.SpeculationController] = None):
         self.step = step
         self.group = group
         self.step_jit = step_jit       # unwrapped jit, for HLO guards
+        self.speculate = speculate     # set -> step is the spec ROUND fn
         self.inflight: Optional[Wave] = None
 
     @property
@@ -282,9 +287,72 @@ def _with_strategy(fn, strat):
     return wrapped
 
 
+def _spec_round_views(model, spec, p, t, views, pos, ids, steps, cov, *,
+                      sample: str, base_key):
+    """One speculative round over live cache views — the shared body
+    both decode-worker spec branches trace (serving/speculative.py has
+    the round math; this is its ONLY model-call site, per the CI
+    serving guard).
+
+    Draft wave j appends at row pos+j (clamped to cov-1: past the
+    slot's covered rows a write would clamp/park onto rows other data
+    owns, and everything at/after the clamp is acceptance-masked
+    garbage anyway) and proposes the draft argmax. The verify chunk
+    then rewrites rows [pos, pos+d] with exact K/V before reading
+    them and scores all d+1 positions at per-row ctx=pos. Returns
+    (feed, targets, acc, views): ``feed`` is the next round's input
+    token — target pick acc-1, the first one the draft did NOT
+    anticipate — kept on device so tokens never leave between rounds.
+    """
+    depth = spec.depth
+    draft = spec.draft
+    t = t.astype(jnp.int32)
+    if draft.fixed_token is not None:
+        drafts = [jnp.full_like(t, draft.fixed_token)] * depth
+    else:
+        drafts = []
+        cur = t
+        with draft.trace_context(model):
+            for j in range(depth):
+                dpos = jnp.minimum(pos + j, cov - 1)
+                logits, views = model.decode_step(
+                    p, cur, views, dpos, layer_limit=draft.layer_limit)
+                cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                drafts.append(cur)
+    vtoks = jnp.concatenate([t[:, None]] + [d[:, None] for d in drafts],
+                            axis=1)
+    vlogits, views = model.verify_chunk(p, vtoks, views, pos)
+    targets = spec_mod.pick_targets(base_key, vlogits, ids, steps, sample)
+    acc = spec_mod.accept_counts(vtoks, targets, pos, cov)
+    feed = jnp.take_along_axis(targets, (acc - 1)[:, None], axis=1)[:, 0]
+    return feed, targets, acc, views
+
+
+def _dense_views(caches):
+    """Dense-slab cache dict -> flat per-layer view list (pre then
+    stack, the ``_flat_layer_params`` order) + the inverse rebuild."""
+    pre = list(caches.get("pre", []))
+    stack = list(caches["stack"])
+    views = [cache_view_mod.as_mla_view(c) if isinstance(c, MLACache)
+             else cache_view_mod.as_gqa_view(c)
+             for c in pre + stack]
+
+    def rebuild(new_views):
+        flat = [v.unwrap() for v in new_views]
+        out = dict(caches)
+        if pre:
+            out["pre"] = flat[:len(pre)]
+        out["stack"] = flat[len(pre):]
+        return out
+    return views, rebuild
+
+
 def paged_decode_worker(model, group: PoolGroup, *, sample: str,
                         base_key, wrap, offload: bool = False,
-                        strat=None, donate: bool = True) -> DecodeWorker:
+                        strat=None, donate: bool = True,
+                        speculate: Optional[
+                            spec_mod.SpeculationController] = None
+                        ) -> DecodeWorker:
     """Build the paged decode step: per-layer views around the shared
     block table, ``Model.decode_step``, fused pick. Pools are donated
     (row scatters stay in place); offload drops the jit (host gathers
@@ -295,7 +363,28 @@ def paged_decode_worker(model, group: PoolGroup, *, sample: str,
     pending BLOCKS the calling thread until the producer finishes, so a
     donated pools chain serializes launch *n+1* behind wave *n* and the
     async tick degenerates to synchronous. Undonated pools keep the
-    dispatch async at the cost of a pool copy per wave."""
+    dispatch async at the cost of a pool copy per wave.
+
+    ``speculate`` swaps the step for the speculative ROUND fn
+    ``(p, feed, pools, bt, pos, ids, steps, cov) ->
+    (next_feed, targets, acc, pools)`` — same pools-donation rules,
+    one dispatch per d+1 candidate tokens."""
+
+    if speculate is not None:
+        def _round(p, t, pools, bt, pos, ids, steps, cov):
+            views = cache_view_mod.paged_views(pools, bt)
+            feed, targets, acc, views = _spec_round_views(
+                model, speculate, p, t, views, pos, ids, steps, cov,
+                sample=sample, base_key=base_key)
+            return feed, targets, acc, [v.unwrap() for v in views]
+
+        if offload:
+            return DecodeWorker(wrap(_with_strategy(_round, strat)),
+                                group, speculate=speculate)
+        jitted = jax.jit(_with_strategy(_round, strat),
+                         donate_argnums=(2,) if donate else ())
+        return DecodeWorker(wrap(jitted), group, step_jit=jitted,
+                            speculate=speculate)
 
     def _step(p, t, pools, bt, pos, ids, steps):
         views = cache_view_mod.paged_views(pools, bt)
@@ -326,10 +415,27 @@ def paged_prefill_worker(model, group: PoolGroup, *, chunk_size: int,
                          step_jit=jitted)
 
 
-def dense_decode_worker(model, *, sample: str, base_key,
-                        wrap) -> DecodeWorker:
+def dense_decode_worker(model, *, sample: str, base_key, wrap,
+                        speculate: Optional[
+                            spec_mod.SpeculationController] = None
+                        ) -> DecodeWorker:
     """Dense-slab decode step with the fused pick (caches stay
-    undonated, matching the pre-plane engine)."""
+    undonated, matching the pre-plane engine). ``speculate`` swaps in
+    the speculative round fn: the slab caches are coerced to
+    contiguous views for the draft/verify body, unwrapped back to the
+    same dict shape after."""
+
+    if speculate is not None:
+        def _round(p, t, caches, pos, ids, steps, cov):
+            views, rebuild = _dense_views(caches)
+            feed, targets, acc, views = _spec_round_views(
+                model, speculate, p, t, views, pos, ids, steps, cov,
+                sample=sample, base_key=base_key)
+            return feed, targets, acc, rebuild(views)
+
+        jitted = jax.jit(_round)
+        return DecodeWorker(wrap(jitted), step_jit=jitted,
+                            speculate=speculate)
 
     def _step(p, t, caches, pos, ids, steps):
         logits, caches = model.decode_step(p, t, caches, pos)
@@ -355,6 +461,66 @@ def dense_prefill_worker(model, *, wrap) -> PrefillWorker:
     insert = jax.jit(_insert, donate_argnums=(0,))
     return PrefillWorker(chunk=None, extra={"prefill": prefill,
                                             "insert": insert})
+
+
+# ---------------------------------------------------------------------------
+# Donation dispatch probe (async wave tuning)
+# ---------------------------------------------------------------------------
+_DONATION_OVERLAPS: Optional[bool] = None
+
+
+def donation_overlaps(force: Optional[bool] = None) -> bool:
+    """Measured, process-cached answer to "can a jitted call DISPATCH
+    while a donated input's producer is still running?".
+
+    The async double-buffered tick needs launch n+1 to return before
+    wave n finishes. The probed shape matters: on the CPU PJRT client
+    a SINGLE donated dispatch against a pending (non-donated) producer
+    returns immediately, but a CHAIN of donated dispatches — each
+    donating the previous call's still-pending donated output, which
+    is exactly the engine's pools chain — blocks the dispatching
+    thread for the producer's full runtime, silently degrading the
+    tick to synchronous. The engines used to special-case this on the
+    backend NAME, which misclassifies any client the list doesn't
+    know about (new plugins, donation-blocking accelerators).
+    Instead: run a self-chaining donated step twice back-to-back and
+    call donation overlap-safe iff the second dispatch returned well
+    before the step's measured wall time (< 0.5x). One probe per
+    process (~100ms on hosts that need it); a wrong call costs only
+    an extra pool copy or a serialized launch, never correctness.
+
+    ``force`` pins the cached verdict (tests / explicit override).
+    """
+    global _DONATION_OVERLAPS
+    if force is not None:
+        _DONATION_OVERLAPS = bool(force)
+    if _DONATION_OVERLAPS is not None:
+        return _DONATION_OVERLAPS
+
+    n, iters = 384, 12
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def step(x):
+        for _ in range(iters):
+            x = jnp.tanh(x @ x)
+        return x
+
+    x = step(jnp.ones((n, n), jnp.float32))             # compile
+    x.block_until_ready()
+
+    t0 = time.monotonic()
+    x = step(x)
+    x.block_until_ready()
+    t_prod = time.monotonic() - t0
+
+    x = step(x)                                         # pending chain
+    t0 = time.monotonic()
+    x = step(x)                         # donates a pending donated out
+    t_disp = time.monotonic() - t0
+    x.block_until_ready()
+
+    _DONATION_OVERLAPS = bool(t_disp < 0.5 * t_prod)
+    return _DONATION_OVERLAPS
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -39,6 +39,16 @@ class Request:
     # (resume replays its tokens identically — greedy trivially, sampled
     # via the engine's per-request (id, step) RNG streams)
     preemptions: int = 0
+    # per-request speculative telemetry, filled by
+    # EngineBase._apply_spec_wave ({} on non-speculative engines):
+    #   spec_rounds   — verify waves this request rode
+    #   spec_drafted  — draft tokens proposed for it (depth per round)
+    #   spec_accepted — tokens it emitted from those waves (accepted
+    #                   draft prefix + the verify wave's own pick)
+    # invariant: len(output) == stats["spec_accepted"] + 1 — every
+    # output token except the admission-prefill pick came from a
+    # speculative wave (resume prefills replay, they never re-record)
+    stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def done(self) -> bool:

@@ -90,6 +90,7 @@ import numpy as np
 from repro.kernels import runtime
 from repro.models import Model
 from repro.serving import plane
+from repro.serving import speculative as spec_mod
 from repro.serving.base import EngineBase
 from repro.serving.plane import (ADMIT, DEFER, TRUNCATE, PoolGroup,
                                  PrefillTask, Wave)
@@ -114,7 +115,9 @@ class PagedServingEngine(EngineBase):
                  prefill_pages: Optional[int] = None,
                  prefill_device=None, decode_device=None,
                  mesh=None, seq_axis: str = "model",
-                 sp_mode: str = "two_stage"):
+                 sp_mode: str = "two_stage",
+                 speculate: Optional[
+                     spec_mod.SpeculationController] = None):
         assert model.supports_paged, (
             f"{model.cfg.name}: family {model.cfg.family!r} has no paged "
             "decode path (attention-KV families only)")
@@ -126,6 +129,11 @@ class PagedServingEngine(EngineBase):
             "offload + sharded pools is not supported"
         assert not (disaggregate and mesh is not None), \
             "disaggregate a replicated engine or shard a colocated one"
+        # sharded pools localize ids inside shard_map around the
+        # single-row decode append; the verify chunk's per-row scatter
+        # has no sharded lowering yet
+        assert not (speculate is not None and mesh is not None), \
+            "speculative rounds are not supported over sharded pools"
         e = model.cfg.moe
         if e is not None and e.capacity_factor * e.top_k < e.n_experts:
             # Chunked prefill routes experts per chunk-sized group while
@@ -149,7 +157,8 @@ class PagedServingEngine(EngineBase):
         super().__init__(model, params, max_batch=max_batch,
                          sample=sample, seed=seed,
                          budget_table=budget_table, lookahead=lookahead,
-                         async_waves=async_waves, on_token=on_token)
+                         async_waves=async_waves, on_token=on_token,
+                         speculate=speculate)
         # page_size=None consults the tuning table (REPRO_PAGE_SIZE /
         # REPRO_TUNING_TABLE win): every paged kernel tiles kv at the
         # pool page size, so pool construction is their block-size
@@ -240,18 +249,20 @@ class PagedServingEngine(EngineBase):
                                                      num_pages))
 
         # --- workers -------------------------------------------------
-        # CPU PJRT blocks dispatch when a donated input is still
-        # pending, which would serialize async wave n+1 behind wave n —
-        # keep donation (in-place pool scatters) everywhere except the
-        # async-on-CPU combination (there a pool copy per wave is the
-        # price of real overlap; accelerator clients enqueue donated
-        # dispatches asynchronously, so they keep donation)
-        donate = not (async_waves
-                      and jax.default_backend() == "cpu")
+        # Some PJRT clients block dispatch when a donated input is
+        # still pending, which would serialize async wave n+1 behind
+        # wave n — keep donation (in-place pool scatters) everywhere
+        # except async waves on a client the measured probe
+        # (plane.donation_overlaps) says blocks; there a pool copy per
+        # wave is the price of real overlap. The probe replaces the old
+        # backend-NAME check, which misclassified any client the list
+        # didn't know about.
+        donate = (not async_waves) or plane.donation_overlaps()
         self.decode = plane.paged_decode_worker(
             model, self.decode_group, sample=sample,
             base_key=self._base_key, wrap=self._with_table,
-            offload=offload, strat=strat, donate=donate)
+            offload=offload, strat=strat, donate=donate,
+            speculate=speculate)
         self.prefill = plane.paged_prefill_worker(
             model, self.prefill_group, chunk_size=self.prefill_chunk,
             wrap=self._with_table, offload=offload,
@@ -328,6 +339,24 @@ class PagedServingEngine(EngineBase):
                     continue
             return None
 
+    def _acquire_gentle(self, group: PoolGroup,
+                        cols: List[int]) -> Optional[List[int]]:
+        """Best-effort allocation for speculative LOOKAHEAD coverage:
+        squeeze the prefix cache, nothing else — draining a wave or
+        preempting a live request to fund rows a rejected draft may
+        never commit would trade real work for a gamble. Callers fall
+        back to the bare next-row need through the full ladder."""
+        while True:
+            pages = group.alloc_cols(cols)
+            if pages is not None:
+                self._note_usage()
+                return pages
+            short = len(cols) - group.free_count()
+            if group.prefix is not None and \
+                    group.prefix.evict(max(short, 1)):
+                continue
+            return None
+
     def _preempt_one(self, protect_slot: int) -> bool:
         """Evict the youngest running request (LIFO keeps the oldest
         requests' latency bounds intact) and requeue it for a resumed
@@ -349,12 +378,12 @@ class PagedServingEngine(EngineBase):
         return True
 
     def _free_slot(self, slot: int):
-        """Tear a slot down: release its pages, park its block table on
-        the scratch page(s), clear ordering state."""
-        self.decode_group.alloc.release(self._slot_pages[slot])
-        self._slot_pages[slot] = []
-        self.bt[slot] = self.decode_group.scratch_cols
-        self.pos[slot] = 0
+        """Tear a slot down: page release + block-table parking +
+        position rewind go through the ONE rollback helper
+        (``speculative.rollback_slot`` at rows=0 IS the full teardown —
+        CI grep-guards the raw idioms); ordering/identity state is
+        cleared here."""
+        spec_mod.rollback_slot(self, slot, 0)
         self._ids[slot] = 0
         self._steps[slot] = 0
         self.slots[slot] = None
@@ -480,8 +509,10 @@ class PagedServingEngine(EngineBase):
             # preemption — same terminal rule as an unfittable prompt
             self._finish(req, truncated=True)
             return
+        # the slot's table row is guaranteed fully parked here (initial
+        # tile, or the teardown that freed it) — only the owned columns
+        # need patching
         self.pos[slot] = len(st.tokens)
-        self.bt[slot] = self.decode_group.scratch_cols
         self.bt[slot, :len(pages)] = pages
         self._slot_pages[slot] = list(pages)
         self._ids[slot] = req.id
@@ -541,7 +572,10 @@ class PagedServingEngine(EngineBase):
         return [s for s in live if self.slots[s] is not None]
 
     def _drain(self):
-        self._apply_wave(self.decode.take())
+        if self.spec is not None:
+            self._apply_spec_wave(self.decode.take())
+        else:
+            self._apply_wave(self.decode.take())
 
     def _launch_wave(self) -> Optional[Wave]:
         """Grow tables, then launch the next wave; returns the PREVIOUS
@@ -594,15 +628,119 @@ class PagedServingEngine(EngineBase):
         self._finish(req)
 
     # ------------------------------------------------------------------
+    # speculative rounds (self.spec set; round fn built by
+    # plane.paged_decode_worker, math in serving/speculative.py)
+    # ------------------------------------------------------------------
+    def _ensure_spec_pages(self):
+        """Settled-position wall checks + page coverage for the round
+        about to launch. A slot at its logical-capacity wall is
+        truncated (drain rule applies, as in ``_ensure_decode_pages``).
+        Coverage is acquired in two tiers: the full lookahead
+        (pos + depth + 1 rows) GENTLY — prefix-cache eviction only,
+        never preemption — then, if that fails, the bare next row
+        (pos + 1) through the full ladder. Acceptance clamps to the
+        coverage actually obtained (rows past it resolve to parked
+        scratch columns that several slots share, so their verify
+        logits are garbage — the clamp is what keeps partial coverage
+        EXACT rather than approximate). Returns (live slots, per-slot
+        covered rows)."""
+        depth = self.spec.depth
+        cap_rows = self.table_pages * self.page_size
+        cov = self.pos.astype(np.int32) + 1    # benign for empty slots
+        live = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            rows = int(self.pos[slot]) + 1
+            if self._pages_for(rows) > self.table_pages:
+                self._drain()              # land the in-flight tokens
+                if self.slots[slot] is not req:
+                    continue               # retired at drain
+                self._free_slot(slot)      # logical-capacity wall
+                self._finish(req, truncated=True)
+                continue
+            want = min(rows + depth, cap_rows)
+            base = len(self._slot_pages[slot])
+            need = self._pages_for(want) - base
+            got: Optional[List[int]] = []
+            if need > 0:
+                got = self._acquire_gentle(
+                    self.decode_group,
+                    list(range(base, base + need)))
+                if got is None:
+                    # bare minimum via the full ladder (may drain /
+                    # preempt — same rules as a plain decode wave)
+                    need = self._pages_for(rows) - base
+                    got = [] if need <= 0 else self._acquire(
+                        self.decode_group,
+                        list(range(base, base + need)),
+                        protect_slot=slot)
+                    if self.slots[slot] is not req:
+                        if got:
+                            self.decode_group.alloc.release(got)
+                        continue           # retired by a drain inside
+                    if got is None:
+                        self._free_slot(slot)
+                        self._finish(req, truncated=True)
+                        continue
+            if got:
+                self.bt[slot, base:base + len(got)] = got
+                self._slot_pages[slot].extend(got)
+            cov[slot] = min(len(self._slot_pages[slot]) * self.page_size,
+                            cap_rows)
+            live.append(slot)
+        # _acquire may have preempted/retired a slot collected above
+        live = [s for s in live if self.slots[s] is not None]
+        return live, cov
+
+    def _launch_spec_round(self) -> Optional[spec_mod.SpecWave]:
+        """Speculative twin of ``_launch_wave``. Ordering is the crux:
+        (1) settle the in-flight round IN PLACE — commit its acceptance
+        into pos/_steps/pages WITHOUT taking it from the worker, so the
+        wall checks and page planning in (2) see the truth while drains
+        triggered inside the planning ladder can still find the wave to
+        harvest; (3) take the previous round, launch the next against
+        the settled mirrors, hand the taken round back for harvesting
+        under the new round's device time. Unlike plain waves the
+        mirrors do NOT advance at launch — how far a round moves each
+        slot is its acceptance count, known only at settle."""
+        if self.decode.inflight is not None:
+            self._settle_spec(self.decode.inflight)
+        live, cov = self._ensure_spec_pages()
+        prev = self.decode.take()
+        if not live:
+            return prev
+        snapshot = list(self.slots)
+        pos0 = self.pos.copy()
+        steps0 = self._steps.copy()
+        feed, targets, acc, self.decode_group.pools = self.decode.step(
+            self._decode_params, self._tok_feed,
+            self.decode_group.pools, jnp.asarray(self.bt.copy()),
+            jnp.asarray(pos0), jnp.asarray(self._ids.copy()),
+            jnp.asarray(steps0), jnp.asarray(cov))
+        self._tok_feed = feed
+        self.stats["decode_steps"] += 1
+        self.decode.put(spec_mod.SpecWave(
+            toks=targets, acc=acc, reqs=snapshot,
+            pos0=pos0, steps0=steps0))
+        return prev
+
+    # ------------------------------------------------------------------
     def _advance(self):
         """One engine tick: advance the in-flight prefill by a chunk,
         then one decode wave (async: launch wave n+1 before harvesting
         wave n, so the harvest's host work overlaps the device)."""
         self._prefill_step()
-        prev = self._launch_wave()
-        self._apply_wave(prev)             # wave n (None in sync steady
-        if not self.async_waves:           # state: applied last tick)
-            self._apply_wave(self.decode.take())
+        if self.spec is not None:
+            prev = self._launch_spec_round()
+            self._apply_spec_wave(prev)    # round n (async overlap)
+            if not self.async_waves:
+                self._apply_spec_wave(self.decode.take())
+        else:
+            prev = self._launch_wave()
+            self._apply_wave(prev)         # wave n (None in sync steady
+            if not self.async_waves:       # state: applied last tick)
+                self._apply_wave(self.decode.take())
         if self.transfer.remote:
             self.stats["pages_shipped"] = \
                 self.transfer.stats["pages_shipped"]

@@ -1,0 +1,242 @@
+"""Hash-aware speculative decoding: the draft -> verify plane role.
+
+Speculative decoding turns d+1 sequential decode waves into one round:
+a cheap *draft* proposes a depth-d token run per slot, a single
+*verify* wave scores all d+1 positions at once, and the engine commits
+the longest prefix the target model agrees with. The whole point of
+running it HERE is that HATA makes the draft nearly free without a
+second model: the same weights decode under a tiny hash budget (the
+``core/budgets.py`` resolver, installed at trace time) or under a
+layer-subset cut, and the verify wave is just a chunked-prefill-shaped
+pass over the live cache views — no new kernels, no draft cache.
+
+Round shape (one jitted function per engine; built by the worker
+factories in ``serving/plane.py``, the ONE place model entry points
+are called from serving code):
+
+  * committed rows = p, feed token t (picked last round, not yet in
+    the cache). Draft wave j appends row p+j-1 and proposes d_j — the
+    greedy argmax of the *draft* logits regardless of engine sample
+    mode (the draft only proposes; the target's RNG stream decides).
+  * verify scores the (B, d+1) block [t, d_1..d_d] in ONE
+    ``Model.verify_chunk`` pass at per-row ctx = p: position j's
+    logits see exactly the context the sequential decode would after
+    committing j more tokens, and the chunk's exact K/V overwrites
+    whatever the draft appended before any query reads it.
+  * the target picks g_j from position j's logits on the request's own
+    (id, step) RNG stream (``sampling.pick_tokens_device`` with
+    step = steps0 + j) — greedy argmax or the per-request categorical.
+  * accept = 1 + length of the matching prefix (d_j == g_{j-1}):
+    token g_j is emitted iff every draft token before it matched, so
+    the emitted stream is BIT-EXACT with the non-speculative engine in
+    both greedy and sampled modes — acceptance is coupled to the
+    target's own pick streams, a strictly stronger guarantee than
+    distribution-level rejection sampling, and at least one token
+    lands every round (an all-rejected draft still commits g_0).
+
+Rows past the accepted prefix hold garbage; nothing ever reads them
+(validity masks / causality), the next round's draft+verify rewrite
+them, and :func:`rollback_slot` — the ONE sanctioned block-table
+truncate + position rewind, CI grep-guarded — returns the pages.
+
+Draft sources (all self-drafting — one set of weights):
+
+  * :class:`BudgetDraft`    — full depth, HATA top-k clamped to a tiny
+                              uniform per-layer budget table.
+  * :class:`LayerSubsetDraft` — only the first N layers run, straight
+                              into the head (deep views pass through).
+  * :class:`ConstantDraft`  — a fixed token, no model call: the
+                              adversarial always-disagreeing draft the
+                              livelock regression test drives.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import budgets as budgets_mod
+from repro.serving.request import Request
+from repro.serving.sampling import pick_tokens_device
+
+
+# ---------------------------------------------------------------------------
+# Draft sources
+# ---------------------------------------------------------------------------
+class DraftSource:
+    """What proposes the depth-d run. Subclasses set at most one of
+    ``layer_limit`` (run only the first N layers), ``fixed_token``
+    (skip the model entirely) or a ``trace_context`` (install a draft
+    budget table while the draft decode traces)."""
+
+    layer_limit: Optional[int] = None
+    fixed_token: Optional[int] = None
+
+    def trace_context(self, model):
+        return contextlib.nullcontext()
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetDraft(DraftSource):
+    """Self-draft under a tiny uniform hash budget: every layer's
+    HATA top-k is clamped to ``budget`` rows through the ONE budget
+    resolver (``core/budgets.py`` — installed at trace time around the
+    draft decode steps only; the verify wave traces under the engine's
+    own table). Dense layers are unaffected, so on a config without
+    HATA this degenerates to the target model (acceptance 1.0)."""
+
+    budget: int = 8
+
+    def table(self, n_layers: int) -> budgets_mod.BudgetTable:
+        b = int(self.budget)
+        assert b > 0, f"draft budget must be positive, got {b}"
+        return budgets_mod.BudgetTable(
+            n_layers=n_layers,
+            entries=tuple((li, 1.0, b, b) for li in range(n_layers)))
+
+    def trace_context(self, model):
+        return budgets_mod.use_budget_table(self.table(model.cfg.n_layers))
+
+    def describe(self) -> str:
+        return f"budget[{self.budget}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSubsetDraft(DraftSource):
+    """Self-draft through only the first ``n_layers`` layers (the
+    dense prefix is the natural cut on HATA configs), straight into
+    the head. Skipped layers' cache views pass through untouched —
+    their stale rows are rewritten by the verify chunk before any
+    query reads them."""
+
+    n_layers: int = 1
+
+    @property
+    def layer_limit(self) -> int:       # type: ignore[override]
+        assert self.n_layers > 0, self.n_layers
+        return int(self.n_layers)
+
+    def describe(self) -> str:
+        return f"layers[{self.n_layers}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantDraft(DraftSource):
+    """A fixed-token draft with NO model call and NO cache writes —
+    the verify chunk appends every row itself. Acceptance is whatever
+    it happens to be (usually ~0); outputs stay exact regardless. This
+    is the adversarial source: a draft that never agrees must still
+    make progress (the verify wave's own pick lands every round)."""
+
+    token: int = 0
+
+    @property
+    def fixed_token(self) -> int:       # type: ignore[override]
+        return int(self.token)
+
+    def describe(self) -> str:
+        return f"const[{self.token}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculationController:
+    """Depth + draft choice for a speculative engine; carried by the
+    :class:`~repro.serving.plane.DecodeWorker` so the round step and
+    the engine tick agree on the wave shape."""
+
+    depth: int = 3
+    draft: DraftSource = dataclasses.field(default_factory=BudgetDraft)
+
+    def __post_init__(self):
+        assert self.depth >= 1, f"speculate depth must be >= 1, " \
+                                f"got {self.depth}"
+
+    def describe(self) -> str:
+        return f"spec(d={self.depth}, draft={self.draft.describe()})"
+
+
+# ---------------------------------------------------------------------------
+# Acceptance math (pure, device-side — traced into the round jit)
+# ---------------------------------------------------------------------------
+def pick_targets(base_key, vlogits, ids, steps, sample: str):
+    """Target picks for every verify position: token j of row b drawn
+    from the request's own (id, steps0 + j) RNG stream — the EXACT
+    stream the non-speculative engine would use for its j-th future
+    wave, which is what makes acceptance output-exact in sampled mode
+    too. vlogits (B, C, V) -> (B, C) int32."""
+    cols = [pick_tokens_device(base_key, vlogits[:, j], ids, steps + j,
+                               sample)
+            for j in range(vlogits.shape[1])]
+    return jnp.stack(cols, axis=1)
+
+
+def accept_counts(vtoks, targets, pos, cov):
+    """Accepted-token count per row: 1 + the length of the matching
+    draft prefix (draft token j+1 vs target pick j), clamped to the
+    rows the slot's cache actually covers (``cov`` — capacity walls
+    and partial page coverage; positions past it attended unwritten
+    rows and their logits are garbage). Always >= 1: an all-rejected
+    round still commits the verify wave's own first pick, so a
+    speculative engine can never stall. vtoks/targets (B, d+1);
+    pos/cov (B,) -> (B,) int32 in [1, d+1]."""
+    match = (vtoks[:, 1:] == targets[:, :-1]).astype(jnp.int32)
+    acc = 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+    room = jnp.maximum(cov - pos, 1)
+    return jnp.minimum(acc, room).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# The in-flight speculative wave
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SpecWave:
+    """One in-flight speculative round: device handles + the
+    launch-time snapshot. ``toks`` holds the TARGET picks (the only
+    tokens that can be emitted); ``acc`` how many lead tokens each row
+    committed. Settling (blocking on ``acc`` and committing
+    pos/steps/pages through :func:`rollback_slot`) is split from
+    harvesting (recording tokens) so the async tick can launch round
+    n+1 as soon as round n's acceptance is known, and hide round n's
+    host-side token work under round n+1's device time."""
+
+    toks: Any                          # (B, d+1) device — target picks
+    acc: Any                           # (B,) device — accepted counts
+    reqs: List[Optional[Request]]      # slot -> request at launch
+    pos0: np.ndarray                   # committed rows at launch
+    steps0: np.ndarray                 # RNG stream indices at launch
+    acc_np: Optional[np.ndarray] = None   # set once settled
+
+
+# ---------------------------------------------------------------------------
+# THE rollback: block-table truncate + position rewind, one helper
+# ---------------------------------------------------------------------------
+def rollback_slot(engine, slot: int, rows: int) -> None:
+    """Commit ``rows`` as ``slot``'s true length: rewind the position
+    mirror past any speculative advance and, on paged engines,
+    truncate the block table to ``ceil(rows / page_size)`` pages —
+    surplus pages released, their columns re-parked on the scratch
+    page. ``rows=0`` is the full teardown (slot free / preemption).
+
+    This is the ONE sanctioned truncate+rewind (CI grep-guards the
+    idioms): rollback that forgot to release pages, or released a page
+    still holding committed rows, is exactly the class of drift a
+    second implementation would eventually grow.
+    """
+    assert rows >= 0, rows
+    engine.pos[slot] = rows
+    pages = getattr(engine, "_slot_pages", None)
+    if pages is None:
+        return                          # dense slab: nothing paged
+    keep = engine._pages_for(rows)
+    surplus = pages[slot][keep:]
+    if surplus:
+        engine.decode_group.alloc.release(surplus)
+        pages[slot] = pages[slot][:keep]
+        engine.bt[slot, keep:] = \
+            engine.decode_group.scratch_cols[keep:]

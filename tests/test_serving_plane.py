@@ -258,6 +258,35 @@ def test_disaggregated_matches_colocated(qwen, async_waves):
 
 
 # ---------------------------------------------------------------------------
+# config-zoo parity: MoE + GQA + sliding window through the engine
+# ---------------------------------------------------------------------------
+def test_mixtral_engine_matches_offline_greedy():
+    """Reduced mixtral-8x22b (MoE top-2, GQA, SWA) served on the paged
+    engine matches offline prefill+decode token-for-token. Runs
+    DROPLESS (capacity_factor = n_experts / top_k): the engine's
+    chunked prefill and the offline loop group tokens into different
+    expert batches, which is only bit-identical when no token can drop
+    — the same precondition the speculative verify wave documents
+    (DESIGN.md §9 exclusion table)."""
+    cfg = dataclasses.replace(get_reduced("mixtral-8x22b"),
+                              dtype="float32")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe,
+        capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _reqs(cfg, 11, 4, new_tokens=6)
+    eng = PagedServingEngine(model, params, num_pages=32, page_size=8,
+                             max_batch=2, prefill_chunk=8)
+    done = eng.run(reqs)
+    eng.alloc.check()
+    got = _outputs(done)
+    for r in _reqs(cfg, 11, 4, new_tokens=6):
+        ref = _offline(model, params, r.prompt, r.max_new_tokens)
+        assert got[r.id] == (ref, False), f"req {r.id}"
+
+
+# ---------------------------------------------------------------------------
 # centralized timing stamps
 # ---------------------------------------------------------------------------
 def test_request_timing_stamped_once(qwen):
